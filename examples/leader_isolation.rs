@@ -1,0 +1,31 @@
+//! E3: the paper's §3.3 leader-isolation experiment.
+//!
+//! Isolate the leader (for CASPaxos: any node — there is no leader) at
+//! t=30s of virtual time and measure the window with zero successful
+//! client operations. Reproduces the paper's table: every leader-based
+//! system shows a seconds-scale outage governed by its election-timeout
+//! default; CASPaxos shows none.
+//!
+//! Run: `cargo run --release --example leader_isolation`
+
+use caspaxos::experiments::unavailability_table;
+
+fn main() {
+    println!("== E3: unavailability window after leader isolation (§3.3) ==\n");
+    let rows = unavailability_table(42);
+    println!("| database | protocol | paper | measured |");
+    println!("|---|---|---|---|");
+    for r in &rows {
+        println!(
+            "| {} | {} | {:.0} s | {:.1} s |",
+            r.system, r.protocol, r.paper_s, r.measured_s
+        );
+    }
+    println!(
+        "\nAs the paper warns, the absolute window is a *configuration*\n\
+         parameter (the failure-detection timeout), not a protocol merit;\n\
+         what the table shows is the qualitative split: leader-based\n\
+         protocols stall until re-election, CASPaxos continues immediately\n\
+         because every node of the same role is homogeneous."
+    );
+}

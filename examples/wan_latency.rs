@@ -1,0 +1,37 @@
+//! E1 + E2: the paper's §3.2 WAN experiment.
+//!
+//! Three Azure regions (paper RTT matrix), three systems — MongoDB-like
+//! and Etcd-like leader-based logs with the leader in Southeast Asia,
+//! and Gryadka (this CASPaxos implementation) — each with a colocated
+//! client looping read-modify-write on its own key. Prints the paper's
+//! RTT table (E1) and the latency table (E2), paper vs measured.
+//!
+//! Run: `cargo run --release --example wan_latency`
+
+use caspaxos::experiments::wan_latency_table;
+use caspaxos::wan;
+
+fn main() {
+    println!("== E1: RTT between regions (paper input, drives the simulator) ==\n");
+    print!("{}", wan::rtt_table());
+
+    println!("\n== E2: read-modify-write latency per region (paper vs simulated) ==\n");
+    let rows = wan_latency_table(50, 42);
+    println!("| system | region | paper | measured |");
+    println!("|---|---|---|---|");
+    for r in &rows {
+        println!(
+            "| {} | {} | {:.0} ms | {:.1} ms |",
+            r.system, r.region, r.paper_ms, r.measured_ms
+        );
+    }
+    println!(
+        "\nShape check: the leaderless system avoids the forward-to-leader\n\
+         round trip, so its latency is ~RTT-to-majority per operation; the\n\
+         leader-based systems pay RTT-to-leader + leader-to-majority. In the\n\
+         leader's own region (Southeast Asia) the systems converge — exactly\n\
+         the paper's observation. Absolute MongoDB/Etcd constants include\n\
+         implementation overhead we model as per-op processing time\n\
+         (DESIGN.md §Substitutions)."
+    );
+}

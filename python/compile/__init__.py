@@ -1,0 +1,2 @@
+"""Build-time Python: JAX/Pallas kernels + AOT lowering. Never imported
+at request time — the Rust coordinator loads the compiled artifacts."""

@@ -1,0 +1,82 @@
+"""AOT export: lower the L2 step to HLO text for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example.
+
+Usage::
+
+    python -m compile.aot --outdir ../artifacts
+
+writes ``caspaxos_step_a{A}_b{B}.hlo.txt`` per default variant plus a
+``manifest.txt`` (one ``name a b path`` line per artifact) the Rust
+artifact registry reads.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """Converts a lowered jax computation to XLA HLO text.
+
+    ``print_large_constants=True`` is REQUIRED: the default printer elides
+    big array constants as ``constant({...})`` inside region bodies, and
+    xla_extension 0.5.1's text parser silently accepts the placeholder —
+    the executable then reads garbage where the constant should be. Found
+    the hard way; pinned by test_export_prints_large_constants.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(outdir, variants=None):
+    """Lowers every variant; returns [(name, a, b, path)]."""
+    variants = variants or model.DEFAULT_VARIANTS
+    os.makedirs(outdir, exist_ok=True)
+    rows = []
+    for a, b in variants:
+        name = f"caspaxos_step_a{a}_b{b}"
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        text = to_hlo_text(model.lower_variant(a, b))
+        with open(path, "w") as f:
+            f.write(text)
+        rows.append((name, a, b, path))
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest = os.path.join(outdir, "manifest.txt")
+    with open(manifest, "w") as f:
+        for name, a, b, path in rows:
+            f.write(f"{name} {a} {b} {os.path.basename(path)}\n")
+    print(f"wrote {manifest}")
+    return rows
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--outdir", default="../artifacts")
+    parser.add_argument(
+        "--variants",
+        default=None,
+        help="comma-separated a:b pairs, e.g. 3:64,5:256",
+    )
+    args = parser.parse_args()
+    variants = None
+    if args.variants:
+        variants = [tuple(map(int, v.split(":"))) for v in args.variants.split(",")]
+    export(args.outdir, variants)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: batched change-function application.
+
+The write half of the CASPaxos data plane: apply the §2.2 change
+functions (read / init / CAS / set / add / tombstone) to a batch of B
+current states in one vector op. Semantics are differential-tested
+against :mod:`ref` (pytest) and against the Rust scalar
+``ChangeFn::apply`` (cargo test, via the shared op-code table).
+
+Same TPU mapping as ``select_max_ballot``: B on the lane axis in
+128-wide VMEM blocks, branch-free select chains on the VPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _apply_kernel(states_ref, ops_ref, args_ref, out_state_ref, out_acc_ref):
+    states = states_ref[...]  # [Bb, 2]
+    ops = ops_ref[...]  # [Bb]
+    args = args_ref[...]  # [Bb, 2]
+
+    ver, num = states[:, 0], states[:, 1]
+    expect, val = args[:, 0], args[:, 1]
+    is_num = ver >= 0
+
+    init_hit = ~is_num
+    init_next = jnp.where(
+        init_hit[:, None], jnp.stack([jnp.zeros_like(ver), val], -1), states
+    )
+    cas_hit = is_num & (ver == expect)
+    cas_next = jnp.where(cas_hit[:, None], jnp.stack([expect + 1, val], -1), states)
+    set_next = jnp.stack([jnp.where(is_num, ver + 1, 0), val], -1)
+    add_next = jnp.stack(
+        [jnp.where(is_num, ver + 1, 0), jnp.where(is_num, num + val, val)], -1
+    )
+    tomb_next = jnp.stack(
+        [jnp.full_like(ver, ref.VER_TOMBSTONE), jnp.zeros_like(num)], -1
+    )
+
+    next_states = states  # READ default
+    accepted = jnp.ones_like(ops)
+    for code, nxt in [
+        (ref.OP_INIT, init_next),
+        (ref.OP_CAS, cas_next),
+        (ref.OP_SET, set_next),
+        (ref.OP_ADD, add_next),
+        (ref.OP_TOMBSTONE, tomb_next),
+    ]:
+        hit = ops == code
+        next_states = jnp.where(hit[:, None], nxt, next_states)
+    accepted = jnp.where(
+        (ops == ref.OP_CAS) & ~cas_hit, jnp.zeros_like(ops), accepted
+    )
+    out_state_ref[...] = next_states
+    out_acc_ref[...] = accepted
+
+
+def apply_cas(states, ops, args, *, block_b=128):
+    """Pallas version of :func:`ref.apply_cas`.
+
+    Args:
+      states: ``[B, 2] int64``.
+      ops: ``[B] int32``.
+      args: ``[B, 2] int64``.
+      block_b: lane-block size.
+
+    Returns:
+      ``(next_states [B, 2] int64, accepted [B] int32)``.
+    """
+    b = ops.shape[0]
+    bb = min(block_b, b)
+    assert b % bb == 0, f"batch {b} not divisible by block {bb}"
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, 2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 2), jnp.int64),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,
+    )(states, ops, args)

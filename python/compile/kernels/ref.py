@@ -1,0 +1,131 @@
+"""Pure-jnp oracle for the CASPaxos data-plane kernels.
+
+This is the sequential specification the Pallas kernels (and, through the
+shared op-code table, the Rust scalar path) are differential-tested
+against. Shapes and encodings:
+
+* ballots  ``[A, B] int64``  — packed ballot per (acceptor, key);
+  ``-1`` marks "no reply / empty slot". Packing (see rust ``ballot.rs``):
+  ``counter << 20 | proposer`` so integer order == ballot order.
+* states   ``[A, B, 2] int64`` — packed register state per (acceptor,
+  key): ``[ver, num]``; ``ver == -1`` is ∅, ``ver == -2`` a tombstone.
+* ops      ``[B] int32`` — op codes (rust ``state.rs::opcode``).
+* args     ``[B, 2] int64`` — op arguments ``[expect_or_unused, value]``.
+
+``select_max_ballot``: the proposer rule "pick the value of the tuple
+with the highest ballot number" vectorized over a key batch.
+
+``apply_cas``: the §2.2 change functions vectorized over a key batch.
+Semantics mirror ``ChangeFn::apply`` exactly (wrapping i64 adds
+included).
+"""
+
+import jax.numpy as jnp
+
+# Op codes — keep in sync with rust/src/state.rs::opcode.
+OP_READ = 0
+OP_INIT = 1
+OP_CAS = 2
+OP_SET = 3
+OP_ADD = 4
+OP_TOMBSTONE = 5
+
+VER_EMPTY = -1
+VER_TOMBSTONE = -2
+
+
+def select_max_ballot(ballots, states):
+    """Chooses, per key, the acceptor state with the highest ballot.
+
+    Args:
+      ballots: ``[A, B] int64``; -1 = absent.
+      states: ``[A, B, 2] int64``.
+
+    Returns:
+      ``(chosen [B, 2] int64, max_ballot [B] int64)``. Keys where every
+      ballot is -1 yield the ∅ state ``[-1, 0]``.
+    """
+    ballots = jnp.asarray(ballots, jnp.int64)
+    states = jnp.asarray(states, jnp.int64)
+    # First max wins ties; protocol ballots are globally unique, so a tie
+    # can only pair identical (ballot, value) replicas — value-equivalent.
+    idx = jnp.argmax(ballots, axis=0)
+    max_ballot = jnp.max(ballots, axis=0)
+    chosen = jnp.take_along_axis(states, idx[None, :, None], axis=0)[0]
+    empty = jnp.stack(
+        [jnp.full_like(max_ballot, VER_EMPTY), jnp.zeros_like(max_ballot)], axis=-1
+    )
+    chosen = jnp.where((max_ballot < 0)[:, None], empty, chosen)
+    return chosen, max_ballot
+
+
+def apply_cas(states, ops, args):
+    """Applies the §2.2 change functions to a batch of current states.
+
+    Args:
+      states: ``[B, 2] int64`` current (ver, num).
+      ops: ``[B] int32`` op codes.
+      args: ``[B, 2] int64`` (expect, value).
+
+    Returns:
+      ``(next_states [B, 2] int64, accepted [B] int32)``.
+    """
+    states = jnp.asarray(states, jnp.int64)
+    ops = jnp.asarray(ops, jnp.int32)
+    args = jnp.asarray(args, jnp.int64)
+
+    ver, num = states[:, 0], states[:, 1]
+    expect, val = args[:, 0], args[:, 1]
+    is_num = ver >= 0
+
+    # READ: x -> x.
+    read_next = states
+    read_acc = jnp.ones_like(ops)
+
+    # INIT: ∅/tombstone -> (0, val); otherwise no-op (still accepted).
+    init_hit = ~is_num
+    init_next = jnp.where(
+        init_hit[:, None], jnp.stack([jnp.zeros_like(ver), val], -1), states
+    )
+    init_acc = jnp.ones_like(ops)
+
+    # CAS: Num(ver == expect) -> (expect+1, val) else reject.
+    cas_hit = is_num & (ver == expect)
+    cas_next = jnp.where(cas_hit[:, None], jnp.stack([expect + 1, val], -1), states)
+    cas_acc = cas_hit.astype(jnp.int32)
+
+    # SET: -> (ver+1, val) with non-Num counting as ver -1.
+    set_ver = jnp.where(is_num, ver + 1, 0)
+    set_next = jnp.stack([set_ver, val], -1)
+    set_acc = jnp.ones_like(ops)
+
+    # ADD: Num -> (ver+1, num + val) (wrapping); else (0, val).
+    add_ver = jnp.where(is_num, ver + 1, 0)
+    add_num = jnp.where(is_num, num + val, val)
+    add_next = jnp.stack([add_ver, add_num], -1)
+    add_acc = jnp.ones_like(ops)
+
+    # TOMBSTONE: -> (-2, 0).
+    tomb_next = jnp.broadcast_to(jnp.array([VER_TOMBSTONE, 0], jnp.int64), states.shape)
+    tomb_acc = jnp.ones_like(ops)
+
+    next_states = read_next
+    accepted = read_acc
+    for code, nxt, acc in [
+        (OP_INIT, init_next, init_acc),
+        (OP_CAS, cas_next, cas_acc),
+        (OP_SET, set_next, set_acc),
+        (OP_ADD, add_next, add_acc),
+        (OP_TOMBSTONE, tomb_next, tomb_acc),
+    ]:
+        hit = ops == code
+        next_states = jnp.where(hit[:, None], nxt, next_states)
+        accepted = jnp.where(hit, acc, accepted)
+    return next_states, accepted
+
+
+def caspaxos_step(ballots, states, ops, args):
+    """The full L2 step: quorum value selection ∘ change application."""
+    chosen, max_ballot = select_max_ballot(ballots, states)
+    next_states, accepted = apply_cas(chosen, ops, args)
+    return next_states, accepted, max_ballot

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: quorum value selection.
+
+The proposer rule from §2.2 — "picks the value of the tuple with the
+highest ballot number" — vectorized over a batch of B keys × A acceptor
+replies. This is the read half of the CASPaxos data plane the Rust
+coordinator batches through PJRT.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the key batch B rides the
+lane axis in 128-wide blocks; the acceptor axis A (3–8) is statically
+unrolled, so each grid step keeps an A×128×2 i64 working set (<8 KiB) in
+VMEM. Pure VPU compare/select — the roofline is VMEM bandwidth.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the interpret path *is* the production
+artifact here (see /opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _select_kernel(ballots_ref, states_ref, out_state_ref, out_ballot_ref):
+    ballots = ballots_ref[...]  # [A, Bb]
+    states = states_ref[...]  # [A, Bb, 2]
+    a_total = ballots.shape[0]
+    best_b = ballots[0]
+    best_s = states[0]
+    # Static unroll over the (small) acceptor axis; strictly-greater keeps
+    # the first maximum, matching the jnp.argmax oracle.
+    for a in range(1, a_total):
+        take = ballots[a] > best_b
+        best_s = jnp.where(take[:, None], states[a], best_s)
+        best_b = jnp.where(take, ballots[a], best_b)
+    empty = jnp.stack(
+        [jnp.full_like(best_b, ref.VER_EMPTY), jnp.zeros_like(best_b)], axis=-1
+    )
+    out_state_ref[...] = jnp.where((best_b < 0)[:, None], empty, best_s)
+    out_ballot_ref[...] = best_b
+
+
+def select_max_ballot(ballots, states, *, block_b=128):
+    """Pallas version of :func:`ref.select_max_ballot`.
+
+    Args:
+      ballots: ``[A, B] int64``.
+      states: ``[A, B, 2] int64``.
+      block_b: lane-block size (B must divide by it or be smaller).
+
+    Returns:
+      ``(chosen [B, 2] int64, max_ballot [B] int64)``.
+    """
+    a, b = ballots.shape
+    bb = min(block_b, b)
+    assert b % bb == 0, f"batch {b} not divisible by block {bb}"
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _select_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a, bb), lambda i: (0, i)),
+            pl.BlockSpec((a, bb, 2), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 2), jnp.int64),
+            jax.ShapeDtypeStruct((b,), jnp.int64),
+        ],
+        interpret=True,
+    )(ballots, states)

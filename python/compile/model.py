@@ -1,0 +1,54 @@
+"""L2: the CASPaxos batched data-plane step as a JAX computation.
+
+``caspaxos_step`` fuses the proposer's two compute stages — quorum value
+selection (pick the accepted value with the highest ballot out of A
+replies) and change-function application — over a batch of B independent
+registers, calling the L1 Pallas kernels so the whole step lowers into
+one HLO module. ``aot.py`` lowers one variant per (A, B) shape the Rust
+coordinator wants to serve; Python never runs at request time.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import apply_cas as apply_mod  # noqa: E402
+from .kernels import select_max_ballot as select_mod  # noqa: E402
+
+# Shape variants compiled by default: (acceptors, batch).
+DEFAULT_VARIANTS = [(3, 64), (3, 256), (5, 64), (5, 256)]
+
+
+def caspaxos_step(ballots, states, ops, args):
+    """select_max_ballot ∘ apply_cas over a B-key batch.
+
+    Args:
+      ballots: ``[A, B] int64`` packed ballots (-1 = absent).
+      states: ``[A, B, 2] int64`` packed per-acceptor states.
+      ops: ``[B] int32`` op codes.
+      args: ``[B, 2] int64`` op arguments.
+
+    Returns:
+      ``(next_states [B, 2], accepted [B] int32, max_ballot [B])`` —
+      what the proposer sends in its accept fan-out, per key.
+    """
+    chosen, max_ballot = select_mod.select_max_ballot(ballots, states)
+    next_states, accepted = apply_mod.apply_cas(chosen, ops, args)
+    return next_states, accepted, max_ballot
+
+
+def example_args(a, b):
+    """ShapeDtypeStructs for lowering an (A=a, B=b) variant."""
+    return (
+        jax.ShapeDtypeStruct((a, b), jnp.int64),
+        jax.ShapeDtypeStruct((a, b, 2), jnp.int64),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b, 2), jnp.int64),
+    )
+
+
+def lower_variant(a, b):
+    """Lowers caspaxos_step for fixed (A, B) shapes."""
+    return jax.jit(caspaxos_step).lower(*example_args(a, b))

@@ -1,0 +1,156 @@
+"""Differential tests: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and values; explicit cases pin the protocol
+edge cases (empty quorum, tombstones, CAS rejection, i64 wrap).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import apply_cas as ap  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+from compile.kernels import select_max_ballot as sel  # noqa: E402
+
+I64 = np.int64
+I64_MIN, I64_MAX = np.iinfo(I64).min, np.iinfo(I64).max
+
+
+def np_eq(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+@st.composite
+def select_inputs(draw):
+    a = draw(st.integers(min_value=1, max_value=7))
+    b = draw(st.sampled_from([1, 2, 8, 64, 128, 256]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.RandomState(seed)
+    ballots = rng.randint(-1, 1 << 40, size=(a, b)).astype(I64)
+    # Sprinkle all-absent keys.
+    absent = rng.rand(b) < 0.2
+    ballots[:, absent] = -1
+    states = rng.randint(-2, 1 << 30, size=(a, b, 2)).astype(I64)
+    return ballots, states
+
+
+@st.composite
+def apply_inputs(draw):
+    b = draw(st.sampled_from([1, 2, 8, 64, 128, 256, 512]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.RandomState(seed)
+    states = rng.randint(-2, 100, size=(b, 2)).astype(I64)
+    ops = rng.randint(0, 6, size=(b,)).astype(np.int32)
+    args = rng.randint(-100, 100, size=(b, 2)).astype(I64)
+    # Force some CAS hits (expect == current version).
+    hit = rng.rand(b) < 0.3
+    args[hit, 0] = states[hit, 0]
+    return states, ops, args
+
+
+@settings(max_examples=40, deadline=None)
+@given(select_inputs())
+def test_select_matches_ref(inputs):
+    ballots, states = inputs
+    c_ref, m_ref = ref.select_max_ballot(ballots, states)
+    c_pl, m_pl = sel.select_max_ballot(ballots, states)
+    np_eq(c_ref, c_pl, "chosen state mismatch")
+    np_eq(m_ref, m_pl, "max ballot mismatch")
+
+
+@settings(max_examples=40, deadline=None)
+@given(apply_inputs())
+def test_apply_matches_ref(inputs):
+    states, ops, args = inputs
+    n_ref, a_ref = ref.apply_cas(states, ops, args)
+    n_pl, a_pl = ap.apply_cas(states, ops, args)
+    np_eq(n_ref, n_pl, "next state mismatch")
+    np_eq(a_ref, a_pl, "accepted mismatch")
+
+
+def test_select_all_absent_yields_empty():
+    ballots = np.full((3, 64), -1, I64)
+    states = np.random.RandomState(1).randint(0, 9, size=(3, 64, 2)).astype(I64)
+    chosen, max_b = sel.select_max_ballot(ballots, states)
+    np_eq(chosen, np.tile([ref.VER_EMPTY, 0], (64, 1)))
+    np_eq(max_b, np.full(64, -1, I64))
+
+
+def test_select_picks_highest_ballot_value():
+    ballots = np.array([[5, 1], [9, -1], [7, 3]], I64)
+    states = np.array(
+        [[[0, 10], [0, 40]], [[1, 20], [0, 50]], [[2, 30], [1, 60]]], I64
+    )
+    chosen, max_b = sel.select_max_ballot(ballots, states)
+    np_eq(chosen, [[1, 20], [1, 60]])
+    np_eq(max_b, [9, 3])
+
+
+def test_cas_hit_and_miss():
+    states = np.array([[5, 10], [5, 10], [-1, 0], [-2, 0]], I64)
+    ops = np.full(4, ref.OP_CAS, np.int32)
+    args = np.array([[5, 99], [4, 99], [0, 99], [0, 99]], I64)
+    nxt, acc = ap.apply_cas(states, ops, args)
+    np_eq(nxt, [[6, 99], [5, 10], [-1, 0], [-2, 0]])
+    np_eq(acc, [1, 0, 0, 0])
+
+
+def test_init_only_on_empty_or_tombstone():
+    states = np.array([[-1, 0], [-2, 0], [3, 7]], I64)
+    ops = np.full(3, ref.OP_INIT, np.int32)
+    args = np.array([[0, 42], [0, 42], [0, 42]], I64)
+    nxt, acc = ap.apply_cas(states, ops, args)
+    np_eq(nxt, [[0, 42], [0, 42], [3, 7]])
+    np_eq(acc, [1, 1, 1])
+
+
+def test_add_wraps_like_rust():
+    states = np.array([[0, I64_MAX]], I64)
+    ops = np.array([ref.OP_ADD], np.int32)
+    args = np.array([[0, 1]], I64)
+    with np.errstate(over="ignore"):
+        nxt, acc = ap.apply_cas(states, ops, args)
+    assert int(nxt[0, 1]) == I64_MIN, "i64 add must wrap (two's complement)"
+    np_eq(acc, [1])
+
+
+def test_add_treats_empty_as_zero():
+    states = np.array([[-1, 0], [-2, 0]], I64)
+    ops = np.full(2, ref.OP_ADD, np.int32)
+    args = np.array([[0, 5], [0, -3]], I64)
+    nxt, _ = ap.apply_cas(states, ops, args)
+    np_eq(nxt, [[0, 5], [0, -3]])
+
+
+def test_tombstone_overwrites_everything():
+    states = np.array([[9, 9], [-1, 0]], I64)
+    ops = np.full(2, ref.OP_TOMBSTONE, np.int32)
+    args = np.zeros((2, 2), I64)
+    nxt, acc = ap.apply_cas(states, ops, args)
+    np_eq(nxt, [[-2, 0], [-2, 0]])
+    np_eq(acc, [1, 1])
+
+
+def test_read_is_identity():
+    rng = np.random.RandomState(3)
+    states = rng.randint(-2, 50, size=(128, 2)).astype(I64)
+    ops = np.full(128, ref.OP_READ, np.int32)
+    args = rng.randint(-5, 5, size=(128, 2)).astype(I64)
+    nxt, acc = ap.apply_cas(states, ops, args)
+    np_eq(nxt, states)
+    np_eq(acc, np.ones(128, np.int32))
+
+
+@pytest.mark.parametrize("block_b", [32, 64, 128])
+def test_blocking_is_transparent(block_b):
+    rng = np.random.RandomState(7)
+    ballots = rng.randint(-1, 99, size=(3, 256)).astype(I64)
+    states = rng.randint(-2, 50, size=(3, 256, 2)).astype(I64)
+    c_ref, m_ref = ref.select_max_ballot(ballots, states)
+    c_pl, m_pl = sel.select_max_ballot(ballots, states, block_b=block_b)
+    np_eq(c_ref, c_pl)
+    np_eq(m_ref, m_pl)

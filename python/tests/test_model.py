@@ -1,0 +1,83 @@
+"""L2 model tests: composition, shapes, and the AOT export path."""
+
+import os
+import tempfile
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from compile import aot, model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+I64 = np.int64
+
+
+def random_inputs(a, b, seed=0):
+    rng = np.random.RandomState(seed)
+    ballots = rng.randint(-1, 1000, size=(a, b)).astype(I64)
+    states = rng.randint(-2, 100, size=(a, b, 2)).astype(I64)
+    ops = rng.randint(0, 6, size=(b,)).astype(np.int32)
+    args = rng.randint(-10, 10, size=(b, 2)).astype(I64)
+    return ballots, states, ops, args
+
+
+def test_step_matches_ref_composition():
+    ballots, states, ops, args = random_inputs(3, 64)
+    n1, a1, m1 = model.caspaxos_step(ballots, states, ops, args)
+    n2, a2, m2 = ref.caspaxos_step(ballots, states, ops, args)
+    np.testing.assert_array_equal(np.array(n1), np.array(n2))
+    np.testing.assert_array_equal(np.array(a1), np.array(a2))
+    np.testing.assert_array_equal(np.array(m1), np.array(m2))
+
+
+def test_step_output_shapes():
+    for a, b in [(3, 64), (5, 256)]:
+        ballots, states, ops, args = random_inputs(a, b, seed=a * b)
+        n, acc, m = model.caspaxos_step(ballots, states, ops, args)
+        assert n.shape == (b, 2) and str(n.dtype) == "int64"
+        assert acc.shape == (b,) and str(acc.dtype) == "int32"
+        assert m.shape == (b,) and str(m.dtype) == "int64"
+
+
+def test_lowering_produces_hlo_text():
+    lowered = model.lower_variant(3, 64)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "s64[3,64]" in text, "input layout must be visible in HLO"
+
+
+def test_export_writes_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        rows = aot.export(d, variants=[(3, 64)])
+        assert len(rows) == 1
+        name, a, b, path = rows[0]
+        assert os.path.exists(path)
+        manifest = open(os.path.join(d, "manifest.txt")).read().strip()
+        assert manifest == f"caspaxos_step_a3_b64 3 64 caspaxos_step_a3_b64.hlo.txt"
+
+
+def test_export_prints_large_constants():
+    # Regression: the default HLO printer elides >10-element constants as
+    # "{...}", which xla_extension 0.5.1 parses into garbage memory.
+    lowered = model.lower_variant(3, 64)
+    text = aot.to_hlo_text(lowered)
+    assert "constant({...})" not in text, "elided constant would corrupt the artifact"
+
+
+def test_full_round_simulation_via_model():
+    # Simulate the proposer data plane for one batch: three acceptors
+    # agree on key states; ops produce the accept-phase payloads.
+    b = 64
+    ballots = np.tile(np.array([[7], [7], [7]], I64), (1, b))
+    base = np.stack([np.arange(b), np.arange(b) * 10], -1).astype(I64)
+    states = np.tile(base[None], (3, 1, 1))
+    ops = np.full(b, ref.OP_ADD, np.int32)
+    args = np.stack([np.zeros(b), np.ones(b)], -1).astype(I64)
+    nxt, acc, maxb = model.caspaxos_step(ballots, states, ops, args)
+    np.testing.assert_array_equal(np.array(maxb), np.full(b, 7))
+    np.testing.assert_array_equal(np.array(acc), np.ones(b, np.int32))
+    np.testing.assert_array_equal(np.array(nxt)[:, 1], base[:, 1] + 1)
+    np.testing.assert_array_equal(np.array(nxt)[:, 0], base[:, 0] + 1)

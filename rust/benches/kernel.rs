@@ -1,0 +1,61 @@
+//! Bench E9: the batched data plane — AOT/PJRT `caspaxos_step` vs the
+//! pure-Rust scalar engine, across batch widths.
+//!
+//! The interesting number is ns per key-slot: the PJRT path amortizes
+//! dispatch over the batch; the scalar path is a tight loop. On CPU the
+//! scalar loop usually wins small batches and the artifact pays off as
+//! the kernel body grows — the bench records the crossover honestly.
+//! (TPU estimates live in DESIGN.md §Hardware-Adaptation; interpret-mode
+//! CPU wallclock is NOT a TPU proxy.)
+//!
+//! Run: `make artifacts && cargo bench --bench kernel`
+
+use caspaxos::benchkit::bench_default;
+use caspaxos::rng::Rng;
+use caspaxos::runtime::{scalar_step, Runtime, StepEngine, StepInput};
+
+fn random_input(rng: &mut Rng, a: usize, b: usize) -> StepInput {
+    let mut input = StepInput::empty(a, b);
+    for col in 0..b {
+        for row in 0..a {
+            if rng.gen_bool(0.9) {
+                input.set_reply(
+                    row,
+                    col,
+                    rng.gen_range(1 << 30) as i64,
+                    [rng.gen_range(100) as i64 - 2, rng.gen_range(1000) as i64],
+                );
+            }
+        }
+        input.set_op(col, rng.gen_range(6) as i32, [rng.gen_range(8) as i64, 7]);
+    }
+    input
+}
+
+fn main() {
+    println!("# E9 — batched step engine: scalar vs PJRT (AOT JAX/Pallas)\n");
+    let mut rng = Rng::new(7);
+    let engine = StepEngine::auto();
+    println!(
+        "backend: {}\n",
+        if engine.is_pjrt() { "PJRT (artifacts loaded)" } else { "scalar only (run `make artifacts`)" }
+    );
+
+    for (a, b) in [(3usize, 64usize), (3, 256), (5, 64), (5, 256)] {
+        let input = random_input(&mut rng, a, b);
+        let s = bench_default(&format!("scalar_step a={a} b={b}"), || {
+            std::hint::black_box(scalar_step(std::hint::black_box(&input)));
+        });
+        println!("{}", s.report());
+        println!("    = {:.1} ns/key", s.mean_ns() / b as f64);
+        if engine.is_pjrt() && engine.pick_shape(a, b) == Some((a, b)) {
+            let p = bench_default(&format!("pjrt_step   a={a} b={b}"), || {
+                std::hint::black_box(engine.step(std::hint::black_box(&input)).unwrap());
+            });
+            println!("{}", p.report());
+            println!("    = {:.1} ns/key", p.mean_ns() / b as f64);
+        }
+        println!();
+    }
+    let _ = Runtime::artifacts_available();
+}

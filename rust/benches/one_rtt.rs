@@ -1,0 +1,62 @@
+//! Bench E5: the §2.2.1 one-round-trip optimization, measured two ways.
+//!
+//! 1. Virtual-time WAN latency per op with the cache on vs off.
+//! 2. Acceptor request count per committed op on the in-memory
+//!    transport (2 phases × 3 acceptors vs 1 phase × 3).
+//!
+//! Run: `cargo bench --bench one_rtt`
+
+use std::sync::Arc;
+
+use caspaxos::quorum::ClusterConfig;
+use caspaxos::sim::cas::{AcceptorActor, CasMsg, ClientActor, Workload};
+use caspaxos::sim::{Region, World};
+use caspaxos::transport::mem::MemTransport;
+use caspaxos::proposer::{Proposer, ProposerOpts};
+use caspaxos::wan;
+
+fn sim_latency(piggyback: bool) -> f64 {
+    let mut world: World<CasMsg> = World::new(wan::azure_net(), 42);
+    for r in 0..3u64 {
+        world.add_node(r + 1, Region(r as usize), Box::new(AcceptorActor::new(r + 1)));
+    }
+    let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+    let (client, stats) = ClientActor::new(100, "k", Workload::Add, cfg, 50);
+    let client = if piggyback { client } else { client.without_piggyback() };
+    world.add_node(100, Region(0), Box::new(client));
+    world.start();
+    world.run_until(1_000_000_000);
+    stats.mean_latency_ms()
+}
+
+fn request_count(piggyback: bool) -> f64 {
+    let t = Arc::new(MemTransport::new(3));
+    let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+    let opts = ProposerOpts { piggyback, ..Default::default() };
+    let p = Proposer::with_opts(1, cfg, t.clone(), opts);
+    let n = 200;
+    for i in 0..n {
+        p.add("k", i).unwrap();
+    }
+    t.request_count() as f64 / n as f64
+}
+
+fn main() {
+    println!("# E5 — §2.2.1 one-round-trip optimization (same proposer, same key)\n");
+    let lat_on = sim_latency(true);
+    let lat_off = sim_latency(false);
+    println!("| metric | piggyback ON | piggyback OFF | ratio |");
+    println!("|---|---|---|---|");
+    println!(
+        "| WAN latency per Add (West US 2 client) | {lat_on:.1} ms | {lat_off:.1} ms | {:.2}x |",
+        lat_off / lat_on
+    );
+    let rq_on = request_count(true);
+    let rq_off = request_count(false);
+    println!(
+        "| acceptor requests per committed op | {rq_on:.1} | {rq_off:.1} | {:.2}x |",
+        rq_off / rq_on
+    );
+    println!("\n# Expected: ~2x on both — skipping the prepare phase halves the");
+    println!("# round trips and the message count in the steady state.");
+}

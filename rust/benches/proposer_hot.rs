@@ -1,0 +1,84 @@
+//! L3 hot-path microbenchmarks (perf pass §Perf of EXPERIMENTS.md).
+//!
+//! Measures the coordinator overhead with the network removed
+//! (in-process transport): a full two-phase round, the 1-RTT cached
+//! round, the sans-IO core alone, and codec costs.
+//!
+//! Run: `cargo bench --bench proposer_hot`
+
+use std::sync::Arc;
+
+use caspaxos::benchkit::bench_default;
+use caspaxos::ballot::Ballot;
+use caspaxos::change::ChangeFn;
+use caspaxos::codec::Codec;
+use caspaxos::msg::{ProposerId, Request, Response};
+use caspaxos::proposer::{Proposer, ProposerOpts, RoundCore, Step};
+use caspaxos::quorum::ClusterConfig;
+use caspaxos::transport::mem::MemTransport;
+
+fn main() {
+    println!("# L3 proposer hot path (MemTransport, 3 acceptors)\n");
+
+    // Full round, no cache (2 phases x 3 acceptors).
+    let t = Arc::new(MemTransport::new(3));
+    let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+    let opts = ProposerOpts { piggyback: false, ..Default::default() };
+    let p = Proposer::with_opts(1, cfg.clone(), t.clone(), opts);
+    let mut i = 0i64;
+    let s = bench_default("two_phase_round (Add)", || {
+        i += 1;
+        p.add("k", 1).unwrap();
+    });
+    println!("{}", s.report());
+
+    // Cached 1-RTT round.
+    let p2 = Proposer::new(2, cfg.clone(), t.clone());
+    p2.add("k2", 1).unwrap(); // warm the cache
+    let s = bench_default("one_rtt_round (Add, cached)", || {
+        p2.add("k2", 1).unwrap();
+    });
+    println!("{}", s.report());
+
+    // Linearizable read (cached).
+    let s = bench_default("read (cached)", || {
+        p2.get("k2").unwrap();
+    });
+    println!("{}", s.report());
+
+    // Sans-IO core: one complete round against synthetic replies.
+    let s = bench_default("round_core (pure, no transport)", || {
+        let (mut core, _msgs) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Add(1),
+            Ballot::new(1, 1),
+            ProposerId::new(1),
+            cfg.clone(),
+            true,
+        );
+        let promise =
+            Response::Promise { accepted_ballot: Ballot::ZERO, accepted_val: caspaxos::Val::Empty };
+        let _ = core.on_reply(core.token(), 1, Some(promise.clone()));
+        let step = core.on_reply(core.token(), 2, Some(promise));
+        let Step::Send(_) = step else { unreachable!() };
+        let _ = core.on_reply(core.token(), 1, Some(Response::Accepted));
+        let Step::Done(Ok(_)) = core.on_reply(core.token(), 2, Some(Response::Accepted)) else {
+            unreachable!()
+        };
+    });
+    println!("{}", s.report());
+
+    // Codec: encode+decode an Accept request.
+    let req = Request::Accept {
+        key: "some/realistic/key".into(),
+        ballot: Ballot::new(123456, 42),
+        val: caspaxos::Val::Num { ver: 99, num: 123456789 },
+        from: ProposerId { id: 42, age: 3 },
+        promise_next: Some(Ballot::new(123457, 42)),
+    };
+    let s = bench_default("codec Accept encode+decode", || {
+        let bytes = req.to_bytes();
+        std::hint::black_box(Request::from_bytes(std::hint::black_box(&bytes)).unwrap());
+    });
+    println!("{}", s.report());
+}

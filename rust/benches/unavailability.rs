@@ -1,0 +1,23 @@
+//! Bench E3: regenerates the §3.3 leader-isolation unavailability table.
+//!
+//! Run: `cargo bench --bench unavailability`
+
+use caspaxos::experiments::unavailability_table;
+
+fn main() {
+    println!("# E3 — §3.3 unavailability window during leader isolation");
+    println!("# (simulated WAN; leader-based systems parameterized by their");
+    println!("#  election-timeout defaults — see baselines::profiles)\n");
+    for seed in [42u64, 7] {
+        println!("## seed {seed}");
+        println!("| database | protocol | paper | measured |");
+        println!("|---|---|---|---|");
+        for r in unavailability_table(seed) {
+            println!(
+                "| {} | {} | {:.0} s | {:.1} s |",
+                r.system, r.protocol, r.paper_s, r.measured_s
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench E2: regenerates the §3.2 WAN latency table.
+//!
+//! Run: `cargo bench --bench wan_latency`
+
+use caspaxos::experiments::wan_latency_table;
+
+fn main() {
+    println!("# E2 — §3.2 read-modify-write latency over the Azure WAN profile");
+    println!("# (simulated network, paper RTT matrix; leader in Southeast Asia)\n");
+    // Several seeds to show run-to-run stability.
+    for seed in [42u64, 7, 2026] {
+        println!("## seed {seed}");
+        println!("| system | region | paper | measured |");
+        println!("|---|---|---|---|");
+        for r in wan_latency_table(50, seed) {
+            println!(
+                "| {} | {} | {:.0} ms | {:.1} ms |",
+                r.system, r.region, r.paper_ms, r.measured_ms
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,396 @@
+//! Acceptor role (§2.1–2.2).
+//!
+//! An acceptor stores, per register: the *promise* (highest prepare ballot
+//! seen) and the *accepted* (ballot, value) pair. The two rules that give
+//! the protocol its safety:
+//!
+//! * **Prepare(b)** — conflict if a greater-or-equal ballot was already
+//!   seen; otherwise persist `promise = b` and return the accepted pair.
+//! * **Accept(b, v)** — conflict if a greater ballot was seen (a promise
+//!   for exactly `b` is what the proposer holds); otherwise erase the
+//!   promise, persist `accepted = (b, v)` and confirm.
+//!
+//! The acceptor also enforces the per-proposer *minimum age* installed by
+//! the deletion GC (§3.1): messages from a proposer whose age is below the
+//! recorded minimum are rejected, which closes the lost-delete anomaly.
+//!
+//! The core is sans-IO and deterministic: `handle(Request) -> Response`.
+//! Drivers (in-memory cluster, simulator, TCP server) own threading.
+
+pub mod storage;
+
+use std::collections::BTreeMap;
+
+use crate::ballot::Ballot;
+use crate::msg::{Key, ProposerId, Request, Response};
+use crate::state::Val;
+
+pub use storage::{FileStorage, MemStorage, Slot, Storage};
+
+/// A single acceptor: protocol rules over a [`Storage`] backend.
+pub struct Acceptor<S: Storage = MemStorage> {
+    /// This acceptor's node id.
+    pub id: u64,
+    store: S,
+    /// Cached min-age table (backed by storage).
+    min_ages: BTreeMap<u64, u64>,
+}
+
+impl Acceptor<MemStorage> {
+    /// In-memory acceptor (tests, simulation).
+    pub fn new(id: u64) -> Self {
+        Acceptor::with_storage(id, MemStorage::new())
+    }
+}
+
+impl<S: Storage> Acceptor<S> {
+    /// Acceptor over an explicit storage backend.
+    pub fn with_storage(id: u64, store: S) -> Self {
+        let min_ages = store.load_min_ages();
+        Acceptor { id, store, min_ages }
+    }
+
+    /// Read-only access to the backing storage.
+    pub fn storage(&self) -> &S {
+        &self.store
+    }
+
+    /// Number of registers currently held.
+    pub fn register_count(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Convenience inspector: the accepted numeric value for `key`
+    /// (tests, admin tooling).
+    pub fn storage_value(&self, key: &str) -> Option<i64> {
+        self.store.load(&key.to_string()).and_then(|s| s.value.as_num())
+    }
+
+    /// Checks the GC age rule (§3.1). `true` = message must be rejected.
+    fn is_stale(&self, from: &ProposerId) -> Option<u64> {
+        match self.min_ages.get(&from.id) {
+            Some(min) if from.age < *min => Some(*min),
+            _ => None,
+        }
+    }
+
+    /// Handles one request. Pure state transition + storage write.
+    pub fn handle(&mut self, req: &Request) -> Response {
+        match req {
+            Request::Prepare { key, ballot, from } => self.on_prepare(key, *ballot, from),
+            Request::Accept { key, ballot, val, from, promise_next } => {
+                self.on_accept(key, *ballot, val, from, *promise_next)
+            }
+            Request::SetMinAge { proposer_id, min_age } => {
+                self.on_set_min_age(*proposer_id, *min_age)
+            }
+            Request::Erase { key, tombstone_ballot } => self.on_erase(key, *tombstone_ballot),
+            Request::Dump { after, limit } => self.on_dump(after.as_ref(), *limit),
+            Request::Install { key, ballot, val } => self.on_install(key, *ballot, val),
+            Request::Ping => Response::Ok,
+        }
+    }
+
+    fn on_prepare(&mut self, key: &Key, ballot: Ballot, from: &ProposerId) -> Response {
+        if let Some(required) = self.is_stale(from) {
+            return Response::StaleAge { required };
+        }
+        let mut slot = self.store.load(key).unwrap_or_default();
+        // "Returns a conflict if it already saw a greater ballot number."
+        // Equal is a conflict too: a promise can only be given once.
+        if slot.max_ballot() >= ballot {
+            return Response::Conflict { seen: slot.max_ballot() };
+        }
+        slot.promise = ballot;
+        if let Err(e) = self.store.store(key, &slot) {
+            return Response::Error(e.to_string());
+        }
+        Response::Promise { accepted_ballot: slot.accepted_ballot, accepted_val: slot.value }
+    }
+
+    fn on_accept(
+        &mut self,
+        key: &Key,
+        ballot: Ballot,
+        val: &Val,
+        from: &ProposerId,
+        promise_next: Option<Ballot>,
+    ) -> Response {
+        if let Some(required) = self.is_stale(from) {
+            return Response::StaleAge { required };
+        }
+        let mut slot = self.store.load(key).unwrap_or_default();
+        // Accept (b, v) iff no ballot greater than b was seen. The
+        // proposer's own promise for exactly b authorizes the write; an
+        // accepted ballot >= b or a promise > b is a conflict.
+        if slot.promise > ballot || slot.accepted_ballot >= ballot {
+            return Response::Conflict { seen: slot.max_ballot() };
+        }
+        // "Erases the promise, marks the received tuple as accepted."
+        slot.promise = Ballot::ZERO;
+        slot.accepted_ballot = ballot;
+        slot.value = val.clone();
+        // One-round-trip optimization (§2.2.1): the accept message can
+        // piggyback the promise for the proposer's *next* ballot.
+        if let Some(next) = promise_next {
+            if next > ballot {
+                slot.promise = next;
+            }
+        }
+        if let Err(e) = self.store.store(key, &slot) {
+            return Response::Error(e.to_string());
+        }
+        Response::Accepted
+    }
+
+    fn on_set_min_age(&mut self, proposer_id: u64, min_age: u64) -> Response {
+        let cur = self.min_ages.get(&proposer_id).copied().unwrap_or(0);
+        let new = cur.max(min_age); // idempotent, monotone
+        if let Err(e) = self.store.store_min_age(proposer_id, new) {
+            return Response::Error(e.to_string());
+        }
+        self.min_ages.insert(proposer_id, new);
+        Response::Ok
+    }
+
+    fn on_erase(&mut self, key: &Key, tombstone_ballot: Ballot) -> Response {
+        match self.store.load(key) {
+            // Only erase if the slot still holds the GC's tombstone: a
+            // concurrent newer write must survive (§3.1 step 2d).
+            Some(slot)
+                if slot.value.is_tombstone() && slot.accepted_ballot <= tombstone_ballot =>
+            {
+                match self.store.erase(key) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            _ => Response::Ok, // idempotent: already gone or overwritten
+        }
+    }
+
+    fn on_dump(&self, after: Option<&Key>, limit: usize) -> Response {
+        let page = self.store.scan(after, limit.min(4096));
+        let more = match page.last() {
+            Some((last, _)) => !self.store.scan(Some(last), 1).is_empty(),
+            None => false,
+        };
+        let entries =
+            page.into_iter().map(|(k, s)| (k, s.accepted_ballot, s.value)).collect();
+        Response::DumpPage { entries, more }
+    }
+
+    fn on_install(&mut self, key: &Key, ballot: Ballot, val: &Val) -> Response {
+        let mut slot = self.store.load(key).unwrap_or_default();
+        // Conflict resolution by ballot (§2.3.3): higher ballot wins.
+        if ballot > slot.accepted_ballot {
+            slot.accepted_ballot = ballot;
+            slot.value = val.clone();
+            if let Err(e) = self.store.store(key, &slot) {
+                return Response::Error(e.to_string());
+            }
+        }
+        Response::Ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prep(key: &str, c: u64, p: u64) -> Request {
+        Request::Prepare { key: key.into(), ballot: Ballot::new(c, p), from: ProposerId::new(p) }
+    }
+
+    fn acc(key: &str, c: u64, p: u64, num: i64) -> Request {
+        Request::Accept {
+            key: key.into(),
+            ballot: Ballot::new(c, p),
+            val: Val::Num { ver: 0, num },
+            from: ProposerId::new(p),
+            promise_next: None,
+        }
+    }
+
+    #[test]
+    fn prepare_then_accept_happy_path() {
+        let mut a = Acceptor::new(1);
+        let r = a.handle(&prep("k", 1, 1));
+        assert_eq!(
+            r,
+            Response::Promise { accepted_ballot: Ballot::ZERO, accepted_val: Val::Empty }
+        );
+        assert_eq!(a.handle(&acc("k", 1, 1, 42)), Response::Accepted);
+        // Next prepare sees the accepted pair.
+        match a.handle(&prep("k", 2, 1)) {
+            Response::Promise { accepted_ballot, accepted_val } => {
+                assert_eq!(accepted_ballot, Ballot::new(1, 1));
+                assert_eq!(accepted_val.as_num(), Some(42));
+            }
+            r => panic!("expected promise, got {r:?}"),
+        }
+    }
+
+    #[test]
+    fn prepare_conflicts_on_equal_or_smaller_ballot() {
+        let mut a = Acceptor::new(1);
+        a.handle(&prep("k", 5, 1));
+        assert!(matches!(a.handle(&prep("k", 5, 1)), Response::Conflict { .. }), "equal");
+        assert!(matches!(a.handle(&prep("k", 4, 2)), Response::Conflict { .. }), "smaller");
+        match a.handle(&prep("k", 3, 1)) {
+            Response::Conflict { seen } => assert_eq!(seen, Ballot::new(5, 1)),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn accept_requires_no_greater_promise() {
+        let mut a = Acceptor::new(1);
+        a.handle(&prep("k", 5, 1));
+        // A stale accept from an older round conflicts.
+        assert!(matches!(a.handle(&acc("k", 4, 2, 1)), Response::Conflict { .. }));
+        // The round that holds the promise succeeds.
+        assert_eq!(a.handle(&acc("k", 5, 1, 1)), Response::Accepted);
+        // Replayed accept with the same ballot conflicts (accepted >= b).
+        assert!(matches!(a.handle(&acc("k", 5, 1, 2)), Response::Conflict { .. }));
+    }
+
+    #[test]
+    fn accept_without_prepare_succeeds_if_no_greater_seen() {
+        // Needed by the 1-RTT path: the promise was piggybacked earlier.
+        let mut a = Acceptor::new(1);
+        assert_eq!(a.handle(&acc("k", 1, 1, 7)), Response::Accepted);
+    }
+
+    #[test]
+    fn accept_erases_promise() {
+        let mut a = Acceptor::new(1);
+        a.handle(&prep("k", 5, 1));
+        a.handle(&acc("k", 5, 1, 7));
+        // After accept the promise is erased: a *smaller* new prepare (but
+        // greater than accepted_ballot) must conflict only via accepted.
+        match a.handle(&prep("k", 6, 2)) {
+            Response::Promise { accepted_ballot, .. } => {
+                assert_eq!(accepted_ballot, Ballot::new(5, 1))
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn piggybacked_promise_blocks_other_proposers() {
+        let mut a = Acceptor::new(1);
+        let r = a.handle(&Request::Accept {
+            key: "k".into(),
+            ballot: Ballot::new(1, 1),
+            val: Val::Num { ver: 0, num: 1 },
+            from: ProposerId::new(1),
+            promise_next: Some(Ballot::new(2, 1)),
+        });
+        assert_eq!(r, Response::Accepted);
+        // Another proposer preparing at (2, 0) loses to the piggybacked
+        // promise (2, 1)? No: (2,0) < (2,1), so conflict.
+        assert!(matches!(a.handle(&prep("k", 2, 0)), Response::Conflict { .. }));
+        // But a higher prepare wins.
+        assert!(matches!(a.handle(&prep("k", 3, 2)), Response::Promise { .. }));
+        // And the owner's own accept at (2,1) goes straight through... now
+        // blocked by promise (3,2): conflict. Correct — it lost the race.
+        assert!(matches!(a.handle(&acc("k", 2, 1, 9)), Response::Conflict { .. }));
+    }
+
+    #[test]
+    fn registers_are_independent() {
+        let mut a = Acceptor::new(1);
+        a.handle(&prep("k1", 9, 1));
+        assert!(matches!(a.handle(&prep("k2", 1, 2)), Response::Promise { .. }));
+    }
+
+    #[test]
+    fn min_age_rejects_old_proposers() {
+        let mut a = Acceptor::new(1);
+        assert_eq!(a.handle(&Request::SetMinAge { proposer_id: 3, min_age: 2 }), Response::Ok);
+        let old = Request::Prepare {
+            key: "k".into(),
+            ballot: Ballot::new(1, 3),
+            from: ProposerId { id: 3, age: 1 },
+        };
+        assert_eq!(a.handle(&old), Response::StaleAge { required: 2 });
+        let fresh = Request::Prepare {
+            key: "k".into(),
+            ballot: Ballot::new(1, 3),
+            from: ProposerId { id: 3, age: 2 },
+        };
+        assert!(matches!(a.handle(&fresh), Response::Promise { .. }));
+        // Other proposers unaffected.
+        assert!(matches!(a.handle(&prep("k2", 1, 4)), Response::Promise { .. }));
+    }
+
+    #[test]
+    fn min_age_is_monotone_and_idempotent() {
+        let mut a = Acceptor::new(1);
+        a.handle(&Request::SetMinAge { proposer_id: 3, min_age: 5 });
+        a.handle(&Request::SetMinAge { proposer_id: 3, min_age: 2 }); // lower: no-op
+        let req = Request::Prepare {
+            key: "k".into(),
+            ballot: Ballot::new(1, 3),
+            from: ProposerId { id: 3, age: 4 },
+        };
+        assert_eq!(a.handle(&req), Response::StaleAge { required: 5 });
+    }
+
+    #[test]
+    fn erase_only_removes_the_tombstone_it_saw() {
+        let mut a = Acceptor::new(1);
+        // Tombstone accepted at ballot (2,1).
+        a.handle(&Request::Accept {
+            key: "k".into(),
+            ballot: Ballot::new(2, 1),
+            val: Val::Tombstone,
+            from: ProposerId::new(1),
+            promise_next: None,
+        });
+        // Concurrent newer write at (3,2) replaces it.
+        a.handle(&acc("k", 3, 2, 99));
+        // GC erase for the old tombstone must NOT remove the new value.
+        a.handle(&Request::Erase { key: "k".into(), tombstone_ballot: Ballot::new(2, 1) });
+        assert_eq!(a.register_count(), 1);
+        // Now tombstone again and erase for real.
+        a.handle(&Request::Accept {
+            key: "k".into(),
+            ballot: Ballot::new(4, 1),
+            val: Val::Tombstone,
+            from: ProposerId::new(1),
+            promise_next: None,
+        });
+        a.handle(&Request::Erase { key: "k".into(), tombstone_ballot: Ballot::new(4, 1) });
+        assert_eq!(a.register_count(), 0);
+        // Idempotent on absent key.
+        assert_eq!(
+            a.handle(&Request::Erase { key: "k".into(), tombstone_ballot: Ballot::new(4, 1) }),
+            Response::Ok
+        );
+    }
+
+    #[test]
+    fn dump_and_install_catch_up() {
+        let mut src = Acceptor::new(1);
+        for (i, k) in ["a", "b", "c"].iter().enumerate() {
+            src.handle(&acc(k, (i + 1) as u64, 1, i as i64));
+        }
+        let Response::DumpPage { entries, more } =
+            src.handle(&Request::Dump { after: None, limit: 2 })
+        else {
+            panic!()
+        };
+        assert_eq!(entries.len(), 2);
+        assert!(more);
+        let mut dst = Acceptor::new(2);
+        // dst already has a NEWER value for "a": install must not clobber.
+        dst.handle(&acc("a", 10, 2, 777));
+        for (k, b, v) in entries {
+            dst.handle(&Request::Install { key: k, ballot: b, val: v });
+        }
+        assert_eq!(dst.storage().load(&"a".to_string()).unwrap().value.as_num(), Some(777));
+        assert_eq!(dst.storage().load(&"b".to_string()).unwrap().value.as_num(), Some(1));
+    }
+}

@@ -1,0 +1,432 @@
+//! Acceptor persistence.
+//!
+//! The paper requires acceptors to *persist* the promise and the accepted
+//! (ballot, value) pair before confirming. [`Storage`] abstracts that;
+//! [`MemStorage`] is the default for tests/simulation, [`FileStorage`]
+//! provides crash-durable persistence for real deployments (an fsync'd
+//! append-only record log with CRC32-framed records, compacted on load —
+//! playing the role Redis played for Gryadka).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+use crate::ballot::Ballot;
+use crate::codec::{Codec, CodecError};
+use crate::error::{CasError, CasResult};
+use crate::msg::Key;
+use crate::state::Val;
+
+/// One register's durable state on an acceptor.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Slot {
+    /// The promise: highest ballot seen in a prepare (ZERO if none).
+    pub promise: Ballot,
+    /// Ballot of the accepted value (ZERO if none).
+    pub accepted_ballot: Ballot,
+    /// The accepted value (Empty if none).
+    pub value: Val,
+}
+
+impl Slot {
+    /// Highest ballot this slot has ever seen (promise or accepted).
+    pub fn max_ballot(&self) -> Ballot {
+        self.promise.max(self.accepted_ballot)
+    }
+}
+
+impl Codec for Slot {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.promise.encode(out);
+        self.accepted_ballot.encode(out);
+        self.value.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(Slot {
+            promise: Ballot::decode(input)?,
+            accepted_ballot: Ballot::decode(input)?,
+            value: Val::decode(input)?,
+        })
+    }
+}
+
+/// Durable state backing one acceptor.
+pub trait Storage: Send {
+    /// Loads a slot; `None` if the register is absent (∅, never promised).
+    fn load(&self, key: &Key) -> Option<Slot>;
+    /// Persists a slot. Must be durable before returning.
+    fn store(&mut self, key: &Key, slot: &Slot) -> CasResult<()>;
+    /// Removes a register entirely (GC step 2d, §3.1).
+    fn erase(&mut self, key: &Key) -> CasResult<()>;
+    /// Iterates keys in lexicographic order starting strictly after
+    /// `after` (None = from the beginning), up to `limit` entries.
+    fn scan(&self, after: Option<&Key>, limit: usize) -> Vec<(Key, Slot)>;
+    /// Loads the per-proposer minimum-age table (§3.1).
+    fn load_min_ages(&self) -> BTreeMap<u64, u64>;
+    /// Persists one min-age entry.
+    fn store_min_age(&mut self, proposer_id: u64, min_age: u64) -> CasResult<()>;
+    /// Number of registers held.
+    fn len(&self) -> usize;
+    /// True if no registers are held.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// In-memory storage (tests, simulation, benchmarks).
+#[derive(Debug, Default)]
+pub struct MemStorage {
+    slots: BTreeMap<Key, Slot>,
+    min_ages: BTreeMap<u64, u64>,
+}
+
+impl MemStorage {
+    /// Fresh empty storage.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Storage for MemStorage {
+    fn load(&self, key: &Key) -> Option<Slot> {
+        self.slots.get(key).cloned()
+    }
+
+    fn store(&mut self, key: &Key, slot: &Slot) -> CasResult<()> {
+        self.slots.insert(key.clone(), slot.clone());
+        Ok(())
+    }
+
+    fn erase(&mut self, key: &Key) -> CasResult<()> {
+        self.slots.remove(key);
+        Ok(())
+    }
+
+    fn scan(&self, after: Option<&Key>, limit: usize) -> Vec<(Key, Slot)> {
+        let range = match after {
+            Some(k) => self
+                .slots
+                .range::<Key, _>((std::ops::Bound::Excluded(k), std::ops::Bound::Unbounded)),
+            None => self.slots.range::<Key, _>(..),
+        };
+        range.take(limit).map(|(k, s)| (k.clone(), s.clone())).collect()
+    }
+
+    fn load_min_ages(&self) -> BTreeMap<u64, u64> {
+        self.min_ages.clone()
+    }
+
+    fn store_min_age(&mut self, proposer_id: u64, min_age: u64) -> CasResult<()> {
+        self.min_ages.insert(proposer_id, min_age);
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// One append-only log record.
+#[derive(Debug, PartialEq)]
+enum LogRec {
+    Slot { key: Key, slot: Slot },
+    Erase { key: Key },
+    MinAge { proposer_id: u64, min_age: u64 },
+}
+
+impl Codec for LogRec {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            LogRec::Slot { key, slot } => {
+                out.push(0);
+                key.encode(out);
+                slot.encode(out);
+            }
+            LogRec::Erase { key } => {
+                out.push(1);
+                key.encode(out);
+            }
+            LogRec::MinAge { proposer_id, min_age } => {
+                out.push(2);
+                proposer_id.encode(out);
+                min_age.encode(out);
+            }
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(match u8::decode(input)? {
+            0 => LogRec::Slot { key: Key::decode(input)?, slot: Slot::decode(input)? },
+            1 => LogRec::Erase { key: Key::decode(input)? },
+            2 => LogRec::MinAge { proposer_id: u64::decode(input)?, min_age: u64::decode(input)? },
+            _ => return Err(CodecError::Invalid("LogRec tag")),
+        })
+    }
+}
+
+/// Crash-durable storage: CRC-framed binary append log + in-memory index.
+///
+/// Record framing: `u32 len (LE) | u32 crc32(body) (LE) | body`. On open
+/// the log is replayed (last record per key wins); replay stops at the
+/// first torn/corrupt record, which a crash mid-append produces. The log
+/// is rewritten compacted when it exceeds 4× the live set.
+pub struct FileStorage {
+    path: PathBuf,
+    file: std::fs::File,
+    mem: MemStorage,
+    records: usize,
+    /// fsync every write (safe default). Disable for throughput benches.
+    pub fsync: bool,
+}
+
+impl FileStorage {
+    /// Opens (or creates) a log at `path`, replaying existing records.
+    pub fn open(path: impl Into<PathBuf>) -> CasResult<Self> {
+        let path = path.into();
+        let mut mem = MemStorage::new();
+        let mut records = 0;
+        if path.exists() {
+            let mut buf = Vec::new();
+            std::fs::File::open(&path)
+                .and_then(|mut f| f.read_to_end(&mut buf))
+                .map_err(|e| CasError::Transport(format!("open {path:?}: {e}")))?;
+            let mut input = buf.as_slice();
+            while input.len() >= 8 {
+                let len = u32::from_le_bytes(input[0..4].try_into().unwrap()) as usize;
+                let crc = u32::from_le_bytes(input[4..8].try_into().unwrap());
+                if input.len() < 8 + len {
+                    break; // torn tail
+                }
+                let body = &input[8..8 + len];
+                if crc32fast::hash(body) != crc {
+                    break; // corrupt record: stop replay
+                }
+                match LogRec::from_bytes(body) {
+                    Ok(LogRec::Slot { key, slot }) => {
+                        mem.store(&key, &slot).ok();
+                    }
+                    Ok(LogRec::Erase { key }) => {
+                        mem.erase(&key).ok();
+                    }
+                    Ok(LogRec::MinAge { proposer_id, min_age }) => {
+                        mem.store_min_age(proposer_id, min_age).ok();
+                    }
+                    Err(_) => break,
+                }
+                records += 1;
+                input = &input[8 + len..];
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| CasError::Transport(format!("append {path:?}: {e}")))?;
+        let mut s = FileStorage { path, file, mem, records, fsync: true };
+        if s.records > 64 && s.records > 4 * (s.mem.len() + s.mem.min_ages.len()) {
+            s.compact()?;
+        }
+        Ok(s)
+    }
+
+    fn append(&mut self, rec: &LogRec) -> CasResult<()> {
+        let body = rec.to_bytes();
+        let mut frame = Vec::with_capacity(8 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32fast::hash(&body).to_le_bytes());
+        frame.extend_from_slice(&body);
+        self.file.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+        if self.fsync {
+            self.file.sync_data().map_err(|e| CasError::Transport(e.to_string()))?;
+        }
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Rewrites the log with exactly the live records.
+    pub fn compact(&mut self) -> CasResult<()> {
+        let tmp = self.path.with_extension("compact");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| CasError::Transport(e.to_string()))?;
+            let mut frame = Vec::new();
+            for (key, slot) in self.mem.scan(None, usize::MAX) {
+                let body = LogRec::Slot { key, slot }.to_bytes();
+                frame.clear();
+                frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                frame.extend_from_slice(&crc32fast::hash(&body).to_le_bytes());
+                frame.extend_from_slice(&body);
+                f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+            }
+            for (proposer_id, min_age) in self.mem.load_min_ages() {
+                let body = LogRec::MinAge { proposer_id, min_age }.to_bytes();
+                frame.clear();
+                frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                frame.extend_from_slice(&crc32fast::hash(&body).to_le_bytes());
+                frame.extend_from_slice(&body);
+                f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+            }
+            f.sync_data().map_err(|e| CasError::Transport(e.to_string()))?;
+        }
+        std::fs::rename(&tmp, &self.path).map_err(|e| CasError::Transport(e.to_string()))?;
+        self.file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| CasError::Transport(e.to_string()))?;
+        self.records = self.mem.len() + self.mem.min_ages.len();
+        Ok(())
+    }
+}
+
+impl Storage for FileStorage {
+    fn load(&self, key: &Key) -> Option<Slot> {
+        self.mem.load(key)
+    }
+
+    fn store(&mut self, key: &Key, slot: &Slot) -> CasResult<()> {
+        self.append(&LogRec::Slot { key: key.clone(), slot: slot.clone() })?;
+        self.mem.store(key, slot)
+    }
+
+    fn erase(&mut self, key: &Key) -> CasResult<()> {
+        self.append(&LogRec::Erase { key: key.clone() })?;
+        self.mem.erase(key)
+    }
+
+    fn scan(&self, after: Option<&Key>, limit: usize) -> Vec<(Key, Slot)> {
+        self.mem.scan(after, limit)
+    }
+
+    fn load_min_ages(&self) -> BTreeMap<u64, u64> {
+        self.mem.load_min_ages()
+    }
+
+    fn store_min_age(&mut self, proposer_id: u64, min_age: u64) -> CasResult<()> {
+        self.append(&LogRec::MinAge { proposer_id, min_age })?;
+        self.mem.store_min_age(proposer_id, min_age)
+    }
+
+    fn len(&self) -> usize {
+        self.mem.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::TempDir;
+
+    fn slot(c: u64) -> Slot {
+        Slot {
+            promise: Ballot::new(c, 1),
+            accepted_ballot: Ballot::new(c, 1),
+            value: Val::Num { ver: 0, num: c as i64 },
+        }
+    }
+
+    #[test]
+    fn mem_store_load_erase() {
+        let mut s = MemStorage::new();
+        assert!(s.load(&"a".to_string()).is_none());
+        s.store(&"a".to_string(), &slot(1)).unwrap();
+        assert_eq!(s.load(&"a".to_string()), Some(slot(1)));
+        assert_eq!(s.len(), 1);
+        s.erase(&"a".to_string()).unwrap();
+        assert!(s.load(&"a".to_string()).is_none());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn mem_scan_pagination() {
+        let mut s = MemStorage::new();
+        for k in ["a", "b", "c", "d"] {
+            s.store(&k.to_string(), &slot(1)).unwrap();
+        }
+        let page = s.scan(None, 2);
+        assert_eq!(page.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(), vec!["a", "b"]);
+        let page = s.scan(Some(&"b".to_string()), 10);
+        assert_eq!(page.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(), vec!["c", "d"]);
+    }
+
+    #[test]
+    fn logrec_codec_roundtrip() {
+        for rec in [
+            LogRec::Slot { key: "k".into(), slot: slot(3) },
+            LogRec::Erase { key: "k".into() },
+            LogRec::MinAge { proposer_id: 7, min_age: 2 },
+        ] {
+            assert_eq!(LogRec::from_bytes(&rec.to_bytes()).unwrap(), rec);
+        }
+    }
+
+    #[test]
+    fn file_storage_survives_reopen() {
+        let dir = TempDir::new("fs").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"k1".to_string(), &slot(1)).unwrap();
+            s.store(&"k2".to_string(), &slot(2)).unwrap();
+            s.store(&"k1".to_string(), &slot(3)).unwrap(); // overwrite
+            s.erase(&"k2".to_string()).unwrap();
+            s.store_min_age(7, 4).unwrap();
+        }
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.load(&"k1".to_string()), Some(slot(3)), "last write wins");
+        assert!(s.load(&"k2".to_string()).is_none(), "erase replayed");
+        assert_eq!(s.load_min_ages().get(&7), Some(&4));
+    }
+
+    #[test]
+    fn file_storage_tolerates_torn_tail() {
+        let dir = TempDir::new("fs").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"k".to_string(), &slot(5)).unwrap();
+        }
+        // simulate a crash mid-append: half a frame
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[200, 0, 0, 0, 1, 2]).unwrap();
+        }
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.load(&"k".to_string()), Some(slot(5)));
+    }
+
+    #[test]
+    fn file_storage_detects_corruption() {
+        let dir = TempDir::new("fs").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"a".to_string(), &slot(1)).unwrap();
+            s.store(&"b".to_string(), &slot(2)).unwrap();
+        }
+        // Flip a byte in the middle of the file (inside record bodies).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        // Replay must stop at the corrupt record, not crash.
+        let s = FileStorage::open(&path).unwrap();
+        assert!(s.len() <= 2);
+    }
+
+    #[test]
+    fn file_storage_compacts() {
+        let dir = TempDir::new("fs").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.fsync = false;
+            for i in 0..300u64 {
+                s.store(&"hot".to_string(), &slot(i)).unwrap();
+            }
+        }
+        let before = std::fs::metadata(&path).unwrap().len();
+        let s = FileStorage::open(&path).unwrap(); // triggers compaction
+        assert_eq!(s.load(&"hot".to_string()), Some(slot(299)));
+        let after = std::fs::metadata(&path).unwrap().len();
+        assert!(after < before / 10, "compaction shrank {before} -> {after}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Ballot numbers (§2.1).
+//!
+//! A ballot is a tuple `(counter, proposer_id)` ordered lexicographically:
+//! the counter dominates and the proposer id breaks ties, which guarantees
+//! global uniqueness of ballots across proposers without coordination.
+//! On conflict a proposer *fast-forwards* its counter past the one it lost
+//! to, so it doesn't collide again.
+
+use crate::codec::{Codec, CodecError};
+
+/// A globally unique, totally ordered ballot number.
+///
+/// `Ballot::ZERO` is reserved as "never balloted" — real proposals always
+/// carry `counter >= 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Ballot {
+    /// Monotonically increasing per-proposer counter (dominant component).
+    pub counter: u64,
+    /// Proposer id, used only as a tiebreaker.
+    pub proposer: u64,
+}
+
+impl Ballot {
+    /// The "no ballot yet" sentinel, smaller than every real ballot.
+    pub const ZERO: Ballot = Ballot { counter: 0, proposer: 0 };
+
+    /// Creates a ballot.
+    pub fn new(counter: u64, proposer: u64) -> Self {
+        Ballot { counter, proposer }
+    }
+
+    /// True for the `ZERO` sentinel.
+    pub fn is_zero(&self) -> bool {
+        self.counter == 0
+    }
+
+    /// The next ballot this proposer would generate after seeing `self`.
+    pub fn next_for(&self, proposer: u64) -> Ballot {
+        Ballot { counter: self.counter + 1, proposer }
+    }
+}
+
+impl Codec for Ballot {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.counter.encode(out);
+        self.proposer.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(Ballot { counter: u64::decode(input)?, proposer: u64::decode(input)? })
+    }
+}
+
+impl std::fmt::Display for Ballot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({}, {})", self.counter, self.proposer)
+    }
+}
+
+/// Per-proposer ballot generator: a numerical id plus a local counter.
+///
+/// `fast_forward` implements the paper's conflict-avoidance rule: after a
+/// conflict with ballot `b`, jump the local counter past `b.counter`.
+#[derive(Debug, Clone)]
+pub struct BallotGenerator {
+    /// This proposer's id (the tiebreaker component).
+    pub proposer: u64,
+    counter: u64,
+}
+
+impl BallotGenerator {
+    /// New generator for proposer `proposer`, starting at counter 0.
+    pub fn new(proposer: u64) -> Self {
+        BallotGenerator { proposer, counter: 0 }
+    }
+
+    /// Generates the next (strictly increasing) ballot.
+    pub fn next(&mut self) -> Ballot {
+        self.counter += 1;
+        Ballot { counter: self.counter, proposer: self.proposer }
+    }
+
+    /// Fast-forwards the counter past a conflicting ballot so the next
+    /// generated ballot is guaranteed greater than `seen`.
+    pub fn fast_forward(&mut self, seen: Ballot) {
+        self.counter = self.counter.max(seen.counter);
+    }
+
+    /// The last ballot issued (ZERO if none yet).
+    pub fn current(&self) -> Ballot {
+        Ballot { counter: self.counter, proposer: self.proposer }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_counter_dominates() {
+        assert!(Ballot::new(2, 1) > Ballot::new(1, 9));
+        assert!(Ballot::new(3, 1) < Ballot::new(3, 2)); // id tiebreak
+        assert!(Ballot::ZERO < Ballot::new(1, 0));
+    }
+
+    #[test]
+    fn generator_is_strictly_increasing() {
+        let mut g = BallotGenerator::new(7);
+        let a = g.next();
+        let b = g.next();
+        assert!(b > a);
+        assert_eq!(a.proposer, 7);
+    }
+
+    #[test]
+    fn fast_forward_beats_conflict() {
+        let mut g = BallotGenerator::new(1);
+        g.next();
+        g.fast_forward(Ballot::new(100, 2));
+        let b = g.next();
+        assert!(b > Ballot::new(100, 2), "{b} must beat (100,2)");
+        assert_eq!(b.counter, 101);
+    }
+
+    #[test]
+    fn fast_forward_is_monotone() {
+        let mut g = BallotGenerator::new(1);
+        g.fast_forward(Ballot::new(50, 2));
+        g.fast_forward(Ballot::new(10, 3)); // lower: must not regress
+        assert_eq!(g.next().counter, 51);
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        for b in [Ballot::ZERO, Ballot::new(7, 3), Ballot::new(u64::MAX, u64::MAX)] {
+            assert_eq!(Ballot::from_bytes(&b.to_bytes()).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn distinct_proposers_never_collide() {
+        let mut g1 = BallotGenerator::new(1);
+        let mut g2 = BallotGenerator::new(2);
+        for _ in 0..100 {
+            assert_ne!(g1.next(), g2.next());
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Comparator protocols for the paper's evaluation tables.
+//!
+//! The paper compares Gryadka (CASPaxos) against leader-based systems:
+//! Etcd/Consul/… (Raft), MongoDB (primary-copy), CockroachDB/TiDB
+//! (MultiRaft), Riak (Vertical Paxos). Reproducing those exact codebases
+//! is out of scope; what the tables measure is *protocol structure* —
+//! where the leader sits, how many RTTs an operation costs, how long
+//! re-election takes. The substitution (DESIGN.md): one faithful
+//! leader-based replicated-log implementation, [`leaderlog`],
+//! parameterized by the per-system defaults that differ (election
+//! timeout, heartbeat interval, server-side processing overhead), running
+//! on the same simulator as CASPaxos.
+//!
+//! [`profiles`] pins one parameter set per system in the §3.3 table.
+
+pub mod leaderlog;
+pub mod profiles;

@@ -1,0 +1,176 @@
+//! Per-system parameter profiles for the §3.3 comparison table.
+//!
+//! The paper's table reports one unavailability window per database
+//! during a leader-isolation accident, and explicitly warns that the
+//! window is "a configuration parameter depending on RTT between nodes"
+//! — i.e. dominated by each system's default failure-detection timeout.
+//! These profiles pin election-timeout defaults of the same order as the
+//! measured windows so the regenerated table reproduces the *shape*:
+//! every leader-based system shows a seconds-scale outage, CASPaxos
+//! shows zero.
+
+use super::leaderlog::LlConfig;
+use crate::sim::{NodeId, SimTime};
+
+/// One comparator system in the §3.3 table.
+#[derive(Debug, Clone)]
+pub struct SystemProfile {
+    /// Display name (matches the paper's table).
+    pub name: &'static str,
+    /// Replication protocol label (paper column).
+    pub protocol: &'static str,
+    /// Unavailability window the paper measured (seconds), for the
+    /// paper-vs-measured report.
+    pub paper_window_s: f64,
+    /// Election timeout range (µs) modelling the system's defaults.
+    pub election_timeout_us: (SimTime, SimTime),
+    /// Heartbeat interval (µs).
+    pub heartbeat_us: SimTime,
+    /// Per-op server-side processing overhead (µs).
+    pub processing_us: SimTime,
+}
+
+/// Gryadka's row: CASPaxos, no leader, zero window (measured directly by
+/// the CASPaxos sim actors, not via a leader-log profile).
+pub const GRYADKA: SystemProfile = SystemProfile {
+    name: "Gryadka",
+    protocol: "CASPaxos",
+    paper_window_s: 0.0,
+    election_timeout_us: (0, 0),
+    heartbeat_us: 0,
+    processing_us: 0,
+};
+
+/// Leader-based rows of the paper's table. Election timeouts are set to
+/// the order of each system's measured window (the paper's point: the
+/// window ≈ detection timeout, a config default, not a protocol merit).
+pub const LEADER_BASED: [SystemProfile; 6] = [
+    SystemProfile {
+        name: "CockroachDB",
+        protocol: "MultiRaft",
+        paper_window_s: 7.0,
+        election_timeout_us: (5_000_000, 9_000_000),
+        heartbeat_us: 500_000,
+        processing_us: 1_000,
+    },
+    SystemProfile {
+        name: "Consul",
+        protocol: "Raft",
+        paper_window_s: 14.0,
+        election_timeout_us: (10_000_000, 18_000_000),
+        heartbeat_us: 1_000_000,
+        processing_us: 500,
+    },
+    SystemProfile {
+        name: "Etcd",
+        protocol: "Raft",
+        paper_window_s: 1.0,
+        election_timeout_us: (800_000, 1_200_000),
+        heartbeat_us: 100_000,
+        processing_us: 500,
+    },
+    SystemProfile {
+        name: "RethinkDB",
+        protocol: "Raft",
+        paper_window_s: 17.0,
+        election_timeout_us: (12_000_000, 22_000_000),
+        heartbeat_us: 1_000_000,
+        processing_us: 2_000,
+    },
+    SystemProfile {
+        name: "Riak",
+        protocol: "Vertical Paxos",
+        paper_window_s: 8.0,
+        election_timeout_us: (6_000_000, 10_000_000),
+        heartbeat_us: 1_000_000,
+        processing_us: 2_000,
+    },
+    SystemProfile {
+        name: "TiDB",
+        protocol: "MultiRaft",
+        paper_window_s: 15.0,
+        election_timeout_us: (10_000_000, 20_000_000),
+        heartbeat_us: 1_000_000,
+        processing_us: 1_000,
+    },
+];
+
+/// Latency-table comparators (§3.2): Etcd-like and MongoDB-like. The
+/// MongoDB profile carries a heavier per-op processing constant (storage
+/// engine + majority write/read concern bookkeeping), matching the
+/// paper's observation that its measured latency exceeds the pure
+/// protocol estimate by a larger margin.
+pub fn etcd_like(replicas: Vec<NodeId>, leader: NodeId) -> LlConfig {
+    LlConfig {
+        replicas,
+        initial_leader: leader,
+        heartbeat_us: 100_000,
+        election_timeout_us: (800_000, 1_200_000),
+        processing_us: 500,
+    }
+}
+
+/// MongoDB-like profile for the §3.2 latency table.
+pub fn mongo_like(replicas: Vec<NodeId>, leader: NodeId) -> LlConfig {
+    LlConfig {
+        replicas,
+        initial_leader: leader,
+        heartbeat_us: 500_000,
+        election_timeout_us: (8_000_000, 12_000_000),
+        // The paper measured ~1086ms vs a 676ms protocol estimate for
+        // West US 2: ≈410ms of per-iteration (2 ops) implementation
+        // overhead — ~200ms per op (majority write concern + storage
+        // engine + linearizable read concern bookkeeping).
+        processing_us: 200_000,
+    }
+}
+
+/// Builds an [`LlConfig`] from a §3.3 profile.
+pub fn ll_config(p: &SystemProfile, replicas: Vec<NodeId>, leader: NodeId) -> LlConfig {
+    LlConfig {
+        replicas,
+        initial_leader: leader,
+        heartbeat_us: p.heartbeat_us,
+        election_timeout_us: p.election_timeout_us,
+        processing_us: p.processing_us,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_cover_paper_table() {
+        let names: Vec<&str> = LEADER_BASED.iter().map(|p| p.name).collect();
+        for expected in ["CockroachDB", "Consul", "Etcd", "RethinkDB", "Riak", "TiDB"] {
+            assert!(names.contains(&expected), "missing {expected}");
+        }
+        assert_eq!(GRYADKA.paper_window_s, 0.0);
+    }
+
+    #[test]
+    fn election_timeouts_track_measured_windows() {
+        for p in &LEADER_BASED {
+            let (lo, hi) = p.election_timeout_us;
+            assert!(lo < hi);
+            // The timeout midpoint is within 3x of the paper's window.
+            let mid_s = (lo + hi) as f64 / 2.0 / 1e6;
+            assert!(
+                mid_s <= p.paper_window_s * 3.0 && mid_s >= p.paper_window_s / 3.0,
+                "{}: timeout {mid_s}s vs paper window {}s",
+                p.name,
+                p.paper_window_s
+            );
+        }
+    }
+
+    #[test]
+    fn config_builders() {
+        let cfg = ll_config(&LEADER_BASED[2], vec![1, 2, 3], 3);
+        assert_eq!(cfg.initial_leader, 3);
+        assert_eq!(cfg.election_timeout_us, (800_000, 1_200_000));
+        let m = mongo_like(vec![1, 2, 3], 3);
+        assert!(m.processing_us > etcd_like(vec![1, 2, 3], 3).processing_us);
+    }
+}

@@ -1,0 +1,380 @@
+//! Batched proposer: the L3 hot path over the PJRT data plane.
+//!
+//! Concurrent client operations on *different* keys don't interfere
+//! (§3.2), so a proposer can drive B independent CASPaxos rounds in
+//! lock-step: one prepare fan-out covering all B keys, ONE
+//! [`StepEngine::step`] call computing every chosen value and every
+//! change application, then one accept fan-out. Network cost stays two
+//! phases total; compute cost amortizes across the batch.
+//!
+//! Keys within a batch must be distinct (enforced); per-key outcomes are
+//! independent — a conflict on one key fails that key only.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::ballot::BallotGenerator;
+use crate::change::ChangeFn;
+use crate::error::{CasError, CasResult};
+use crate::metrics::Counters;
+use crate::msg::{Key, ProposerId, Request, Response};
+use crate::quorum::ClusterConfig;
+use crate::runtime::{pack_ballot, Engine, StepInput};
+use crate::state::Val;
+use crate::transport::Transport;
+
+/// Tunables for the batched proposer.
+#[derive(Debug, Clone)]
+pub struct BatchOpts {
+    /// Per-phase reply deadline.
+    pub phase_timeout: Duration,
+}
+
+impl Default for BatchOpts {
+    fn default() -> Self {
+        BatchOpts { phase_timeout: Duration::from_secs(2) }
+    }
+}
+
+/// A proposer that executes whole batches of single-key changes.
+pub struct BatchProposer {
+    id: u64,
+    gen: Mutex<BallotGenerator>,
+    cfg: ClusterConfig,
+    transport: Arc<dyn Transport>,
+    engine: Arc<dyn Engine>,
+    opts: BatchOpts,
+    /// Round/phase counters.
+    pub metrics: Counters,
+}
+
+impl BatchProposer {
+    /// Creates a batched proposer.
+    pub fn new(
+        id: u64,
+        cfg: ClusterConfig,
+        transport: Arc<dyn Transport>,
+        engine: Arc<dyn Engine>,
+    ) -> Self {
+        Self::with_opts(id, cfg, transport, engine, BatchOpts::default())
+    }
+
+    /// Creates a batched proposer with explicit options.
+    pub fn with_opts(
+        id: u64,
+        cfg: ClusterConfig,
+        transport: Arc<dyn Transport>,
+        engine: Arc<dyn Engine>,
+        opts: BatchOpts,
+    ) -> Self {
+        BatchProposer {
+            id,
+            gen: Mutex::new(BallotGenerator::new(id)),
+            cfg,
+            transport,
+            engine,
+            opts,
+            metrics: Counters::new(),
+        }
+    }
+
+    /// Executes a batch of (key, change) pairs — all keys distinct, all
+    /// changes numeric (kernel-expressible). Returns one result per op,
+    /// in order.
+    pub fn execute(&self, ops: &[(Key, ChangeFn)]) -> CasResult<Vec<CasResult<Val>>> {
+        // Validate: distinct keys, numeric ops.
+        let mut seen = HashMap::new();
+        let mut encoded = Vec::with_capacity(ops.len());
+        for (i, (key, change)) in ops.iter().enumerate() {
+            if seen.insert(key.clone(), i).is_some() {
+                return Err(CasError::Config(format!("duplicate key in batch: {key:?}")));
+            }
+            let (op, args) = change.opcode().ok_or_else(|| {
+                CasError::Config(format!("change not kernel-expressible: {change:?}"))
+            })?;
+            encoded.push((op, args));
+        }
+        let n = ops.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let acceptors = self.cfg.acceptors.clone();
+        let a = acceptors.len();
+        let (_, b) = self
+            .engine
+            .pick_shape(a, n)
+            .ok_or_else(|| CasError::Runtime(format!("no engine variant for A={a}, B>={n}")))?;
+        self.metrics.rounds.fetch_add(1, Ordering::Relaxed);
+
+        // One ballot covers the whole batch: registers are independent
+        // Paxos instances, uniqueness only matters per register.
+        let ballot = self.gen.lock().unwrap().next();
+        let from = ProposerId::new(self.id);
+
+        // ---- Phase 1: prepare fan-out (A × n messages). The reply
+        // token carries the key column so replies route back to their
+        // batch slot.
+        let (tx, rx) = mpsc::channel();
+        for (col, (key, _)) in ops.iter().enumerate() {
+            let batch: Vec<(u64, Request)> = acceptors
+                .iter()
+                .map(|&to| (to, Request::Prepare { key: key.clone(), ballot, from }))
+                .collect();
+            self.transport.fan_out(col as u32, batch, &tx);
+        }
+
+        let mut input = StepInput::empty(a, b);
+        for (col, &(op, args)) in encoded.iter().enumerate() {
+            input.set_op(col, op, args);
+        }
+        let mut promise_count = vec![0usize; n];
+        let mut conflict: Vec<Option<crate::ballot::Ballot>> = vec![None; n];
+        let deadline = Instant::now() + self.opts.phase_timeout;
+        let mut outstanding = a * n;
+        while outstanding > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let Ok(reply) = rx.recv_timeout(deadline - now) else { break };
+            outstanding -= 1;
+            let col = reply.token as usize;
+            let row = acceptors.iter().position(|&x| x == reply.from).unwrap_or(0);
+            match reply.resp {
+                Some(Response::Promise { accepted_ballot, accepted_val }) => {
+                    promise_count[col] += 1;
+                    if let Some(packed) = accepted_val.pack() {
+                        input.set_reply(row, col, pack_ballot(accepted_ballot), packed);
+                    }
+                }
+                Some(Response::Conflict { seen }) => {
+                    let entry = conflict[col].get_or_insert(seen);
+                    *entry = (*entry).max(seen);
+                }
+                _ => {}
+            }
+        }
+
+        // ---- Compute: ONE engine call for the whole batch. ----
+        let out = self.engine.step(&input)?;
+
+        // ---- Phase 2: accept fan-out for keys that reached quorum. ----
+        let (tx2, rx2) = mpsc::channel();
+        let mut in_accept = vec![false; n];
+        let mut accept_msgs = 0usize;
+        for (col, (key, _)) in ops.iter().enumerate() {
+            if conflict[col].is_some() || promise_count[col] < self.cfg.quorum.prepare {
+                continue;
+            }
+            in_accept[col] = true;
+            let val = Val::unpack(out.next[col]);
+            let batch: Vec<(u64, Request)> = acceptors
+                .iter()
+                .map(|&to| {
+                    (
+                        to,
+                        Request::Accept {
+                            key: key.clone(),
+                            ballot,
+                            val: val.clone(),
+                            from,
+                            promise_next: None,
+                        },
+                    )
+                })
+                .collect();
+            accept_msgs += batch.len();
+            self.transport.fan_out(col as u32, batch, &tx2);
+        }
+        let mut accept_count = vec![0usize; n];
+        let deadline = Instant::now() + self.opts.phase_timeout;
+        while accept_msgs > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let Ok(reply) = rx2.recv_timeout(deadline - now) else { break };
+            accept_msgs -= 1;
+            let col = reply.token as usize;
+            match reply.resp {
+                Some(Response::Accepted) => accept_count[col] += 1,
+                Some(Response::Conflict { seen }) => {
+                    let entry = conflict[col].get_or_insert(seen);
+                    *entry = (*entry).max(seen);
+                }
+                _ => {}
+            }
+        }
+
+        // ---- Assemble per-key results. ----
+        let mut max_seen = crate::ballot::Ballot::ZERO;
+        let results: Vec<CasResult<Val>> = (0..n)
+            .map(|col| {
+                if let Some(seen) = conflict[col] {
+                    max_seen = max_seen.max(seen);
+                    return Err(CasError::Conflict(seen));
+                }
+                if !in_accept[col] {
+                    return Err(CasError::NoQuorum {
+                        needed: self.cfg.quorum.prepare,
+                        got: promise_count[col],
+                    });
+                }
+                if accept_count[col] < self.cfg.quorum.accept {
+                    return Err(CasError::NoQuorum {
+                        needed: self.cfg.quorum.accept,
+                        got: accept_count[col],
+                    });
+                }
+                self.metrics.commits.fetch_add(1, Ordering::Relaxed);
+                if out.accepted[col] {
+                    Ok(Val::unpack(out.next[col]))
+                } else {
+                    Err(CasError::Rejected(format!(
+                        "current state is {}",
+                        Val::unpack(out.next[col])
+                    )))
+                }
+            })
+            .collect();
+        // Fast-forward past any conflict for the next batch.
+        if !max_seen.is_zero() {
+            self.metrics.conflicts.fetch_add(1, Ordering::Relaxed);
+            self.gen.lock().unwrap().fast_forward(max_seen);
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proposer::Proposer;
+    use crate::transport::mem::MemTransport;
+
+    fn setup(n_acceptors: usize) -> (Arc<MemTransport>, ClusterConfig, BatchProposer) {
+        let t = Arc::new(MemTransport::new(n_acceptors));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        let engine: Arc<dyn Engine> = Arc::new(crate::runtime::ScalarEngine);
+        let bp = BatchProposer::new(500, cfg.clone(), t.clone(), engine);
+        (t, cfg, bp)
+    }
+
+    #[test]
+    fn batch_of_independent_sets() {
+        let (_, _, bp) = setup(3);
+        let ops: Vec<(Key, ChangeFn)> =
+            (0..10).map(|i| (format!("k{i}"), ChangeFn::Set(i as i64))).collect();
+        let results = bp.execute(&ops).unwrap();
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().as_num(), Some(i as i64));
+        }
+    }
+
+    #[test]
+    fn batch_interoperates_with_plain_proposer() {
+        let (t, cfg, bp) = setup(3);
+        let p = Proposer::new(1, cfg, t);
+        p.set("x", 100).unwrap();
+        // The plain proposer holds a piggybacked promise on "x", so the
+        // batch's first ballot may conflict — retry until fast-forwarded
+        // past it (the caller-side retry contract of BatchProposer).
+        let ops =
+            [("x".to_string(), ChangeFn::Add(1)), ("y".to_string(), ChangeFn::InitIfEmpty(5))];
+        let mut results = bp.execute(&ops).unwrap();
+        for _ in 0..4 {
+            if results.iter().all(|r| r.is_ok()) {
+                break;
+            }
+            results = bp.execute(&ops).unwrap();
+        }
+        assert_eq!(results[0].as_ref().unwrap().as_num(), Some(101));
+        assert_eq!(results[1].as_ref().unwrap().as_num(), Some(5));
+        // Plain proposer reads the batch's writes.
+        assert_eq!(p.get("x").unwrap().as_num(), Some(101));
+        assert_eq!(p.get("y").unwrap().as_num(), Some(5));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let (_, _, bp) = setup(3);
+        let err = bp
+            .execute(&[("k".to_string(), ChangeFn::Add(1)), ("k".to_string(), ChangeFn::Add(2))])
+            .unwrap_err();
+        assert!(matches!(err, CasError::Config(_)));
+    }
+
+    #[test]
+    fn non_numeric_change_rejected() {
+        let (_, _, bp) = setup(3);
+        let err = bp.execute(&[("k".to_string(), ChangeFn::SetBytes(vec![1]))]).unwrap_err();
+        assert!(matches!(err, CasError::Config(_)));
+    }
+
+    #[test]
+    fn per_key_cas_outcomes() {
+        let (_, _, bp) = setup(3);
+        bp.execute(&[("k".to_string(), ChangeFn::Set(1))]).unwrap();
+        let results = bp
+            .execute(&[
+                ("k".to_string(), ChangeFn::Cas { expect: 0, val: 2 }),
+                ("miss".to_string(), ChangeFn::Cas { expect: 5, val: 9 }),
+            ])
+            .unwrap();
+        assert_eq!(results[0].as_ref().unwrap().as_num(), Some(2));
+        assert!(matches!(results[1], Err(CasError::Rejected(_))), "CAS on ∅ rejects");
+    }
+
+    #[test]
+    fn batch_survives_one_acceptor_down() {
+        let (t, _, bp) = setup(3);
+        t.set_down(2, true);
+        let results =
+            bp.execute(&[("a".to_string(), ChangeFn::Set(1)), ("b".to_string(), ChangeFn::Set(2))]);
+        let results = results.unwrap();
+        assert!(results.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn conflicts_are_per_key() {
+        let (t, cfg, bp) = setup(3);
+        // Another proposer takes a high ballot on "hot" only.
+        let rival = Proposer::new(9, cfg, t);
+        for _ in 0..3 {
+            rival.set("hot", 7).unwrap(); // drives its ballot up
+        }
+        let results = bp
+            .execute(&[
+                ("hot".to_string(), ChangeFn::Set(1)),
+                ("cold".to_string(), ChangeFn::Set(2)),
+            ])
+            .unwrap();
+        assert!(
+            matches!(results[0], Err(CasError::Conflict(_))),
+            "hot key conflicts: {:?}",
+            results[0]
+        );
+        assert_eq!(results[1].as_ref().unwrap().as_num(), Some(2), "cold key commits");
+        // Retry after fast-forward succeeds.
+        let retry = bp.execute(&[("hot".to_string(), ChangeFn::Set(1))]).unwrap();
+        assert_eq!(retry[0].as_ref().unwrap().as_num(), Some(1));
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let (_, _, bp) = setup(3);
+        assert!(bp.execute(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn large_batch_all_commit() {
+        let (_, _, bp) = setup(5);
+        let ops: Vec<(Key, ChangeFn)> =
+            (0..200).map(|i| (format!("k{i}"), ChangeFn::Add(i as i64))).collect();
+        let results = bp.execute(&ops).unwrap();
+        assert_eq!(results.len(), 200);
+        assert!(results.iter().all(|r| r.is_ok()));
+    }
+}

@@ -1,0 +1,113 @@
+//! In-tree micro-benchmark harness (the offline toolchain has no
+//! criterion; see DESIGN.md §Substitutions).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on these
+//! helpers: warmup, timed iteration with early cutoff, and mean/p50/p99
+//! reporting in criterion-like one-line format.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected samples (nanoseconds per iteration).
+pub struct Samples {
+    /// Benchmark label.
+    pub name: String,
+    ns: Vec<u64>,
+}
+
+impl Samples {
+    /// Mean ns/iter.
+    pub fn mean_ns(&self) -> f64 {
+        if self.ns.is_empty() {
+            return f64::NAN;
+        }
+        self.ns.iter().sum::<u64>() as f64 / self.ns.len() as f64
+    }
+
+    /// Quantile (q in [0,1]) of ns/iter.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.ns.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.ns.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+        sorted[idx]
+    }
+
+    /// Iterations per second implied by the mean.
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns()
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12} ns/iter  p50 {:>10}  p99 {:>10}  ({:.0} ops/s, n={})",
+            self.name,
+            format_ns(self.mean_ns() as u64),
+            format_ns(self.quantile_ns(0.5)),
+            format_ns(self.quantile_ns(0.99)),
+            self.ops_per_sec(),
+            self.ns.len()
+        )
+    }
+}
+
+fn format_ns(ns: u64) -> String {
+    if ns >= 10_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else if ns >= 10_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Runs `f` repeatedly: `warmup` unmeasured iterations, then measured
+/// iterations until `budget` elapses or `max_iters` is reached.
+pub fn bench(name: &str, warmup: u32, budget: Duration, max_iters: u64, mut f: impl FnMut()) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut ns = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && (ns.len() as u64) < max_iters {
+        let t = Instant::now();
+        f();
+        ns.push(t.elapsed().as_nanos() as u64);
+    }
+    Samples { name: name.to_string(), ns }
+}
+
+/// Standard settings: 10 warmup iters, 2s budget, ≤10k iters.
+pub fn bench_default(name: &str, f: impl FnMut()) -> Samples {
+    bench(name, 10, Duration::from_secs(2), 10_000, f)
+}
+
+/// Prints a markdown table row.
+pub fn table_row(cells: &[String]) -> String {
+    format!("| {} |", cells.join(" | "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench("noop", 2, Duration::from_millis(50), 100, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(!s.ns.is_empty());
+        assert!(s.mean_ns() >= 0.0);
+        assert!(s.quantile_ns(0.99) >= s.quantile_ns(0.0));
+        assert!(s.report().contains("noop"));
+    }
+
+    #[test]
+    fn format_ns_ranges() {
+        assert!(format_ns(500).ends_with("ns"));
+        assert!(format_ns(50_000).ends_with("µs"));
+        assert!(format_ns(50_000_000).ends_with("ms"));
+    }
+}

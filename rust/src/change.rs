@@ -1,0 +1,289 @@
+//! Change functions (§2.2).
+//!
+//! Clients mutate a CASPaxos register by submitting **side-effect-free
+//! functions** `f(state) -> state`. Because change functions must cross
+//! the network (client → proposer), they are represented as a serializable
+//! enum rather than closures; [`ChangeFn::apply`] is the single evaluation
+//! point, and the L1 Pallas kernel (`apply_cas.py`) implements the same
+//! semantics vectorized over a key batch — the two are differential-tested.
+
+use crate::codec::{Codec, CodecError};
+use crate::state::{opcode, Val};
+
+/// A serializable, side-effect-free state transition function.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChangeFn {
+    /// `x -> x`. Used for reads and for membership-change rescans (§2.3).
+    Read,
+    /// `x -> if x = ∅ then (0, val) else x` — the paper's *initialize*.
+    InitIfEmpty(i64),
+    /// `x -> if version(x) = expect then (expect+1, val) else reject` —
+    /// the paper's *update if the current version is N* (§2.2).
+    Cas {
+        /// The version the client read; the update applies only if the
+        /// register still carries it.
+        expect: i64,
+        /// The new numeric payload.
+        val: i64,
+    },
+    /// Unconditional overwrite, bumping the version. Treats ∅/tombstone
+    /// as version −1 (so the first Set produces version 0).
+    Set(i64),
+    /// `x -> (ver+1, num + delta)`; ∅ and tombstone count as 0. This is
+    /// the read-increment-write loop of §3.2 collapsed into one
+    /// transition — the paper's point that user-defined change functions
+    /// merge read-modify-write into a single round.
+    Add(i64),
+    /// Unconditional overwrite with an opaque payload.
+    SetBytes(Vec<u8>),
+    /// CAS on an opaque payload.
+    CasBytes {
+        /// Expected current version.
+        expect: i64,
+        /// New payload.
+        val: Vec<u8>,
+    },
+    /// `x -> tombstone` — the delete operation (§3.1). The register keeps
+    /// occupying space until the GC process removes it.
+    Tombstone,
+}
+
+/// Result of applying a change function.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Applied {
+    /// The state to send in the accept phase.
+    pub next: Val,
+    /// False when the function rejected the current state (stale CAS).
+    /// A rejected change still *reads* — the proposer returns the current
+    /// state to the client — but nothing new is accepted... except the
+    /// current state itself, which the protocol still writes to fix
+    /// partially-accepted older rounds (like the identity transition).
+    pub accepted: bool,
+}
+
+impl ChangeFn {
+    /// Applies the function to the current state. Pure.
+    pub fn apply(&self, cur: &Val) -> Applied {
+        match self {
+            ChangeFn::Read => Applied { next: cur.clone(), accepted: true },
+            ChangeFn::InitIfEmpty(v) => {
+                if cur.is_empty() || cur.is_tombstone() {
+                    Applied { next: Val::Num { ver: 0, num: *v }, accepted: true }
+                } else {
+                    // Already initialized: the init "succeeds" as a no-op
+                    // returning the existing value (paper §2.1 semantics).
+                    Applied { next: cur.clone(), accepted: true }
+                }
+            }
+            ChangeFn::Cas { expect, val } => match cur {
+                Val::Num { ver, .. } if ver == expect => Applied {
+                    next: Val::Num { ver: expect + 1, num: *val },
+                    accepted: true,
+                },
+                _ => Applied { next: cur.clone(), accepted: false },
+            },
+            ChangeFn::Set(v) => {
+                let ver = cur.version().unwrap_or(-1) + 1;
+                Applied { next: Val::Num { ver, num: *v }, accepted: true }
+            }
+            ChangeFn::Add(d) => {
+                let (ver, num) = match cur {
+                    Val::Num { ver, num } => (*ver, *num),
+                    _ => (-1, 0),
+                };
+                Applied {
+                    next: Val::Num { ver: ver + 1, num: num.wrapping_add(*d) },
+                    accepted: true,
+                }
+            }
+            ChangeFn::SetBytes(data) => {
+                let ver = cur.version().unwrap_or(-1) + 1;
+                Applied { next: Val::Bytes { ver, data: data.clone() }, accepted: true }
+            }
+            ChangeFn::CasBytes { expect, val } => match cur.version() {
+                Some(ver) if ver == *expect => Applied {
+                    next: Val::Bytes { ver: expect + 1, data: val.clone() },
+                    accepted: true,
+                },
+                _ => Applied { next: cur.clone(), accepted: false },
+            },
+            ChangeFn::Tombstone => Applied { next: Val::Tombstone, accepted: true },
+        }
+    }
+
+    /// True if this change is a pure read (no state modification even on
+    /// success). Used by the 1-RTT cache and by batching.
+    pub fn is_read(&self) -> bool {
+        matches!(self, ChangeFn::Read)
+    }
+
+    /// The kernel op-code for this change, if it is expressible in the
+    /// packed numeric format (`Bytes` variants are not).
+    pub fn opcode(&self) -> Option<(i32, [i64; 2])> {
+        match self {
+            ChangeFn::Read => Some((opcode::READ, [0, 0])),
+            ChangeFn::InitIfEmpty(v) => Some((opcode::INIT, [0, *v])),
+            ChangeFn::Cas { expect, val } => Some((opcode::CAS, [*expect, *val])),
+            ChangeFn::Set(v) => Some((opcode::SET, [0, *v])),
+            ChangeFn::Add(d) => Some((opcode::ADD, [0, *d])),
+            ChangeFn::Tombstone => Some((opcode::TOMBSTONE, [0, 0])),
+            ChangeFn::SetBytes(_) | ChangeFn::CasBytes { .. } => None,
+        }
+    }
+}
+
+impl Codec for ChangeFn {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ChangeFn::Read => out.push(0),
+            ChangeFn::InitIfEmpty(v) => {
+                out.push(1);
+                v.encode(out);
+            }
+            ChangeFn::Cas { expect, val } => {
+                out.push(2);
+                expect.encode(out);
+                val.encode(out);
+            }
+            ChangeFn::Set(v) => {
+                out.push(3);
+                v.encode(out);
+            }
+            ChangeFn::Add(d) => {
+                out.push(4);
+                d.encode(out);
+            }
+            ChangeFn::SetBytes(data) => {
+                out.push(5);
+                data.encode(out);
+            }
+            ChangeFn::CasBytes { expect, val } => {
+                out.push(6);
+                expect.encode(out);
+                val.encode(out);
+            }
+            ChangeFn::Tombstone => out.push(7),
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(match u8::decode(input)? {
+            0 => ChangeFn::Read,
+            1 => ChangeFn::InitIfEmpty(i64::decode(input)?),
+            2 => ChangeFn::Cas { expect: i64::decode(input)?, val: i64::decode(input)? },
+            3 => ChangeFn::Set(i64::decode(input)?),
+            4 => ChangeFn::Add(i64::decode(input)?),
+            5 => ChangeFn::SetBytes(Vec::<u8>::decode(input)?),
+            6 => ChangeFn::CasBytes { expect: i64::decode(input)?, val: Vec::<u8>::decode(input)? },
+            7 => ChangeFn::Tombstone,
+            _ => return Err(CodecError::Invalid("ChangeFn tag")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_is_identity() {
+        for v in [Val::Empty, Val::Tombstone, Val::Num { ver: 1, num: 2 }] {
+            let a = ChangeFn::Read.apply(&v);
+            assert_eq!(a.next, v);
+            assert!(a.accepted);
+        }
+    }
+
+    #[test]
+    fn init_only_when_empty() {
+        let a = ChangeFn::InitIfEmpty(42).apply(&Val::Empty);
+        assert_eq!(a.next, Val::Num { ver: 0, num: 42 });
+        let existing = Val::Num { ver: 3, num: 7 };
+        let a = ChangeFn::InitIfEmpty(42).apply(&existing);
+        assert_eq!(a.next, existing, "init over existing value is a no-op read");
+    }
+
+    #[test]
+    fn init_revives_tombstone() {
+        let a = ChangeFn::InitIfEmpty(1).apply(&Val::Tombstone);
+        assert_eq!(a.next, Val::Num { ver: 0, num: 1 });
+    }
+
+    #[test]
+    fn cas_checks_version() {
+        let cur = Val::Num { ver: 5, num: 10 };
+        let ok = ChangeFn::Cas { expect: 5, val: 11 }.apply(&cur);
+        assert!(ok.accepted);
+        assert_eq!(ok.next, Val::Num { ver: 6, num: 11 });
+
+        let stale = ChangeFn::Cas { expect: 4, val: 11 }.apply(&cur);
+        assert!(!stale.accepted);
+        assert_eq!(stale.next, cur, "rejected CAS leaves state unchanged");
+
+        let on_empty = ChangeFn::Cas { expect: 0, val: 1 }.apply(&Val::Empty);
+        assert!(!on_empty.accepted, "CAS against ∅ must reject");
+    }
+
+    #[test]
+    fn add_treats_empty_as_zero() {
+        let a = ChangeFn::Add(5).apply(&Val::Empty);
+        assert_eq!(a.next, Val::Num { ver: 0, num: 5 });
+        let b = ChangeFn::Add(-2).apply(&a.next);
+        assert_eq!(b.next, Val::Num { ver: 1, num: 3 });
+    }
+
+    #[test]
+    fn add_wraps_on_overflow() {
+        let cur = Val::Num { ver: 0, num: i64::MAX };
+        let a = ChangeFn::Add(1).apply(&cur);
+        assert_eq!(a.next.as_num(), Some(i64::MIN));
+    }
+
+    #[test]
+    fn set_bumps_version() {
+        let a = ChangeFn::Set(1).apply(&Val::Empty);
+        assert_eq!(a.next, Val::Num { ver: 0, num: 1 });
+        let b = ChangeFn::Set(2).apply(&a.next);
+        assert_eq!(b.next, Val::Num { ver: 1, num: 2 });
+    }
+
+    #[test]
+    fn tombstone_always_applies() {
+        let a = ChangeFn::Tombstone.apply(&Val::Num { ver: 9, num: 9 });
+        assert_eq!(a.next, Val::Tombstone);
+        assert!(a.accepted);
+    }
+
+    #[test]
+    fn bytes_cas() {
+        let a = ChangeFn::SetBytes(b"hello".to_vec()).apply(&Val::Empty);
+        assert_eq!(a.next.version(), Some(0));
+        let ok = ChangeFn::CasBytes { expect: 0, val: b"world".to_vec() }.apply(&a.next);
+        assert!(ok.accepted);
+        assert_eq!(ok.next.as_bytes(), Some(&b"world"[..]));
+        let stale = ChangeFn::CasBytes { expect: 0, val: b"x".to_vec() }.apply(&ok.next);
+        assert!(!stale.accepted);
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        for f in [
+            ChangeFn::Read,
+            ChangeFn::InitIfEmpty(-4),
+            ChangeFn::Cas { expect: 1, val: 2 },
+            ChangeFn::Set(9),
+            ChangeFn::Add(-1),
+            ChangeFn::SetBytes(vec![7; 10]),
+            ChangeFn::CasBytes { expect: 0, val: vec![] },
+            ChangeFn::Tombstone,
+        ] {
+            assert_eq!(ChangeFn::from_bytes(&f.to_bytes()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn opcodes_cover_numeric_changes() {
+        assert!(ChangeFn::Read.opcode().is_some());
+        assert!(ChangeFn::Add(1).opcode().is_some());
+        assert!(ChangeFn::SetBytes(vec![]).opcode().is_none());
+    }
+}

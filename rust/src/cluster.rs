@@ -1,0 +1,77 @@
+//! Convenience cluster builders.
+//!
+//! [`MemCluster`] wires N in-process acceptors and any number of proposers
+//! together — the one-liner entry point used by the quickstart example,
+//! doc tests and benchmarks.
+
+use std::sync::Arc;
+
+use crate::proposer::{Proposer, ProposerOpts};
+use crate::quorum::ClusterConfig;
+use crate::transport::mem::MemTransport;
+
+/// An in-process CASPaxos cluster: N acceptors behind a [`MemTransport`].
+pub struct MemCluster {
+    transport: Arc<MemTransport>,
+    cfg: ClusterConfig,
+}
+
+impl MemCluster {
+    /// Builds a cluster of `n` acceptors (ids `1..=n`) with symmetric
+    /// majority quorums.
+    pub fn new(n: usize) -> Self {
+        let transport = Arc::new(MemTransport::new(n));
+        let cfg = ClusterConfig::majority(1, transport.acceptor_ids());
+        MemCluster { transport, cfg }
+    }
+
+    /// The shared transport (fault toggles, inspection).
+    pub fn transport(&self) -> Arc<MemTransport> {
+        Arc::clone(&self.transport)
+    }
+
+    /// The cluster configuration.
+    pub fn config(&self) -> ClusterConfig {
+        self.cfg.clone()
+    }
+
+    /// Creates a proposer with default options.
+    pub fn proposer(&self, id: u64) -> Arc<Proposer> {
+        Arc::new(Proposer::new(id, self.cfg.clone(), self.transport.clone()))
+    }
+
+    /// Creates a proposer with explicit options.
+    pub fn proposer_with_opts(&self, id: u64, opts: ProposerOpts) -> Arc<Proposer> {
+        Arc::new(Proposer::with_opts(id, self.cfg.clone(), self.transport.clone(), opts))
+    }
+
+    /// Crashes / recovers an acceptor.
+    pub fn set_down(&self, id: u64, down: bool) {
+        self.transport.set_down(id, down);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::change::ChangeFn;
+
+    #[test]
+    fn quickstart() {
+        let cluster = MemCluster::new(3);
+        let p = cluster.proposer(1);
+        let v = p.change("counter", ChangeFn::Add(5)).unwrap();
+        assert_eq!(v.as_num(), Some(5));
+        let v = p.change("counter", ChangeFn::Add(2)).unwrap();
+        assert_eq!(v.as_num(), Some(7));
+    }
+
+    #[test]
+    fn multiple_proposers_share_cluster() {
+        let cluster = MemCluster::new(5);
+        let p1 = cluster.proposer(1);
+        let p2 = cluster.proposer(2);
+        p1.set("x", 1).unwrap();
+        assert_eq!(p2.get("x").unwrap().as_num(), Some(1));
+    }
+}

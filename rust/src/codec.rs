@@ -1,0 +1,277 @@
+//! Compact binary wire/storage codec.
+//!
+//! The offline dependency set has no serde, so the crate carries its own
+//! explicit codec: little-endian fixed-width integers, length-prefixed
+//! strings/byte-vectors, one tag byte per enum variant. Every protocol
+//! type implements [`Codec`] by hand next to its definition; this module
+//! provides the trait, the primitive impls and the framing helpers.
+//!
+//! Properties the tests pin down: encode∘decode = id, decode rejects
+//! truncated input, and frames are bounded (no length-bomb allocations).
+
+/// Decoding error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecError {
+    /// Input ended mid-value.
+    Eof,
+    /// Malformed content (bad tag, bad UTF-8, length bomb...).
+    Invalid(&'static str),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Eof => write!(f, "unexpected end of input"),
+            CodecError::Invalid(what) => write!(f, "invalid encoding: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Maximum length accepted for any string/vec/map (guards length bombs).
+pub const MAX_LEN: usize = 1 << 24; // 16 MiB
+
+/// Binary encode/decode. Implementations must round-trip exactly.
+pub trait Codec: Sized {
+    /// Appends the encoding of `self` to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+    /// Decodes a value from the front of `input`, advancing it.
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError>;
+
+    /// Encodes into a fresh buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        self.encode(&mut out);
+        out
+    }
+
+    /// Decodes a complete buffer; trailing bytes are an error.
+    fn from_bytes(mut input: &[u8]) -> Result<Self, CodecError> {
+        let v = Self::decode(&mut input)?;
+        if !input.is_empty() {
+            return Err(CodecError::Invalid("trailing bytes"));
+        }
+        Ok(v)
+    }
+}
+
+pub(crate) fn take<'a>(input: &mut &'a [u8], n: usize) -> Result<&'a [u8], CodecError> {
+    if input.len() < n {
+        return Err(CodecError::Eof);
+    }
+    let (head, rest) = input.split_at(n);
+    *input = rest;
+    Ok(head)
+}
+
+macro_rules! int_codec {
+    ($($t:ty),*) => {$(
+        impl Codec for $t {
+            fn encode(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+                let bytes = take(input, std::mem::size_of::<$t>())?;
+                Ok(<$t>::from_le_bytes(bytes.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+
+int_codec!(u8, u16, u32, u64, i32, i64, f64);
+
+impl Codec for bool {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        match u8::decode(input)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(CodecError::Invalid("bool tag")),
+        }
+    }
+}
+
+impl Codec for usize {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u64).encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        let v = u64::decode(input)?;
+        usize::try_from(v).map_err(|_| CodecError::Invalid("usize overflow"))
+    }
+}
+
+fn decode_len(input: &mut &[u8]) -> Result<usize, CodecError> {
+    let n = usize::decode(input)?;
+    if n > MAX_LEN {
+        return Err(CodecError::Invalid("length bomb"));
+    }
+    Ok(n)
+}
+
+impl Codec for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.len().encode(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        let n = decode_len(input)?;
+        let bytes = take(input, n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::Invalid("utf-8"))
+    }
+}
+
+impl Codec for Vec<u8> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.len().encode(out);
+        out.extend_from_slice(self);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        let n = decode_len(input)?;
+        Ok(take(input, n)?.to_vec())
+    }
+}
+
+impl<T: Codec> Codec for Option<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(v) => {
+                out.push(1);
+                v.encode(out);
+            }
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        match u8::decode(input)? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(input)?)),
+            _ => Err(CodecError::Invalid("option tag")),
+        }
+    }
+}
+
+// Not for Vec<u8> (owned above); used via explicit helpers to avoid
+// overlapping impls.
+/// Encodes a slice of codec values with a length prefix.
+pub fn encode_seq<T: Codec>(items: &[T], out: &mut Vec<u8>) {
+    items.len().encode(out);
+    for item in items {
+        item.encode(out);
+    }
+}
+
+/// Decodes a length-prefixed sequence.
+pub fn decode_seq<T: Codec>(input: &mut &[u8]) -> Result<Vec<T>, CodecError> {
+    let n = decode_len(input)?;
+    // Conservative pre-allocation: avoid length-bomb allocs for nested
+    // sequences whose element size we can't know here.
+    let mut items = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        items.push(T::decode(input)?);
+    }
+    Ok(items)
+}
+
+impl<A: Codec, B: Codec> Codec for (A, B) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok((A::decode(input)?, B::decode(input)?))
+    }
+}
+
+impl<A: Codec, B: Codec, C: Codec> Codec for (A, B, C) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+        self.2.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok((A::decode(input)?, B::decode(input)?, C::decode(input)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Codec + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = v.to_bytes();
+        assert_eq!(T::from_bytes(&bytes).unwrap(), v);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(u32::MAX);
+        roundtrip(u64::MAX);
+        roundtrip(i64::MIN);
+        roundtrip(-1i32);
+        roundtrip(true);
+        roundtrip(3.25f64);
+        roundtrip(usize::MAX >> 1);
+        roundtrip(String::from("hello ∅ ⊥ unicode"));
+        roundtrip(String::new());
+        roundtrip(vec![0u8, 1, 255]);
+        roundtrip(Option::<u64>::None);
+        roundtrip(Some(42u64));
+        roundtrip((7u64, String::from("x")));
+        roundtrip((1u8, 2u32, 3i64));
+    }
+
+    #[test]
+    fn seq_roundtrip() {
+        let items = vec![(1u64, "a".to_string()), (2, "b".to_string())];
+        let mut out = Vec::new();
+        encode_seq(&items, &mut out);
+        let mut input = out.as_slice();
+        let back: Vec<(u64, String)> = decode_seq(&mut input).unwrap();
+        assert_eq!(back, items);
+        assert!(input.is_empty());
+    }
+
+    #[test]
+    fn truncated_input_is_eof() {
+        let bytes = 12345u64.to_bytes();
+        assert_eq!(u64::from_bytes(&bytes[..4]), Err(CodecError::Eof));
+        let s = "hello".to_string().to_bytes();
+        assert_eq!(String::from_bytes(&s[..6]), Err(CodecError::Eof));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = 1u8.to_bytes();
+        bytes.push(9);
+        assert!(matches!(u8::from_bytes(&bytes), Err(CodecError::Invalid(_))));
+    }
+
+    #[test]
+    fn bad_tags_rejected() {
+        assert!(matches!(bool::from_bytes(&[2]), Err(CodecError::Invalid(_))));
+        assert!(matches!(Option::<u8>::from_bytes(&[7]), Err(CodecError::Invalid(_))));
+    }
+
+    #[test]
+    fn length_bomb_rejected() {
+        // Claims a 2^60-byte string with a 1-byte body.
+        let mut bytes = Vec::new();
+        (1u64 << 60).encode(&mut bytes);
+        bytes.push(b'x');
+        assert!(matches!(String::from_bytes(&bytes), Err(CodecError::Invalid(_))));
+    }
+
+    #[test]
+    fn bad_utf8_rejected() {
+        let mut bytes = Vec::new();
+        2usize.encode(&mut bytes);
+        bytes.extend_from_slice(&[0xff, 0xfe]);
+        assert!(matches!(String::from_bytes(&bytes), Err(CodecError::Invalid(_))));
+    }
+}

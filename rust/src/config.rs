@@ -1,0 +1,155 @@
+//! Cluster configuration files and peer-map parsing.
+//!
+//! Plain-text config format (one directive per line, `#` comments):
+//!
+//! ```text
+//! # caspaxos cluster config
+//! node 1 127.0.0.1:7101
+//! node 2 127.0.0.1:7102
+//! node 3 127.0.0.1:7103
+//! quorum 2 2          # optional: prepare accept (default: majority)
+//! ```
+//!
+//! The same `id=addr` pairs are accepted from the command line:
+//! `--peers 1=127.0.0.1:7101,2=127.0.0.1:7102,3=127.0.0.1:7103`.
+
+use std::collections::HashMap;
+
+use crate::error::{CasError, CasResult};
+use crate::quorum::{ClusterConfig, QuorumSpec};
+
+/// A parsed deployment description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Deployment {
+    /// Acceptor id → address.
+    pub peers: HashMap<u64, String>,
+    /// Quorum sizes (majority if unspecified).
+    pub quorum: QuorumSpec,
+}
+
+impl Deployment {
+    /// Parses a config file's contents.
+    pub fn parse(text: &str) -> CasResult<Self> {
+        let mut peers = HashMap::new();
+        let mut quorum: Option<(usize, usize)> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.as_slice() {
+                ["node", id, addr] => {
+                    let id: u64 = id
+                        .parse()
+                        .map_err(|_| bad(lineno, "node id must be an integer"))?;
+                    if peers.insert(id, addr.to_string()).is_some() {
+                        return Err(bad(lineno, "duplicate node id"));
+                    }
+                }
+                ["quorum", p, a] => {
+                    let p = p.parse().map_err(|_| bad(lineno, "bad prepare quorum"))?;
+                    let a = a.parse().map_err(|_| bad(lineno, "bad accept quorum"))?;
+                    quorum = Some((p, a));
+                }
+                _ => return Err(bad(lineno, "expected `node <id> <addr>` or `quorum <p> <a>`")),
+            }
+        }
+        if peers.is_empty() {
+            return Err(CasError::Config("config has no nodes".into()));
+        }
+        let n = peers.len();
+        let quorum = match quorum {
+            Some((p, a)) => QuorumSpec::flexible(n, p, a)?,
+            None => QuorumSpec::majority(n),
+        };
+        Ok(Deployment { peers, quorum })
+    }
+
+    /// Loads and parses a config file.
+    pub fn load(path: &str) -> CasResult<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| CasError::Config(format!("read {path}: {e}")))?;
+        Self::parse(&text)
+    }
+
+    /// Parses a `1=addr,2=addr` peer list.
+    pub fn parse_peers(spec: &str) -> CasResult<HashMap<u64, String>> {
+        let mut peers = HashMap::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (id, addr) = part
+                .split_once('=')
+                .ok_or_else(|| CasError::Config(format!("expected id=addr, got {part:?}")))?;
+            let id: u64 =
+                id.parse().map_err(|_| CasError::Config(format!("bad peer id {id:?}")))?;
+            if peers.insert(id, addr.to_string()).is_some() {
+                return Err(CasError::Config(format!("duplicate peer id {id}")));
+            }
+        }
+        if peers.is_empty() {
+            return Err(CasError::Config("empty peer list".into()));
+        }
+        Ok(peers)
+    }
+
+    /// The protocol-level [`ClusterConfig`] (epoch 1, sorted ids).
+    pub fn cluster_config(&self) -> ClusterConfig {
+        let mut acceptors: Vec<u64> = self.peers.keys().copied().collect();
+        acceptors.sort_unstable();
+        ClusterConfig { epoch: 1, acceptors, quorum: self.quorum }
+    }
+}
+
+fn bad(lineno: usize, what: &str) -> CasError {
+    CasError::Config(format!("line {}: {what}", lineno + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let d = Deployment::parse(
+            "# comment\nnode 1 a:1\nnode 2 a:2\nnode 3 a:3 # trailing\nquorum 2 2\n",
+        )
+        .unwrap();
+        assert_eq!(d.peers.len(), 3);
+        assert_eq!(d.quorum, QuorumSpec { nodes: 3, prepare: 2, accept: 2 });
+        let cc = d.cluster_config();
+        assert_eq!(cc.acceptors, vec![1, 2, 3]);
+        cc.validate().unwrap();
+    }
+
+    #[test]
+    fn majority_default() {
+        let d = Deployment::parse("node 1 a:1\nnode 2 a:2\nnode 3 a:3\n").unwrap();
+        assert_eq!(d.quorum, QuorumSpec::majority(3));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(Deployment::parse("").is_err(), "empty");
+        assert!(Deployment::parse("node 1 a:1\nnode 1 a:2\n").is_err(), "dup id");
+        assert!(Deployment::parse("nod 1 a:1\n").is_err(), "typo directive");
+        assert!(Deployment::parse("node x a:1\n").is_err(), "bad id");
+        assert!(
+            Deployment::parse("node 1 a:1\nnode 2 a:2\nquorum 1 1\n").is_err(),
+            "non-intersecting quorums"
+        );
+    }
+
+    #[test]
+    fn parse_peer_list() {
+        let p = Deployment::parse_peers("1=127.0.0.1:7101, 2=127.0.0.1:7102").unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[&2], "127.0.0.1:7102");
+        assert!(Deployment::parse_peers("").is_err());
+        assert!(Deployment::parse_peers("1:addr").is_err());
+        assert!(Deployment::parse_peers("1=a,1=b").is_err());
+    }
+}

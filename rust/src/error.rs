@@ -1,0 +1,67 @@
+//! Error types for the CASPaxos public API.
+
+use crate::ballot::Ballot;
+
+/// Result alias used across the crate.
+pub type CasResult<T> = Result<T, CasError>;
+
+/// Errors surfaced by proposers, the KV store and the runtime.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CasError {
+    /// An acceptor saw a greater ballot; the round must be retried with a
+    /// fast-forwarded counter. Carries the highest conflicting ballot so
+    /// the proposer can fast-forward past it (§2.1).
+    Conflict(Ballot),
+    /// Fewer than quorum acceptors answered before the deadline.
+    NoQuorum { needed: usize, got: usize },
+    /// The change function rejected the current state (e.g. a CAS with a
+    /// stale expected version). Carries a human-readable reason.
+    Rejected(String),
+    /// The proposer exhausted its retry budget.
+    RetriesExhausted { attempts: u32 },
+    /// The acceptor refused the message because the proposer's age is
+    /// stale (set by the deletion GC, §3.1).
+    StaleAge { required: u64, got: u64 },
+    /// Transport-level failure (connection refused, node crashed, ...).
+    Transport(String),
+    /// Runtime (PJRT / artifact) failure.
+    Runtime(String),
+    /// Invalid configuration (quorums don't intersect, bad node ids, ...).
+    Config(String),
+}
+
+impl std::fmt::Display for CasError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CasError::Conflict(b) => write!(f, "ballot conflict: acceptor saw {b}"),
+            CasError::NoQuorum { needed, got } => {
+                write!(f, "no quorum: needed {needed}, got {got}")
+            }
+            CasError::Rejected(r) => write!(f, "change rejected: {r}"),
+            CasError::RetriesExhausted { attempts } => {
+                write!(f, "retries exhausted after {attempts} attempts")
+            }
+            CasError::StaleAge { required, got } => {
+                write!(f, "stale proposer age: required >= {required}, got {got}")
+            }
+            CasError::Transport(e) => write!(f, "transport: {e}"),
+            CasError::Runtime(e) => write!(f, "runtime: {e}"),
+            CasError::Config(e) => write!(f, "config: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CasError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = CasError::NoQuorum { needed: 2, got: 1 };
+        assert!(e.to_string().contains("needed 2"));
+        let e = CasError::Conflict(Ballot::new(7, 3));
+        assert!(e.to_string().contains("7"));
+    }
+}

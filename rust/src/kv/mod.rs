@@ -1,0 +1,311 @@
+//! CASPaxos-based key-value storage (§3).
+//!
+//! "Instead of putting the whole key-value storage under a single RSM …
+//! we can use the lightweight nature of CASPaxos to run a RSM per key
+//! achieving uniform load balancing across all replicas (thus higher
+//! throughput)."
+//!
+//! A [`KvStore`] is a thin façade over one or more proposers: every key
+//! *is* an independent CASPaxos register hosted by the same acceptors, so
+//! the "hashtable of RSMs" needs no coordination of its own — requests on
+//! different keys never interfere (E4 measures exactly that). The store
+//! adds:
+//!
+//! * proposer pooling: ops are routed to a proposer by key hash, so
+//!   same-key traffic lands on the same proposer and stays on the 1-RTT
+//!   path (§2.2.1) while different keys spread across proposers/cores;
+//! * the deletion pipeline ([`crate::gc`]) wired behind [`KvStore::delete`].
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use crate::change::ChangeFn;
+use crate::error::{CasError, CasResult};
+use crate::msg::Key;
+use crate::proposer::{Proposer, ProposerOpts};
+use crate::quorum::ClusterConfig;
+use crate::state::Val;
+use crate::transport::Transport;
+
+/// A key-value store: a hashtable of independent per-key CASPaxos RSMs.
+pub struct KvStore {
+    proposers: Vec<Arc<Proposer>>,
+}
+
+impl KvStore {
+    /// Builds a store with `n_proposers` proposers (ids offset by 1000 to
+    /// stay clear of acceptor ids) sharing one transport.
+    pub fn new(cfg: ClusterConfig, transport: Arc<dyn Transport>, n_proposers: usize) -> Self {
+        Self::with_opts(cfg, transport, n_proposers, ProposerOpts::default())
+    }
+
+    /// Builds a store with explicit proposer options.
+    pub fn with_opts(
+        cfg: ClusterConfig,
+        transport: Arc<dyn Transport>,
+        n_proposers: usize,
+        opts: ProposerOpts,
+    ) -> Self {
+        assert!(n_proposers > 0, "need at least one proposer");
+        let proposers = (0..n_proposers)
+            .map(|i| {
+                Arc::new(Proposer::with_opts(
+                    1000 + i as u64,
+                    cfg.clone(),
+                    Arc::clone(&transport),
+                    opts.clone(),
+                ))
+            })
+            .collect();
+        KvStore { proposers }
+    }
+
+    /// Wraps existing proposers (shared with other components).
+    pub fn from_proposers(proposers: Vec<Arc<Proposer>>) -> Self {
+        assert!(!proposers.is_empty());
+        KvStore { proposers }
+    }
+
+    /// The proposer that owns `key` (stable hash routing keeps same-key
+    /// traffic on the 1-RTT path).
+    pub fn proposer_for(&self, key: &str) -> &Arc<Proposer> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.proposers[(h.finish() % self.proposers.len() as u64) as usize]
+    }
+
+    /// All proposers (admin: membership changes must update every one).
+    pub fn proposers(&self) -> &[Arc<Proposer>] {
+        &self.proposers
+    }
+
+    /// Linearizable read. `Ok(None)` for absent/deleted keys.
+    pub fn get(&self, key: &str) -> CasResult<Option<Val>> {
+        let v = self.proposer_for(key).get(key)?;
+        Ok(match v {
+            Val::Empty | Val::Tombstone => None,
+            other => Some(other),
+        })
+    }
+
+    /// Unconditional write.
+    pub fn set(&self, key: &str, val: i64) -> CasResult<Val> {
+        self.proposer_for(key).set(key, val)
+    }
+
+    /// Compare-and-swap by version; returns the new state or
+    /// [`CasError::Rejected`].
+    pub fn cas(&self, key: &str, expect: i64, val: i64) -> CasResult<Val> {
+        self.proposer_for(key).cas(key, expect, val)
+    }
+
+    /// Atomic increment.
+    pub fn add(&self, key: &str, delta: i64) -> CasResult<Val> {
+        self.proposer_for(key).add(key, delta)
+    }
+
+    /// Arbitrary change function.
+    pub fn change(&self, key: &str, f: ChangeFn) -> CasResult<Val> {
+        self.proposer_for(key).change(key, f)
+    }
+
+    /// Step 1 of deletion (§3.1): write the tombstone. Space is
+    /// reclaimed by [`crate::gc::GcProcess::collect`].
+    pub fn delete(&self, key: &str) -> CasResult<()> {
+        self.proposer_for(key).delete(key)?;
+        Ok(())
+    }
+
+    /// Applies `f` to every proposer (membership/GC admin hooks).
+    pub fn for_each_proposer(&self, mut f: impl FnMut(&Arc<Proposer>)) {
+        for p in &self.proposers {
+            f(p);
+        }
+    }
+}
+
+/// A single-RSM baseline for E4: the whole map is ONE CASPaxos register
+/// (a `Bytes` value holding an encoded map), so every op — any key —
+/// serializes through one register. This is the strawman §3 argues
+/// against; the throughput bench quantifies the gap.
+pub struct SingleRsmKv {
+    proposer: Arc<Proposer>,
+    map_key: Key,
+}
+
+impl SingleRsmKv {
+    /// Builds the single-register store.
+    pub fn new(proposer: Arc<Proposer>) -> Self {
+        SingleRsmKv { proposer, map_key: "__single_rsm_map__".into() }
+    }
+
+    fn decode_map(bytes: &[u8]) -> Vec<(String, i64)> {
+        use crate::codec::decode_seq;
+        let mut input = bytes;
+        decode_seq::<(String, i64)>(&mut input).unwrap_or_default()
+    }
+
+    fn encode_map(map: &[(String, i64)]) -> Vec<u8> {
+        use crate::codec::encode_seq;
+        let mut out = Vec::new();
+        encode_seq(map, &mut out);
+        out
+    }
+
+    /// Reads a key (a full-map read round).
+    pub fn get(&self, key: &str) -> CasResult<Option<i64>> {
+        let v = self.proposer.get(&self.map_key)?;
+        Ok(match v {
+            Val::Bytes { data, .. } => {
+                Self::decode_map(&data).into_iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        })
+    }
+
+    /// Writes a key: read-modify-write of the whole map under CAS, with
+    /// retries on contention — the contention is the point.
+    pub fn set(&self, key: &str, val: i64) -> CasResult<()> {
+        for _ in 0..64 {
+            let cur = self.proposer.get(&self.map_key)?;
+            let (ver, mut map) = match &cur {
+                Val::Bytes { ver, data } => (*ver, Self::decode_map(data)),
+                _ => (-1, Vec::new()),
+            };
+            match map.iter_mut().find(|(k, _)| k == key) {
+                Some(entry) => entry.1 = val,
+                None => map.push((key.to_string(), val)),
+            }
+            let change = if ver < 0 {
+                ChangeFn::SetBytes(Self::encode_map(&map))
+            } else {
+                ChangeFn::CasBytes { expect: ver, val: Self::encode_map(&map) }
+            };
+            match self.proposer.change(&self.map_key, change) {
+                Ok(_) => return Ok(()),
+                Err(CasError::Rejected(_)) => continue, // lost the race
+                Err(e) => return Err(e),
+            }
+        }
+        Err(CasError::RetriesExhausted { attempts: 64 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::mem::MemTransport;
+
+    fn store(n_acceptors: usize, n_proposers: usize) -> (KvStore, Arc<MemTransport>) {
+        let t = Arc::new(MemTransport::new(n_acceptors));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        (KvStore::new(cfg, t.clone(), n_proposers), t)
+    }
+
+    #[test]
+    fn get_set_cas_add() {
+        let (kv, _) = store(3, 2);
+        assert_eq!(kv.get("a").unwrap(), None);
+        kv.set("a", 1).unwrap();
+        assert_eq!(kv.get("a").unwrap().unwrap().as_num(), Some(1));
+        kv.cas("a", 0, 2).unwrap();
+        assert!(kv.cas("a", 0, 3).is_err(), "stale CAS rejected");
+        kv.add("a", 10).unwrap();
+        assert_eq!(kv.get("a").unwrap().unwrap().as_num(), Some(12));
+    }
+
+    #[test]
+    fn delete_hides_key() {
+        let (kv, _) = store(3, 1);
+        kv.set("a", 1).unwrap();
+        kv.delete("a").unwrap();
+        assert_eq!(kv.get("a").unwrap(), None, "tombstone reads as absent");
+        // A new write revives the key.
+        kv.set("a", 2).unwrap();
+        assert_eq!(kv.get("a").unwrap().unwrap().as_num(), Some(2));
+    }
+
+    #[test]
+    fn keys_route_stably() {
+        let (kv, _) = store(3, 4);
+        let p1 = kv.proposer_for("alpha").id();
+        for _ in 0..10 {
+            assert_eq!(kv.proposer_for("alpha").id(), p1, "stable routing");
+        }
+    }
+
+    #[test]
+    fn different_keys_are_independent() {
+        let (kv, _) = store(3, 2);
+        let keys: Vec<String> = (0..20).map(|i| format!("k{i}")).collect();
+        for (i, k) in keys.iter().enumerate() {
+            kv.set(k, i as i64).unwrap();
+        }
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(kv.get(k).unwrap().unwrap().as_num(), Some(i as i64));
+        }
+    }
+
+    #[test]
+    fn concurrent_multikey_writes() {
+        let (kv, _) = store(3, 4);
+        let kv = Arc::new(kv);
+        let mut handles = Vec::new();
+        for th in 0..4u64 {
+            let kv = Arc::clone(&kv);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    let key = format!("k{}", (th * 25 + i) % 10);
+                    kv.add(&key, 1).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: i64 = (0..10)
+            .map(|i| kv.get(&format!("k{i}")).unwrap().unwrap().as_num().unwrap())
+            .sum();
+        assert_eq!(total, 100, "all 100 increments counted");
+    }
+
+    #[test]
+    fn single_rsm_baseline_works_but_serializes() {
+        let t = Arc::new(MemTransport::new(3));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        let p = Arc::new(Proposer::new(1, cfg, t));
+        let kv = SingleRsmKv::new(p);
+        kv.set("a", 1).unwrap();
+        kv.set("b", 2).unwrap();
+        assert_eq!(kv.get("a").unwrap(), Some(1));
+        assert_eq!(kv.get("b").unwrap(), Some(2));
+        assert_eq!(kv.get("c").unwrap(), None);
+        kv.set("a", 9).unwrap();
+        assert_eq!(kv.get("a").unwrap(), Some(9));
+    }
+
+    #[test]
+    fn single_rsm_contention_retries() {
+        let t = Arc::new(MemTransport::new(3));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        let kv = Arc::new(SingleRsmKv::new(Arc::new(Proposer::new(1, cfg, t))));
+        let mut handles = Vec::new();
+        for th in 0..4u64 {
+            let kv = Arc::clone(&kv);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5 {
+                    kv.set(&format!("t{th}-{i}"), i as i64).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for th in 0..4 {
+            for i in 0..5 {
+                assert_eq!(kv.get(&format!("t{th}-{i}")).unwrap(), Some(i as i64));
+            }
+        }
+    }
+}

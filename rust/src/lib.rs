@@ -1,0 +1,75 @@
+//! # CASPaxos — Replicated State Machines without logs
+//!
+//! A production-oriented reproduction of *"CASPaxos: Replicated State
+//! Machines without logs"* (Denis Rystsov, 2018).
+//!
+//! CASPaxos is an extension of Single-Decree Paxos (Synod) that turns the
+//! initializable-once register into a **rewritable distributed register**:
+//! clients submit side-effect-free change functions `f(state) -> state`,
+//! and out of concurrent submissions exactly one wins per transition. No
+//! leader, no log, no log compaction.
+//!
+//! ## Crate layout
+//!
+//! * Protocol core (sans-IO, deterministic, shared by every driver):
+//!   [`ballot`], [`state`], [`change`], [`msg`], [`quorum`],
+//!   [`acceptor`], [`proposer`].
+//! * Substrates: [`transport`] (in-memory, TCP), [`sim`] (deterministic
+//!   discrete-event network with fault injection), [`wan`] (the paper's
+//!   Azure RTT matrix), [`codec`] (binary wire format), [`rng`]
+//!   (deterministic PRNG).
+//! * Systems built on the core: [`kv`] (hashtable of per-key RSMs, §3),
+//!   [`membership`] (§2.3), [`gc`] (deletion, §3.1), [`server`].
+//! * Evaluation substrates: [`baselines`] (Multi-Paxos, Raft-like,
+//!   primary-forwarding), [`linearizability`] (Jepsen-style checker).
+//! * Data plane: [`runtime`] (PJRT, loads the AOT-compiled JAX/Pallas
+//!   batched step), [`batch`] (op batcher feeding it).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use caspaxos::cluster::MemCluster;
+//! use caspaxos::change::ChangeFn;
+//!
+//! let cluster = MemCluster::new(3); // 3 acceptors, tolerates 1 failure
+//! let p = cluster.proposer(1);
+//! let v = p.change("counter", ChangeFn::Add(5)).unwrap();
+//! assert_eq!(v.as_num(), Some(5));
+//! ```
+//!
+//! (The doc example is `no_run` only because doctest binaries don't get
+//! the libxla rpath; the identical code runs in `cluster::tests`.)
+
+pub mod acceptor;
+pub mod ballot;
+pub mod benchkit;
+pub mod baselines;
+pub mod batch;
+pub mod change;
+pub mod cluster;
+pub mod codec;
+pub mod config;
+pub mod error;
+pub mod experiments;
+pub mod gc;
+pub mod kv;
+pub mod linearizability;
+pub mod membership;
+pub mod metrics;
+pub mod msg;
+pub mod proposer;
+pub mod quorum;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod state;
+pub mod testkit;
+pub mod transport;
+pub mod wan;
+
+pub use ballot::Ballot;
+pub use change::ChangeFn;
+pub use error::{CasError, CasResult};
+pub use quorum::QuorumSpec;
+pub use state::Val;

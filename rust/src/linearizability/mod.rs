@@ -1,0 +1,422 @@
+//! Jepsen-style linearizability checking.
+//!
+//! The paper verifies Gryadka with fault injection
+//! (github.com/rystsov/perseus) and cites Kingsbury's Jepsen results as
+//! motivation; this module is the equivalent substrate: a concurrent
+//! history recorder plus a Wing&Gong-style checker specialized to the
+//! CASPaxos register semantics ([`ChangeFn::apply`] *is* the sequential
+//! specification, so the checker and the implementation can never drift
+//! apart).
+//!
+//! Completed operations must appear to take effect atomically between
+//! their invocation and completion; operations whose outcome the client
+//! never learned (timeouts, crashes) may take effect at any point after
+//! invocation — or never.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use crate::change::ChangeFn;
+use crate::msg::Key;
+use crate::state::Val;
+
+/// What the client observed for one completed operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Observed {
+    /// The state returned by the round (the new state, or the unchanged
+    /// current state for a rejected CAS).
+    pub state: Val,
+    /// Whether the change function reported success.
+    pub accepted: bool,
+}
+
+/// One operation in a history.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    /// Unique id.
+    pub id: u64,
+    /// Issuing client/process.
+    pub client: u64,
+    /// Register key.
+    pub key: Key,
+    /// The submitted change function.
+    pub change: ChangeFn,
+    /// Invocation timestamp (any monotone clock; sim time or ns).
+    pub invoke: u64,
+    /// Completion timestamp; `None` = outcome unknown (timeout/crash).
+    pub complete: Option<u64>,
+    /// Observation; `None` iff `complete` is `None`.
+    pub observed: Option<Observed>,
+}
+
+/// A concurrent history recorder.
+#[derive(Debug, Default)]
+pub struct History {
+    ops: Mutex<Vec<OpRecord>>,
+}
+
+impl History {
+    /// Empty history.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Records an invocation; complete it with [`History::complete`] or
+    /// [`History::fail`]. Returns the op id.
+    pub fn invoke(&self, client: u64, key: impl Into<Key>, change: ChangeFn, now: u64) -> u64 {
+        let mut ops = self.ops.lock().unwrap();
+        let id = ops.len() as u64;
+        ops.push(OpRecord {
+            id,
+            client,
+            key: key.into(),
+            change,
+            invoke: now,
+            complete: None,
+            observed: None,
+        });
+        id
+    }
+
+    /// Marks an op completed with its observation.
+    pub fn complete(&self, id: u64, observed: Observed, now: u64) {
+        let mut ops = self.ops.lock().unwrap();
+        let op = &mut ops[id as usize];
+        op.complete = Some(now);
+        op.observed = Some(observed);
+    }
+
+    /// Marks an op as failed-with-unknown-outcome (it may or may not
+    /// have taken effect). This is NOT for clean rejections — a client
+    /// that *knows* the op didn't commit should simply not record it.
+    pub fn fail(&self, _id: u64) {
+        // Outcome unknown: leave complete/observed as None.
+    }
+
+    /// Number of recorded operations.
+    pub fn len(&self) -> usize {
+        self.ops.lock().unwrap().len()
+    }
+
+    /// True if no operations were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of all operations.
+    pub fn snapshot(&self) -> Vec<OpRecord> {
+        self.ops.lock().unwrap().clone()
+    }
+}
+
+/// Result of checking one key's history.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckResult {
+    /// A valid linearization exists.
+    Linearizable,
+    /// No linearization exists; carries a human-readable explanation.
+    Violation(String),
+    /// Search exceeded the state budget (treat as inconclusive).
+    Exhausted,
+}
+
+/// Maximum number of distinct search states per key before giving up.
+const SEARCH_BUDGET: usize = 2_000_000;
+
+/// Checks a full history: every key independently (CASPaxos registers
+/// are independent RSMs, §3).
+pub fn check(history: &History) -> CheckResult {
+    let ops = history.snapshot();
+    let mut by_key: HashMap<Key, Vec<OpRecord>> = HashMap::new();
+    for op in ops {
+        by_key.entry(op.key.clone()).or_default().push(op);
+    }
+    for (key, ops) in by_key {
+        match check_key(&ops) {
+            CheckResult::Linearizable => {}
+            CheckResult::Violation(why) => {
+                return CheckResult::Violation(format!("key {key:?}: {why}"))
+            }
+            CheckResult::Exhausted => return CheckResult::Exhausted,
+        }
+    }
+    CheckResult::Linearizable
+}
+
+/// Checks one key's operations (Wing & Gong search with memoization).
+pub fn check_key(ops: &[OpRecord]) -> CheckResult {
+    // Sort for deterministic search order.
+    let mut ops: Vec<&OpRecord> = ops.iter().collect();
+    ops.sort_by_key(|o| (o.invoke, o.id));
+
+    // State of the search: set of linearized op indices + register value.
+    let n = ops.len();
+    if n == 0 {
+        return CheckResult::Linearizable;
+    }
+    if n > 64 {
+        // The bitmask search caps at 64 ops per key; histories should be
+        // generated accordingly (violations show up long before that).
+        return CheckResult::Exhausted;
+    }
+
+    let mut visited: HashSet<(u64, Val)> = HashSet::new();
+    let mut budget = SEARCH_BUDGET;
+
+    // Depth-first search over linearization prefixes.
+    fn dfs(
+        ops: &[&OpRecord],
+        done: u64,
+        state: &Val,
+        visited: &mut HashSet<(u64, Val)>,
+        budget: &mut usize,
+    ) -> Result<bool, ()> {
+        let n = ops.len();
+        if done.count_ones() as usize == n {
+            return Ok(true);
+        }
+        if *budget == 0 {
+            return Err(());
+        }
+        *budget -= 1;
+        if !visited.insert((done, state.clone())) {
+            return Ok(false);
+        }
+        // Earliest completion time among unlinearized *completed* ops: a
+        // candidate must have invoked before every such completion.
+        let min_complete = (0..n)
+            .filter(|i| done & (1 << i) == 0)
+            .filter_map(|i| ops[i].complete)
+            .min()
+            .unwrap_or(u64::MAX);
+        for i in 0..n {
+            if done & (1 << i) != 0 {
+                continue;
+            }
+            let op = ops[i];
+            if op.invoke > min_complete {
+                continue; // real-time order forbids linearizing op now
+            }
+            let next_done = done | (1 << i);
+            match (&op.complete, &op.observed) {
+                (Some(_), Some(obs)) => {
+                    let applied = op.change.apply(state);
+                    if applied.next == obs.state && applied.accepted == obs.accepted {
+                        if dfs(ops, next_done, &applied.next, visited, budget)? {
+                            return Ok(true);
+                        }
+                    }
+                }
+                _ => {
+                    // Unknown outcome: branch A — it took effect here.
+                    let applied = op.change.apply(state);
+                    if dfs(ops, next_done, &applied.next, visited, budget)? {
+                        return Ok(true);
+                    }
+                    // Branch B — it never took effect.
+                    if dfs(ops, next_done, state, visited, budget)? {
+                        return Ok(true);
+                    }
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    match dfs(&ops, 0, &Val::Empty, &mut visited, &mut budget) {
+        Ok(true) => CheckResult::Linearizable,
+        Ok(false) => {
+            let summary: Vec<String> = ops
+                .iter()
+                .map(|o| {
+                    format!(
+                        "  [{}..{}] client {} {:?} -> {:?}",
+                        o.invoke,
+                        o.complete.map(|c| c.to_string()).unwrap_or_else(|| "?".into()),
+                        o.client,
+                        o.change,
+                        o.observed
+                    )
+                })
+                .collect();
+            CheckResult::Violation(format!("no linearization of:\n{}", summary.join("\n")))
+        }
+        Err(()) => CheckResult::Exhausted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(
+        id: u64,
+        invoke: u64,
+        complete: u64,
+        change: ChangeFn,
+        state: Val,
+        accepted: bool,
+    ) -> OpRecord {
+        OpRecord {
+            id,
+            client: id,
+            key: "k".into(),
+            change,
+            invoke,
+            complete: Some(complete),
+            observed: Some(Observed { state, accepted }),
+        }
+    }
+
+    #[test]
+    fn empty_and_sequential_histories() {
+        assert_eq!(check_key(&[]), CheckResult::Linearizable);
+        let ops = vec![
+            op(0, 0, 10, ChangeFn::Set(1), Val::Num { ver: 0, num: 1 }, true),
+            op(1, 20, 30, ChangeFn::Read, Val::Num { ver: 0, num: 1 }, true),
+            op(2, 40, 50, ChangeFn::Add(2), Val::Num { ver: 1, num: 3 }, true),
+        ];
+        assert_eq!(check_key(&ops), CheckResult::Linearizable);
+    }
+
+    #[test]
+    fn stale_read_is_a_violation() {
+        // Write completes before the read starts, but the read returns ∅.
+        let ops = vec![
+            op(0, 0, 10, ChangeFn::Set(1), Val::Num { ver: 0, num: 1 }, true),
+            op(1, 20, 30, ChangeFn::Read, Val::Empty, true),
+        ];
+        assert!(matches!(check_key(&ops), CheckResult::Violation(_)));
+    }
+
+    #[test]
+    fn concurrent_ops_may_reorder() {
+        // Read overlaps the write: ∅ is fine (read linearized first).
+        let ops = vec![
+            op(0, 0, 30, ChangeFn::Set(1), Val::Num { ver: 0, num: 1 }, true),
+            op(1, 10, 20, ChangeFn::Read, Val::Empty, true),
+        ];
+        assert_eq!(check_key(&ops), CheckResult::Linearizable);
+    }
+
+    #[test]
+    fn lost_update_is_a_violation() {
+        // Two sequential adds; the second's result ignores the first.
+        let ops = vec![
+            op(0, 0, 10, ChangeFn::Add(1), Val::Num { ver: 0, num: 1 }, true),
+            op(1, 20, 30, ChangeFn::Add(1), Val::Num { ver: 0, num: 1 }, true),
+        ];
+        assert!(matches!(check_key(&ops), CheckResult::Violation(_)));
+    }
+
+    #[test]
+    fn unknown_outcome_may_or_may_not_apply() {
+        // A timed-out Set, then a read seeing ∅ — fine (never applied).
+        let unknown = OpRecord {
+            id: 0,
+            client: 0,
+            key: "k".into(),
+            change: ChangeFn::Set(9),
+            invoke: 0,
+            complete: None,
+            observed: None,
+        };
+        let read_empty = op(1, 10, 20, ChangeFn::Read, Val::Empty, true);
+        assert_eq!(check_key(&[unknown.clone(), read_empty]), CheckResult::Linearizable);
+        // ...and a read seeing the value — also fine (applied late).
+        let read_nine = op(1, 10, 20, ChangeFn::Read, Val::Num { ver: 0, num: 9 }, true);
+        assert_eq!(check_key(&[unknown, read_nine]), CheckResult::Linearizable);
+    }
+
+    #[test]
+    fn revival_after_unknown_write_checks_out() {
+        // unknown Set(1); later read ∅; later still read 1 — VIOLATION:
+        // once a read observed ∅ after the write's possible window, a
+        // later read can't see the value appear (no other writer).
+        let unknown = OpRecord {
+            id: 0,
+            client: 0,
+            key: "k".into(),
+            change: ChangeFn::Set(1),
+            invoke: 0,
+            complete: None,
+            observed: None,
+        };
+        let r1 = op(1, 10, 20, ChangeFn::Read, Val::Empty, true);
+        let r2 = op(2, 30, 40, ChangeFn::Read, Val::Num { ver: 0, num: 1 }, true);
+        // The unknown op has no completion bound, so it may linearize
+        // between r1 and r2: this IS linearizable.
+        assert_eq!(check_key(&[unknown, r1, r2]), CheckResult::Linearizable);
+    }
+
+    #[test]
+    fn rejected_cas_must_observe_current_state() {
+        let ops = vec![
+            op(0, 0, 10, ChangeFn::Set(5), Val::Num { ver: 0, num: 5 }, true),
+            // Stale CAS correctly rejected, observing (0, 5).
+            op(
+                1,
+                20,
+                30,
+                ChangeFn::Cas { expect: 7, val: 9 },
+                Val::Num { ver: 0, num: 5 },
+                false,
+            ),
+        ];
+        assert_eq!(check_key(&ops), CheckResult::Linearizable);
+        // A CAS that claims success from a stale version is a violation.
+        let bad = vec![
+            op(0, 0, 10, ChangeFn::Set(5), Val::Num { ver: 0, num: 5 }, true),
+            op(
+                1,
+                20,
+                30,
+                ChangeFn::Cas { expect: 7, val: 9 },
+                Val::Num { ver: 8, num: 9 },
+                true,
+            ),
+        ];
+        assert!(matches!(check_key(&bad), CheckResult::Violation(_)));
+    }
+
+    #[test]
+    fn keys_are_checked_independently() {
+        let h = History::new();
+        let a = h.invoke(1, "a", ChangeFn::Set(1), 0);
+        h.complete(a, Observed { state: Val::Num { ver: 0, num: 1 }, accepted: true }, 10);
+        let b = h.invoke(2, "b", ChangeFn::Read, 0);
+        h.complete(b, Observed { state: Val::Empty, accepted: true }, 10);
+        assert_eq!(check(&h), CheckResult::Linearizable);
+    }
+
+    #[test]
+    fn recorder_roundtrip() {
+        let h = History::new();
+        assert!(h.is_empty());
+        let id = h.invoke(1, "k", ChangeFn::Add(1), 5);
+        h.complete(id, Observed { state: Val::Num { ver: 0, num: 1 }, accepted: true }, 9);
+        let ops = h.snapshot();
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].invoke, 5);
+        assert_eq!(ops[0].complete, Some(9));
+    }
+
+    #[test]
+    fn add_interleaving_search() {
+        // Three concurrent Add(1): results 1, 2, 3 in *some* order must
+        // linearize regardless of which client saw which.
+        let ops = vec![
+            op(0, 0, 100, ChangeFn::Add(1), Val::Num { ver: 1, num: 2 }, true),
+            op(1, 0, 100, ChangeFn::Add(1), Val::Num { ver: 0, num: 1 }, true),
+            op(2, 0, 100, ChangeFn::Add(1), Val::Num { ver: 2, num: 3 }, true),
+        ];
+        assert_eq!(check_key(&ops), CheckResult::Linearizable);
+        // But duplicate observations (two clients both saw num=1) can't.
+        let bad = vec![
+            op(0, 0, 100, ChangeFn::Add(1), Val::Num { ver: 0, num: 1 }, true),
+            op(1, 0, 100, ChangeFn::Add(1), Val::Num { ver: 0, num: 1 }, true),
+        ];
+        assert!(matches!(check_key(&bad), CheckResult::Violation(_)));
+    }
+}

@@ -1,0 +1,185 @@
+//! `caspaxos` — cluster launcher and client CLI.
+//!
+//! ```text
+//! caspaxos node --id 1 --config cluster.conf \
+//!     [--listen-client 0.0.0.0:8101] [--data /var/lib/caspaxos]
+//! caspaxos node --id 1 --peers 1=h1:7101,2=h2:7101,3=h3:7101 ...
+//! caspaxos client --connect host:8101 get <key>
+//! caspaxos client --connect host:8101 set <key> <num>
+//! caspaxos client --connect host:8101 add <key> <delta>
+//! caspaxos client --connect host:8101 cas <key> <expect_ver> <num>
+//! caspaxos client --connect host:8101 del <key>
+//! caspaxos client --connect host:8101 collect | status
+//! caspaxos rtt-table      # print the paper's §3.2 RTT matrix (E1)
+//! ```
+//!
+//! Argument parsing is hand-rolled (the offline toolchain has no clap);
+//! see DESIGN.md §Substitutions.
+
+use std::collections::HashMap;
+use std::process::exit;
+
+use caspaxos::change::ChangeFn;
+use caspaxos::config::Deployment;
+use caspaxos::server::{start_node, Client, ClientReq, ClientResp, NodeOpts};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  caspaxos node --id <n> (--config <file> | --peers <1=a,2=b,...>)\n\
+         \x20                [--listen-client <addr>] [--data <dir>]\n\
+         \x20 caspaxos client --connect <addr> <get|set|add|cas|del|collect|status> [args...]\n\
+         \x20 caspaxos rtt-table"
+    );
+    exit(2)
+}
+
+fn take_flag(args: &mut Vec<String>, name: &str) -> Option<String> {
+    let idx = args.iter().position(|a| a == name)?;
+    if idx + 1 >= args.len() {
+        eprintln!("missing value for {name}");
+        usage();
+    }
+    args.remove(idx);
+    Some(args.remove(idx))
+}
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    match args.remove(0).as_str() {
+        "node" => run_node(args),
+        "client" => run_client(args),
+        "rtt-table" => print!("{}", caspaxos::wan::rtt_table()),
+        _ => usage(),
+    }
+}
+
+fn run_node(mut args: Vec<String>) {
+    let id: u64 = take_flag(&mut args, "--id")
+        .unwrap_or_else(|| usage())
+        .parse()
+        .unwrap_or_else(|_| usage());
+    let (peers, quorum): (HashMap<u64, String>, _) =
+        if let Some(path) = take_flag(&mut args, "--config") {
+            let d = Deployment::load(&path).unwrap_or_else(|e| {
+                eprintln!("config: {e}");
+                exit(1)
+            });
+            (d.peers.clone(), Some(d.quorum))
+        } else if let Some(spec) = take_flag(&mut args, "--peers") {
+            let peers = Deployment::parse_peers(&spec).unwrap_or_else(|e| {
+                eprintln!("peers: {e}");
+                exit(1)
+            });
+            (peers, None)
+        } else {
+            usage()
+        };
+    let Some(acceptor_addr) = peers.get(&id).cloned() else {
+        eprintln!("node id {id} not in peer map");
+        exit(1)
+    };
+    let client_addr =
+        take_flag(&mut args, "--listen-client").unwrap_or_else(|| "0.0.0.0:0".to_string());
+    // Peer client/admin addresses for cross-node GC sync (id=addr list).
+    let client_peers = match take_flag(&mut args, "--client-peers") {
+        Some(spec) => Deployment::parse_peers(&spec).unwrap_or_else(|e| {
+            eprintln!("client-peers: {e}");
+            exit(1)
+        }),
+        None => HashMap::new(),
+    };
+    let data_dir = take_flag(&mut args, "--data");
+
+    let mut acceptors: Vec<u64> = peers.keys().copied().collect();
+    acceptors.sort_unstable();
+    let cluster = match quorum {
+        Some(q) => caspaxos::quorum::ClusterConfig { epoch: 1, acceptors, quorum: q },
+        None => caspaxos::quorum::ClusterConfig::majority(1, acceptors),
+    };
+    cluster.validate().unwrap_or_else(|e| {
+        eprintln!("cluster config: {e}");
+        exit(1)
+    });
+
+    let node = start_node(NodeOpts {
+        id,
+        acceptor_addr,
+        client_addr,
+        peers,
+        client_peers,
+        cluster,
+        data_dir,
+    })
+    .unwrap_or_else(|e| {
+        eprintln!("start_node: {e}");
+        exit(1)
+    });
+    println!(
+        "caspaxos node {id}: acceptor on {}, clients on {}",
+        node.acceptor_addr, node.client_addr
+    );
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn run_client(mut args: Vec<String>) {
+    let addr = take_flag(&mut args, "--connect").unwrap_or_else(|| usage());
+    let mut client = Client::connect(&addr).unwrap_or_else(|e| {
+        eprintln!("connect: {e}");
+        exit(1)
+    });
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args.remove(0);
+    let req = match (cmd.as_str(), args.as_slice()) {
+        ("get", [key]) => ClientReq::Change { key: key.clone(), change: ChangeFn::Read },
+        ("set", [key, num]) => ClientReq::Change {
+            key: key.clone(),
+            change: ChangeFn::Set(num.parse().unwrap_or_else(|_| usage())),
+        },
+        ("add", [key, delta]) => ClientReq::Change {
+            key: key.clone(),
+            change: ChangeFn::Add(delta.parse().unwrap_or_else(|_| usage())),
+        },
+        ("cas", [key, expect, num]) => ClientReq::Change {
+            key: key.clone(),
+            change: ChangeFn::Cas {
+                expect: expect.parse().unwrap_or_else(|_| usage()),
+                val: num.parse().unwrap_or_else(|_| usage()),
+            },
+        },
+        ("del", [key]) => ClientReq::Delete { key: key.clone() },
+        ("collect", []) => ClientReq::Collect,
+        ("status", []) => ClientReq::Status,
+        _ => usage(),
+    };
+    match client.call(&req) {
+        Ok(ClientResp::Val(v)) => println!("{v}"),
+        Ok(ClientResp::Status(s)) => println!("{s}"),
+        Ok(ClientResp::Batch(items)) => {
+            for item in items {
+                match item {
+                    Ok(v) => println!("{v}"),
+                    Err(e) => println!("error: {e}"),
+                }
+            }
+        }
+        Ok(ClientResp::Synced { proposer_id, age }) => {
+            println!("synced proposer {proposer_id} to age {age}")
+        }
+        Ok(ClientResp::Err(e)) => {
+            eprintln!("error: {e}");
+            exit(1);
+        }
+        Err(e) => {
+            eprintln!("transport: {e}");
+            exit(1);
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Lightweight metrics: atomic counters and latency histograms.
+//!
+//! Self-contained (no external metric crates) so the simulator, the
+//! server and the benches share one representation. Histograms use
+//! log-spaced buckets from 1µs to ~67s, enough resolution for the
+//! percentile reporting the paper's evaluation needs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Named monotone counters for one component.
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Rounds started.
+    pub rounds: AtomicU64,
+    /// Rounds finished successfully.
+    pub commits: AtomicU64,
+    /// Ballot conflicts observed.
+    pub conflicts: AtomicU64,
+    /// Retries performed.
+    pub retries: AtomicU64,
+    /// 1-RTT cache hits.
+    pub cache_hits: AtomicU64,
+    /// Requests that failed permanently.
+    pub failures: AtomicU64,
+}
+
+impl Counters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot as (rounds, commits, conflicts, retries, cache_hits, failures).
+    pub fn snapshot(&self) -> [u64; 6] {
+        [
+            self.rounds.load(Ordering::Relaxed),
+            self.commits.load(Ordering::Relaxed),
+            self.conflicts.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.failures.load(Ordering::Relaxed),
+        ]
+    }
+}
+
+const BUCKETS: usize = 64;
+
+/// Lock-free log-bucketed latency histogram (microsecond base).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // bucket i covers [2^i, 2^{i+1}) µs; bucket 0 covers [0, 2).
+        (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1)
+    }
+
+    /// Records one latency sample.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    /// Maximum recorded latency.
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile (upper bound of the containing bucket).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1).min(63));
+            }
+        }
+        self.max()
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p99={:?} max={:?}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_snapshot() {
+        let c = Counters::new();
+        c.rounds.fetch_add(3, Ordering::Relaxed);
+        c.commits.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(c.snapshot()[0], 3);
+        assert_eq!(c.snapshot()[1], 2);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(1000), 9);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert!(h.max() >= Duration::from_millis(100));
+        assert!(h.quantile(0.5) >= Duration::from_millis(2));
+        assert!(h.quantile(1.0) >= Duration::from_millis(100));
+        assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+}

@@ -1,0 +1,358 @@
+//! Wire protocol between proposers and acceptors.
+//!
+//! Two request/response pairs — prepare/promise and accept/accepted —
+//! plus the admin messages the deletion GC (§3.1) and membership change
+//! (§2.3) need. Every proposer message carries the proposer's *age* so
+//! acceptors can reject messages from proposers that were alive before a
+//! deletion was garbage-collected (the lost-delete anomaly guard).
+//!
+//! Messages implement the in-tree [`Codec`] (the wire format of the TCP
+//! transport and the record format of the acceptor log).
+
+use crate::ballot::Ballot;
+use crate::codec::{decode_seq, encode_seq, Codec, CodecError};
+use crate::state::Val;
+
+/// Register key. Keys name independent CASPaxos instances (§3).
+pub type Key = String;
+
+/// Proposer identity + age, attached to every request (§3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProposerId {
+    /// Numeric proposer id (ballot tiebreaker).
+    pub id: u64,
+    /// Age, incremented by the GC when it invalidates proposer caches.
+    pub age: u64,
+}
+
+impl ProposerId {
+    /// A proposer at age 0.
+    pub fn new(id: u64) -> Self {
+        ProposerId { id, age: 0 }
+    }
+}
+
+impl Codec for ProposerId {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.id.encode(out);
+        self.age.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(ProposerId { id: u64::decode(input)?, age: u64::decode(input)? })
+    }
+}
+
+/// Request sent from a proposer to an acceptor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Prepare phase: "promise me ballot `ballot` on `key`".
+    Prepare {
+        /// Target register.
+        key: Key,
+        /// Ballot the proposer wants promised.
+        ballot: Ballot,
+        /// Sender identity + age.
+        from: ProposerId,
+    },
+    /// Accept phase: "accept (`ballot`, `val`) on `key`".
+    Accept {
+        /// Target register.
+        key: Key,
+        /// Ballot from the prepare phase (or piggybacked 1-RTT ballot).
+        ballot: Ballot,
+        /// The new state produced by the change function.
+        val: Val,
+        /// Sender identity + age.
+        from: ProposerId,
+        /// One-round-trip optimization (§2.2.1): also promise the *next*
+        /// ballot so the proposer can skip the next prepare phase.
+        promise_next: Option<Ballot>,
+    },
+    /// GC step 2c (§3.1): require messages from proposer `proposer_id` to
+    /// carry age ≥ `min_age`.
+    SetMinAge {
+        /// Proposer whose old incarnations must be rejected.
+        proposer_id: u64,
+        /// Minimum acceptable age.
+        min_age: u64,
+    },
+    /// GC step 2d (§3.1): remove the register if it still holds the
+    /// tombstone accepted at `tombstone_ballot`.
+    Erase {
+        /// Target register.
+        key: Key,
+        /// The ballot the tombstone was accepted at in GC step 2a.
+        tombstone_ballot: Ballot,
+    },
+    /// Membership catch-up (§2.3.3): dump acceptor state for replication
+    /// onto a fresh node. `after` allows incremental sync.
+    Dump {
+        /// Only keys lexicographically greater than this (None = all).
+        after: Option<Key>,
+        /// Max entries to return.
+        limit: usize,
+    },
+    /// Membership catch-up: install a dumped slot if it is newer than the
+    /// local one (conflict resolved by ballot, §2.3.3).
+    Install {
+        /// Register key.
+        key: Key,
+        /// Accepted ballot of the dumped slot.
+        ballot: Ballot,
+        /// Accepted value of the dumped slot.
+        val: Val,
+    },
+    /// Liveness probe (used by examples and the TCP server).
+    Ping,
+}
+
+impl Request {
+    /// The register this request targets, if any.
+    pub fn key(&self) -> Option<&Key> {
+        match self {
+            Request::Prepare { key, .. }
+            | Request::Accept { key, .. }
+            | Request::Erase { key, .. }
+            | Request::Install { key, .. } => Some(key),
+            _ => None,
+        }
+    }
+}
+
+impl Codec for Request {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Request::Prepare { key, ballot, from } => {
+                out.push(0);
+                key.encode(out);
+                ballot.encode(out);
+                from.encode(out);
+            }
+            Request::Accept { key, ballot, val, from, promise_next } => {
+                out.push(1);
+                key.encode(out);
+                ballot.encode(out);
+                val.encode(out);
+                from.encode(out);
+                promise_next.encode(out);
+            }
+            Request::SetMinAge { proposer_id, min_age } => {
+                out.push(2);
+                proposer_id.encode(out);
+                min_age.encode(out);
+            }
+            Request::Erase { key, tombstone_ballot } => {
+                out.push(3);
+                key.encode(out);
+                tombstone_ballot.encode(out);
+            }
+            Request::Dump { after, limit } => {
+                out.push(4);
+                after.encode(out);
+                limit.encode(out);
+            }
+            Request::Install { key, ballot, val } => {
+                out.push(5);
+                key.encode(out);
+                ballot.encode(out);
+                val.encode(out);
+            }
+            Request::Ping => out.push(6),
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(match u8::decode(input)? {
+            0 => Request::Prepare {
+                key: Key::decode(input)?,
+                ballot: Ballot::decode(input)?,
+                from: ProposerId::decode(input)?,
+            },
+            1 => Request::Accept {
+                key: Key::decode(input)?,
+                ballot: Ballot::decode(input)?,
+                val: Val::decode(input)?,
+                from: ProposerId::decode(input)?,
+                promise_next: Option::<Ballot>::decode(input)?,
+            },
+            2 => Request::SetMinAge {
+                proposer_id: u64::decode(input)?,
+                min_age: u64::decode(input)?,
+            },
+            3 => Request::Erase {
+                key: Key::decode(input)?,
+                tombstone_ballot: Ballot::decode(input)?,
+            },
+            4 => Request::Dump { after: Option::<Key>::decode(input)?, limit: usize::decode(input)? },
+            5 => Request::Install {
+                key: Key::decode(input)?,
+                ballot: Ballot::decode(input)?,
+                val: Val::decode(input)?,
+            },
+            6 => Request::Ping,
+            _ => return Err(CodecError::Invalid("Request tag")),
+        })
+    }
+}
+
+/// Response from an acceptor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// Prepare confirmation: the promise is persisted; carries the
+    /// accepted (ballot, value) pair — (ZERO, Empty) if none yet.
+    Promise {
+        /// Ballot of the last accepted value (ZERO if none).
+        accepted_ballot: Ballot,
+        /// Last accepted value (Empty if none).
+        accepted_val: Val,
+    },
+    /// Accept confirmation: the (ballot, value) pair is persisted.
+    Accepted,
+    /// The acceptor saw a greater ballot. Carries it so the proposer can
+    /// fast-forward (§2.1).
+    Conflict {
+        /// The greater ballot the acceptor already promised/accepted.
+        seen: Ballot,
+    },
+    /// The proposer's age is below the acceptor's minimum for it (§3.1).
+    StaleAge {
+        /// Minimum acceptable age recorded by the GC.
+        required: u64,
+    },
+    /// Generic acknowledgement (SetMinAge, Erase, Install, Ping).
+    Ok,
+    /// Dump reply: a page of (key, accepted ballot, value) triples.
+    DumpPage {
+        /// The page.
+        entries: Vec<(Key, Ballot, Val)>,
+        /// True if more entries remain after the last one.
+        more: bool,
+    },
+    /// The acceptor could not serve the request.
+    Error(String),
+}
+
+impl Codec for Response {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Response::Promise { accepted_ballot, accepted_val } => {
+                out.push(0);
+                accepted_ballot.encode(out);
+                accepted_val.encode(out);
+            }
+            Response::Accepted => out.push(1),
+            Response::Conflict { seen } => {
+                out.push(2);
+                seen.encode(out);
+            }
+            Response::StaleAge { required } => {
+                out.push(3);
+                required.encode(out);
+            }
+            Response::Ok => out.push(4),
+            Response::DumpPage { entries, more } => {
+                out.push(5);
+                encode_seq(entries, out);
+                more.encode(out);
+            }
+            Response::Error(e) => {
+                out.push(6);
+                e.encode(out);
+            }
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(match u8::decode(input)? {
+            0 => Response::Promise {
+                accepted_ballot: Ballot::decode(input)?,
+                accepted_val: Val::decode(input)?,
+            },
+            1 => Response::Accepted,
+            2 => Response::Conflict { seen: Ballot::decode(input)? },
+            3 => Response::StaleAge { required: u64::decode(input)? },
+            4 => Response::Ok,
+            5 => Response::DumpPage { entries: decode_seq(input)?, more: bool::decode(input)? },
+            6 => Response::Error(String::decode(input)?),
+            _ => return Err(CodecError::Invalid("Response tag")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_roundtrip_requests() {
+        let reqs = vec![
+            Request::Prepare {
+                key: "k".into(),
+                ballot: Ballot::new(1, 2),
+                from: ProposerId::new(2),
+            },
+            Request::Accept {
+                key: "key/with/slash".into(),
+                ballot: Ballot::new(1, 2),
+                val: Val::Num { ver: 0, num: 7 },
+                from: ProposerId { id: 2, age: 3 },
+                promise_next: Some(Ballot::new(2, 2)),
+            },
+            Request::Accept {
+                key: "k".into(),
+                ballot: Ballot::new(1, 2),
+                val: Val::Bytes { ver: 1, data: vec![0, 255] },
+                from: ProposerId { id: 2, age: 3 },
+                promise_next: None,
+            },
+            Request::SetMinAge { proposer_id: 1, min_age: 4 },
+            Request::Erase { key: "k".into(), tombstone_ballot: Ballot::new(9, 1) },
+            Request::Dump { after: Some("z".into()), limit: 10 },
+            Request::Install { key: "k".into(), ballot: Ballot::new(3, 3), val: Val::Tombstone },
+            Request::Ping,
+        ];
+        for r in reqs {
+            assert_eq!(Request::from_bytes(&r.to_bytes()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_responses() {
+        let resps = vec![
+            Response::Promise { accepted_ballot: Ballot::ZERO, accepted_val: Val::Empty },
+            Response::Accepted,
+            Response::Conflict { seen: Ballot::new(5, 5) },
+            Response::StaleAge { required: 2 },
+            Response::Ok,
+            Response::DumpPage {
+                entries: vec![
+                    ("a".into(), Ballot::ZERO, Val::Empty),
+                    ("b".into(), Ballot::new(1, 1), Val::Num { ver: 0, num: 1 }),
+                ],
+                more: true,
+            },
+            Response::Error("boom".into()),
+        ];
+        for r in resps {
+            assert_eq!(Response::from_bytes(&r.to_bytes()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Request::from_bytes(&[99]).is_err());
+        assert!(Response::from_bytes(&[]).is_err());
+        let mut bytes = Request::Ping.to_bytes();
+        bytes.push(0);
+        assert!(Request::from_bytes(&bytes).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn request_key_accessor() {
+        assert_eq!(
+            Request::Prepare { key: "x".into(), ballot: Ballot::ZERO, from: ProposerId::new(0) }
+                .key()
+                .map(|s| s.as_str()),
+            Some("x")
+        );
+        assert_eq!(Request::Ping.key(), None);
+    }
+}

@@ -1,0 +1,115 @@
+//! One-round-trip optimization (§2.2.1).
+//!
+//! After a successful accept phase carrying a piggybacked promise for the
+//! proposer's *next* ballot, the proposer caches the value it just wrote.
+//! The next change on the same key through the same proposer skips the
+//! prepare phase entirely: it applies the change function to the cached
+//! value and goes straight to accept at the promised ballot — one round
+//! trip instead of two.
+//!
+//! The cache must be invalidated on any conflict (another proposer won a
+//! higher ballot) and by the deletion GC (§3.1 step 2b), which also
+//! fast-forwards the ballot counter and bumps the proposer's age.
+
+use std::collections::HashMap;
+
+use crate::ballot::Ballot;
+use crate::msg::Key;
+use crate::state::Val;
+
+/// A cached (promised ballot, last written value) pair for one key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheEntry {
+    /// Ballot promised (via piggyback) for the next round on this key.
+    pub ballot: Ballot,
+    /// The value this proposer last wrote (the current state, if nobody
+    /// else has touched the key since).
+    pub val: Val,
+}
+
+/// Per-proposer 1-RTT cache.
+#[derive(Debug, Default)]
+pub struct RttCache {
+    entries: HashMap<Key, CacheEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+impl RttCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Looks up a usable entry, counting hit/miss.
+    pub fn take(&mut self, key: &Key) -> Option<CacheEntry> {
+        // The entry stays valid across uses only if refreshed by the next
+        // round's piggyback; we remove it here so a failed round can't
+        // reuse a burned ballot.
+        match self.entries.remove(key) {
+            Some(e) => {
+                self.hits += 1;
+                Some(e)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Installs/refreshes an entry after a successful round.
+    pub fn put(&mut self, key: Key, ballot: Ballot, val: Val) {
+        self.entries.insert(key, CacheEntry { ballot, val });
+    }
+
+    /// Invalidates one key (conflict, or GC step 2b).
+    pub fn invalidate(&mut self, key: &Key) {
+        self.entries.remove(key);
+    }
+
+    /// Drops everything (GC age bump, config change).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// (hits, misses) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Number of cached keys.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_removes_entry() {
+        let mut c = RttCache::new();
+        c.put("k".into(), Ballot::new(2, 1), Val::Num { ver: 0, num: 1 });
+        assert!(c.take(&"k".to_string()).is_some());
+        assert!(c.take(&"k".to_string()).is_none(), "entry consumed");
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn invalidate_and_clear() {
+        let mut c = RttCache::new();
+        c.put("a".into(), Ballot::new(1, 1), Val::Empty);
+        c.put("b".into(), Ballot::new(1, 1), Val::Empty);
+        c.invalidate(&"a".to_string());
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

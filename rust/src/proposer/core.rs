@@ -1,0 +1,520 @@
+//! Sans-IO proposer round state machine (§2.2).
+//!
+//! One [`RoundCore`] drives a single two-phase (or one-phase, with the
+//! §2.2.1 cache) state transition for one register. It is pure: callers
+//! feed acceptor replies in and get messages/outcomes out, which lets the
+//! exact same protocol logic run under tokio (real transports) and inside
+//! the deterministic discrete-event simulator (fault-injection tests and
+//! the paper's WAN experiments).
+
+use crate::ballot::Ballot;
+use crate::change::ChangeFn;
+use crate::error::{CasError, CasResult};
+use crate::msg::{Key, ProposerId, Request, Response};
+use crate::quorum::ClusterConfig;
+use crate::state::Val;
+
+/// Successful outcome of one round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundOutcome {
+    /// The state written in the accept phase (the new current state).
+    pub state: Val,
+    /// Whether the change function accepted the prior state (a stale CAS
+    /// sets this to false while `state` carries the unchanged value).
+    pub accepted: bool,
+    /// Ballot the state was written at.
+    pub ballot: Ballot,
+    /// Ballot promised via piggyback for the proposer's next round on
+    /// this key (1-RTT optimization), confirmed by the accept quorum.
+    pub next_promised: Option<Ballot>,
+}
+
+/// What the round wants the driver to do next.
+#[derive(Debug)]
+pub enum Step {
+    /// Waiting for more replies; nothing to send.
+    Continue,
+    /// Send these requests (fan-out), then keep feeding replies.
+    Send(Vec<(u64, Request)>),
+    /// Round finished.
+    Done(CasResult<RoundOutcome>),
+}
+
+#[derive(Debug, PartialEq)]
+enum Phase {
+    Prepare,
+    Accept,
+    Finished,
+}
+
+/// A single CASPaxos round for one key.
+pub struct RoundCore {
+    key: Key,
+    change: ChangeFn,
+    ballot: Ballot,
+    from: ProposerId,
+    cfg: ClusterConfig,
+    /// Enable the §2.2.1 piggybacked promise for the next round.
+    piggyback: bool,
+
+    phase: Phase,
+    /// Incremented on every phase transition; replies carrying a stale
+    /// token are ignored (guards against late prepare replies corrupting
+    /// accept-phase accounting).
+    token: u32,
+    // Prepare bookkeeping.
+    best: (Ballot, Val),
+    prepare_oks: usize,
+    // Accept bookkeeping.
+    accept_oks: usize,
+    outcome: Option<(Val, bool)>,
+    // Shared bookkeeping.
+    replies: usize,
+    max_conflict: Ballot,
+    conflicts: usize,
+    stale_age: Option<u64>,
+}
+
+impl RoundCore {
+    /// Starts a full two-phase round. Returns the core and the prepare
+    /// fan-out to send.
+    pub fn new(
+        key: Key,
+        change: ChangeFn,
+        ballot: Ballot,
+        from: ProposerId,
+        cfg: ClusterConfig,
+        piggyback: bool,
+    ) -> (Self, Vec<(u64, Request)>) {
+        let msgs = cfg
+            .acceptors
+            .iter()
+            .map(|&to| {
+                (to, Request::Prepare { key: key.clone(), ballot, from })
+            })
+            .collect();
+        let core = RoundCore {
+            key,
+            change,
+            ballot,
+            from,
+            cfg,
+            piggyback,
+            phase: Phase::Prepare,
+            token: 0,
+            best: (Ballot::ZERO, Val::Empty),
+            prepare_oks: 0,
+            accept_oks: 0,
+            outcome: None,
+            replies: 0,
+            max_conflict: Ballot::ZERO,
+            conflicts: 0,
+            stale_age: None,
+        };
+        (core, msgs)
+    }
+
+    /// Starts a one-round-trip round (§2.2.1): the proposer holds a
+    /// quorum-confirmed promise for `ballot` and the cached current state
+    /// `cached`, so the prepare phase is skipped entirely.
+    pub fn new_cached(
+        key: Key,
+        change: ChangeFn,
+        ballot: Ballot,
+        cached: Val,
+        from: ProposerId,
+        cfg: ClusterConfig,
+        piggyback: bool,
+    ) -> (Self, Vec<(u64, Request)>) {
+        let mut core = RoundCore {
+            key,
+            change,
+            ballot,
+            from,
+            cfg,
+            piggyback,
+            phase: Phase::Accept,
+            token: 0,
+            best: (Ballot::ZERO, Val::Empty),
+            prepare_oks: 0,
+            accept_oks: 0,
+            outcome: None,
+            replies: 0,
+            max_conflict: Ballot::ZERO,
+            conflicts: 0,
+            stale_age: None,
+        };
+        let msgs = core.start_accept(cached);
+        (core, msgs)
+    }
+
+    /// The ballot this round runs at.
+    pub fn ballot(&self) -> Ballot {
+        self.ballot
+    }
+
+    /// Phase token to attach to in-flight requests: replies must echo it
+    /// back into [`RoundCore::on_reply`], where stale tokens are dropped.
+    pub fn token(&self) -> u32 {
+        self.token
+    }
+
+    /// Highest conflicting ballot seen (for fast-forward on retry).
+    pub fn max_conflict(&self) -> Ballot {
+        self.max_conflict
+    }
+
+    fn quorum_impossible(&self, oks: usize, quorum: usize) -> bool {
+        let remaining = self.cfg.acceptors.len() - self.replies;
+        oks + remaining < quorum
+    }
+
+    fn start_accept(&mut self, cur: Val) -> Vec<(u64, Request)> {
+        let applied = self.change.apply(&cur);
+        self.outcome = Some((applied.next.clone(), applied.accepted));
+        self.phase = Phase::Accept;
+        self.token += 1;
+        self.replies = 0;
+        let promise_next =
+            if self.piggyback { Some(self.ballot.next_for(self.from.id)) } else { None };
+        self.cfg
+            .acceptors
+            .iter()
+            .map(|&to| {
+                (
+                    to,
+                    Request::Accept {
+                        key: self.key.clone(),
+                        ballot: self.ballot,
+                        val: applied.next.clone(),
+                        from: self.from,
+                        promise_next,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn finish(&mut self, result: CasResult<RoundOutcome>) -> Step {
+        self.phase = Phase::Finished;
+        Step::Done(result)
+    }
+
+    fn fail(&mut self) -> Step {
+        let res = if let Some(required) = self.stale_age {
+            Err(CasError::StaleAge { required, got: self.from.age })
+        } else if self.conflicts > 0 {
+            Err(CasError::Conflict(self.max_conflict))
+        } else {
+            let (needed, got) = match self.phase {
+                Phase::Prepare => (self.cfg.quorum.prepare, self.prepare_oks),
+                _ => (self.cfg.quorum.accept, self.accept_oks),
+            };
+            Err(CasError::NoQuorum { needed, got })
+        };
+        self.finish(res)
+    }
+
+    /// Feeds one acceptor reply (or a transport failure as `None`).
+    /// `token` must be the value of [`RoundCore::token`] at the time the
+    /// corresponding request was sent; stale-phase replies are dropped.
+    pub fn on_reply(&mut self, token: u32, _from: u64, resp: Option<Response>) -> Step {
+        if self.phase == Phase::Finished || token != self.token {
+            return Step::Continue; // late/stale reply: ignore
+        }
+        self.replies += 1;
+        match resp {
+            Some(Response::Conflict { seen }) => {
+                self.conflicts += 1;
+                self.max_conflict = self.max_conflict.max(seen);
+            }
+            Some(Response::StaleAge { required }) => {
+                self.stale_age = Some(self.stale_age.unwrap_or(0).max(required));
+            }
+            Some(Response::Promise { accepted_ballot, accepted_val })
+                if self.phase == Phase::Prepare =>
+            {
+                self.prepare_oks += 1;
+                // "picks the value of the tuple with the highest ballot".
+                if accepted_ballot >= self.best.0 {
+                    self.best = (accepted_ballot, accepted_val);
+                }
+            }
+            Some(Response::Accepted) if self.phase == Phase::Accept => {
+                self.accept_oks += 1;
+            }
+            // Transport failure, Error response, or a phase-mismatched
+            // reply (e.g. a promise arriving after we moved to accept —
+            // impossible per driver contract, but harmless): counts only
+            // toward `replies`.
+            _ => {}
+        }
+
+        match self.phase {
+            Phase::Prepare => {
+                if self.prepare_oks >= self.cfg.quorum.prepare {
+                    let cur = self.best.1.clone();
+                    return Step::Send(self.start_accept(cur));
+                }
+                if self.stale_age.is_some()
+                    || self.quorum_impossible(self.prepare_oks, self.cfg.quorum.prepare)
+                {
+                    return self.fail();
+                }
+                Step::Continue
+            }
+            Phase::Accept => {
+                if self.accept_oks >= self.cfg.quorum.accept {
+                    let (state, accepted) = self.outcome.clone().expect("accept implies outcome");
+                    let next_promised =
+                        if self.piggyback { Some(self.ballot.next_for(self.from.id)) } else { None };
+                    let ballot = self.ballot;
+                    return self.finish(Ok(RoundOutcome { state, accepted, ballot, next_promised }));
+                }
+                if self.stale_age.is_some()
+                    || self.quorum_impossible(self.accept_oks, self.cfg.quorum.accept)
+                {
+                    return self.fail();
+                }
+                Step::Continue
+            }
+            Phase::Finished => Step::Continue,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg3() -> ClusterConfig {
+        ClusterConfig::majority(1, vec![1, 2, 3])
+    }
+
+    fn promise_empty() -> Response {
+        Response::Promise { accepted_ballot: Ballot::ZERO, accepted_val: Val::Empty }
+    }
+
+    #[test]
+    fn happy_two_phase_round() {
+        let (mut core, msgs) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Set(7),
+            Ballot::new(1, 1),
+            ProposerId::new(1),
+            cfg3(),
+            false,
+        );
+        assert_eq!(msgs.len(), 3);
+        assert!(matches!(msgs[0].1, Request::Prepare { .. }));
+
+        assert!(matches!(core.on_reply(core.token(), 1, Some(promise_empty())), Step::Continue));
+        let accepts = match core.on_reply(core.token(), 2, Some(promise_empty())) {
+            Step::Send(m) => m,
+            s => panic!("expected accept fan-out, got {s:?}"),
+        };
+        assert_eq!(accepts.len(), 3);
+        assert!(matches!(core.on_reply(core.token(), 1, Some(Response::Accepted)), Step::Continue));
+        match core.on_reply(core.token(), 2, Some(Response::Accepted)) {
+            Step::Done(Ok(out)) => {
+                assert_eq!(out.state.as_num(), Some(7));
+                assert!(out.accepted);
+                assert_eq!(out.next_promised, None);
+            }
+            s => panic!("{s:?}"),
+        }
+        // Late reply ignored.
+        assert!(matches!(core.on_reply(core.token(), 3, Some(Response::Accepted)), Step::Continue));
+    }
+
+    #[test]
+    fn picks_highest_ballot_value() {
+        let (mut core, _) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Add(1),
+            Ballot::new(5, 1),
+            ProposerId::new(1),
+            cfg3(),
+            false,
+        );
+        core.on_reply(core.token(), 
+            1,
+            Some(Response::Promise {
+                accepted_ballot: Ballot::new(2, 2),
+                accepted_val: Val::Num { ver: 0, num: 10 },
+            }),
+        );
+        let step = core.on_reply(core.token(), 
+            2,
+            Some(Response::Promise {
+                accepted_ballot: Ballot::new(3, 3),
+                accepted_val: Val::Num { ver: 1, num: 20 },
+            }),
+        );
+        match step {
+            Step::Send(msgs) => match &msgs[0].1 {
+                Request::Accept { val, .. } => {
+                    assert_eq!(val.as_num(), Some(21), "Add(1) applied to the ballot-3 value")
+                }
+                r => panic!("{r:?}"),
+            },
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn conflict_fails_round_with_max_ballot() {
+        let (mut core, _) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Set(1),
+            Ballot::new(1, 1),
+            ProposerId::new(1),
+            cfg3(),
+            false,
+        );
+        core.on_reply(core.token(), 1, Some(Response::Conflict { seen: Ballot::new(9, 2) }));
+        // After two conflicts only one reply remains: quorum of 2 is
+        // impossible, so the round fails fast carrying the max ballot.
+        match core.on_reply(core.token(), 2, Some(Response::Conflict { seen: Ballot::new(4, 3) })) {
+            Step::Done(Err(CasError::Conflict(b))) => assert_eq!(b, Ballot::new(9, 2)),
+            s => panic!("{s:?}"),
+        }
+        // Late reply is ignored.
+        assert!(matches!(core.on_reply(core.token(), 3, Some(promise_empty())), Step::Continue));
+    }
+
+    #[test]
+    fn transport_failures_fail_quorum() {
+        let (mut core, _) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Set(1),
+            Ballot::new(1, 1),
+            ProposerId::new(1),
+            cfg3(),
+            false,
+        );
+        core.on_reply(core.token(), 1, None);
+        match core.on_reply(core.token(), 2, None) {
+            Step::Done(Err(CasError::NoQuorum { needed: 2, got: 0 })) => {}
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn survives_one_failure_of_three() {
+        let (mut core, _) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Set(1),
+            Ballot::new(1, 1),
+            ProposerId::new(1),
+            cfg3(),
+            false,
+        );
+        core.on_reply(core.token(), 1, None);
+        core.on_reply(core.token(), 2, Some(promise_empty()));
+        let step = core.on_reply(core.token(), 3, Some(promise_empty()));
+        assert!(matches!(step, Step::Send(_)), "quorum reached despite one failure");
+    }
+
+    #[test]
+    fn cached_round_skips_prepare() {
+        let (mut core, msgs) = RoundCore::new_cached(
+            "k".into(),
+            ChangeFn::Add(5),
+            Ballot::new(2, 1),
+            Val::Num { ver: 0, num: 10 },
+            ProposerId::new(1),
+            cfg3(),
+            true,
+        );
+        assert!(matches!(msgs[0].1, Request::Accept { .. }), "no prepare phase");
+        match &msgs[0].1 {
+            Request::Accept { val, promise_next, .. } => {
+                assert_eq!(val.as_num(), Some(15));
+                assert_eq!(*promise_next, Some(Ballot::new(3, 1)));
+            }
+            _ => unreachable!(),
+        }
+        core.on_reply(core.token(), 1, Some(Response::Accepted));
+        match core.on_reply(core.token(), 2, Some(Response::Accepted)) {
+            Step::Done(Ok(out)) => {
+                assert_eq!(out.state.as_num(), Some(15));
+                assert_eq!(out.next_promised, Some(Ballot::new(3, 1)));
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn rejected_cas_still_completes_with_current_state() {
+        let (mut core, _) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Cas { expect: 99, val: 1 },
+            Ballot::new(5, 1),
+            ProposerId::new(1),
+            cfg3(),
+            false,
+        );
+        core.on_reply(core.token(), 
+            1,
+            Some(Response::Promise {
+                accepted_ballot: Ballot::new(1, 1),
+                accepted_val: Val::Num { ver: 3, num: 42 },
+            }),
+        );
+        let step = core.on_reply(core.token(), 2, Some(promise_empty()));
+        let Step::Send(_) = step else { panic!("{step:?}") };
+        core.on_reply(core.token(), 1, Some(Response::Accepted));
+        match core.on_reply(core.token(), 2, Some(Response::Accepted)) {
+            Step::Done(Ok(out)) => {
+                assert!(!out.accepted, "stale CAS is rejected");
+                assert_eq!(out.state.as_num(), Some(42), "current state returned");
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_age_aborts() {
+        let (mut core, _) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Read,
+            Ballot::new(1, 1),
+            ProposerId::new(1),
+            cfg3(),
+            false,
+        );
+        // A single StaleAge aborts immediately: the GC fenced this
+        // proposer and no quorum outcome can be trusted.
+        match core.on_reply(core.token(), 1, Some(Response::StaleAge { required: 3 })) {
+            Step::Done(Err(CasError::StaleAge { required: 3, got: 0 })) => {}
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn flexible_quorum_respected() {
+        // paper §2.3: 4 nodes, prepare=2, accept=3
+        let cfg = ClusterConfig {
+            epoch: 1,
+            acceptors: vec![1, 2, 3, 4],
+            quorum: crate::quorum::QuorumSpec::flexible(4, 2, 3).unwrap(),
+        };
+        let (mut core, msgs) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Set(1),
+            Ballot::new(1, 1),
+            ProposerId::new(1),
+            cfg,
+            false,
+        );
+        assert_eq!(msgs.len(), 4);
+        core.on_reply(core.token(), 1, Some(promise_empty()));
+        let Step::Send(_) = core.on_reply(core.token(), 2, Some(promise_empty())) else {
+            panic!("prepare quorum of 2")
+        };
+        core.on_reply(core.token(), 1, Some(Response::Accepted));
+        core.on_reply(core.token(), 2, Some(Response::Accepted));
+        assert!(matches!(core.on_reply(core.token(), 3, Some(Response::Accepted)), Step::Done(Ok(_))));
+    }
+}

@@ -1,0 +1,445 @@
+//! Proposer role (§2.2): the blocking driver around [`RoundCore`].
+//!
+//! A [`Proposer`] owns a ballot generator, the cluster configuration, the
+//! 1-RTT cache (§2.2.1) and a retry policy. Any number of proposers can
+//! run concurrently — CASPaxos has no leader — and clients may talk to
+//! any of them. Per-proposer state is minimal by design: the ballot
+//! counter and the (purely optional) cache.
+//!
+//! Calls block the calling thread; fan-out parallelism is the
+//! transport's job (see [`crate::transport`]).
+
+pub mod cache;
+pub mod core;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::ballot::{Ballot, BallotGenerator};
+use crate::change::ChangeFn;
+use crate::error::{CasError, CasResult};
+use crate::metrics::Counters;
+use crate::msg::{Key, ProposerId, Request};
+use crate::quorum::ClusterConfig;
+use crate::rng::Rng;
+use crate::state::Val;
+use crate::transport::Transport;
+
+pub use self::cache::RttCache;
+pub use self::core::{RoundCore, RoundOutcome, Step};
+
+/// Tunables for the retry/backoff policy.
+#[derive(Debug, Clone)]
+pub struct ProposerOpts {
+    /// Enable the one-round-trip optimization (§2.2.1).
+    pub piggyback: bool,
+    /// Total attempts per change (first try + retries).
+    pub max_attempts: u32,
+    /// Wall-clock budget for one round's replies.
+    pub round_timeout: Duration,
+    /// Base backoff between attempts (exponential, jittered).
+    pub backoff: Duration,
+}
+
+impl Default for ProposerOpts {
+    fn default() -> Self {
+        ProposerOpts {
+            piggyback: true,
+            max_attempts: 16,
+            round_timeout: Duration::from_secs(2),
+            backoff: Duration::from_micros(200),
+        }
+    }
+}
+
+/// A CASPaxos proposer bound to a transport and a cluster configuration.
+pub struct Proposer {
+    id: u64,
+    age: AtomicU64,
+    gen: Mutex<BallotGenerator>,
+    cfg: RwLock<ClusterConfig>,
+    transport: Arc<dyn Transport>,
+    cache: Mutex<RttCache>,
+    jitter: Mutex<Rng>,
+    opts: ProposerOpts,
+    /// Protocol counters (rounds, conflicts, cache hits, ...).
+    pub metrics: Counters,
+}
+
+impl Proposer {
+    /// Creates a proposer with default options.
+    pub fn new(id: u64, cfg: ClusterConfig, transport: Arc<dyn Transport>) -> Self {
+        Self::with_opts(id, cfg, transport, ProposerOpts::default())
+    }
+
+    /// Creates a proposer with explicit options.
+    pub fn with_opts(
+        id: u64,
+        cfg: ClusterConfig,
+        transport: Arc<dyn Transport>,
+        opts: ProposerOpts,
+    ) -> Self {
+        Proposer {
+            id,
+            age: AtomicU64::new(0),
+            gen: Mutex::new(BallotGenerator::new(id)),
+            cfg: RwLock::new(cfg),
+            transport,
+            cache: Mutex::new(RttCache::new()),
+            jitter: Mutex::new(Rng::from_entropy()),
+            opts,
+            metrics: Counters::new(),
+        }
+    }
+
+    /// This proposer's numeric id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Current identity (id + age) attached to outgoing messages.
+    pub fn proposer_id(&self) -> ProposerId {
+        ProposerId { id: self.id, age: self.age.load(Ordering::SeqCst) }
+    }
+
+    /// The transport this proposer uses (shared with admin tooling).
+    pub fn transport(&self) -> Arc<dyn Transport> {
+        Arc::clone(&self.transport)
+    }
+
+    /// Current cluster configuration (clone).
+    pub fn config(&self) -> ClusterConfig {
+        self.cfg.read().unwrap().clone()
+    }
+
+    /// Installs a new cluster configuration (membership change driver,
+    /// §2.3). Clears the 1-RTT cache: cached promises were granted under
+    /// the old acceptor set / quorum sizes.
+    pub fn update_config(&self, cfg: ClusterConfig) -> CasResult<()> {
+        cfg.validate()?;
+        *self.cfg.write().unwrap() = cfg;
+        self.cache.lock().unwrap().clear();
+        Ok(())
+    }
+
+    /// GC step 2b (§3.1): invalidate the cache entry for `key`,
+    /// fast-forward the ballot counter past `min_counter`, bump the age.
+    /// Returns the new age.
+    pub fn gc_sync(&self, key: &Key, min_counter: u64) -> u64 {
+        self.cache.lock().unwrap().invalidate(key);
+        self.gen.lock().unwrap().fast_forward(Ballot::new(min_counter, 0));
+        self.age.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Applies `change` to register `key`, retrying on conflicts with
+    /// fast-forwarded ballots. Returns the resulting state.
+    ///
+    /// For a rejected conditional change (stale [`ChangeFn::Cas`]) this
+    /// returns [`CasError::Rejected`]; use [`Proposer::change_detailed`]
+    /// to also observe the current state in that case.
+    pub fn change(&self, key: impl Into<Key>, change: ChangeFn) -> CasResult<Val> {
+        let out = self.change_detailed(key, change)?;
+        if out.accepted {
+            Ok(out.state)
+        } else {
+            Err(CasError::Rejected(format!("current state is {}", out.state)))
+        }
+    }
+
+    /// Like [`Proposer::change`] but exposes the full round outcome.
+    pub fn change_detailed(
+        &self,
+        key: impl Into<Key>,
+        change: ChangeFn,
+    ) -> CasResult<RoundOutcome> {
+        let key: Key = key.into();
+        let mut last_err = CasError::RetriesExhausted { attempts: 0 };
+        for attempt in 0..self.opts.max_attempts {
+            if attempt > 0 {
+                self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                self.backoff(attempt);
+            }
+            self.metrics.rounds.fetch_add(1, Ordering::Relaxed);
+            let (core, msgs) = self.build_round(&key, change.clone());
+            match self.run_round(core, msgs) {
+                Ok(out) => {
+                    if self.opts.piggyback {
+                        if let Some(next) = out.next_promised {
+                            // Keep the generator ahead of promised ballots
+                            // so a cache miss can't reuse a burned number.
+                            self.gen.lock().unwrap().fast_forward(next);
+                            self.cache.lock().unwrap().put(key.clone(), next, out.state.clone());
+                        }
+                    }
+                    self.metrics.commits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(out);
+                }
+                Err(CasError::Conflict(seen)) => {
+                    self.metrics.conflicts.fetch_add(1, Ordering::Relaxed);
+                    self.gen.lock().unwrap().fast_forward(seen);
+                    self.cache.lock().unwrap().invalidate(&key);
+                    last_err = CasError::Conflict(seen);
+                }
+                Err(e @ CasError::StaleAge { .. }) => {
+                    // The deletion GC fenced this proposer (§3.1); it must
+                    // be re-synced via gc_sync, not silently self-healed.
+                    self.metrics.failures.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+                Err(e) => {
+                    self.cache.lock().unwrap().invalidate(&key);
+                    last_err = e;
+                }
+            }
+        }
+        self.metrics.failures.fetch_add(1, Ordering::Relaxed);
+        Err(match last_err {
+            CasError::Conflict(b) => CasError::Conflict(b),
+            _ => CasError::RetriesExhausted { attempts: self.opts.max_attempts },
+        })
+    }
+
+    fn build_round(&self, key: &Key, change: ChangeFn) -> (RoundCore, Vec<(u64, Request)>) {
+        let cfg = self.cfg.read().unwrap().clone();
+        let from = self.proposer_id();
+        if self.opts.piggyback {
+            if let Some(entry) = self.cache.lock().unwrap().take(key) {
+                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return RoundCore::new_cached(
+                    key.clone(),
+                    change,
+                    entry.ballot,
+                    entry.val,
+                    from,
+                    cfg,
+                    true,
+                );
+            }
+        }
+        let ballot = self.gen.lock().unwrap().next();
+        RoundCore::new(key.clone(), change, ballot, from, cfg, self.opts.piggyback)
+    }
+
+    fn run_round(&self, mut core: RoundCore, msgs: Vec<(u64, Request)>) -> CasResult<RoundOutcome> {
+        let (tx, rx) = mpsc::channel();
+        self.transport.fan_out(core.token(), msgs, &tx);
+        let deadline = Instant::now() + self.opts.round_timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(CasError::NoQuorum {
+                    needed: self.cfg.read().unwrap().quorum.prepare,
+                    got: 0,
+                });
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(reply) => match core.on_reply(reply.token, reply.from, reply.resp) {
+                    Step::Continue => {}
+                    Step::Send(more) => self.transport.fan_out(core.token(), more, &tx),
+                    Step::Done(res) => return res,
+                },
+                Err(_) => {
+                    return Err(CasError::NoQuorum {
+                        needed: self.cfg.read().unwrap().quorum.prepare,
+                        got: 0,
+                    })
+                }
+            }
+        }
+    }
+
+    fn backoff(&self, attempt: u32) {
+        let exp = self.opts.backoff.as_micros() as u64 * (1u64 << attempt.min(10));
+        let jitter = self.jitter.lock().unwrap().gen_range(exp + 1);
+        std::thread::sleep(Duration::from_micros(exp + jitter));
+    }
+
+    // ---- convenience API (the §2.2 specializations) ----
+
+    /// Linearizable read: the identity transition `x -> x`.
+    pub fn get(&self, key: impl Into<Key>) -> CasResult<Val> {
+        Ok(self.change_detailed(key, ChangeFn::Read)?.state)
+    }
+
+    /// Initialize-if-empty (the Synod specialization).
+    pub fn init(&self, key: impl Into<Key>, val: i64) -> CasResult<Val> {
+        self.change(key, ChangeFn::InitIfEmpty(val))
+    }
+
+    /// Unconditional versioned overwrite.
+    pub fn set(&self, key: impl Into<Key>, val: i64) -> CasResult<Val> {
+        self.change(key, ChangeFn::Set(val))
+    }
+
+    /// Compare-and-swap on the version counter.
+    pub fn cas(&self, key: impl Into<Key>, expect: i64, val: i64) -> CasResult<Val> {
+        self.change(key, ChangeFn::Cas { expect, val })
+    }
+
+    /// Atomic increment (the §3.2 read-modify-write collapsed to 1 round).
+    pub fn add(&self, key: impl Into<Key>, delta: i64) -> CasResult<Val> {
+        self.change(key, ChangeFn::Add(delta))
+    }
+
+    /// Writes the deletion tombstone (§3.1 step 1). The actual space
+    /// reclamation is the GC's job — see [`crate::gc`].
+    pub fn delete(&self, key: impl Into<Key>) -> CasResult<Val> {
+        self.change(key, ChangeFn::Tombstone)
+    }
+
+    /// (hits, misses) of the 1-RTT cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.lock().unwrap().stats()
+    }
+
+    /// Number of keys currently cached (1-RTT).
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::mem::MemTransport;
+
+    fn cluster(n: usize) -> (Arc<MemTransport>, ClusterConfig) {
+        let t = Arc::new(MemTransport::new(n));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        (t, cfg)
+    }
+
+    #[test]
+    fn set_then_get() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t);
+        assert_eq!(p.set("k", 42).unwrap().as_num(), Some(42));
+        assert_eq!(p.get("k").unwrap().as_num(), Some(42));
+        assert_eq!(p.get("missing").unwrap(), Val::Empty);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t);
+        for _ in 0..10 {
+            p.add("ctr", 1).unwrap();
+        }
+        assert_eq!(p.get("ctr").unwrap().as_num(), Some(10));
+    }
+
+    #[test]
+    fn cas_success_and_reject() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t);
+        p.set("k", 1).unwrap(); // ver 0
+        let v = p.cas("k", 0, 2).unwrap();
+        assert_eq!(v, Val::Num { ver: 1, num: 2 });
+        match p.cas("k", 0, 3) {
+            Err(CasError::Rejected(_)) => {}
+            r => panic!("stale CAS must reject, got {r:?}"),
+        }
+        assert_eq!(p.get("k").unwrap().as_num(), Some(2));
+    }
+
+    #[test]
+    fn two_proposers_interleave_safely() {
+        let (t, cfg) = cluster(3);
+        let p1 = Proposer::new(1, cfg.clone(), t.clone());
+        let p2 = Proposer::new(2, cfg, t);
+        p1.add("k", 1).unwrap();
+        p2.add("k", 10).unwrap();
+        p1.add("k", 100).unwrap();
+        assert_eq!(p2.get("k").unwrap().as_num(), Some(111));
+    }
+
+    #[test]
+    fn one_rtt_cache_hits_on_repeat_writes() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t.clone());
+        for i in 0..5 {
+            p.add("k", i).unwrap();
+        }
+        let (hits, _) = p.cache_stats();
+        assert!(hits >= 4, "subsequent writes should hit the 1-RTT cache, hits={hits}");
+        // 1st round: prepare(3) + accept(3); cached rounds: accept(3).
+        assert!(
+            t.request_count() <= 6 + 4 * 3,
+            "1-RTT should cut request count, got {}",
+            t.request_count()
+        );
+    }
+
+    #[test]
+    fn survives_one_acceptor_down() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t.clone());
+        t.set_down(3, true);
+        assert_eq!(p.set("k", 7).unwrap().as_num(), Some(7));
+        assert_eq!(p.get("k").unwrap().as_num(), Some(7));
+    }
+
+    #[test]
+    fn fails_without_quorum() {
+        let (t, cfg) = cluster(3);
+        let opts = ProposerOpts {
+            max_attempts: 2,
+            round_timeout: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let p = Proposer::with_opts(1, cfg, t.clone(), opts);
+        t.set_down(2, true);
+        t.set_down(3, true);
+        assert!(p.set("k", 1).is_err());
+    }
+
+    #[test]
+    fn recovers_after_dropped_messages() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t.clone());
+        t.drop_next(1, 2);
+        t.drop_next(2, 1);
+        assert_eq!(p.set("k", 5).unwrap().as_num(), Some(5));
+    }
+
+    #[test]
+    fn concurrent_adds_count_exactly() {
+        let (t, cfg) = cluster(3);
+        let mut handles = Vec::new();
+        for id in 1..=4u64 {
+            let p = Arc::new(Proposer::new(id, cfg.clone(), t.clone()));
+            for _ in 0..5 {
+                let p = Arc::clone(&p);
+                handles.push(std::thread::spawn(move || p.add("ctr", 1).is_ok()));
+            }
+        }
+        let ok = handles.into_iter().filter_map(|h| h.join().ok()).filter(|ok| *ok).count() as i64;
+        let reader = Proposer::new(99, cfg, t);
+        let total = reader.get("ctr").unwrap().as_num().unwrap();
+        assert_eq!(total, ok, "every acknowledged increment is counted exactly once");
+        assert!(ok > 0);
+    }
+
+    #[test]
+    fn config_update_clears_cache() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg.clone(), t);
+        p.set("k", 1).unwrap();
+        assert!(p.cache_len() > 0);
+        p.update_config(cfg).unwrap();
+        assert_eq!(p.cache_len(), 0);
+    }
+
+    #[test]
+    fn gc_sync_bumps_age_and_counter() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t);
+        p.set("k", 1).unwrap();
+        let age = p.gc_sync(&"k".to_string(), 100);
+        assert_eq!(age, 1);
+        assert_eq!(p.proposer_id().age, 1);
+        assert!(p.gen.lock().unwrap().current().counter >= 100);
+    }
+}

@@ -1,0 +1,189 @@
+//! Quorum specifications (§2.2.2, §2.3, Appendix B).
+//!
+//! CASPaxos inherits Synod's safety from *quorum intersection* alone: any
+//! prepare quorum must intersect any accept quorum (FPaxos / flexible
+//! quorums). The classic configuration is `⌈(N+1)/2⌉` for both, but the
+//! membership-change protocol (§2.3) transiently runs with asymmetric
+//! quorums — e.g. during the 2F+1 → 2F+2 expansion the accept quorum grows
+//! to F+2 while prepare stays at F+1.
+
+use crate::codec::{encode_seq, decode_seq, Codec, CodecError};
+use crate::error::{CasError, CasResult};
+
+/// Quorum sizes for one cluster configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuorumSpec {
+    /// Total number of acceptors the proposer talks to.
+    pub nodes: usize,
+    /// Confirmations required in the prepare phase.
+    pub prepare: usize,
+    /// Confirmations required in the accept phase.
+    pub accept: usize,
+}
+
+impl QuorumSpec {
+    /// The classic symmetric majority quorum for `n` acceptors:
+    /// tolerates `⌊(n−1)/2⌋` failures.
+    pub fn majority(n: usize) -> Self {
+        QuorumSpec { nodes: n, prepare: n / 2 + 1, accept: n / 2 + 1 }
+    }
+
+    /// A flexible-quorum configuration (FPaxos). Validated by
+    /// [`QuorumSpec::validate`].
+    pub fn flexible(nodes: usize, prepare: usize, accept: usize) -> CasResult<Self> {
+        let q = QuorumSpec { nodes, prepare, accept };
+        q.validate()?;
+        Ok(q)
+    }
+
+    /// Checks the FPaxos intersection requirement:
+    /// `prepare + accept > nodes`, and both quorums are satisfiable.
+    pub fn validate(&self) -> CasResult<()> {
+        if self.nodes == 0 {
+            return Err(CasError::Config("cluster must have at least one acceptor".into()));
+        }
+        if self.prepare == 0 || self.accept == 0 {
+            return Err(CasError::Config("quorums must be non-zero".into()));
+        }
+        if self.prepare > self.nodes || self.accept > self.nodes {
+            return Err(CasError::Config(format!(
+                "quorum larger than cluster: prepare={} accept={} nodes={}",
+                self.prepare, self.accept, self.nodes
+            )));
+        }
+        if self.prepare + self.accept <= self.nodes {
+            return Err(CasError::Config(format!(
+                "quorums do not intersect: prepare={} + accept={} <= nodes={}",
+                self.prepare, self.accept, self.nodes
+            )));
+        }
+        Ok(())
+    }
+
+    /// Number of crash failures this spec tolerates while keeping both
+    /// phases live: `nodes - max(prepare, accept)`.
+    pub fn fault_tolerance(&self) -> usize {
+        self.nodes - self.prepare.max(self.accept)
+    }
+}
+
+/// A (possibly joint) quorum configuration, versioned by an epoch so
+/// proposers and admin tooling can reason about membership transitions
+/// (§2.3). During a transition the driver installs intermediate specs
+/// (e.g. grown accept quorum) before the final symmetric one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Monotonically increasing configuration epoch.
+    pub epoch: u64,
+    /// Acceptor node ids, in the order the proposer contacts them.
+    pub acceptors: Vec<u64>,
+    /// Quorum sizes over `acceptors`.
+    pub quorum: QuorumSpec,
+}
+
+impl ClusterConfig {
+    /// Symmetric majority config over the given acceptors.
+    pub fn majority(epoch: u64, acceptors: Vec<u64>) -> Self {
+        let quorum = QuorumSpec::majority(acceptors.len());
+        ClusterConfig { epoch, acceptors, quorum }
+    }
+
+    /// Validates the spec against the acceptor list.
+    pub fn validate(&self) -> CasResult<()> {
+        if self.quorum.nodes != self.acceptors.len() {
+            return Err(CasError::Config(format!(
+                "quorum.nodes={} != acceptors.len()={}",
+                self.quorum.nodes,
+                self.acceptors.len()
+            )));
+        }
+        let mut ids = self.acceptors.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != self.acceptors.len() {
+            return Err(CasError::Config("duplicate acceptor ids".into()));
+        }
+        self.quorum.validate()
+    }
+}
+
+impl Codec for QuorumSpec {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.nodes.encode(out);
+        self.prepare.encode(out);
+        self.accept.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(QuorumSpec {
+            nodes: usize::decode(input)?,
+            prepare: usize::decode(input)?,
+            accept: usize::decode(input)?,
+        })
+    }
+}
+
+impl Codec for ClusterConfig {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.epoch.encode(out);
+        encode_seq(&self.acceptors, out);
+        self.quorum.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(ClusterConfig {
+            epoch: u64::decode(input)?,
+            acceptors: decode_seq(input)?,
+            quorum: QuorumSpec::decode(input)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn majority_sizes() {
+        assert_eq!(QuorumSpec::majority(3), QuorumSpec { nodes: 3, prepare: 2, accept: 2 });
+        assert_eq!(QuorumSpec::majority(4).prepare, 3);
+        assert_eq!(QuorumSpec::majority(5).prepare, 3);
+        assert_eq!(QuorumSpec::majority(1).prepare, 1);
+    }
+
+    #[test]
+    fn fault_tolerance() {
+        assert_eq!(QuorumSpec::majority(3).fault_tolerance(), 1);
+        assert_eq!(QuorumSpec::majority(5).fault_tolerance(), 2);
+        assert_eq!(QuorumSpec::majority(4).fault_tolerance(), 1);
+        // paper §2.3: 4 nodes, prepare=2, accept=3
+        let q = QuorumSpec::flexible(4, 2, 3).unwrap();
+        assert_eq!(q.fault_tolerance(), 1);
+    }
+
+    #[test]
+    fn flexible_requires_intersection() {
+        assert!(QuorumSpec::flexible(4, 2, 3).is_ok());
+        assert!(QuorumSpec::flexible(4, 2, 2).is_err(), "2+2 <= 4 must fail");
+        assert!(QuorumSpec::flexible(3, 1, 3).is_ok());
+        assert!(QuorumSpec::flexible(3, 0, 3).is_err());
+        assert!(QuorumSpec::flexible(3, 4, 1).is_err());
+        assert!(QuorumSpec::flexible(0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let c = ClusterConfig::majority(3, vec![1, 2, 3]);
+        assert_eq!(ClusterConfig::from_bytes(&c.to_bytes()).unwrap(), c);
+    }
+
+    #[test]
+    fn cluster_config_validation() {
+        let c = ClusterConfig::majority(1, vec![1, 2, 3]);
+        assert!(c.validate().is_ok());
+        let mut bad = c.clone();
+        bad.acceptors = vec![1, 2, 2];
+        assert!(bad.validate().is_err(), "duplicate ids");
+        let mut bad = c;
+        bad.acceptors.push(4);
+        assert!(bad.validate().is_err(), "nodes mismatch");
+    }
+}

@@ -1,0 +1,448 @@
+//! The batched step engine: typed wrapper over the PJRT executable plus
+//! the pure-Rust oracle.
+//!
+//! Input/output layout matches `python/compile/model.py::caspaxos_step`:
+//!
+//! * ballots `[A, B] i64` (packed; -1 absent), row-major flattened;
+//! * states  `[A, B, 2] i64`;
+//! * ops     `[B] i32`;
+//! * args    `[B, 2] i64`;
+//! * outputs: next states `[B, 2] i64`, accepted `[B] i32`,
+//!   max ballot `[B] i64`.
+
+use crate::error::{CasError, CasResult};
+use crate::state::opcode;
+
+use super::Runtime;
+
+/// A packed register state `[ver, num]` (see `Val::pack`).
+pub type PackedState = [i64; 2];
+
+/// One batched step's inputs.
+#[derive(Debug, Clone)]
+pub struct StepInput {
+    /// Acceptor count (rows).
+    pub a: usize,
+    /// Batch width (keys).
+    pub b: usize,
+    /// `[A * B]` packed ballots, row-major.
+    pub ballots: Vec<i64>,
+    /// `[A * B * 2]` packed states, row-major.
+    pub states: Vec<i64>,
+    /// `[B]` op codes.
+    pub ops: Vec<i32>,
+    /// `[B * 2]` op args.
+    pub args: Vec<i64>,
+}
+
+impl StepInput {
+    /// An input filled with absent replies and READ ops (padding slots
+    /// stay inert).
+    pub fn empty(a: usize, b: usize) -> Self {
+        StepInput {
+            a,
+            b,
+            ballots: vec![super::BALLOT_ABSENT; a * b],
+            states: vec![0; a * b * 2],
+            ops: vec![opcode::READ; b],
+            args: vec![0; b * 2],
+        }
+    }
+
+    /// Sets acceptor `row`'s reply for key-slot `col`.
+    pub fn set_reply(&mut self, row: usize, col: usize, ballot: i64, state: PackedState) {
+        self.ballots[row * self.b + col] = ballot;
+        let off = (row * self.b + col) * 2;
+        self.states[off] = state[0];
+        self.states[off + 1] = state[1];
+    }
+
+    /// Sets key-slot `col`'s operation.
+    pub fn set_op(&mut self, col: usize, op: i32, args: [i64; 2]) {
+        self.ops[col] = op;
+        self.args[col * 2] = args[0];
+        self.args[col * 2 + 1] = args[1];
+    }
+}
+
+/// One batched step's outputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepOutput {
+    /// `[B]` next states (the accept-phase payloads).
+    pub next: Vec<PackedState>,
+    /// `[B]` change-function accept flags.
+    pub accepted: Vec<bool>,
+    /// `[B]` max ballots seen per key.
+    pub max_ballot: Vec<i64>,
+}
+
+/// Pure-Rust reference implementation of `caspaxos_step` — the
+/// differential oracle and no-artifact fallback. Must match both the
+/// Pallas kernels and `ChangeFn::apply` (all three are tested against
+/// each other).
+pub fn scalar_step(input: &StepInput) -> StepOutput {
+    let (a, b) = (input.a, input.b);
+    let mut next = Vec::with_capacity(b);
+    let mut accepted = Vec::with_capacity(b);
+    let mut max_ballot = Vec::with_capacity(b);
+    for col in 0..b {
+        // select_max_ballot: first maximum wins (matches jnp.argmax).
+        let mut best_ballot = i64::MIN;
+        let mut best_state: PackedState = [-1, 0];
+        for row in 0..a {
+            let bal = input.ballots[row * b + col];
+            if bal > best_ballot {
+                best_ballot = bal;
+                let off = (row * b + col) * 2;
+                best_state = [input.states[off], input.states[off + 1]];
+            }
+        }
+        if best_ballot < 0 {
+            best_state = [-1, 0]; // all absent → ∅
+            best_ballot = input.ballots.iter().skip(col).step_by(b).copied().max().unwrap_or(-1);
+        }
+        // apply_cas.
+        let [ver, num] = best_state;
+        let expect = input.args[col * 2];
+        let val = input.args[col * 2 + 1];
+        let is_num = ver >= 0;
+        let (nxt, acc): (PackedState, bool) = match input.ops[col] {
+            opcode::READ => (best_state, true),
+            opcode::INIT => {
+                if is_num {
+                    (best_state, true)
+                } else {
+                    ([0, val], true)
+                }
+            }
+            opcode::CAS => {
+                if is_num && ver == expect {
+                    ([expect + 1, val], true)
+                } else {
+                    (best_state, false)
+                }
+            }
+            opcode::SET => ([if is_num { ver + 1 } else { 0 }, val], true),
+            opcode::ADD => {
+                if is_num {
+                    ([ver + 1, num.wrapping_add(val)], true)
+                } else {
+                    ([0, val], true)
+                }
+            }
+            opcode::TOMBSTONE => ([-2, 0], true),
+            other => panic!("unknown opcode {other}"),
+        };
+        next.push(nxt);
+        accepted.push(acc);
+        max_ballot.push(best_ballot);
+    }
+    StepOutput { next, accepted, max_ballot }
+}
+
+/// Execution backend selection.
+enum Backend {
+    /// AOT-compiled PJRT executable (the production path).
+    Pjrt(Runtime),
+    /// Pure-Rust fallback (no artifacts built).
+    Scalar,
+}
+
+/// The engine the batching layer calls.
+pub struct StepEngine {
+    backend: Backend,
+}
+
+impl StepEngine {
+    /// PJRT engine over loaded artifacts.
+    pub fn pjrt(runtime: Runtime) -> Self {
+        StepEngine { backend: Backend::Pjrt(runtime) }
+    }
+
+    /// Pure-Rust engine.
+    pub fn scalar() -> Self {
+        StepEngine { backend: Backend::Scalar }
+    }
+
+    /// Loads PJRT if artifacts exist, otherwise falls back to scalar.
+    pub fn auto() -> Self {
+        if Runtime::artifacts_available() {
+            match Runtime::load_default() {
+                Ok(rt) => return Self::pjrt(rt),
+                Err(e) => eprintln!("StepEngine: PJRT unavailable ({e}); scalar fallback"),
+            }
+        }
+        Self::scalar()
+    }
+
+    /// True when running on the PJRT backend.
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self.backend, Backend::Pjrt(_))
+    }
+
+    /// The (A, B) shape the engine wants for `acceptors`/`batch`, or
+    /// `None` when any shape works (scalar backend).
+    pub fn pick_shape(&self, acceptors: usize, batch: usize) -> Option<(usize, usize)> {
+        match &self.backend {
+            Backend::Pjrt(rt) => rt.pick_variant(acceptors, batch),
+            Backend::Scalar => Some((acceptors, batch)),
+        }
+    }
+
+    /// Runs one batched step. `input` shapes must match a compiled
+    /// variant exactly on the PJRT backend (use [`StepInput::empty`] +
+    /// padding to reach the variant size).
+    pub fn step(&self, input: &StepInput) -> CasResult<StepOutput> {
+        match &self.backend {
+            Backend::Scalar => Ok(scalar_step(input)),
+            Backend::Pjrt(rt) => {
+                let (a, b) = (input.a, input.b);
+                let ballots = xla::Literal::vec1(&input.ballots)
+                    .reshape(&[a as i64, b as i64])
+                    .map_err(|e| CasError::Runtime(format!("ballots reshape: {e}")))?;
+                let states = xla::Literal::vec1(&input.states)
+                    .reshape(&[a as i64, b as i64, 2])
+                    .map_err(|e| CasError::Runtime(format!("states reshape: {e}")))?;
+                let ops = xla::Literal::vec1(&input.ops);
+                let args = xla::Literal::vec1(&input.args)
+                    .reshape(&[b as i64, 2])
+                    .map_err(|e| CasError::Runtime(format!("args reshape: {e}")))?;
+                let (next_l, acc_l, maxb_l) =
+                    rt.execute((a, b), &[ballots, states, ops, args])?;
+                let next_flat = next_l
+                    .to_vec::<i64>()
+                    .map_err(|e| CasError::Runtime(format!("next: {e}")))?;
+                let acc = acc_l
+                    .to_vec::<i32>()
+                    .map_err(|e| CasError::Runtime(format!("accepted: {e}")))?;
+                let maxb = maxb_l
+                    .to_vec::<i64>()
+                    .map_err(|e| CasError::Runtime(format!("max_ballot: {e}")))?;
+                let next = next_flat.chunks_exact(2).map(|c| [c[0], c[1]]).collect();
+                Ok(StepOutput {
+                    next,
+                    accepted: acc.into_iter().map(|v| v != 0).collect(),
+                    max_ballot: maxb,
+                })
+            }
+        }
+    }
+}
+
+/// Thread-safe engine interface for the batching layer. The raw
+/// [`StepEngine`] is `!Send` (PJRT handles are `Rc`-based), so
+/// multi-threaded callers use [`ScalarEngine`] or [`ThreadedEngine`].
+pub trait Engine: Send + Sync {
+    /// See [`StepEngine::pick_shape`].
+    fn pick_shape(&self, acceptors: usize, batch: usize) -> Option<(usize, usize)>;
+    /// See [`StepEngine::step`].
+    fn step(&self, input: &StepInput) -> CasResult<StepOutput>;
+    /// True when backed by the PJRT artifact path.
+    fn is_pjrt(&self) -> bool {
+        false
+    }
+}
+
+/// Pure-Rust engine (always available, thread-safe, allocation-light).
+pub struct ScalarEngine;
+
+impl Engine for ScalarEngine {
+    fn pick_shape(&self, acceptors: usize, batch: usize) -> Option<(usize, usize)> {
+        Some((acceptors, batch))
+    }
+    fn step(&self, input: &StepInput) -> CasResult<StepOutput> {
+        Ok(scalar_step(input))
+    }
+}
+
+type EngineJob = (StepInput, std::sync::mpsc::Sender<CasResult<StepOutput>>);
+
+/// A [`StepEngine`] hosted on its own worker thread: PJRT state never
+/// crosses threads, callers see a `Send + Sync` handle.
+pub struct ThreadedEngine {
+    tx: std::sync::Mutex<std::sync::mpsc::Sender<EngineJob>>,
+    shapes: Vec<(usize, usize)>,
+    pjrt: bool,
+}
+
+impl ThreadedEngine {
+    /// Spawns the worker (builds [`StepEngine::auto`] inside it).
+    pub fn spawn() -> Self {
+        let (tx, rx) = std::sync::mpsc::channel::<EngineJob>();
+        let (meta_tx, meta_rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let engine = StepEngine::auto();
+            let shapes: Vec<(usize, usize)> = match &engine.backend {
+                Backend::Pjrt(rt) => rt.variants().iter().map(|v| (v.a, v.b)).collect(),
+                Backend::Scalar => Vec::new(),
+            };
+            let _ = meta_tx.send((engine.is_pjrt(), shapes));
+            while let Ok((input, reply)) = rx.recv() {
+                let _ = reply.send(engine.step(&input));
+            }
+        });
+        let (pjrt, shapes) = meta_rx.recv().unwrap_or((false, Vec::new()));
+        ThreadedEngine { tx: std::sync::Mutex::new(tx), shapes, pjrt }
+    }
+}
+
+impl Engine for ThreadedEngine {
+    fn pick_shape(&self, acceptors: usize, batch: usize) -> Option<(usize, usize)> {
+        if !self.pjrt {
+            return Some((acceptors, batch));
+        }
+        self.shapes
+            .iter()
+            .filter(|(a, b)| *a == acceptors && *b >= batch)
+            .min_by_key(|(_, b)| *b)
+            .copied()
+    }
+    fn step(&self, input: &StepInput) -> CasResult<StepOutput> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send((input.clone(), reply_tx))
+            .map_err(|_| CasError::Runtime("engine worker died".into()))?;
+        reply_rx.recv().map_err(|_| CasError::Runtime("engine worker died".into()))?
+    }
+    fn is_pjrt(&self) -> bool {
+        self.pjrt
+    }
+}
+
+/// The default engine: PJRT (threaded) when artifacts exist, scalar
+/// otherwise.
+pub fn auto_engine() -> std::sync::Arc<dyn Engine> {
+    if Runtime::artifacts_available() {
+        std::sync::Arc::new(ThreadedEngine::spawn())
+    } else {
+        std::sync::Arc::new(ScalarEngine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_input(rng: &mut Rng, a: usize, b: usize) -> StepInput {
+        let mut input = StepInput::empty(a, b);
+        for col in 0..b {
+            for row in 0..a {
+                if rng.gen_bool(0.8) {
+                    let ballot = rng.gen_range(1000) as i64 - 1;
+                    let ver = rng.gen_range(10) as i64 - 2;
+                    let num = rng.gen_range(100) as i64 - 50;
+                    input.set_reply(row, col, ballot, [ver, num]);
+                }
+            }
+            let op = rng.gen_range(6) as i32;
+            let expect = rng.gen_range(8) as i64 - 2;
+            let val = rng.gen_range(100) as i64 - 50;
+            input.set_op(col, op, [expect, val]);
+        }
+        input
+    }
+
+    #[test]
+    fn scalar_step_basics() {
+        let mut input = StepInput::empty(3, 4);
+        // key 0: all absent + INIT(7) → (0, 7) accepted.
+        input.set_op(0, opcode::INIT, [0, 7]);
+        // key 1: state (2, 10) at ballot 5, ADD(3) → (3, 13).
+        input.set_reply(0, 1, 5, [2, 10]);
+        input.set_op(1, opcode::ADD, [0, 3]);
+        // key 2: CAS miss.
+        input.set_reply(1, 2, 9, [4, 1]);
+        input.set_op(2, opcode::CAS, [3, 99]);
+        // key 3: two replies; higher ballot wins; READ.
+        input.set_reply(0, 3, 10, [0, 111]);
+        input.set_reply(2, 3, 20, [1, 222]);
+        input.set_op(3, opcode::READ, [0, 0]);
+
+        let out = scalar_step(&input);
+        assert_eq!(out.next[0], [0, 7]);
+        assert!(out.accepted[0]);
+        assert_eq!(out.next[1], [3, 13]);
+        assert_eq!(out.next[2], [4, 1]);
+        assert!(!out.accepted[2]);
+        assert_eq!(out.next[3], [1, 222]);
+        assert_eq!(out.max_ballot[3], 20);
+    }
+
+    #[test]
+    fn scalar_matches_changefn_apply() {
+        // The scalar engine and ChangeFn::apply are the same function on
+        // the packed domain.
+        use crate::change::ChangeFn;
+        use crate::state::Val;
+        let mut rng = Rng::new(42);
+        for _ in 0..500 {
+            let cur = match rng.gen_range(3) {
+                0 => Val::Empty,
+                1 => Val::Tombstone,
+                _ => Val::Num {
+                    ver: rng.gen_range(10) as i64,
+                    num: rng.gen_range(200) as i64 - 100,
+                },
+            };
+            let change = match rng.gen_range(6) {
+                0 => ChangeFn::Read,
+                1 => ChangeFn::InitIfEmpty(rng.gen_range(50) as i64),
+                2 => ChangeFn::Cas {
+                    expect: rng.gen_range(10) as i64,
+                    val: rng.gen_range(50) as i64,
+                },
+                3 => ChangeFn::Set(rng.gen_range(50) as i64),
+                4 => ChangeFn::Add(rng.gen_range(50) as i64 - 25),
+                _ => ChangeFn::Tombstone,
+            };
+            let (op, args) = change.opcode().unwrap();
+            let mut input = StepInput::empty(1, 1);
+            input.set_reply(0, 0, 1, cur.pack().unwrap());
+            input.set_op(0, op, args);
+            let out = scalar_step(&input);
+            let applied = change.apply(&cur);
+            assert_eq!(
+                Val::unpack(out.next[0]),
+                applied.next,
+                "divergence on {change:?} over {cur:?}"
+            );
+            assert_eq!(out.accepted[0], applied.accepted);
+        }
+    }
+
+    #[test]
+    fn pjrt_matches_scalar_differential() {
+        if !Runtime::artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = StepEngine::auto();
+        assert!(engine.is_pjrt());
+        let mut rng = Rng::new(7);
+        for (a, b) in [(3usize, 64usize), (5, 256)] {
+            if engine.pick_shape(a, b) != Some((a, b)) {
+                continue; // variant not exported
+            }
+            for round in 0..5 {
+                let input = random_input(&mut rng, a, b);
+                let pjrt = engine.step(&input).unwrap();
+                let scalar = scalar_step(&input);
+                assert_eq!(pjrt, scalar, "divergence at a={a} b={b} round={round}");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_slots_stay_inert() {
+        let input = StepInput::empty(3, 8);
+        let out = scalar_step(&input);
+        for col in 0..8 {
+            assert_eq!(out.next[col], [-1, 0], "padding produced a value");
+            assert!(out.accepted[col]);
+            assert_eq!(out.max_ballot[col], -1);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! PJRT runtime: loads and executes the AOT-compiled data plane.
+//!
+//! `python/compile/aot.py` lowers the L2 `caspaxos_step` (quorum value
+//! selection ∘ change application, built from the L1 Pallas kernels) to
+//! HLO text, one variant per (A acceptors, B batch) shape. This module
+//! loads those artifacts through the `xla` crate (PJRT C API), compiles
+//! them once at startup, and exposes a typed [`StepEngine::step`] the
+//! batching layer calls on the hot path. Python never runs at request
+//! time.
+//!
+//! [`scalar_step`] is the pure-Rust reference implementation of the same
+//! function — the differential-test oracle and the fallback when no
+//! artifacts are built.
+
+pub mod engine;
+
+pub use engine::{auto_engine, scalar_step, Engine, PackedState, ScalarEngine, StepEngine, StepInput, StepOutput, ThreadedEngine};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::ballot::Ballot;
+use crate::error::{CasError, CasResult};
+
+/// Packs a ballot into the kernel's i64 encoding: `counter << 20 |
+/// proposer`, so integer order equals ballot order for proposer ids
+/// < 2^20 and counters < 2^43. `Ballot::ZERO` packs to 0; "no reply" is
+/// represented as -1 (smaller than every real ballot).
+pub fn pack_ballot(b: Ballot) -> i64 {
+    ((b.counter as i64) << 20) | (b.proposer as i64 & 0xF_FFFF)
+}
+
+/// Sentinel for "no reply from this acceptor".
+pub const BALLOT_ABSENT: i64 = -1;
+
+/// One compiled artifact variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    /// Artifact name (e.g. `caspaxos_step_a3_b64`).
+    pub name: String,
+    /// Number of acceptor rows.
+    pub a: usize,
+    /// Key-batch width.
+    pub b: usize,
+    /// HLO text path.
+    pub path: PathBuf,
+}
+
+/// Parses `artifacts/manifest.txt` (written by aot.py).
+pub fn read_manifest(dir: &Path) -> CasResult<Vec<Variant>> {
+    let manifest = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&manifest)
+        .map_err(|e| CasError::Runtime(format!("read {manifest:?}: {e}")))?;
+    let mut variants = Vec::new();
+    for line in text.lines() {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 4 {
+            return Err(CasError::Runtime(format!("bad manifest line: {line:?}")));
+        }
+        variants.push(Variant {
+            name: parts[0].to_string(),
+            a: parts[1].parse().map_err(|_| CasError::Runtime("bad A".into()))?,
+            b: parts[2].parse().map_err(|_| CasError::Runtime("bad B".into()))?,
+            path: dir.join(parts[3]),
+        });
+    }
+    Ok(variants)
+}
+
+/// The PJRT runtime: one CPU client, one compiled executable per variant.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    variants: Vec<Variant>,
+}
+
+impl Runtime {
+    /// Loads every artifact in `dir` (must contain `manifest.txt`).
+    pub fn load(dir: impl AsRef<Path>) -> CasResult<Self> {
+        let dir = dir.as_ref();
+        let variants = read_manifest(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| CasError::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut executables = HashMap::new();
+        for v in &variants {
+            let proto = xla::HloModuleProto::from_text_file(&v.path)
+                .map_err(|e| CasError::Runtime(format!("parse {:?}: {e}", v.path)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| CasError::Runtime(format!("compile {}: {e}", v.name)))?;
+            executables.insert((v.a, v.b), exe);
+        }
+        Ok(Runtime { client, executables, variants })
+    }
+
+    /// The default artifact directory: `$CARGO_MANIFEST_DIR/artifacts`
+    /// at build time, `./artifacts` otherwise.
+    pub fn default_dir() -> PathBuf {
+        let candidates =
+            [concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), "artifacts", "../artifacts"];
+        for c in candidates {
+            if Path::new(c).join("manifest.txt").exists() {
+                return PathBuf::from(c);
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Loads from [`Runtime::default_dir`].
+    pub fn load_default() -> CasResult<Self> {
+        Self::load(Self::default_dir())
+    }
+
+    /// True if artifacts exist at the default location (tests skip the
+    /// PJRT path otherwise rather than failing `cargo test` before
+    /// `make artifacts` ran).
+    pub fn artifacts_available() -> bool {
+        Self::default_dir().join("manifest.txt").exists()
+    }
+
+    /// Available (A, B) variants.
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    /// Picks the smallest variant with `a == acceptors` and `b >= batch`.
+    pub fn pick_variant(&self, acceptors: usize, batch: usize) -> Option<(usize, usize)> {
+        self.variants
+            .iter()
+            .filter(|v| v.a == acceptors && v.b >= batch)
+            .min_by_key(|v| v.b)
+            .map(|v| (v.a, v.b))
+    }
+
+    /// Executes a compiled variant; `inputs` are the four literals
+    /// (ballots, states, ops, args) with exactly the variant's shapes.
+    pub(crate) fn execute(
+        &self,
+        key: (usize, usize),
+        inputs: &[xla::Literal],
+    ) -> CasResult<(xla::Literal, xla::Literal, xla::Literal)> {
+        let exe = self
+            .executables
+            .get(&key)
+            .ok_or_else(|| CasError::Runtime(format!("no variant for {key:?}")))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| CasError::Runtime(format!("execute: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| CasError::Runtime(format!("to_literal: {e}")))?;
+        out.to_tuple3().map_err(|e| CasError::Runtime(format!("tuple3: {e}")))
+    }
+
+    /// Device/platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ballot_packing_preserves_order() {
+        let mut packed: Vec<i64> = Vec::new();
+        let mut ballots: Vec<Ballot> = Vec::new();
+        for counter in [0u64, 1, 2, 100, 1 << 30] {
+            for proposer in [0u64, 1, 7, 1000] {
+                ballots.push(Ballot::new(counter, proposer));
+            }
+        }
+        ballots.sort();
+        for b in &ballots {
+            packed.push(pack_ballot(*b));
+        }
+        let mut sorted = packed.clone();
+        sorted.sort_unstable();
+        assert_eq!(packed, sorted, "packing must preserve ballot order");
+        assert_eq!(pack_ballot(Ballot::ZERO), 0);
+        assert!(BALLOT_ABSENT < pack_ballot(Ballot::ZERO));
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = crate::testkit::TempDir::new("manifest").unwrap();
+        std::fs::write(
+            dir.file("manifest.txt"),
+            "caspaxos_step_a3_b64 3 64 caspaxos_step_a3_b64.hlo.txt\n\
+             caspaxos_step_a5_b256 5 256 caspaxos_step_a5_b256.hlo.txt\n",
+        )
+        .unwrap();
+        let vs = read_manifest(dir.path()).unwrap();
+        assert_eq!(vs.len(), 2);
+        assert_eq!((vs[0].a, vs[0].b), (3, 64));
+        assert_eq!(vs[1].name, "caspaxos_step_a5_b256");
+        std::fs::write(dir.file("manifest.txt"), "garbage line\n").unwrap();
+        assert!(read_manifest(dir.path()).is_err());
+    }
+
+    #[test]
+    fn runtime_loads_and_runs_artifacts() {
+        if !Runtime::artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::load_default().unwrap();
+        assert!(!rt.variants().is_empty());
+        let (a, b) = rt.pick_variant(3, 10).expect("a 3-acceptor variant");
+        assert_eq!(a, 3);
+        assert!(b >= 10);
+    }
+}

@@ -1,0 +1,534 @@
+//! The Gryadka-equivalent node: acceptor service + client-facing
+//! proposer service on one process.
+//!
+//! A deployment runs one `caspaxos node` per machine (2F+1 of them).
+//! Each node serves:
+//!
+//! * the **acceptor protocol** (proposer→acceptor [`Request`]s) on the
+//!   acceptor port — consumed by every node's proposers;
+//! * the **client protocol** ([`ClientReq`]/[`ClientResp`], same framed
+//!   codec) on the client port — consumed by applications. Any node
+//!   serves any client: there is no leader (§3.2, §3.3).
+//!
+//! Client batches route through the PJRT data plane ([`BatchProposer`])
+//! when AOT artifacts are available, scalar fallback otherwise.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::acceptor::{Acceptor, FileStorage, MemStorage};
+use crate::batch::BatchProposer;
+use crate::change::ChangeFn;
+use crate::codec::{decode_seq, encode_seq, Codec, CodecError};
+use crate::error::{CasError, CasResult};
+use crate::gc::GcProcess;
+use crate::msg::Key;
+use crate::proposer::Proposer;
+use crate::quorum::ClusterConfig;
+use crate::runtime::auto_engine;
+use crate::state::Val;
+use crate::transport::tcp::{read_frame, serve_acceptor, write_frame, TcpTransport};
+
+/// Client-facing request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientReq {
+    /// Apply one change function to one register.
+    Change {
+        /// Register key.
+        key: Key,
+        /// The change.
+        change: ChangeFn,
+    },
+    /// Apply a batch of changes to distinct registers (PJRT data plane).
+    Batch {
+        /// (key, change) pairs; keys must be distinct and changes
+        /// kernel-expressible.
+        ops: Vec<(Key, ChangeFn)>,
+    },
+    /// Delete a key (tombstone now, GC later).
+    Delete {
+        /// Register key.
+        key: Key,
+    },
+    /// Run the deletion GC queue once.
+    Collect,
+    /// Liveness/metrics probe.
+    Status,
+    /// Admin (node→node): GC step 2b on this node's proposer (§3.1).
+    GcSync {
+        /// Register being collected.
+        key: Key,
+        /// Tombstone ballot counter to fast-forward past.
+        min_counter: u64,
+    },
+}
+
+impl Codec for ClientReq {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ClientReq::Change { key, change } => {
+                out.push(0);
+                key.encode(out);
+                change.encode(out);
+            }
+            ClientReq::Batch { ops } => {
+                out.push(1);
+                encode_seq(ops, out);
+            }
+            ClientReq::Delete { key } => {
+                out.push(2);
+                key.encode(out);
+            }
+            ClientReq::Collect => out.push(3),
+            ClientReq::Status => out.push(4),
+            ClientReq::GcSync { key, min_counter } => {
+                out.push(5);
+                key.encode(out);
+                min_counter.encode(out);
+            }
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(match u8::decode(input)? {
+            0 => ClientReq::Change { key: Key::decode(input)?, change: ChangeFn::decode(input)? },
+            1 => ClientReq::Batch { ops: decode_seq(input)? },
+            2 => ClientReq::Delete { key: Key::decode(input)? },
+            3 => ClientReq::Collect,
+            4 => ClientReq::Status,
+            5 => ClientReq::GcSync { key: Key::decode(input)?, min_counter: u64::decode(input)? },
+            _ => return Err(CodecError::Invalid("ClientReq tag")),
+        })
+    }
+}
+
+/// Client-facing response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientResp {
+    /// The resulting state of a change.
+    Val(Val),
+    /// Per-op results of a batch (error text for failed slots).
+    Batch(Vec<Result<Val, String>>),
+    /// Status string (metrics snapshot).
+    Status(String),
+    /// GcSync acknowledgement: (proposer id, new age).
+    Synced {
+        /// The synced proposer's id.
+        proposer_id: u64,
+        /// Its age after the bump.
+        age: u64,
+    },
+    /// Request failed.
+    Err(String),
+}
+
+impl Codec for ClientResp {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ClientResp::Val(v) => {
+                out.push(0);
+                v.encode(out);
+            }
+            ClientResp::Batch(items) => {
+                out.push(1);
+                items.len().encode(out);
+                for item in items {
+                    match item {
+                        Ok(v) => {
+                            out.push(0);
+                            v.encode(out);
+                        }
+                        Err(e) => {
+                            out.push(1);
+                            e.encode(out);
+                        }
+                    }
+                }
+            }
+            ClientResp::Status(s) => {
+                out.push(2);
+                s.encode(out);
+            }
+            ClientResp::Err(e) => {
+                out.push(3);
+                e.encode(out);
+            }
+            ClientResp::Synced { proposer_id, age } => {
+                out.push(4);
+                proposer_id.encode(out);
+                age.encode(out);
+            }
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(match u8::decode(input)? {
+            0 => ClientResp::Val(Val::decode(input)?),
+            1 => {
+                let n = usize::decode(input)?;
+                if n > crate::codec::MAX_LEN {
+                    return Err(CodecError::Invalid("length bomb"));
+                }
+                let mut items = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    items.push(match u8::decode(input)? {
+                        0 => Ok(Val::decode(input)?),
+                        1 => Err(String::decode(input)?),
+                        _ => return Err(CodecError::Invalid("result tag")),
+                    });
+                }
+                ClientResp::Batch(items)
+            }
+            2 => ClientResp::Status(String::decode(input)?),
+            3 => ClientResp::Err(String::decode(input)?),
+            4 => ClientResp::Synced { proposer_id: u64::decode(input)?, age: u64::decode(input)? },
+            _ => return Err(CodecError::Invalid("ClientResp tag")),
+        })
+    }
+}
+
+/// A peer node's proposer, reachable over its client/admin port.
+/// Implements [`crate::gc::ProposerAdmin`] so a node's GC can run step
+/// 2b on EVERY proposer in the deployment — without this, a peer's
+/// 1-RTT cache could resurrect a deleted register (the lost-delete
+/// anomaly; reproduced by `full_node_cluster_serves_clients` before the
+/// remote sync existed).
+pub struct RemoteProposer {
+    /// The peer's proposer id.
+    pub proposer_id: u64,
+    /// The peer's client/admin address.
+    pub addr: String,
+}
+
+impl crate::gc::ProposerAdmin for RemoteProposer {
+    fn id(&self) -> u64 {
+        self.proposer_id
+    }
+    fn gc_sync(&self, key: &Key, min_counter: u64) -> CasResult<u64> {
+        let mut client = Client::connect(&self.addr)?;
+        match client.call(&ClientReq::GcSync { key: key.clone(), min_counter })? {
+            ClientResp::Synced { age, .. } => Ok(age),
+            other => Err(CasError::Transport(format!("GcSync: unexpected {other:?}"))),
+        }
+    }
+}
+
+/// Options for one node process.
+#[derive(Debug, Clone)]
+pub struct NodeOpts {
+    /// This node's id (also its acceptor id and proposer id).
+    pub id: u64,
+    /// Acceptor listen address.
+    pub acceptor_addr: String,
+    /// Client listen address.
+    pub client_addr: String,
+    /// Acceptor id → acceptor address for the whole cluster.
+    pub peers: HashMap<u64, String>,
+    /// Peer node id → client/admin address (for cross-node GC sync).
+    /// May omit this node; single-node setups may leave it empty.
+    pub client_peers: HashMap<u64, String>,
+    /// Protocol cluster config.
+    pub cluster: ClusterConfig,
+    /// Durable storage directory (`None` = in-memory).
+    pub data_dir: Option<String>,
+}
+
+/// A running node (handles held for inspection; threads detached).
+pub struct Node {
+    /// Bound acceptor address.
+    pub acceptor_addr: std::net::SocketAddr,
+    /// Bound client address.
+    pub client_addr: std::net::SocketAddr,
+    /// The node's proposer (shared with the GC).
+    pub proposer: Arc<Proposer>,
+    /// The node's GC process.
+    pub gc: Arc<GcProcess>,
+}
+
+/// Starts acceptor + client services; returns the bound addresses.
+pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
+    // ---- acceptor service ----
+    let acceptor_listener = TcpListener::bind(&opts.acceptor_addr)
+        .map_err(|e| CasError::Transport(format!("bind {}: {e}", opts.acceptor_addr)))?;
+    let acceptor_addr =
+        acceptor_listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
+    match &opts.data_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| CasError::Transport(format!("mkdir {dir}: {e}")))?;
+            let store = FileStorage::open(format!("{dir}/acceptor-{}.log", opts.id))?;
+            let acc = Acceptor::with_storage(opts.id, store);
+            std::thread::spawn(move || {
+                let _ = serve_acceptor(acceptor_listener, acc);
+            });
+        }
+        None => {
+            let acc = Acceptor::with_storage(opts.id, MemStorage::new());
+            std::thread::spawn(move || {
+                let _ = serve_acceptor(acceptor_listener, acc);
+            });
+        }
+    }
+
+    // ---- proposer + batch + gc over the peer transport ----
+    let mut peers = opts.peers.clone();
+    peers.insert(opts.id, acceptor_addr.to_string());
+    let transport = Arc::new(TcpTransport::new(peers));
+    let proposer = Arc::new(Proposer::new(opts.id, opts.cluster.clone(), transport.clone()));
+    let engine = auto_engine();
+    let batch = Arc::new(BatchProposer::new(
+        opts.id + 10_000,
+        opts.cluster.clone(),
+        transport.clone(),
+        engine,
+    ));
+    // Distinct GC-proposer id per node (two GCs must never share
+    // ballot identity).
+    let gc = Arc::new(GcProcess::with_id(transport, vec![proposer.clone()], 900_000 + opts.id));
+    for (&peer_id, addr) in &opts.client_peers {
+        if peer_id != opts.id {
+            gc.add_admin(Box::new(RemoteProposer { proposer_id: peer_id, addr: addr.clone() }));
+        }
+    }
+
+    // ---- client service ----
+    let client_listener = TcpListener::bind(&opts.client_addr)
+        .map_err(|e| CasError::Transport(format!("bind {}: {e}", opts.client_addr)))?;
+    let client_addr =
+        client_listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
+    {
+        let proposer = Arc::clone(&proposer);
+        let batch = Arc::clone(&batch);
+        let gc = Arc::clone(&gc);
+        let cluster = opts.cluster.clone();
+        std::thread::spawn(move || loop {
+            let Ok((stream, _)) = client_listener.accept() else { break };
+            let proposer = Arc::clone(&proposer);
+            let batch = Arc::clone(&batch);
+            let gc = Arc::clone(&gc);
+            let cluster = cluster.clone();
+            std::thread::spawn(move || serve_client(stream, proposer, batch, gc, cluster));
+        });
+    }
+    Ok(Node { acceptor_addr, client_addr, proposer, gc })
+}
+
+fn serve_client(
+    mut stream: TcpStream,
+    proposer: Arc<Proposer>,
+    batch: Arc<BatchProposer>,
+    gc: Arc<GcProcess>,
+    cluster: ClusterConfig,
+) {
+    stream.set_nodelay(true).ok();
+    loop {
+        let req: Option<ClientReq> = match read_frame(&mut stream) {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let Some(req) = req else { break };
+        let resp = handle_client(&req, &proposer, &batch, &gc, &cluster);
+        if write_frame(&mut stream, &resp).is_err() {
+            break;
+        }
+    }
+}
+
+fn handle_client(
+    req: &ClientReq,
+    proposer: &Proposer,
+    batch: &BatchProposer,
+    gc: &GcProcess,
+    cluster: &ClusterConfig,
+) -> ClientResp {
+    match req {
+        ClientReq::Change { key, change } => {
+            match proposer.change_detailed(key.clone(), change.clone()) {
+                Ok(out) if out.accepted => ClientResp::Val(out.state),
+                Ok(out) => ClientResp::Err(format!("rejected; current state is {}", out.state)),
+                Err(e) => ClientResp::Err(e.to_string()),
+            }
+        }
+        ClientReq::Batch { ops } => match batch.execute(ops) {
+            Ok(results) => ClientResp::Batch(
+                results.into_iter().map(|r| r.map_err(|e| e.to_string())).collect(),
+            ),
+            Err(e) => ClientResp::Err(e.to_string()),
+        },
+        ClientReq::Delete { key } => match proposer.delete(key.clone()) {
+            Ok(_) => {
+                gc.schedule(key.clone());
+                ClientResp::Val(Val::Tombstone)
+            }
+            Err(e) => ClientResp::Err(e.to_string()),
+        },
+        ClientReq::Collect => {
+            let (ok, superseded, failed) = gc.collect_all(cluster);
+            ClientResp::Status(format!("collected={ok} superseded={superseded} failed={failed}"))
+        }
+        ClientReq::GcSync { key, min_counter } => {
+            let age = proposer.gc_sync(key, *min_counter);
+            ClientResp::Synced { proposer_id: proposer.id(), age }
+        }
+        ClientReq::Status => {
+            let [rounds, commits, conflicts, retries, cache_hits, failures] =
+                proposer.metrics.snapshot();
+            ClientResp::Status(format!(
+                "id={} rounds={rounds} commits={commits} conflicts={conflicts} \
+                 retries={retries} cache_hits={cache_hits} failures={failures} gc_pending={}",
+                proposer.id(),
+                gc.pending()
+            ))
+        }
+    }
+}
+
+/// A minimal blocking client for the client protocol.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connects to a node's client port.
+    pub fn connect(addr: &str) -> CasResult<Self> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| CasError::Transport(format!("{addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream })
+    }
+
+    /// Sends one request, awaits one response.
+    pub fn call(&mut self, req: &ClientReq) -> CasResult<ClientResp> {
+        write_frame(&mut self.stream, req)?;
+        read_frame(&mut self.stream)?
+            .ok_or_else(|| CasError::Transport("connection closed".into()))
+    }
+
+    /// Convenience: apply a change.
+    pub fn change(&mut self, key: &str, change: ChangeFn) -> CasResult<Val> {
+        match self.call(&ClientReq::Change { key: key.into(), change })? {
+            ClientResp::Val(v) => Ok(v),
+            ClientResp::Err(e) => Err(CasError::Transport(e)),
+            other => Err(CasError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Convenience: linearizable read.
+    pub fn get(&mut self, key: &str) -> CasResult<Val> {
+        self.change(key, ChangeFn::Read)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::TempDir;
+
+    fn launch_cluster(n: u64, data: Option<&TempDir>) -> Vec<Node> {
+        // Two-phase bind: reserve acceptor AND client ports first so
+        // every node knows every peer address before starting (a bind
+        // learns a free port, releases it, the node re-binds — benign
+        // race in tests).
+        let reserve = || {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let peers: HashMap<u64, String> = (1..=n).map(|id| (id, reserve())).collect();
+        let client_peers: HashMap<u64, String> = (1..=n).map(|id| (id, reserve())).collect();
+        let cluster = ClusterConfig::majority(1, (1..=n).collect());
+        (1..=n)
+            .map(|id| {
+                start_node(NodeOpts {
+                    id,
+                    acceptor_addr: peers[&id].clone(),
+                    client_addr: client_peers[&id].clone(),
+                    peers: peers.clone(),
+                    client_peers: client_peers.clone(),
+                    cluster: cluster.clone(),
+                    data_dir: data.map(|d| d.path().to_str().unwrap().to_string()),
+                })
+                .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn client_req_resp_codec_roundtrip() {
+        let reqs = vec![
+            ClientReq::Change { key: "k".into(), change: ChangeFn::Add(1) },
+            ClientReq::Batch {
+                ops: vec![("a".into(), ChangeFn::Read), ("b".into(), ChangeFn::Set(2))],
+            },
+            ClientReq::Delete { key: "k".into() },
+            ClientReq::Collect,
+            ClientReq::Status,
+            ClientReq::GcSync { key: "k".into(), min_counter: 9 },
+        ];
+        for r in reqs {
+            assert_eq!(ClientReq::from_bytes(&r.to_bytes()).unwrap(), r);
+        }
+        let resps = vec![
+            ClientResp::Val(Val::Num { ver: 0, num: 1 }),
+            ClientResp::Batch(vec![Ok(Val::Empty), Err("boom".into())]),
+            ClientResp::Status("ok".into()),
+            ClientResp::Synced { proposer_id: 3, age: 2 },
+            ClientResp::Err("nope".into()),
+        ];
+        for r in resps {
+            assert_eq!(ClientResp::from_bytes(&r.to_bytes()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn full_node_cluster_serves_clients() {
+        let nodes = launch_cluster(3, None);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        assert_eq!(c.change("k", ChangeFn::Set(7)).unwrap().as_num(), Some(7));
+        // Any node serves any client — read through a different node.
+        let mut c2 = Client::connect(&nodes[2].client_addr.to_string()).unwrap();
+        assert_eq!(c2.get("k").unwrap().as_num(), Some(7));
+        // Batch through the data plane.
+        let resp = c
+            .call(&ClientReq::Batch {
+                ops: (0..8).map(|i| (format!("b{i}"), ChangeFn::Set(i as i64))).collect(),
+            })
+            .unwrap();
+        match resp {
+            ClientResp::Batch(items) => {
+                assert_eq!(items.len(), 8);
+                for (i, item) in items.iter().enumerate() {
+                    assert_eq!(item.as_ref().unwrap().as_num(), Some(i as i64));
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // Delete + collect.
+        c.call(&ClientReq::Delete { key: "k".into() }).unwrap();
+        match c.call(&ClientReq::Collect).unwrap() {
+            ClientResp::Status(s) => assert!(s.contains("collected=1"), "{s}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c2.get("k").unwrap(), Val::Empty, "erased after GC");
+        // Status works.
+        assert!(matches!(c.call(&ClientReq::Status).unwrap(), ClientResp::Status(_)));
+    }
+
+    #[test]
+    fn durable_node_survives_restart() {
+        let dir = TempDir::new("node").unwrap();
+        // Bind concrete ports, write, then re-launch on the same ports
+        // with the same data dir.
+        let nodes = launch_cluster(3, Some(&dir));
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        c.change("persist", ChangeFn::Set(42)).unwrap();
+        // The acceptor log files exist and are non-empty.
+        let mut found = 0;
+        for entry in std::fs::read_dir(dir.path()).unwrap() {
+            let entry = entry.unwrap();
+            if entry.file_name().to_string_lossy().starts_with("acceptor-") {
+                assert!(entry.metadata().unwrap().len() > 0);
+                found += 1;
+            }
+        }
+        assert_eq!(found, 3);
+    }
+}

@@ -1,0 +1,109 @@
+//! Network model: inter-region latency, jitter, loss.
+//!
+//! Latency is specified as a symmetric matrix of one-way delays between
+//! *regions* (µs). The paper's experiment (§3.2) gives RTTs between the
+//! three Azure regions; [`crate::wan`] turns those into the matrix used
+//! by the evaluation benches.
+
+use crate::rng::Rng;
+
+/// A deployment region (index into the latency matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Region(pub usize);
+
+/// Latency/loss model shared by all links of a [`super::World`].
+#[derive(Debug, Clone)]
+pub struct NetModel {
+    /// One-way delay in µs: `one_way[a][b]` (symmetric by construction
+    /// in the helpers, but asymmetric matrices are allowed).
+    pub one_way: Vec<Vec<u64>>,
+    /// Uniform ±jitter fraction applied to each delay (0.0 = none).
+    pub jitter: f64,
+    /// Independent per-message drop probability.
+    pub drop_prob: f64,
+}
+
+impl NetModel {
+    /// Single-region model with a fixed one-way delay (µs).
+    pub fn uniform(one_way_us: u64) -> Self {
+        NetModel { one_way: vec![vec![one_way_us]], jitter: 0.0, drop_prob: 0.0 }
+    }
+
+    /// Builds a model from a symmetric RTT matrix in **milliseconds**
+    /// (the paper reports RTTs; one-way = RTT/2). `rtt_ms[a][b]` must
+    /// equal `rtt_ms[b][a]`; the diagonal is the intra-region RTT.
+    pub fn from_rtt_ms(rtt_ms: &[Vec<f64>]) -> Self {
+        let n = rtt_ms.len();
+        let mut one_way = vec![vec![0u64; n]; n];
+        for a in 0..n {
+            assert_eq!(rtt_ms[a].len(), n, "square matrix required");
+            for b in 0..n {
+                one_way[a][b] = (rtt_ms[a][b] * 1000.0 / 2.0).round() as u64;
+            }
+        }
+        NetModel { one_way, jitter: 0.0, drop_prob: 0.0 }
+    }
+
+    /// One-way delay for a message from `a` to `b`, with jitter.
+    pub fn delay(&self, a: Region, b: Region, rng: &mut Rng) -> u64 {
+        let base = self.one_way[a.0.min(self.one_way.len() - 1)]
+            [b.0.min(self.one_way.len() - 1)];
+        if self.jitter == 0.0 {
+            return base.max(1);
+        }
+        let spread = (base as f64 * self.jitter).max(1.0);
+        let delta = (rng.gen_f64() * 2.0 - 1.0) * spread;
+        ((base as f64 + delta).max(1.0)) as u64
+    }
+
+    /// Number of regions in the matrix.
+    pub fn regions(&self) -> usize {
+        self.one_way.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_delay() {
+        let m = NetModel::uniform(500);
+        let mut rng = Rng::new(1);
+        assert_eq!(m.delay(Region(0), Region(0), &mut rng), 500);
+    }
+
+    #[test]
+    fn rtt_matrix_conversion() {
+        // Paper §3.2: WUS2-WCUS 21.8ms, WUS2-SEA 169ms, WCUS-SEA 189.2ms.
+        let rtt = vec![
+            vec![0.3, 21.8, 169.0],
+            vec![21.8, 0.3, 189.2],
+            vec![169.0, 189.2, 0.3],
+        ];
+        let m = NetModel::from_rtt_ms(&rtt);
+        let mut rng = Rng::new(1);
+        assert_eq!(m.delay(Region(0), Region(1), &mut rng), 10_900); // 21.8ms/2
+        assert_eq!(m.delay(Region(0), Region(2), &mut rng), 84_500); // 169/2
+        assert_eq!(m.delay(Region(1), Region(2), &mut rng), 94_600);
+        assert_eq!(m.regions(), 3);
+    }
+
+    #[test]
+    fn jitter_stays_near_base() {
+        let mut m = NetModel::uniform(10_000);
+        m.jitter = 0.1;
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let d = m.delay(Region(0), Region(0), &mut rng);
+            assert!((9_000..=11_000).contains(&d), "delay {d} outside ±10%");
+        }
+    }
+
+    #[test]
+    fn delay_never_zero() {
+        let m = NetModel::uniform(0);
+        let mut rng = Rng::new(3);
+        assert!(m.delay(Region(0), Region(0), &mut rng) >= 1);
+    }
+}

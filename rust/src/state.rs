@@ -1,0 +1,194 @@
+//! Register state (§2.2).
+//!
+//! A CASPaxos register holds an arbitrary value; this implementation
+//! supports a kernel-friendly versioned numeric payload (what the paper's
+//! §3.2 read-modify-write workload uses and what the L1 Pallas kernel
+//! operates on) and a general versioned byte payload, plus the two special
+//! states the protocol needs: *empty* (∅ — never written) and *tombstone*
+//! (deleted, pending GC — §3.1).
+
+use crate::codec::{Codec, CodecError};
+
+/// Op-code values shared with the L1 kernel (see
+/// `python/compile/kernels/apply_cas.py`). Kept in one place so the Rust
+/// scalar path and the Pallas kernel can be differential-tested.
+pub mod opcode {
+    /// `x -> x` (read / rescan / identity transition).
+    pub const READ: i32 = 0;
+    /// `x -> if x = ∅ then (0, arg) else x`.
+    pub const INIT: i32 = 1;
+    /// `x -> if x.ver = expected then (expected+1, arg) else x` (reject).
+    pub const CAS: i32 = 2;
+    /// `x -> (x.ver+1, arg)` unconditional overwrite.
+    pub const SET: i32 = 3;
+    /// `x -> (x.ver+1, x.num + arg)`; treats ∅ as 0 (the §3.2 increment).
+    pub const ADD: i32 = 4;
+    /// `x -> tombstone` (delete, §3.1).
+    pub const TOMBSTONE: i32 = 5;
+}
+
+/// The value stored in a register.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub enum Val {
+    /// ∅ — the register was never written.
+    #[default]
+    Empty,
+    /// Deleted; retained until the GC process removes the register.
+    Tombstone,
+    /// Versioned numeric payload (kernel fast path).
+    Num {
+        /// CAS version, bumped on every successful mutation.
+        ver: i64,
+        /// The number itself.
+        num: i64,
+    },
+    /// Versioned opaque payload (general path).
+    Bytes {
+        /// CAS version, bumped on every successful mutation.
+        ver: i64,
+        /// The payload.
+        data: Vec<u8>,
+    },
+}
+
+impl Val {
+    /// Numeric payload if this is a `Num`.
+    pub fn as_num(&self) -> Option<i64> {
+        match self {
+            Val::Num { num, .. } => Some(*num),
+            _ => None,
+        }
+    }
+
+    /// Byte payload if this is a `Bytes`.
+    pub fn as_bytes(&self) -> Option<&[u8]> {
+        match self {
+            Val::Bytes { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// CAS version, if the value carries one.
+    pub fn version(&self) -> Option<i64> {
+        match self {
+            Val::Num { ver, .. } | Val::Bytes { ver, .. } => Some(*ver),
+            _ => None,
+        }
+    }
+
+    /// True for ∅.
+    pub fn is_empty(&self) -> bool {
+        matches!(self, Val::Empty)
+    }
+
+    /// True for a tombstone.
+    pub fn is_tombstone(&self) -> bool {
+        matches!(self, Val::Tombstone)
+    }
+
+    /// Packs the value into the `[ver, num]` i64 pair used by the L1
+    /// kernel. `Empty` packs as `[-1, 0]`, `Tombstone` as `[-2, 0]`;
+    /// `Bytes` is not packable (returns `None`).
+    pub fn pack(&self) -> Option<[i64; 2]> {
+        match self {
+            Val::Empty => Some([-1, 0]),
+            Val::Tombstone => Some([-2, 0]),
+            Val::Num { ver, num } => Some([*ver, *num]),
+            Val::Bytes { .. } => None,
+        }
+    }
+
+    /// Inverse of [`Val::pack`].
+    pub fn unpack(packed: [i64; 2]) -> Val {
+        match packed[0] {
+            -1 => Val::Empty,
+            -2 => Val::Tombstone,
+            ver => Val::Num { ver, num: packed[1] },
+        }
+    }
+}
+
+impl Codec for Val {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Val::Empty => out.push(0),
+            Val::Tombstone => out.push(1),
+            Val::Num { ver, num } => {
+                out.push(2);
+                ver.encode(out);
+                num.encode(out);
+            }
+            Val::Bytes { ver, data } => {
+                out.push(3);
+                ver.encode(out);
+                data.encode(out);
+            }
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        match u8::decode(input)? {
+            0 => Ok(Val::Empty),
+            1 => Ok(Val::Tombstone),
+            2 => Ok(Val::Num { ver: i64::decode(input)?, num: i64::decode(input)? }),
+            3 => Ok(Val::Bytes { ver: i64::decode(input)?, data: Vec::<u8>::decode(input)? }),
+            _ => Err(CodecError::Invalid("Val tag")),
+        }
+    }
+}
+
+impl std::fmt::Display for Val {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Val::Empty => write!(f, "∅"),
+            Val::Tombstone => write!(f, "⊥"),
+            Val::Num { ver, num } => write!(f, "({ver}, {num})"),
+            Val::Bytes { ver, data } => write!(f, "({ver}, {} bytes)", data.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_roundtrip() {
+        for v in [
+            Val::Empty,
+            Val::Tombstone,
+            Val::Num { ver: 0, num: 0 },
+            Val::Num { ver: 42, num: -7 },
+            Val::Num { ver: i64::MAX - 2, num: i64::MIN },
+        ] {
+            assert_eq!(Val::unpack(v.pack().unwrap()), v);
+        }
+    }
+
+    #[test]
+    fn bytes_not_packable() {
+        assert!(Val::Bytes { ver: 1, data: vec![1] }.pack().is_none());
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        for v in [
+            Val::Empty,
+            Val::Tombstone,
+            Val::Num { ver: -1, num: i64::MIN },
+            Val::Bytes { ver: 3, data: vec![1, 2, 3] },
+        ] {
+            assert_eq!(Val::from_bytes(&v.to_bytes()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Val::Num { ver: 3, num: 9 };
+        assert_eq!(v.as_num(), Some(9));
+        assert_eq!(v.version(), Some(3));
+        assert!(!v.is_empty());
+        assert!(Val::Empty.is_empty());
+        assert!(Val::Tombstone.is_tombstone());
+        assert_eq!(Val::Empty.version(), None);
+    }
+}

@@ -1,0 +1,100 @@
+//! In-tree test support: temp directories and a seeded property-test
+//! harness (the offline dependency set has no proptest/tempfile; the
+//! substitution is documented in DESIGN.md).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::rng::Rng;
+
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A temporary directory removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Creates a unique directory under the system temp dir.
+    pub fn new(prefix: &str) -> std::io::Result<Self> {
+        let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!("caspaxos-{prefix}-{pid}-{nanos}-{seq}"));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A file path inside the directory.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Minimal property-test harness: runs `body` for `cases` deterministic
+/// seeds derived from `seed`. On failure the panic message names the
+/// failing case seed so it can be replayed exactly.
+pub fn forall_seeds(seed: u64, cases: u64, mut body: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case.wrapping_mul(0xD1B54A32D192ED03));
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed (case {case}, replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let kept;
+        {
+            let d = TempDir::new("t").unwrap();
+            kept = d.path().to_path_buf();
+            std::fs::write(d.file("x"), b"hi").unwrap();
+            assert!(kept.exists());
+        }
+        assert!(!kept.exists(), "dropped TempDir removes its tree");
+    }
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall_seeds(1, 10, |_| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn forall_reports_failing_seed() {
+        forall_seeds(2, 5, |rng| {
+            let v = rng.gen_range(1000);
+            assert!(v > 1000, "draw {v} can never exceed the bound");
+        });
+    }
+}

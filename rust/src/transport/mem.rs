@@ -1,0 +1,309 @@
+//! In-process transport: direct calls into locally hosted acceptors.
+//!
+//! The default substrate for unit/integration tests and for measuring
+//! pure protocol overhead (no serialization, no syscalls). Supports
+//! simple fault toggles (node down, one-shot drop counters); richer
+//! fault injection (delays, partitions, reordering) lives in
+//! [`crate::sim`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::acceptor::{Acceptor, MemStorage, Storage};
+use crate::error::{CasError, CasResult};
+use crate::msg::{Request, Response};
+
+use super::Transport;
+
+struct Node<S: Storage> {
+    /// Lock-striped acceptor: keyed requests route to a shard by key
+    /// hash, so ops on different keys don't contend (perf pass,
+    /// EXPERIMENTS.md §Perf). Registers are independent RSMs (§3), so
+    /// striping is semantics-preserving; the per-proposer min-age table
+    /// is broadcast to every shard. Default = 1 shard.
+    shards: Vec<Mutex<Acceptor<S>>>,
+    down: AtomicBool,
+    /// Drop the next N requests (returns transport error).
+    drop_next: AtomicU64,
+}
+
+impl<S: Storage> Node<S> {
+    fn shard_for(&self, key: &str) -> &Mutex<Acceptor<S>> {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() % self.shards.len() as u64) as usize]
+    }
+
+    fn handle(&self, req: &Request) -> Response {
+        match req {
+            Request::Prepare { key, .. }
+            | Request::Accept { key, .. }
+            | Request::Erase { key, .. }
+            | Request::Install { key, .. } => self.shard_for(key).lock().unwrap().handle(req),
+            Request::SetMinAge { .. } => {
+                // Age fences must hold on every shard.
+                let mut last = Response::Ok;
+                for shard in &self.shards {
+                    last = shard.lock().unwrap().handle(req);
+                }
+                last
+            }
+            Request::Dump { after, limit } => self.dump(after.as_ref(), *limit),
+            Request::Ping => Response::Ok,
+        }
+    }
+
+    /// Merged, ordered dump across shards.
+    fn dump(&self, after: Option<&String>, limit: usize) -> Response {
+        if self.shards.len() == 1 {
+            return self.shards[0]
+                .lock()
+                .unwrap()
+                .handle(&Request::Dump { after: after.cloned(), limit });
+        }
+        let mut entries: Vec<(String, crate::ballot::Ballot, crate::state::Val)> = Vec::new();
+        for shard in &self.shards {
+            if let Response::DumpPage { entries: page, .. } = shard
+                .lock()
+                .unwrap()
+                .handle(&Request::Dump { after: after.cloned(), limit })
+            {
+                entries.extend(page);
+            }
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let more = entries.len() > limit;
+        entries.truncate(limit);
+        Response::DumpPage { entries, more }
+    }
+}
+
+/// Transport over a set of in-process acceptors.
+pub struct MemTransport<S: Storage = MemStorage> {
+    // RwLock, not Mutex: the map is read on EVERY send (hot path) and
+    // written only by membership changes — a global Mutex here
+    // serialized all proposer threads (perf pass, EXPERIMENTS.md §Perf).
+    nodes: RwLock<HashMap<u64, Arc<Node<S>>>>,
+    /// Total requests served (all nodes).
+    requests: AtomicU64,
+}
+
+impl MemTransport<MemStorage> {
+    /// Builds `n` in-memory acceptors with ids `1..=n` (single shard).
+    pub fn new(n: usize) -> Self {
+        Self::from_acceptors((1..=n as u64).map(Acceptor::new).collect())
+    }
+
+    /// Builds `n` acceptors, each lock-striped into `shards` shards —
+    /// the multi-core configuration (different keys never contend on an
+    /// acceptor lock).
+    pub fn new_sharded(n: usize, shards: usize) -> Self {
+        assert!(shards >= 1);
+        let t = MemTransport { nodes: RwLock::new(HashMap::new()), requests: AtomicU64::new(0) };
+        for id in 1..=n as u64 {
+            t.nodes.write().unwrap().insert(
+                id,
+                Arc::new(Node {
+                    shards: (0..shards).map(|_| Mutex::new(Acceptor::new(id))).collect(),
+                    down: AtomicBool::new(false),
+                    drop_next: AtomicU64::new(0),
+                }),
+            );
+        }
+        t
+    }
+}
+
+impl<S: Storage> MemTransport<S> {
+    /// Builds a transport over pre-constructed acceptors.
+    pub fn from_acceptors(acceptors: Vec<Acceptor<S>>) -> Self {
+        let t = MemTransport { nodes: RwLock::new(HashMap::new()), requests: AtomicU64::new(0) };
+        for a in acceptors {
+            t.add_acceptor(a);
+        }
+        t
+    }
+
+    /// Adds a fresh acceptor (cluster expansion; single shard).
+    pub fn add_acceptor(&self, a: Acceptor<S>) {
+        self.nodes.write().unwrap().insert(
+            a.id,
+            Arc::new(Node {
+                shards: vec![Mutex::new(a)],
+                down: AtomicBool::new(false),
+                drop_next: AtomicU64::new(0),
+            }),
+        );
+    }
+
+    /// Removes an acceptor entirely (cluster shrinkage).
+    pub fn remove_acceptor(&self, id: u64) {
+        self.nodes.write().unwrap().remove(&id);
+    }
+
+    fn node(&self, id: u64) -> Option<Arc<Node<S>>> {
+        self.nodes.read().unwrap().get(&id).cloned()
+    }
+
+    /// Marks a node crashed (all requests fail) or recovered.
+    pub fn set_down(&self, id: u64, down: bool) {
+        if let Some(n) = self.node(id) {
+            n.down.store(down, Ordering::SeqCst);
+        }
+    }
+
+    /// Drops the next `n` requests to node `id`.
+    pub fn drop_next(&self, id: u64, n: u64) {
+        if let Some(node) = self.node(id) {
+            node.drop_next.store(n, Ordering::SeqCst);
+        }
+    }
+
+    /// Runs `f` against a node's acceptor (inspection in tests/GC).
+    /// With lock striping, `f` sees the shard that owns `register_count`
+    /// semantics only when shards == 1; sharded transports should use
+    /// [`MemTransport::register_count`] instead.
+    pub fn with_acceptor<R>(&self, id: u64, f: impl FnOnce(&mut Acceptor<S>) -> R) -> Option<R> {
+        let node = self.node(id)?;
+        assert_eq!(node.shards.len(), 1, "with_acceptor requires an unsharded node");
+        let result = f(&mut node.shards[0].lock().unwrap());
+        Some(result)
+    }
+
+    /// Total registers held by a node (summed across shards).
+    pub fn register_count(&self, id: u64) -> Option<usize> {
+        self.node(id)
+            .map(|n| n.shards.iter().map(|s| s.lock().unwrap().register_count()).sum())
+    }
+
+    /// Ids of all hosted acceptors, sorted.
+    pub fn acceptor_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.nodes.read().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Total requests served.
+    pub fn request_count(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+}
+
+impl<S: Storage> Transport for MemTransport<S> {
+    fn send(&self, to: u64, req: &Request) -> CasResult<Response> {
+        let node = self
+            .node(to)
+            .ok_or_else(|| CasError::Transport(format!("unknown acceptor {to}")))?;
+        if node.down.load(Ordering::SeqCst) {
+            return Err(CasError::Transport(format!("acceptor {to} is down")));
+        }
+        if node
+            .drop_next
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .is_ok()
+        {
+            return Err(CasError::Transport(format!("message to {to} dropped")));
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        Ok(node.handle(req))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ballot::Ballot;
+    use crate::msg::ProposerId;
+
+    #[test]
+    fn roundtrip() {
+        let t = MemTransport::new(3);
+        assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Ok);
+        assert!(t.send(9, &Request::Ping).is_err(), "unknown node");
+    }
+
+    #[test]
+    fn down_and_drop() {
+        let t = MemTransport::new(1);
+        t.set_down(1, true);
+        assert!(t.send(1, &Request::Ping).is_err());
+        t.set_down(1, false);
+        assert!(t.send(1, &Request::Ping).is_ok());
+        t.drop_next(1, 2);
+        assert!(t.send(1, &Request::Ping).is_err());
+        assert!(t.send(1, &Request::Ping).is_err());
+        assert!(t.send(1, &Request::Ping).is_ok(), "drop counter exhausted");
+    }
+
+    #[test]
+    fn acceptors_hold_state() {
+        let t = MemTransport::new(3);
+        let req = Request::Prepare {
+            key: "k".into(),
+            ballot: Ballot::new(1, 1),
+            from: ProposerId::new(1),
+        };
+        assert!(matches!(t.send(2, &req).unwrap(), Response::Promise { .. }));
+        assert!(matches!(t.send(2, &req).unwrap(), Response::Conflict { .. }));
+    }
+
+    #[test]
+    fn sharded_node_same_semantics() {
+        let t = MemTransport::new_sharded(3, 8);
+        let prep = |key: &str, c: u64| Request::Prepare {
+            key: key.into(),
+            ballot: Ballot::new(c, 1),
+            from: ProposerId::new(1),
+        };
+        assert!(matches!(t.send(1, &prep("a", 1)).unwrap(), Response::Promise { .. }));
+        assert!(matches!(t.send(1, &prep("a", 1)).unwrap(), Response::Conflict { .. }));
+        assert!(matches!(t.send(1, &prep("b", 1)).unwrap(), Response::Promise { .. }));
+        // Min-age fences hold regardless of which shard owns a key.
+        t.send(1, &Request::SetMinAge { proposer_id: 1, min_age: 5 }).unwrap();
+        for key in ["a", "b", "c", "d", "e"] {
+            assert!(matches!(
+                t.send(1, &prep(key, 9)).unwrap(),
+                Response::StaleAge { required: 5 }
+            ));
+        }
+    }
+
+    #[test]
+    fn sharded_dump_merges_ordered() {
+        let t = MemTransport::new_sharded(1, 4);
+        for key in ["d", "a", "c", "b"] {
+            t.send(
+                1,
+                &Request::Accept {
+                    key: key.into(),
+                    ballot: Ballot::new(1, 1),
+                    val: crate::state::Val::Num { ver: 0, num: 1 },
+                    from: ProposerId::new(1),
+                    promise_next: None,
+                },
+            )
+            .unwrap();
+        }
+        match t.send(1, &Request::Dump { after: None, limit: 3 }).unwrap() {
+            Response::DumpPage { entries, more } => {
+                let keys: Vec<&str> = entries.iter().map(|(k, _, _)| k.as_str()).collect();
+                assert_eq!(keys, vec!["a", "b", "c"]);
+                assert!(more);
+            }
+            r => panic!("{r:?}"),
+        }
+        assert_eq!(t.register_count(1), Some(4));
+    }
+
+    #[test]
+    fn add_remove_acceptor() {
+        let t = MemTransport::new(2);
+        t.add_acceptor(Acceptor::new(7));
+        assert_eq!(t.acceptor_ids(), vec![1, 2, 7]);
+        t.remove_acceptor(1);
+        assert_eq!(t.acceptor_ids(), vec![2, 7]);
+        assert!(t.send(1, &Request::Ping).is_err());
+    }
+}

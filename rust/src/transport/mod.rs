@@ -1,0 +1,84 @@
+//! Proposer→acceptor transport abstraction.
+//!
+//! [`Transport`] is the boundary between the protocol core and the world.
+//! The crate is synchronous by design (the offline toolchain carries no
+//! async runtime): proposers block on an mpsc channel while the transport
+//! delivers replies, which real-network implementations produce from
+//! per-acceptor worker threads so the fan-out still happens in parallel.
+//!
+//! Implementations:
+//!
+//! * [`mem::MemTransport`] — direct in-process calls (tests, quickstart,
+//!   protocol-overhead benchmarks);
+//! * [`tcp::TcpTransport`] — framed binary protocol over TCP with one
+//!   connection-owning worker thread per acceptor;
+//! * the discrete-event simulator ([`crate::sim`]) bypasses this trait
+//!   and drives [`crate::proposer::RoundCore`] under virtual time.
+
+pub mod mem;
+pub mod tcp;
+
+use std::sync::mpsc;
+
+use crate::error::CasResult;
+use crate::msg::{Request, Response};
+
+/// One acceptor reply (or transport failure) delivered to a proposer.
+#[derive(Debug)]
+pub struct Reply {
+    /// Phase token echoed from the fan-out call.
+    pub token: u32,
+    /// Acceptor the reply came from.
+    pub from: u64,
+    /// The response; `None` = transport failure / timeout.
+    pub resp: Option<Response>,
+}
+
+/// Sends requests to acceptors.
+pub trait Transport: Send + Sync {
+    /// Blocking single request/response (admin paths, GC, membership).
+    fn send(&self, to: u64, req: &Request) -> CasResult<Response>;
+
+    /// Fans a batch out and delivers exactly one [`Reply`] per message to
+    /// `tx` (possibly out of order). The default implementation calls
+    /// [`Transport::send`] sequentially — correct everywhere, and already
+    /// parallel-enough for in-process transports; network transports
+    /// override it with per-acceptor worker threads.
+    fn fan_out(&self, token: u32, msgs: Vec<(u64, Request)>, tx: &mpsc::Sender<Reply>) {
+        for (to, req) in msgs {
+            let resp = self.send(to, &req).ok();
+            // A dropped receiver means the round was abandoned; fine.
+            let _ = tx.send(Reply { token, from: to, resp });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::CasError;
+
+    struct FailingTransport;
+
+    impl Transport for FailingTransport {
+        fn send(&self, to: u64, _req: &Request) -> CasResult<Response> {
+            if to == 1 {
+                Ok(Response::Ok)
+            } else {
+                Err(CasError::Transport("nope".into()))
+            }
+        }
+    }
+
+    #[test]
+    fn default_fan_out_delivers_one_reply_per_message() {
+        let t = FailingTransport;
+        let (tx, rx) = mpsc::channel();
+        t.fan_out(7, vec![(1, Request::Ping), (2, Request::Ping), (3, Request::Ping)], &tx);
+        drop(tx);
+        let replies: Vec<Reply> = rx.into_iter().collect();
+        assert_eq!(replies.len(), 3);
+        assert!(replies.iter().all(|r| r.token == 7));
+        assert_eq!(replies.iter().filter(|r| r.resp.is_some()).count(), 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! TCP transport: length-prefixed binary frames over std TCP.
+//!
+//! Wire format: 4-byte little-endian length, then a [`Codec`]-encoded
+//! [`Request`] or [`Response`]. The client side runs one connection-owning
+//! worker thread per acceptor, so a proposer's fan-out to N acceptors
+//! proceeds in parallel even though the public API is blocking.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::acceptor::{Acceptor, Storage};
+use crate::codec::Codec;
+use crate::error::{CasError, CasResult};
+use crate::msg::{Request, Response};
+
+use super::{Reply, Transport};
+
+/// Maximum accepted frame size (16 MiB) — guards against corrupt peers.
+const MAX_FRAME: u32 = 1 << 24;
+
+/// Writes one length-prefixed frame.
+pub fn write_frame<T: Codec>(stream: &mut TcpStream, msg: &T) -> CasResult<()> {
+    let body = msg.to_bytes();
+    if body.len() as u64 > MAX_FRAME as u64 {
+        return Err(CasError::Transport(format!("frame too large: {}", body.len())));
+    }
+    let mut buf = Vec::with_capacity(4 + body.len());
+    buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&body);
+    stream.write_all(&buf).map_err(|e| CasError::Transport(e.to_string()))
+}
+
+/// Reads one length-prefixed frame. `Ok(None)` on clean EOF.
+pub fn read_frame<T: Codec>(stream: &mut TcpStream) -> CasResult<Option<T>> {
+    let mut len_buf = [0u8; 4];
+    match stream.read_exact(&mut len_buf) {
+        Ok(_) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(CasError::Transport(e.to_string())),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(CasError::Transport(format!("frame too large: {len}")));
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body).map_err(|e| CasError::Transport(e.to_string()))?;
+    let msg = T::from_bytes(&body).map_err(|e| CasError::Transport(e.to_string()))?;
+    Ok(Some(msg))
+}
+
+/// Serves one acceptor over TCP: accepts connections forever, one handler
+/// thread per connection. Call from a dedicated thread.
+pub fn serve_acceptor<S: Storage + 'static>(
+    listener: TcpListener,
+    acceptor: Acceptor<S>,
+) -> CasResult<()> {
+    let acceptor = Arc::new(Mutex::new(acceptor));
+    loop {
+        let (mut stream, _) =
+            listener.accept().map_err(|e| CasError::Transport(e.to_string()))?;
+        stream.set_nodelay(true).ok();
+        let acceptor = Arc::clone(&acceptor);
+        std::thread::spawn(move || loop {
+            let req: Option<Request> = match read_frame(&mut stream) {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let Some(req) = req else { break };
+            // Handle under the lock; handlers are pure CPU plus (for
+            // FileStorage) an fsync'd append.
+            let resp = acceptor.lock().unwrap().handle(&req);
+            if write_frame(&mut stream, &resp).is_err() {
+                break;
+            }
+        });
+    }
+}
+
+/// Spawns an acceptor server on `addr` (use port 0 for an ephemeral
+/// port); returns the bound address.
+pub fn spawn_acceptor<S: Storage + 'static>(
+    addr: &str,
+    acceptor: Acceptor<S>,
+) -> CasResult<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr).map_err(|e| CasError::Transport(e.to_string()))?;
+    let local = listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
+    std::thread::spawn(move || {
+        let _ = serve_acceptor(listener, acceptor);
+    });
+    Ok(local)
+}
+
+type Job = (u32, Request, mpsc::Sender<Reply>);
+
+/// Per-acceptor connection worker: owns the TcpStream, reconnects on
+/// failure, applies read timeouts.
+struct Worker {
+    tx: mpsc::Sender<Job>,
+}
+
+fn worker_loop(addr: String, id: u64, timeout: Duration, rx: mpsc::Receiver<Job>) {
+    let mut conn: Option<TcpStream> = None;
+    while let Ok((token, req, reply_tx)) = rx.recv() {
+        let mut attempt = || -> CasResult<Response> {
+            if conn.is_none() {
+                let stream = TcpStream::connect(&addr)
+                    .map_err(|e| CasError::Transport(format!("connect {addr}: {e}")))?;
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(timeout)).ok();
+                stream.set_write_timeout(Some(timeout)).ok();
+                conn = Some(stream);
+            }
+            let stream = conn.as_mut().unwrap();
+            write_frame(stream, &req)?;
+            read_frame::<Response>(stream)?
+                .ok_or_else(|| CasError::Transport("connection closed".into()))
+        };
+        let resp = match attempt() {
+            Ok(r) => Some(r),
+            Err(_) => {
+                conn = None; // drop the broken connection; reconnect next time
+                None
+            }
+        };
+        let _ = reply_tx.send(Reply { token, from: id, resp });
+    }
+}
+
+/// Client-side transport: one pooled worker (and connection) per acceptor.
+pub struct TcpTransport {
+    workers: Mutex<HashMap<u64, Worker>>,
+    addrs: Mutex<HashMap<u64, String>>,
+    timeout: Duration,
+}
+
+impl TcpTransport {
+    /// Creates a transport from an acceptor-id → address map.
+    pub fn new(addrs: HashMap<u64, String>) -> Self {
+        Self::with_timeout(addrs, Duration::from_secs(2))
+    }
+
+    /// Creates a transport with an explicit per-request timeout.
+    pub fn with_timeout(addrs: HashMap<u64, String>, timeout: Duration) -> Self {
+        TcpTransport { workers: Mutex::new(HashMap::new()), addrs: Mutex::new(addrs), timeout }
+    }
+
+    /// Adds/updates an acceptor address (membership change).
+    pub fn set_addr(&self, id: u64, addr: String) {
+        self.addrs.lock().unwrap().insert(id, addr);
+        self.workers.lock().unwrap().remove(&id); // rebuild on next use
+    }
+
+    fn dispatch(&self, to: u64, token: u32, req: Request, tx: &mpsc::Sender<Reply>) {
+        let mut workers = self.workers.lock().unwrap();
+        let worker = match workers.get(&to) {
+            Some(w) => w,
+            None => {
+                let Some(addr) = self.addrs.lock().unwrap().get(&to).cloned() else {
+                    let _ = tx.send(Reply { token, from: to, resp: None });
+                    return;
+                };
+                let (jtx, jrx) = mpsc::channel::<Job>();
+                let timeout = self.timeout;
+                std::thread::spawn(move || worker_loop(addr, to, timeout, jrx));
+                workers.entry(to).or_insert(Worker { tx: jtx })
+            }
+        };
+        if worker.tx.send((token, req, tx.clone())).is_err() {
+            // Worker died; report failure and forget it.
+            let _ = tx.send(Reply { token, from: to, resp: None });
+            workers.remove(&to);
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&self, to: u64, req: &Request) -> CasResult<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.dispatch(to, 0, req.clone(), &tx);
+        match rx.recv_timeout(self.timeout + Duration::from_millis(100)) {
+            Ok(Reply { resp: Some(r), .. }) => Ok(r),
+            Ok(Reply { resp: None, .. }) => {
+                Err(CasError::Transport(format!("request to {to} failed")))
+            }
+            Err(_) => Err(CasError::Transport(format!("request to {to} timed out"))),
+        }
+    }
+
+    fn fan_out(&self, token: u32, msgs: Vec<(u64, Request)>, tx: &mpsc::Sender<Reply>) {
+        for (to, req) in msgs {
+            self.dispatch(to, token, req, tx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proposer::Proposer;
+    use crate::quorum::ClusterConfig;
+
+    fn spawn_cluster(n: u64) -> HashMap<u64, String> {
+        let mut addrs = HashMap::new();
+        for id in 1..=n {
+            let addr = spawn_acceptor("127.0.0.1:0", Acceptor::new(id)).unwrap();
+            addrs.insert(id, addr.to_string());
+        }
+        addrs
+    }
+
+    #[test]
+    fn tcp_cluster_end_to_end() {
+        let addrs = spawn_cluster(3);
+        let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+        let t = Arc::new(TcpTransport::new(addrs));
+        let p = Proposer::new(1, cfg.clone(), t.clone());
+        assert_eq!(p.set("k", 42).unwrap().as_num(), Some(42));
+        let p2 = Proposer::new(2, cfg, t);
+        assert_eq!(p2.get("k").unwrap().as_num(), Some(42));
+    }
+
+    #[test]
+    fn tcp_survives_unreachable_acceptor() {
+        let mut addrs = spawn_cluster(2);
+        // Third acceptor address points nowhere (connection refused).
+        addrs.insert(3, "127.0.0.1:1".to_string());
+        let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+        let t = Arc::new(TcpTransport::with_timeout(addrs, Duration::from_millis(500)));
+        let p = Proposer::new(1, cfg, t);
+        assert_eq!(p.add("k", 7).unwrap().as_num(), Some(7));
+    }
+
+    #[test]
+    fn frame_roundtrip_large_payload() {
+        let addrs = spawn_cluster(1);
+        let t = TcpTransport::new(addrs);
+        let big = Request::Accept {
+            key: "k".into(),
+            ballot: crate::ballot::Ballot::new(1, 1),
+            val: crate::state::Val::Bytes { ver: 0, data: vec![7u8; 100_000] },
+            from: crate::msg::ProposerId::new(1),
+            promise_next: None,
+        };
+        assert_eq!(t.send(1, &big).unwrap(), Response::Accepted);
+    }
+
+    #[test]
+    fn ping_all_nodes() {
+        let addrs = spawn_cluster(3);
+        let t = TcpTransport::new(addrs);
+        for id in 1..=3 {
+            assert_eq!(t.send(id, &Request::Ping).unwrap(), Response::Ok);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! The paper's WAN profile (§3.2).
+//!
+//! Gryadka/Etcd/MongoDB were measured on three Azure DS4_V2 nodes in
+//! "West US 2", "West Central US" and "Southeast Asia". The paper reports
+//! the pairwise RTTs; this module encodes them as the canonical
+//! [`NetModel`] used by every WAN experiment in `benches/` and
+//! `examples/`.
+
+use crate::sim::{NetModel, Region};
+
+/// Region index: West US 2.
+pub const WEST_US_2: Region = Region(0);
+/// Region index: West Central US.
+pub const WEST_CENTRAL_US: Region = Region(1);
+/// Region index: Southeast Asia.
+pub const SOUTHEAST_ASIA: Region = Region(2);
+
+/// Human-readable region names, indexed by [`Region`].
+pub const REGION_NAMES: [&str; 3] = ["West US 2", "West Central US", "Southeast Asia"];
+
+/// Pairwise RTTs (ms) as measured in the paper's table:
+///
+/// | | | RTT |
+/// |---|---|---|
+/// | West US 2 | West Central US | 21.8 ms |
+/// | West US 2 | Southeast Asia | 169 ms |
+/// | West Central US | Southeast Asia | 189.2 ms |
+pub const RTT_MS: [[f64; 3]; 3] = [
+    [0.3, 21.8, 169.0],
+    [21.8, 0.3, 189.2],
+    [169.0, 189.2, 0.3],
+];
+
+/// The paper's three-region network model.
+pub fn azure_net() -> NetModel {
+    let rtt: Vec<Vec<f64>> = RTT_MS.iter().map(|r| r.to_vec()).collect();
+    NetModel::from_rtt_ms(&rtt)
+}
+
+/// Prints the RTT table in the paper's format (experiment E1).
+pub fn rtt_table() -> String {
+    let mut out = String::from("| region A | region B | RTT |\n|---|---|---|\n");
+    let pairs = [(0, 1), (0, 2), (1, 2)];
+    for (a, b) in pairs {
+        out.push_str(&format!(
+            "| {} | {} | {} ms |\n",
+            REGION_NAMES[a], REGION_NAMES[b], RTT_MS[a][b]
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matrix_is_symmetric() {
+        for a in 0..3 {
+            for b in 0..3 {
+                assert_eq!(RTT_MS[a][b], RTT_MS[b][a]);
+            }
+        }
+    }
+
+    #[test]
+    fn one_way_delays_match_paper() {
+        let net = azure_net();
+        let mut rng = Rng::new(1);
+        // One-way = RTT / 2.
+        assert_eq!(net.delay(WEST_US_2, WEST_CENTRAL_US, &mut rng), 10_900);
+        assert_eq!(net.delay(WEST_US_2, SOUTHEAST_ASIA, &mut rng), 84_500);
+        assert_eq!(net.delay(WEST_CENTRAL_US, SOUTHEAST_ASIA, &mut rng), 94_600);
+    }
+
+    #[test]
+    fn table_lists_all_pairs() {
+        let t = rtt_table();
+        assert!(t.contains("21.8"));
+        assert!(t.contains("169"));
+        assert!(t.contains("189.2"));
+    }
+}

@@ -1,0 +1,267 @@
+//! Cross-module integration tests: full clusters over real transports,
+//! protocol invariants under randomized schedules (the in-tree property
+//! harness), and safety theorems from the paper in executable form.
+
+use std::sync::Arc;
+
+use caspaxos::acceptor::Acceptor;
+use caspaxos::ballot::Ballot;
+use caspaxos::change::ChangeFn;
+use caspaxos::cluster::MemCluster;
+use caspaxos::gc::GcProcess;
+use caspaxos::kv::KvStore;
+use caspaxos::linearizability::{check_key, CheckResult, Observed, OpRecord};
+use caspaxos::membership::MembershipDriver;
+use caspaxos::proposer::Proposer;
+use caspaxos::quorum::{ClusterConfig, QuorumSpec};
+use caspaxos::rng::Rng;
+use caspaxos::testkit::forall_seeds;
+use caspaxos::transport::mem::MemTransport;
+use caspaxos::Val;
+
+/// Theorem 1 (App. A), executable: for any two acknowledged changes one
+/// is a descendant of the other — i.e. acknowledged Adds never vanish
+/// and reads always see a prefix-consistent value. Randomized schedule:
+/// random proposers, random message drops, random acceptor downtime.
+#[test]
+fn theorem1_acknowledged_changes_form_a_chain() {
+    forall_seeds(0xCA5, 15, |rng| {
+        let t = Arc::new(MemTransport::new(3));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        let proposers: Vec<Proposer> =
+            (1..=3).map(|id| Proposer::new(id, cfg.clone(), t.clone())).collect();
+        let mut acked = 0i64;
+        for _ in 0..40 {
+            // Random fault injection.
+            if rng.gen_bool(0.15) {
+                let node = 1 + rng.gen_range(3);
+                t.set_down(node, true);
+                // Never take two down at once (keep quorum reachable so
+                // the test terminates quickly).
+                for other in 1..=3 {
+                    if other != node {
+                        t.set_down(other, false);
+                    }
+                }
+            }
+            if rng.gen_bool(0.3) {
+                t.drop_next(1 + rng.gen_range(3), rng.gen_range(3));
+            }
+            let p = &proposers[rng.gen_range(3) as usize];
+            if p.add("ctr", 1).is_ok() {
+                acked += 1;
+            }
+        }
+        for n in 1..=3 {
+            t.set_down(n, false);
+        }
+        let reader = Proposer::new(9, cfg, t);
+        let total = reader.get("ctr").unwrap().as_num().unwrap_or(0);
+        assert!(
+            total >= acked,
+            "acknowledged increments lost: acked={acked} read={total}"
+        );
+    });
+}
+
+/// Concurrent CAS on one register: exactly one winner per version.
+#[test]
+fn cas_has_exactly_one_winner_per_version() {
+    forall_seeds(0xCA6, 8, |_rng| {
+        let cluster = MemCluster::new(3);
+        let p0 = cluster.proposer(1);
+        p0.set("k", 0).unwrap(); // ver 0
+        let winners: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|i| {
+                    let p = cluster.proposer(10 + i);
+                    s.spawn(move || p.cas("k", 0, 100 + i as i64).is_ok())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wins = winners.iter().filter(|&&w| w).count();
+        assert_eq!(wins, 1, "exactly one CAS(expect=0) must win, got {wins}");
+        let v = p0.get("k").unwrap();
+        assert_eq!(v.version(), Some(1), "register advanced exactly one version");
+    });
+}
+
+/// Quorum-spec generator property: every valid flexible quorum keeps
+/// safety (read-your-writes across proposers) on a live cluster.
+#[test]
+fn flexible_quorums_preserve_read_your_writes() {
+    forall_seeds(0xF1E, 12, |rng| {
+        let n = 3 + rng.gen_range(3) as usize; // 3..=5 nodes
+        let prepare = 1 + rng.gen_range(n as u64) as usize;
+        let accept = n + 1 - prepare; // minimal intersecting partner
+        let Ok(quorum) = QuorumSpec::flexible(n, prepare, accept) else {
+            return;
+        };
+        let t = Arc::new(MemTransport::new(n));
+        let cfg = ClusterConfig { epoch: 1, acceptors: t.acceptor_ids(), quorum };
+        let writer = Proposer::new(1, cfg.clone(), t.clone());
+        let reader = Proposer::new(2, cfg, t);
+        let val = rng.gen_range(1000) as i64;
+        writer.set("k", val).unwrap();
+        assert_eq!(reader.get("k").unwrap().as_num(), Some(val));
+    });
+}
+
+/// End-to-end: kv store + deletion GC + membership change compose.
+#[test]
+fn kv_gc_membership_compose() {
+    let t = Arc::new(MemTransport::new(3));
+    let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+    let kv = KvStore::new(cfg.clone(), t.clone(), 2);
+    for i in 0..30 {
+        kv.set(&format!("k{i}"), i).unwrap();
+    }
+    // Delete a third of the keys and collect.
+    let gc = GcProcess::new(t.clone(), kv.proposers().to_vec());
+    for i in 0..10 {
+        kv.delete(&format!("k{i}")).unwrap();
+        gc.schedule(format!("k{i}"));
+    }
+    let (collected, _, failed) = gc.collect_all(&cfg);
+    assert_eq!((collected, failed), (10, 0));
+
+    // Now grow the cluster; remaining data must survive.
+    let driver = MembershipDriver::new(t.clone());
+    t.add_acceptor(Acceptor::new(4));
+    let cfg4 = driver.expand_odd(kv.proposers(), &cfg, 4).unwrap();
+    for i in 10..30 {
+        assert_eq!(kv.get(&format!("k{i}")).unwrap().unwrap().as_num(), Some(i));
+    }
+    for i in 0..10 {
+        assert_eq!(kv.get(&format!("k{i}")).unwrap(), None, "deleted keys stay deleted");
+    }
+    // And the new 4-node cluster still serves writes with one node down.
+    t.set_down(1, true);
+    kv.set("after", 1).unwrap();
+    let _ = cfg4;
+}
+
+/// The linearizability checker accepts real cluster histories (sanity:
+/// implementation ↔ checker agreement on a concurrent run).
+#[test]
+fn real_histories_are_linearizable() {
+    forall_seeds(0x11A, 6, |rng| {
+        let cluster = MemCluster::new(3);
+        let history = Arc::new(caspaxos::linearizability::History::new());
+        let clock = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let now = {
+            let clock = Arc::clone(&clock);
+            move || clock.fetch_add(1, std::sync::atomic::Ordering::SeqCst)
+        };
+        std::thread::scope(|s| {
+            for c in 0..3u64 {
+                let p = cluster.proposer(10 + c);
+                let history = Arc::clone(&history);
+                let now = now.clone();
+                let seed = rng.next_u64();
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed);
+                    for _ in 0..8 {
+                        let change = match rng.gen_range(3) {
+                            0 => ChangeFn::Read,
+                            1 => ChangeFn::Add(1),
+                            _ => ChangeFn::Set(rng.gen_range(50) as i64),
+                        };
+                        let id = history.invoke(10 + c, "x", change.clone(), now());
+                        match p.change_detailed("x", change) {
+                            Ok(out) => history.complete(
+                                id,
+                                Observed { state: out.state, accepted: out.accepted },
+                                now(),
+                            ),
+                            Err(_) => history.fail(id),
+                        }
+                    }
+                });
+            }
+        });
+        match caspaxos::linearizability::check(&history) {
+            CheckResult::Violation(why) => panic!("nonlinearizable: {why}"),
+            _ => {}
+        }
+    });
+}
+
+/// Codec fuzz: random bytes never panic the decoder; random values
+/// always roundtrip.
+#[test]
+fn codec_fuzz() {
+    use caspaxos::codec::Codec;
+    use caspaxos::msg::{Request, Response};
+    forall_seeds(0xC0D, 30, |rng| {
+        // Decoder is total on garbage.
+        let len = rng.gen_range(64) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
+        let _ = Request::from_bytes(&bytes);
+        let _ = Response::from_bytes(&bytes);
+        // Random Val roundtrips.
+        let val = match rng.gen_range(4) {
+            0 => Val::Empty,
+            1 => Val::Tombstone,
+            2 => Val::Num {
+                ver: rng.next_u64() as i64,
+                num: rng.next_u64() as i64,
+            },
+            _ => Val::Bytes {
+                ver: rng.gen_range(1000) as i64,
+                data: (0..rng.gen_range(100)).map(|_| rng.gen_range(256) as u8).collect(),
+            },
+        };
+        assert_eq!(Val::from_bytes(&val.to_bytes()).unwrap(), val);
+        // Random ballot ordering is preserved by packing.
+        let b1 = Ballot::new(rng.gen_range(1 << 40), rng.gen_range(1 << 16));
+        let b2 = Ballot::new(rng.gen_range(1 << 40), rng.gen_range(1 << 16));
+        let (p1, p2) =
+            (caspaxos::runtime::pack_ballot(b1), caspaxos::runtime::pack_ballot(b2));
+        assert_eq!(b1.cmp(&b2), p1.cmp(&p2), "packing must preserve order");
+    });
+}
+
+/// Batch engine ↔ single-op proposer equivalence on random op streams.
+#[test]
+fn batch_and_scalar_paths_agree() {
+    forall_seeds(0xBA7C, 6, |rng| {
+        // Apply a random op stream twice — once through single-op
+        // proposers, once through the batch engine — onto two separate
+        // clusters; final states must match.
+        let t1 = Arc::new(MemTransport::new(3));
+        let cfg1 = ClusterConfig::majority(1, t1.acceptor_ids());
+        let single = Proposer::new(1, cfg1, t1);
+
+        let t2 = Arc::new(MemTransport::new(3));
+        let cfg2 = ClusterConfig::majority(1, t2.acceptor_ids());
+        let engine: Arc<dyn caspaxos::runtime::Engine> =
+            Arc::new(caspaxos::runtime::ScalarEngine);
+        let batch = caspaxos::batch::BatchProposer::new(1, cfg2, t2, engine);
+
+        let keys = ["a", "b", "c", "d"];
+        for _round in 0..5 {
+            let mut ops = Vec::new();
+            for key in keys {
+                let change = match rng.gen_range(4) {
+                    0 => ChangeFn::Add(rng.gen_range(10) as i64),
+                    1 => ChangeFn::Set(rng.gen_range(100) as i64),
+                    2 => ChangeFn::InitIfEmpty(7),
+                    _ => ChangeFn::Read,
+                };
+                ops.push((key.to_string(), change));
+            }
+            for (key, change) in &ops {
+                let _ = single.change_detailed(key.clone(), change.clone());
+            }
+            batch.execute(&ops).unwrap();
+        }
+        for key in keys {
+            let v1 = single.get(key).unwrap();
+            let mut results = batch.execute(&[(key.to_string(), ChangeFn::Read)]).unwrap();
+            let v2 = results.remove(0).unwrap();
+            assert_eq!(v1, v2, "divergence on {key}");
+        }
+    });
+}
