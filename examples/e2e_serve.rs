@@ -50,6 +50,7 @@ fn launch() -> Vec<Node> {
                 peers: peers.clone(),
                 client_peers: client_peers.clone(),
                 cluster: cluster.clone(),
+                shard_plan: None,
                 data_dir: None,
             })
             .unwrap()

@@ -8,172 +8,22 @@
 //! history. Theorem 1 in executable form: for any two acknowledged
 //! changes, one is a descendant of the other.
 //!
+//! The history-recording client lives in the library
+//! (`caspaxos::sim::cas::HistClient`) and is shared with the chaos
+//! property suite (`rust/tests/chaos.rs`), which extends this scenario
+//! to sharded acceptor groups.
+//!
 //! Run: `cargo run --release --example jepsen_sim [seeds]`
 
-use std::sync::Arc;
 use std::sync::atomic::Ordering as AtomicOrdering;
+use std::sync::Arc;
 
-use caspaxos::linearizability::{check, CheckResult, History, Observed};
+use caspaxos::linearizability::{check, CheckResult, History};
+use caspaxos::msg::Key;
 use caspaxos::quorum::ClusterConfig;
 use caspaxos::rng::Rng;
-use caspaxos::sim::cas::{AcceptorActor, CasMsg};
-use caspaxos::sim::{Actor, Ctx, NetModel, NodeId, Region, World};
-use caspaxos::ballot::BallotGenerator;
-use caspaxos::change::ChangeFn;
-use caspaxos::error::CasError;
-use caspaxos::msg::{Key, ProposerId};
-use caspaxos::proposer::{RoundCore, Step};
-
-/// A history-recording client: runs random ops on a small key space and
-/// records invoke/complete into the shared History.
-struct HistClient {
-    id: u64,
-    cfg: ClusterConfig,
-    gen: BallotGenerator,
-    history: Arc<History>,
-    rng: Rng,
-    ops_left: u32,
-    round: u64,
-    core: Option<RoundCore>,
-    current_op: Option<u64>,
-    keys: Vec<Key>,
-}
-
-const TAG_NEXT: u64 = 1;
-const TAG_TIMEOUT_BASE: u64 = 1 << 32;
-
-impl HistClient {
-    fn new(
-        id: u64,
-        cfg: ClusterConfig,
-        history: Arc<History>,
-        seed: u64,
-        ops: u32,
-        keys: Vec<Key>,
-    ) -> Self {
-        HistClient {
-            id,
-            cfg,
-            gen: BallotGenerator::new(id),
-            history,
-            rng: Rng::new(seed),
-            ops_left: ops,
-            round: 0,
-            core: None,
-            current_op: None,
-            keys,
-        }
-    }
-
-    fn random_change(&mut self) -> ChangeFn {
-        match self.rng.gen_range(4) {
-            0 => ChangeFn::Read,
-            1 => ChangeFn::Add(1 + self.rng.gen_range(9) as i64),
-            2 => ChangeFn::Set(self.rng.gen_range(100) as i64),
-            _ => ChangeFn::InitIfEmpty(7),
-        }
-    }
-
-    fn start_op(&mut self, ctx: &mut Ctx<CasMsg>) {
-        if self.ops_left == 0 {
-            return;
-        }
-        self.ops_left -= 1;
-        let key = self.keys[self.rng.gen_range(self.keys.len() as u64) as usize].clone();
-        let change = self.random_change();
-        let op_id = self.history.invoke(self.id, key.clone(), change.clone(), ctx.now());
-        self.current_op = Some(op_id);
-        self.round += 1;
-        let ballot = self.gen.next();
-        let (core, msgs) = RoundCore::new(
-            key,
-            change,
-            ballot,
-            ProposerId::new(self.id),
-            self.cfg.clone(),
-            false, // no cache: maximize interleavings under test
-        );
-        let token = core.token();
-        self.core = Some(core);
-        let round = self.round;
-        for (to, req) in msgs {
-            ctx.send(to, CasMsg::Req { round, token, req });
-        }
-        ctx.set_timer(400_000, TAG_TIMEOUT_BASE + round);
-    }
-
-    fn schedule_next(&mut self, ctx: &mut Ctx<CasMsg>) {
-        let delay = 1_000 + ctx.rng.gen_range(30_000);
-        ctx.set_timer(delay, TAG_NEXT);
-    }
-}
-
-impl Actor<CasMsg> for HistClient {
-    fn on_start(&mut self, ctx: &mut Ctx<CasMsg>) {
-        self.schedule_next(ctx);
-    }
-
-    fn on_msg(&mut self, ctx: &mut Ctx<CasMsg>, from: NodeId, msg: CasMsg) {
-        let CasMsg::Resp { round, token, resp } = msg else { return };
-        if round != self.round {
-            return;
-        }
-        let Some(core) = self.core.as_mut() else { return };
-        match core.on_reply(token, from, Some(resp)) {
-            Step::Continue => {}
-            Step::Send(more) => {
-                let token = core.token();
-                for (to, req) in more {
-                    ctx.send(to, CasMsg::Req { round, token, req });
-                }
-            }
-            Step::Done(result) => {
-                self.core = None;
-                let op_id = self.current_op.take().expect("op in flight");
-                match result {
-                    Ok(out) => {
-                        self.history.complete(
-                            op_id,
-                            Observed { state: out.state, accepted: out.accepted },
-                            ctx.now(),
-                        );
-                    }
-                    Err(CasError::Conflict(seen)) => {
-                        // Outcome known-not-applied? NO — our accept may
-                        // have landed on a minority. Leave as unknown.
-                        self.gen.fast_forward(seen);
-                        self.history.fail(op_id);
-                    }
-                    Err(_) => self.history.fail(op_id),
-                }
-                self.schedule_next(ctx);
-            }
-        }
-    }
-
-    fn on_timer(&mut self, ctx: &mut Ctx<CasMsg>, tag: u64) {
-        if tag == TAG_NEXT {
-            if self.core.is_none() {
-                self.start_op(ctx);
-                if self.current_op.is_none() {
-                    // workload finished
-                }
-            } else {
-                self.schedule_next(ctx);
-            }
-        } else if tag >= TAG_TIMEOUT_BASE {
-            let round = tag - TAG_TIMEOUT_BASE;
-            if round == self.round && self.core.is_some() {
-                // Abandon: outcome unknown (already recorded as such).
-                self.core = None;
-                if let Some(op) = self.current_op.take() {
-                    self.history.fail(op);
-                }
-                self.schedule_next(ctx);
-            }
-        }
-    }
-}
+use caspaxos::sim::cas::{AcceptorActor, CasMsg, HistClient};
+use caspaxos::sim::{NetModel, Region, World};
 
 /// Runs one seeded nemesis scenario; returns (ops recorded, verdict).
 fn run_scenario(seed: u64) -> (usize, CheckResult) {

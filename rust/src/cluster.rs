@@ -2,12 +2,16 @@
 //!
 //! [`MemCluster`] wires N in-process acceptors and any number of proposers
 //! together — the one-liner entry point used by the quickstart example,
-//! doc tests and benchmarks.
+//! doc tests and benchmarks. [`ShardedMemCluster`] is its multi-group
+//! sibling: N independent acceptor shards behind one transport, the
+//! one-liner for shard-scaling experiments.
 
 use std::sync::Arc;
 
+use crate::kv::KvStore;
 use crate::proposer::{Proposer, ProposerOpts};
 use crate::quorum::ClusterConfig;
+use crate::shard::ShardPlan;
 use crate::transport::mem::MemTransport;
 
 /// An in-process CASPaxos cluster: N acceptors behind a [`MemTransport`].
@@ -49,6 +53,57 @@ impl MemCluster {
     pub fn set_down(&self, id: u64, down: bool) {
         self.transport.set_down(id, down);
     }
+
+    /// The single-shard [`ShardPlan`] equivalent of this cluster
+    /// (feeds shard-aware components without changing topology).
+    pub fn plan(&self) -> ShardPlan {
+        ShardPlan::single(self.cfg.clone())
+    }
+
+    /// A [`KvStore`] over this cluster (single shard).
+    pub fn kv(&self, n_proposers: usize) -> KvStore {
+        KvStore::new(self.cfg.clone(), self.transport.clone(), n_proposers)
+    }
+}
+
+/// An in-process cluster of `n_shards` disjoint acceptor groups behind
+/// one [`MemTransport`]: acceptors `1..=n_shards*acceptors_per_shard`,
+/// carved contiguously into groups of `acceptors_per_shard`.
+pub struct ShardedMemCluster {
+    transport: Arc<MemTransport>,
+    plan: ShardPlan,
+}
+
+impl ShardedMemCluster {
+    /// Builds the sharded cluster with per-shard majority quorums.
+    pub fn new(n_shards: usize, acceptors_per_shard: usize) -> Self {
+        let transport = Arc::new(MemTransport::new(n_shards * acceptors_per_shard));
+        let plan = ShardPlan::partition(transport.acceptor_ids(), n_shards, None)
+            .expect("contiguous partition of fresh acceptor ids is valid");
+        ShardedMemCluster { transport, plan }
+    }
+
+    /// The shared transport (fault toggles, inspection).
+    pub fn transport(&self) -> Arc<MemTransport> {
+        Arc::clone(&self.transport)
+    }
+
+    /// The shard plan (per-shard configs, disjoint acceptor sets).
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// A sharded [`KvStore`] with `proposers_per_shard` proposers per
+    /// acceptor group.
+    pub fn kv(&self, proposers_per_shard: usize) -> KvStore {
+        KvStore::new_sharded(self.plan.clone(), self.transport.clone(), proposers_per_shard)
+            .expect("plan validated at construction")
+    }
+
+    /// Crashes / recovers an acceptor.
+    pub fn set_down(&self, id: u64, down: bool) {
+        self.transport.set_down(id, down);
+    }
 }
 
 #[cfg(test)]
@@ -73,5 +128,28 @@ mod tests {
         let p2 = cluster.proposer(2);
         p1.set("x", 1).unwrap();
         assert_eq!(p2.get("x").unwrap().as_num(), Some(1));
+    }
+
+    #[test]
+    fn sharded_cluster_builds_disjoint_groups() {
+        let cluster = ShardedMemCluster::new(4, 3);
+        assert_eq!(cluster.plan().shard_count(), 4);
+        assert_eq!(cluster.plan().all_acceptors(), (1..=12).collect::<Vec<u64>>());
+        let kv = cluster.kv(2);
+        for i in 0..16 {
+            kv.set(&format!("k{i}"), i).unwrap();
+        }
+        for i in 0..16 {
+            assert_eq!(kv.get(&format!("k{i}")).unwrap().unwrap().as_num(), Some(i));
+        }
+    }
+
+    #[test]
+    fn mem_cluster_kv_and_plan_helpers() {
+        let cluster = MemCluster::new(3);
+        assert_eq!(cluster.plan().shard_count(), 1);
+        let kv = cluster.kv(2);
+        kv.set("a", 5).unwrap();
+        assert_eq!(kv.get("a").unwrap().unwrap().as_num(), Some(5));
     }
 }

@@ -8,15 +8,23 @@
 //! node 2 127.0.0.1:7102
 //! node 3 127.0.0.1:7103
 //! quorum 2 2          # optional: prepare accept (default: majority)
+//! shards 2            # optional: acceptor shard count (default: 1)
+//! shard_quorum 2 2    # optional: per-shard prepare accept
 //! ```
 //!
 //! The same `id=addr` pairs are accepted from the command line:
 //! `--peers 1=127.0.0.1:7101,2=127.0.0.1:7102,3=127.0.0.1:7103`.
+//!
+//! With `shards N > 1` the sorted acceptor ids are carved into N
+//! contiguous disjoint groups ([`crate::shard::ShardPlan`]); the
+//! whole-cluster `quorum` directive is then meaningless and rejected —
+//! use `shard_quorum` to tune the per-group FPaxos spec instead.
 
 use std::collections::HashMap;
 
 use crate::error::{CasError, CasResult};
 use crate::quorum::{ClusterConfig, QuorumSpec};
+use crate::shard::ShardPlan;
 
 /// A parsed deployment description.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -25,6 +33,10 @@ pub struct Deployment {
     pub peers: HashMap<u64, String>,
     /// Quorum sizes (majority if unspecified).
     pub quorum: QuorumSpec,
+    /// Acceptor shard count (1 = classic unsharded deployment).
+    pub shards: usize,
+    /// Per-shard (prepare, accept) quorum override.
+    pub shard_quorum: Option<(usize, usize)>,
 }
 
 impl Deployment {
@@ -32,6 +44,8 @@ impl Deployment {
     pub fn parse(text: &str) -> CasResult<Self> {
         let mut peers = HashMap::new();
         let mut quorum: Option<(usize, usize)> = None;
+        let mut shards: Option<usize> = None;
+        let mut shard_quorum: Option<(usize, usize)> = None;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
@@ -52,18 +66,57 @@ impl Deployment {
                     let a = a.parse().map_err(|_| bad(lineno, "bad accept quorum"))?;
                     quorum = Some((p, a));
                 }
-                _ => return Err(bad(lineno, "expected `node <id> <addr>` or `quorum <p> <a>`")),
+                ["shards", n] => {
+                    let n: usize = n.parse().map_err(|_| bad(lineno, "bad shard count"))?;
+                    if n == 0 {
+                        return Err(bad(lineno, "shard count must be at least 1"));
+                    }
+                    shards = Some(n);
+                }
+                ["shard_quorum", p, a] => {
+                    let p = p.parse().map_err(|_| bad(lineno, "bad shard prepare quorum"))?;
+                    let a = a.parse().map_err(|_| bad(lineno, "bad shard accept quorum"))?;
+                    shard_quorum = Some((p, a));
+                }
+                _ => {
+                    return Err(bad(
+                        lineno,
+                        "expected `node <id> <addr>`, `quorum <p> <a>`, \
+                         `shards <n>` or `shard_quorum <p> <a>`",
+                    ))
+                }
             }
         }
         if peers.is_empty() {
             return Err(CasError::Config("config has no nodes".into()));
         }
+        let shards = shards.unwrap_or(1);
+        if shards > peers.len() {
+            return Err(CasError::Config(format!(
+                "shards={} exceeds node count {}",
+                shards,
+                peers.len()
+            )));
+        }
+        if shards > 1 && quorum.is_some() {
+            return Err(CasError::Config(
+                "whole-cluster `quorum` is meaningless with shards > 1; use `shard_quorum`".into(),
+            ));
+        }
+        if shards == 1 && shard_quorum.is_some() && quorum.is_some() {
+            return Err(CasError::Config("give either `quorum` or `shard_quorum`, not both".into()));
+        }
         let n = peers.len();
-        let quorum = match quorum {
+        let quorum = match quorum.or(if shards == 1 { shard_quorum } else { None }) {
             Some((p, a)) => QuorumSpec::flexible(n, p, a)?,
             None => QuorumSpec::majority(n),
         };
-        Ok(Deployment { peers, quorum })
+        let deployment = Deployment { peers, quorum, shards, shard_quorum };
+        // Fail at parse time, not at node start: a bad shard carve
+        // (uneven groups with an explicit shard_quorum, non-intersecting
+        // per-shard quorums) is a config error.
+        deployment.shard_plan()?;
+        Ok(deployment)
     }
 
     /// Loads and parses a config file.
@@ -96,11 +149,24 @@ impl Deployment {
         Ok(peers)
     }
 
-    /// The protocol-level [`ClusterConfig`] (epoch 1, sorted ids).
+    /// The protocol-level [`ClusterConfig`] (epoch 1, sorted ids) over
+    /// the WHOLE acceptor set. With `shards > 1` this is the union view
+    /// (admin tooling); the protocol planes use [`Deployment::shard_plan`].
     pub fn cluster_config(&self) -> ClusterConfig {
         let mut acceptors: Vec<u64> = self.peers.keys().copied().collect();
         acceptors.sort_unstable();
         ClusterConfig { epoch: 1, acceptors, quorum: self.quorum }
+    }
+
+    /// The [`ShardPlan`] this deployment describes: `shards` contiguous
+    /// disjoint acceptor groups, each with `shard_quorum` (or majority).
+    pub fn shard_plan(&self) -> CasResult<ShardPlan> {
+        if self.shards == 1 {
+            return Ok(ShardPlan::single(self.cluster_config()));
+        }
+        let mut acceptors: Vec<u64> = self.peers.keys().copied().collect();
+        acceptors.sort_unstable();
+        ShardPlan::partition(acceptors, self.shards, self.shard_quorum)
     }
 }
 
@@ -140,6 +206,46 @@ mod tests {
         assert!(
             Deployment::parse("node 1 a:1\nnode 2 a:2\nquorum 1 1\n").is_err(),
             "non-intersecting quorums"
+        );
+    }
+
+    #[test]
+    fn parse_sharded_config() {
+        let text = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\nnode 4 a:4\n\
+                    node 5 a:5\nnode 6 a:6\nshards 2\n";
+        let d = Deployment::parse(text).unwrap();
+        assert_eq!(d.shards, 2);
+        let plan = d.shard_plan().unwrap();
+        assert_eq!(plan.shard_count(), 2);
+        assert_eq!(plan.shards[0].acceptors, vec![1, 2, 3]);
+        assert_eq!(plan.shards[1].acceptors, vec![4, 5, 6]);
+        assert_eq!(plan.shards[0].quorum, QuorumSpec::majority(3));
+        // Per-shard flexible quorum.
+        let d = Deployment::parse(&format!("{text}shard_quorum 2 2\n")).unwrap();
+        let plan = d.shard_plan().unwrap();
+        assert_eq!(plan.shards[1].quorum, QuorumSpec { nodes: 3, prepare: 2, accept: 2 });
+        // Default is one shard.
+        let d = Deployment::parse("node 1 a:1\nnode 2 a:2\nnode 3 a:3\n").unwrap();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.shard_plan().unwrap().shard_count(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_shard_configs() {
+        let base = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\n";
+        assert!(Deployment::parse(&format!("{base}shards 0\n")).is_err(), "zero shards");
+        assert!(Deployment::parse(&format!("{base}shards 4\n")).is_err(), "shards > nodes");
+        assert!(
+            Deployment::parse(&format!("{base}shards 3\nquorum 2 2\n")).is_err(),
+            "whole-cluster quorum with shards"
+        );
+        assert!(
+            Deployment::parse(&format!("{base}shards 2\nshard_quorum 2 2\n")).is_err(),
+            "uneven shards with explicit shard_quorum"
+        );
+        assert!(
+            Deployment::parse(&format!("{base}quorum 2 2\nshard_quorum 2 2\n")).is_err(),
+            "both quorum directives"
         );
     }
 

@@ -38,20 +38,23 @@ use crate::transport::Transport;
 /// sync blocks collection (§2.3.4 explains the proposer-list handshake
 /// that keeps this sound when proposers come and go).
 pub trait ProposerAdmin: Send + Sync {
-    /// The proposer's id.
+    /// The proposer's id (admin registry key; used to deregister).
     fn id(&self) -> u64;
     /// Runs GC step 2b on the proposer: invalidate the key's cache
     /// entry, fast-forward the ballot counter past `min_counter`, bump
-    /// the age. Returns the new age.
-    fn gc_sync(&self, key: &Key, min_counter: u64) -> CasResult<u64>;
+    /// the age. Returns `(proposer id, new age)` — the id may differ
+    /// from [`ProposerAdmin::id`] for aggregate handles (a sharded peer
+    /// node syncs ALL its shard proposers and reports the one that owns
+    /// `key`, see `server::RemoteProposer`).
+    fn gc_sync(&self, key: &Key, min_counter: u64) -> CasResult<(u64, u64)>;
 }
 
 impl ProposerAdmin for Arc<Proposer> {
     fn id(&self) -> u64 {
         Proposer::id(self)
     }
-    fn gc_sync(&self, key: &Key, min_counter: u64) -> CasResult<u64> {
-        Ok(Proposer::gc_sync(self, key, min_counter))
+    fn gc_sync(&self, key: &Key, min_counter: u64) -> CasResult<(u64, u64)> {
+        Ok((Proposer::id(self), Proposer::gc_sync(self, key, min_counter)))
     }
 }
 
@@ -136,13 +139,25 @@ impl GcProcess {
     /// Processes the whole queue once; failed keys are re-queued.
     /// Returns (collected, superseded, failed).
     pub fn collect_all(&self, cfg: &ClusterConfig) -> (usize, usize, usize) {
+        self.collect_all_with(|_| cfg.clone())
+    }
+
+    /// Like [`GcProcess::collect_all`], but the cluster config is looked
+    /// up per key — a sharded deployment must collect each key against
+    /// the acceptor group that hosts it, never the union (erasing /
+    /// fencing on foreign shards would create registers there and break
+    /// the share-nothing invariant). See `shard::ShardedKv::config_fn`.
+    pub fn collect_all_with(
+        &self,
+        cfg_for: impl Fn(&Key) -> ClusterConfig,
+    ) -> (usize, usize, usize) {
         let keys: Vec<Key> = {
             let mut q = self.queue.lock().unwrap();
             q.drain(..).collect()
         };
         let (mut ok, mut superseded, mut failed) = (0, 0, 0);
         for key in keys {
-            match self.collect(cfg, &key) {
+            match self.collect(&cfg_for(&key), &key) {
                 Ok(GcOutcome::Collected) => ok += 1,
                 Ok(GcOutcome::Superseded) => superseded += 1,
                 Err(_) => {
@@ -206,8 +221,7 @@ impl GcProcess {
                 // A proposer we cannot reach blocks the collection — the
                 // whole point of step 2b is that NO proposer keeps a
                 // stale cache or low counter past this point.
-                let age = p.gc_sync(key, tombstone_ballot.counter)?;
-                ages.push((p.id(), age));
+                ages.push(p.gc_sync(key, tombstone_ballot.counter)?);
             }
         }
         // The GC's own proposer is fenced too: a delayed 2a accept
@@ -356,6 +370,29 @@ mod tests {
                 .with_acceptor(a, |acc| acc.storage_value("k"))
                 .unwrap();
             assert_eq!(slot, Some(7));
+        }
+    }
+
+    #[test]
+    fn sharded_collect_routes_to_owning_group() {
+        use crate::shard::ShardPlan;
+        let transport = Arc::new(MemTransport::new(6));
+        let plan = ShardPlan::partition(transport.acceptor_ids(), 2, None).unwrap();
+        let kv = crate::kv::KvStore::new_sharded(plan, transport.clone(), 1).unwrap();
+        let gc = GcProcess::new(transport.clone(), kv.proposers().to_vec());
+        for i in 0..10 {
+            kv.set(&format!("k{i}"), i).unwrap();
+        }
+        for i in 0..10 {
+            kv.delete(&format!("k{i}")).unwrap();
+            gc.schedule(format!("k{i}"));
+        }
+        let (ok, sup, failed) = gc.collect_all_with(kv.sharded().config_fn());
+        assert_eq!((ok, sup, failed), (10, 0, 0));
+        // Everything erased, and no register ever leaked onto a foreign
+        // shard's acceptors.
+        for a in 1..=6 {
+            assert_eq!(transport.register_count(a), Some(0), "acceptor {a} not empty");
         }
     }
 

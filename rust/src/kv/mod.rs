@@ -5,19 +5,22 @@
 //! achieving uniform load balancing across all replicas (thus higher
 //! throughput)."
 //!
-//! A [`KvStore`] is a thin façade over one or more proposers: every key
-//! *is* an independent CASPaxos register hosted by the same acceptors, so
-//! the "hashtable of RSMs" needs no coordination of its own — requests on
+//! A [`KvStore`] is a thin façade over the sharded engine
+//! ([`crate::shard::ShardedKv`]): every key *is* an independent CASPaxos
+//! register hosted by exactly one shard's acceptor group, so the
+//! "hashtable of RSMs" needs no coordination of its own — requests on
 //! different keys never interfere (E4 measures exactly that). The store
 //! adds:
 //!
-//! * proposer pooling: ops are routed to a proposer by key hash, so
-//!   same-key traffic lands on the same proposer and stays on the 1-RTT
-//!   path (§2.2.1) while different keys spread across proposers/cores;
+//! * shard routing: keys map to acceptor groups via the rendezvous
+//!   [`crate::shard::ShardRouter`] (a classic unsharded deployment is
+//!   the 1-shard special case, and [`KvStore::new`] builds exactly that);
+//! * proposer pooling: within a shard, ops route to a proposer by key
+//!   hash, so same-key traffic lands on the same proposer and stays on
+//!   the 1-RTT path (§2.2.1) while different keys spread across
+//!   proposers/cores;
 //! * the deletion pipeline ([`crate::gc`]) wired behind [`KvStore::delete`].
 
-use std::collections::hash_map::DefaultHasher;
-use std::hash::{Hash, Hasher};
 use std::sync::Arc;
 
 use crate::change::ChangeFn;
@@ -25,22 +28,28 @@ use crate::error::{CasError, CasResult};
 use crate::msg::Key;
 use crate::proposer::{Proposer, ProposerOpts};
 use crate::quorum::ClusterConfig;
+use crate::shard::{ShardHandle, ShardPlan, ShardedKv};
 use crate::state::Val;
 use crate::transport::Transport;
 
-/// A key-value store: a hashtable of independent per-key CASPaxos RSMs.
+/// A key-value store: a hashtable of independent per-key CASPaxos RSMs,
+/// spread over one or more acceptor shards.
 pub struct KvStore {
-    proposers: Vec<Arc<Proposer>>,
+    inner: ShardedKv,
+    /// Flattened proposer pool (admin surface: GC registration and
+    /// membership changes must reach every proposer).
+    flat: Vec<Arc<Proposer>>,
 }
 
 impl KvStore {
-    /// Builds a store with `n_proposers` proposers (ids offset by 1000 to
-    /// stay clear of acceptor ids) sharing one transport.
+    /// Builds a classic single-shard store with `n_proposers` proposers
+    /// (ids offset by 1000 to stay clear of acceptor ids) sharing one
+    /// transport.
     pub fn new(cfg: ClusterConfig, transport: Arc<dyn Transport>, n_proposers: usize) -> Self {
         Self::with_opts(cfg, transport, n_proposers, ProposerOpts::default())
     }
 
-    /// Builds a store with explicit proposer options.
+    /// Builds a single-shard store with explicit proposer options.
     pub fn with_opts(
         cfg: ClusterConfig,
         transport: Arc<dyn Transport>,
@@ -48,78 +57,94 @@ impl KvStore {
         opts: ProposerOpts,
     ) -> Self {
         assert!(n_proposers > 0, "need at least one proposer");
-        let proposers = (0..n_proposers)
-            .map(|i| {
-                Arc::new(Proposer::with_opts(
-                    1000 + i as u64,
-                    cfg.clone(),
-                    Arc::clone(&transport),
-                    opts.clone(),
-                ))
-            })
-            .collect();
-        KvStore { proposers }
+        let inner = ShardedKv::with_opts(ShardPlan::single(cfg), transport, n_proposers, opts)
+            .expect("single-shard plan is valid");
+        Self::from_inner(inner)
     }
 
-    /// Wraps existing proposers (shared with other components).
+    /// Builds a store over a multi-shard [`ShardPlan`] with
+    /// `proposers_per_shard` proposers per acceptor group.
+    pub fn new_sharded(
+        plan: ShardPlan,
+        transport: Arc<dyn Transport>,
+        proposers_per_shard: usize,
+    ) -> CasResult<Self> {
+        Ok(Self::from_inner(ShardedKv::new(plan, transport, proposers_per_shard)?))
+    }
+
+    /// Wraps existing proposers as one shard (shared with other
+    /// components).
     pub fn from_proposers(proposers: Vec<Arc<Proposer>>) -> Self {
         assert!(!proposers.is_empty());
-        KvStore { proposers }
+        Self::from_inner(ShardedKv::from_shards(vec![ShardHandle::from_proposers(proposers)]))
+    }
+
+    fn from_inner(inner: ShardedKv) -> Self {
+        let flat = inner.all_proposers();
+        KvStore { inner, flat }
+    }
+
+    /// The sharded engine underneath (router, per-shard configs).
+    pub fn sharded(&self) -> &ShardedKv {
+        &self.inner
+    }
+
+    /// Number of acceptor shards.
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards().len()
+    }
+
+    /// The shard index that owns `key`.
+    pub fn shard_for(&self, key: &str) -> usize {
+        self.inner.shard_for(key)
     }
 
     /// The proposer that owns `key` (stable hash routing keeps same-key
     /// traffic on the 1-RTT path).
     pub fn proposer_for(&self, key: &str) -> &Arc<Proposer> {
-        let mut h = DefaultHasher::new();
-        key.hash(&mut h);
-        &self.proposers[(h.finish() % self.proposers.len() as u64) as usize]
+        self.inner.proposer_for(key)
     }
 
     /// All proposers (admin: membership changes must update every one).
     pub fn proposers(&self) -> &[Arc<Proposer>] {
-        &self.proposers
+        &self.flat
     }
 
     /// Linearizable read. `Ok(None)` for absent/deleted keys.
     pub fn get(&self, key: &str) -> CasResult<Option<Val>> {
-        let v = self.proposer_for(key).get(key)?;
-        Ok(match v {
-            Val::Empty | Val::Tombstone => None,
-            other => Some(other),
-        })
+        self.inner.get(key)
     }
 
     /// Unconditional write.
     pub fn set(&self, key: &str, val: i64) -> CasResult<Val> {
-        self.proposer_for(key).set(key, val)
+        self.inner.set(key, val)
     }
 
     /// Compare-and-swap by version; returns the new state or
     /// [`CasError::Rejected`].
     pub fn cas(&self, key: &str, expect: i64, val: i64) -> CasResult<Val> {
-        self.proposer_for(key).cas(key, expect, val)
+        self.inner.cas(key, expect, val)
     }
 
     /// Atomic increment.
     pub fn add(&self, key: &str, delta: i64) -> CasResult<Val> {
-        self.proposer_for(key).add(key, delta)
+        self.inner.add(key, delta)
     }
 
     /// Arbitrary change function.
     pub fn change(&self, key: &str, f: ChangeFn) -> CasResult<Val> {
-        self.proposer_for(key).change(key, f)
+        self.inner.change(key, f)
     }
 
     /// Step 1 of deletion (§3.1): write the tombstone. Space is
     /// reclaimed by [`crate::gc::GcProcess::collect`].
     pub fn delete(&self, key: &str) -> CasResult<()> {
-        self.proposer_for(key).delete(key)?;
-        Ok(())
+        self.inner.delete(key)
     }
 
     /// Applies `f` to every proposer (membership/GC admin hooks).
     pub fn for_each_proposer(&self, mut f: impl FnMut(&Arc<Proposer>)) {
-        for p in &self.proposers {
+        for p in &self.flat {
             f(p);
         }
     }
@@ -268,6 +293,25 @@ mod tests {
             .map(|i| kv.get(&format!("k{i}")).unwrap().unwrap().as_num().unwrap())
             .sum();
         assert_eq!(total, 100, "all 100 increments counted");
+    }
+
+    #[test]
+    fn sharded_store_routes_and_serves() {
+        let t = Arc::new(MemTransport::new(6));
+        let plan = crate::shard::ShardPlan::partition(t.acceptor_ids(), 2, None).unwrap();
+        let kv = KvStore::new_sharded(plan, t.clone(), 2).unwrap();
+        assert_eq!(kv.shard_count(), 2);
+        assert_eq!(kv.proposers().len(), 4, "2 shards x 2 proposers");
+        for i in 0..20 {
+            kv.set(&format!("k{i}"), i).unwrap();
+        }
+        for i in 0..20 {
+            let k = format!("k{i}");
+            assert_eq!(kv.get(&k).unwrap().unwrap().as_num(), Some(i));
+            assert!(kv.shard_for(&k) < 2);
+        }
+        kv.delete("k3").unwrap();
+        assert_eq!(kv.get("k3").unwrap(), None);
     }
 
     #[test]

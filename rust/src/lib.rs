@@ -18,10 +18,14 @@
 //!   discrete-event network with fault injection), [`wan`] (the paper's
 //!   Azure RTT matrix), [`codec`] (binary wire format), [`rng`]
 //!   (deterministic PRNG).
-//! * Systems built on the core: [`kv`] (hashtable of per-key RSMs, §3),
-//!   [`membership`] (§2.3), [`gc`] (deletion, §3.1), [`server`].
+//! * Systems built on the core: [`shard`] (rendezvous-routed disjoint
+//!   acceptor groups — the horizontal-scaling plane), [`kv`] (hashtable
+//!   of per-key RSMs, §3, routed over the shards), [`membership`]
+//!   (§2.3), [`gc`] (deletion, §3.1), [`server`].
 //! * Evaluation substrates: [`baselines`] (Multi-Paxos, Raft-like,
-//!   primary-forwarding), [`linearizability`] (Jepsen-style checker).
+//!   primary-forwarding), [`linearizability`] (Jepsen-style checker),
+//!   [`sim::worlds`] (pre-wired single-/multi-shard simulation worlds
+//!   driven by `tests/chaos.rs` and the scaling benches).
 //! * Data plane: [`runtime`] (PJRT, loads the AOT-compiled JAX/Pallas
 //!   batched step), [`batch`] (op batcher feeding it).
 //!
@@ -62,6 +66,7 @@ pub mod quorum;
 pub mod rng;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod sim;
 pub mod state;
 pub mod testkit;

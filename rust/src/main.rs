@@ -61,19 +61,24 @@ fn run_node(mut args: Vec<String>) {
         .unwrap_or_else(|| usage())
         .parse()
         .unwrap_or_else(|_| usage());
-    let (peers, quorum): (HashMap<u64, String>, _) =
+    let (peers, quorum, shard_plan): (HashMap<u64, String>, _, _) =
         if let Some(path) = take_flag(&mut args, "--config") {
             let d = Deployment::load(&path).unwrap_or_else(|e| {
                 eprintln!("config: {e}");
                 exit(1)
             });
-            (d.peers.clone(), Some(d.quorum))
+            let plan = d.shard_plan().unwrap_or_else(|e| {
+                eprintln!("shard plan: {e}");
+                exit(1)
+            });
+            let plan = if d.shards > 1 { Some(plan) } else { None };
+            (d.peers.clone(), Some(d.quorum), plan)
         } else if let Some(spec) = take_flag(&mut args, "--peers") {
             let peers = Deployment::parse_peers(&spec).unwrap_or_else(|e| {
                 eprintln!("peers: {e}");
                 exit(1)
             });
-            (peers, None)
+            (peers, None, None)
         } else {
             usage()
         };
@@ -104,6 +109,7 @@ fn run_node(mut args: Vec<String>) {
         exit(1)
     });
 
+    let shards = shard_plan.as_ref().map(|p| p.shard_count()).unwrap_or(1);
     let node = start_node(NodeOpts {
         id,
         acceptor_addr,
@@ -111,6 +117,7 @@ fn run_node(mut args: Vec<String>) {
         peers,
         client_peers,
         cluster,
+        shard_plan,
         data_dir,
     })
     .unwrap_or_else(|e| {
@@ -118,7 +125,7 @@ fn run_node(mut args: Vec<String>) {
         exit(1)
     });
     println!(
-        "caspaxos node {id}: acceptor on {}, clients on {}",
+        "caspaxos node {id}: acceptor on {}, clients on {} ({shards} shard(s))",
         node.acceptor_addr, node.client_addr
     );
     // Serve until killed.

@@ -12,6 +12,16 @@
 //!
 //! Client batches route through the PJRT data plane ([`BatchProposer`])
 //! when AOT artifacts are available, scalar fallback otherwise.
+//!
+//! ## Sharded acceptor groups
+//!
+//! With a [`ShardPlan`] in [`NodeOpts::shard_plan`], the node runs one
+//! proposer (and one batch proposer) **per shard**, each bound to that
+//! shard's disjoint acceptor group, and routes every client key through
+//! the rendezvous [`ShardRouter`]. The acceptor service is unchanged —
+//! a node hosts one acceptor, and which shard that acceptor belongs to
+//! is entirely a property of the plan. Deletion GC collects each key
+//! against its owning group only ([`GcProcess::collect_all_with`]).
 
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
@@ -27,6 +37,7 @@ use crate::msg::Key;
 use crate::proposer::Proposer;
 use crate::quorum::ClusterConfig;
 use crate::runtime::auto_engine;
+use crate::shard::{ShardPlan, ShardRouter};
 use crate::state::Val;
 use crate::transport::tcp::{read_frame, serve_acceptor, write_frame, TcpTransport};
 
@@ -203,10 +214,13 @@ impl crate::gc::ProposerAdmin for RemoteProposer {
     fn id(&self) -> u64 {
         self.proposer_id
     }
-    fn gc_sync(&self, key: &Key, min_counter: u64) -> CasResult<u64> {
+    fn gc_sync(&self, key: &Key, min_counter: u64) -> CasResult<(u64, u64)> {
         let mut client = Client::connect(&self.addr)?;
         match client.call(&ClientReq::GcSync { key: key.clone(), min_counter })? {
-            ClientResp::Synced { age, .. } => Ok(age),
+            // A sharded peer syncs ALL its shard proposers and reports
+            // the (id, age) of the one owning `key` — exactly what the
+            // collector must fence on the key's acceptor group.
+            ClientResp::Synced { proposer_id, age } => Ok((proposer_id, age)),
             other => Err(CasError::Transport(format!("GcSync: unexpected {other:?}"))),
         }
     }
@@ -226,8 +240,11 @@ pub struct NodeOpts {
     /// Peer node id → client/admin address (for cross-node GC sync).
     /// May omit this node; single-node setups may leave it empty.
     pub client_peers: HashMap<u64, String>,
-    /// Protocol cluster config.
+    /// Protocol cluster config (the whole acceptor set; used verbatim
+    /// when `shard_plan` is `None`).
     pub cluster: ClusterConfig,
+    /// Acceptor sharding. `None` = one shard over `cluster` (classic).
+    pub shard_plan: Option<ShardPlan>,
     /// Durable storage directory (`None` = in-memory).
     pub data_dir: Option<String>,
 }
@@ -238,10 +255,28 @@ pub struct Node {
     pub acceptor_addr: std::net::SocketAddr,
     /// Bound client address.
     pub client_addr: std::net::SocketAddr,
-    /// The node's proposer (shared with the GC).
+    /// The shard-0 proposer (the only one in unsharded deployments).
     pub proposer: Arc<Proposer>,
+    /// One proposer per shard, indexed by shard id.
+    pub shard_proposers: Vec<Arc<Proposer>>,
     /// The node's GC process.
     pub gc: Arc<GcProcess>,
+}
+
+/// Everything the client service needs to route a request: the key→shard
+/// router plus the per-shard protocol handles.
+struct NodeCtx {
+    router: ShardRouter,
+    shards: Vec<ClusterConfig>,
+    proposers: Vec<Arc<Proposer>>,
+    batches: Vec<Arc<BatchProposer>>,
+    gc: Arc<GcProcess>,
+}
+
+impl NodeCtx {
+    fn proposer_for(&self, key: &str) -> &Arc<Proposer> {
+        &self.proposers[self.router.route(key)]
+    }
 }
 
 /// Starts acceptor + client services; returns the bound addresses.
@@ -269,26 +304,51 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         }
     }
 
-    // ---- proposer + batch + gc over the peer transport ----
+    // ---- per-shard proposers + batchers + gc over the peer transport ----
     let mut peers = opts.peers.clone();
     peers.insert(opts.id, acceptor_addr.to_string());
     let transport = Arc::new(TcpTransport::new(peers));
-    let proposer = Arc::new(Proposer::new(opts.id, opts.cluster.clone(), transport.clone()));
+    let plan = match &opts.shard_plan {
+        Some(plan) => plan.clone(),
+        None => ShardPlan::single(opts.cluster.clone()),
+    };
+    plan.validate()?;
     let engine = auto_engine();
-    let batch = Arc::new(BatchProposer::new(
-        opts.id + 10_000,
-        opts.cluster.clone(),
-        transport.clone(),
-        engine,
-    ));
+    let mut shard_proposers: Vec<Arc<Proposer>> = Vec::new();
+    let mut batches: Vec<Arc<BatchProposer>> = Vec::new();
+    for (s, cfg) in plan.shards.iter().enumerate() {
+        // Proposer ids must be globally unique per (node, shard). Shard 0
+        // keeps the historical `id == node id`, so unsharded deployments
+        // are identical to the pre-shard ones; batch proposers live in
+        // their own 500k block (assumes node ids < 1000, shards < ~100).
+        let pid = opts.id + (s as u64) * 1000;
+        shard_proposers.push(Arc::new(Proposer::new(pid, cfg.clone(), transport.clone())));
+        batches.push(Arc::new(BatchProposer::new(
+            500_000 + pid,
+            cfg.clone(),
+            transport.clone(),
+            Arc::clone(&engine),
+        )));
+    }
     // Distinct GC-proposer id per node (two GCs must never share
     // ballot identity).
-    let gc = Arc::new(GcProcess::with_id(transport, vec![proposer.clone()], 900_000 + opts.id));
+    let gc = Arc::new(GcProcess::with_id(
+        transport,
+        shard_proposers.clone(),
+        900_000 + opts.id,
+    ));
     for (&peer_id, addr) in &opts.client_peers {
         if peer_id != opts.id {
             gc.add_admin(Box::new(RemoteProposer { proposer_id: peer_id, addr: addr.clone() }));
         }
     }
+    let ctx = Arc::new(NodeCtx {
+        router: ShardRouter::new(plan.shard_count()),
+        shards: plan.shards.clone(),
+        proposers: shard_proposers.clone(),
+        batches,
+        gc: Arc::clone(&gc),
+    });
 
     // ---- client service ----
     let client_listener = TcpListener::bind(&opts.client_addr)
@@ -296,29 +356,23 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     let client_addr =
         client_listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
     {
-        let proposer = Arc::clone(&proposer);
-        let batch = Arc::clone(&batch);
-        let gc = Arc::clone(&gc);
-        let cluster = opts.cluster.clone();
+        let ctx = Arc::clone(&ctx);
         std::thread::spawn(move || loop {
             let Ok((stream, _)) = client_listener.accept() else { break };
-            let proposer = Arc::clone(&proposer);
-            let batch = Arc::clone(&batch);
-            let gc = Arc::clone(&gc);
-            let cluster = cluster.clone();
-            std::thread::spawn(move || serve_client(stream, proposer, batch, gc, cluster));
+            let ctx = Arc::clone(&ctx);
+            std::thread::spawn(move || serve_client(stream, ctx));
         });
     }
-    Ok(Node { acceptor_addr, client_addr, proposer, gc })
+    Ok(Node {
+        acceptor_addr,
+        client_addr,
+        proposer: shard_proposers[0].clone(),
+        shard_proposers,
+        gc,
+    })
 }
 
-fn serve_client(
-    mut stream: TcpStream,
-    proposer: Arc<Proposer>,
-    batch: Arc<BatchProposer>,
-    gc: Arc<GcProcess>,
-    cluster: ClusterConfig,
-) {
+fn serve_client(mut stream: TcpStream, ctx: Arc<NodeCtx>) {
     stream.set_nodelay(true).ok();
     loop {
         let req: Option<ClientReq> = match read_frame(&mut stream) {
@@ -326,60 +380,113 @@ fn serve_client(
             Err(_) => break,
         };
         let Some(req) = req else { break };
-        let resp = handle_client(&req, &proposer, &batch, &gc, &cluster);
+        let resp = handle_client(&req, &ctx);
         if write_frame(&mut stream, &resp).is_err() {
             break;
         }
     }
 }
 
-fn handle_client(
-    req: &ClientReq,
-    proposer: &Proposer,
-    batch: &BatchProposer,
-    gc: &GcProcess,
-    cluster: &ClusterConfig,
-) -> ClientResp {
+fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
     match req {
         ClientReq::Change { key, change } => {
-            match proposer.change_detailed(key.clone(), change.clone()) {
+            match ctx.proposer_for(key).change_detailed(key.clone(), change.clone()) {
                 Ok(out) if out.accepted => ClientResp::Val(out.state),
                 Ok(out) => ClientResp::Err(format!("rejected; current state is {}", out.state)),
                 Err(e) => ClientResp::Err(e.to_string()),
             }
         }
-        ClientReq::Batch { ops } => match batch.execute(ops) {
-            Ok(results) => ClientResp::Batch(
-                results.into_iter().map(|r| r.map_err(|e| e.to_string())).collect(),
-            ),
-            Err(e) => ClientResp::Err(e.to_string()),
-        },
-        ClientReq::Delete { key } => match proposer.delete(key.clone()) {
+        ClientReq::Batch { ops } => handle_batch(ops, ctx),
+        ClientReq::Delete { key } => match ctx.proposer_for(key).delete(key.clone()) {
             Ok(_) => {
-                gc.schedule(key.clone());
+                ctx.gc.schedule(key.clone());
                 ClientResp::Val(Val::Tombstone)
             }
             Err(e) => ClientResp::Err(e.to_string()),
         },
         ClientReq::Collect => {
-            let (ok, superseded, failed) = gc.collect_all(cluster);
+            // Each key is collected against its OWNING acceptor group;
+            // collecting against the union would smear registers onto
+            // foreign shards.
+            let (ok, superseded, failed) =
+                ctx.gc.collect_all_with(|key| ctx.shards[ctx.router.route(key)].clone());
             ClientResp::Status(format!("collected={ok} superseded={superseded} failed={failed}"))
         }
         ClientReq::GcSync { key, min_counter } => {
-            let age = proposer.gc_sync(key, *min_counter);
-            ClientResp::Synced { proposer_id: proposer.id(), age }
+            // Sync EVERY shard proposer on this node (caches and ballot
+            // counters are per-proposer state), but report the one that
+            // owns the key: its age is what the collector fences on the
+            // key's acceptor group.
+            let own = ctx.router.route(key);
+            let mut synced = (ctx.proposers[own].id(), 0);
+            for (s, p) in ctx.proposers.iter().enumerate() {
+                let age = p.gc_sync(key, *min_counter);
+                if s == own {
+                    synced = (p.id(), age);
+                }
+            }
+            ClientResp::Synced { proposer_id: synced.0, age: synced.1 }
         }
         ClientReq::Status => {
-            let [rounds, commits, conflicts, retries, cache_hits, failures] =
-                proposer.metrics.snapshot();
+            let mut snap = [0u64; 6];
+            for p in &ctx.proposers {
+                for (acc, v) in snap.iter_mut().zip(p.metrics.snapshot()) {
+                    *acc += v;
+                }
+            }
+            let [rounds, commits, conflicts, retries, cache_hits, failures] = snap;
             ClientResp::Status(format!(
-                "id={} rounds={rounds} commits={commits} conflicts={conflicts} \
+                "id={} shards={} rounds={rounds} commits={commits} conflicts={conflicts} \
                  retries={retries} cache_hits={cache_hits} failures={failures} gc_pending={}",
-                proposer.id(),
-                gc.pending()
+                ctx.proposers[0].id(),
+                ctx.shards.len(),
+                ctx.gc.pending()
             ))
         }
     }
+}
+
+/// Executes a client batch, splitting it across shards when needed and
+/// reassembling per-op results in the original order.
+fn handle_batch(ops: &[(Key, ChangeFn)], ctx: &NodeCtx) -> ClientResp {
+    if ctx.shards.len() == 1 {
+        return match ctx.batches[0].execute(ops) {
+            Ok(results) => ClientResp::Batch(
+                results.into_iter().map(|r| r.map_err(|e| e.to_string())).collect(),
+            ),
+            Err(e) => ClientResp::Err(e.to_string()),
+        };
+    }
+    let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); ctx.shards.len()];
+    for (i, (key, _)) in ops.iter().enumerate() {
+        by_shard[ctx.router.route(key)].push(i);
+    }
+    let mut results: Vec<Option<Result<Val, String>>> = Vec::new();
+    results.resize_with(ops.len(), || None);
+    for (s, idxs) in by_shard.iter().enumerate() {
+        if idxs.is_empty() {
+            continue;
+        }
+        let shard_ops: Vec<(Key, ChangeFn)> = idxs.iter().map(|&i| ops[i].clone()).collect();
+        match ctx.batches[s].execute(&shard_ops) {
+            Ok(rs) => {
+                for (&i, r) in idxs.iter().zip(rs.into_iter()) {
+                    results[i] = Some(r.map_err(|e| e.to_string()));
+                }
+            }
+            Err(e) => {
+                // Other shards' ops may already be durably applied, so a
+                // whole-batch error would hide partial application (and
+                // invite unsafe retries of non-idempotent ops). Report
+                // the failure per-op instead.
+                let msg = e.to_string();
+                for &i in idxs {
+                    results[i] = Some(Err(msg.clone()));
+                }
+            }
+        }
+    }
+    ClientResp::Batch(results.into_iter().map(|r| r.expect("every slot routed")).collect())
 }
 
 /// A minimal blocking client for the client protocol.
@@ -423,7 +530,7 @@ mod tests {
     use super::*;
     use crate::testkit::TempDir;
 
-    fn launch_cluster(n: u64, data: Option<&TempDir>) -> Vec<Node> {
+    fn launch_cluster_sharded(n: u64, shards: usize, data: Option<&TempDir>) -> Vec<Node> {
         // Two-phase bind: reserve acceptor AND client ports first so
         // every node knows every peer address before starting (a bind
         // learns a free port, releases it, the node re-binds — benign
@@ -435,6 +542,11 @@ mod tests {
         let peers: HashMap<u64, String> = (1..=n).map(|id| (id, reserve())).collect();
         let client_peers: HashMap<u64, String> = (1..=n).map(|id| (id, reserve())).collect();
         let cluster = ClusterConfig::majority(1, (1..=n).collect());
+        let shard_plan = if shards > 1 {
+            Some(ShardPlan::partition((1..=n).collect(), shards, None).unwrap())
+        } else {
+            None
+        };
         (1..=n)
             .map(|id| {
                 start_node(NodeOpts {
@@ -444,11 +556,16 @@ mod tests {
                     peers: peers.clone(),
                     client_peers: client_peers.clone(),
                     cluster: cluster.clone(),
+                    shard_plan: shard_plan.clone(),
                     data_dir: data.map(|d| d.path().to_str().unwrap().to_string()),
                 })
                 .unwrap()
             })
             .collect()
+    }
+
+    fn launch_cluster(n: u64, data: Option<&TempDir>) -> Vec<Node> {
+        launch_cluster_sharded(n, 1, data)
     }
 
     #[test]
@@ -510,6 +627,49 @@ mod tests {
         assert_eq!(c2.get("k").unwrap(), Val::Empty, "erased after GC");
         // Status works.
         assert!(matches!(c.call(&ClientReq::Status).unwrap(), ClientResp::Status(_)));
+    }
+
+    #[test]
+    fn sharded_node_cluster_routes_shards() {
+        // 6 nodes carved into 2 shards of 3 acceptors each.
+        let nodes = launch_cluster_sharded(6, 2, None);
+        assert_eq!(nodes[0].shard_proposers.len(), 2);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        for i in 0..12 {
+            c.change(&format!("k{i}"), ChangeFn::Set(i as i64)).unwrap();
+        }
+        // Any node serves any key, regardless of which shard hosts it.
+        let mut c2 = Client::connect(&nodes[4].client_addr.to_string()).unwrap();
+        for i in 0..12 {
+            assert_eq!(c2.get(&format!("k{i}")).unwrap().as_num(), Some(i as i64));
+        }
+        // A batch spanning both shards reassembles in order.
+        let resp = c
+            .call(&ClientReq::Batch {
+                ops: (0..12).map(|i| (format!("k{i}"), ChangeFn::Add(100))).collect(),
+            })
+            .unwrap();
+        match resp {
+            ClientResp::Batch(items) => {
+                assert_eq!(items.len(), 12);
+                for (i, item) in items.iter().enumerate() {
+                    assert_eq!(item.as_ref().unwrap().as_num(), Some(100 + i as i64));
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // Delete + routed collect, through a different node than the
+        // writer (exercises the cross-node, cross-shard GcSync path).
+        c2.call(&ClientReq::Delete { key: "k0".into() }).unwrap();
+        match c2.call(&ClientReq::Collect).unwrap() {
+            ClientResp::Status(s) => assert!(s.contains("collected=1"), "{s}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.get("k0").unwrap(), Val::Empty, "erased after GC");
+        match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => assert!(s.contains("shards=2"), "{s}"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,582 @@
+//! Sharded acceptor groups: horizontal scaling of the acceptor plane.
+//!
+//! The paper's §3 "hashtable of RSMs" spreads *keys* across proposers,
+//! but every register still lives on the same 2F+1 acceptors — acceptor
+//! CPU and storage are the scaling wall. Compartmentalization (Whittaker
+//! et al., PAPERS.md) shows the fix: decouple and *shard* the acceptor
+//! plane. Because CASPaxos registers are already independent RSMs, the
+//! key space can be partitioned across N disjoint acceptor groups with
+//! no cross-shard coordination at all — safety per register is untouched
+//! (each register runs classic Synod inside one group), and disjoint-key
+//! throughput scales with the number of groups.
+//!
+//! The pieces:
+//!
+//! * [`ShardRouter`] — deterministic rendezvous (highest-random-weight)
+//!   hashing from key to shard index. Rendezvous rather than modulo so
+//!   that growing the shard count only moves the keys that land on the
+//!   new shard (minimal-disruption rebalancing, the substrate for a
+//!   future live-migration PR).
+//! * [`ShardPlan`] — the deployment-level description: one
+//!   [`ClusterConfig`] per shard over **disjoint** acceptor sets, each
+//!   with its own quorum spec (per-shard FPaxos tuning is allowed).
+//! * [`ShardedKv`] — the §3 hashtable of RSMs over a sharded acceptor
+//!   plane: routes each key to its shard's proposer pool. Shards share
+//!   nothing but the transport. [`crate::kv::KvStore`] is a thin façade
+//!   over this type (a classic deployment is the 1-shard special case).
+//!
+//! Construction sweeps live in [`crate::cluster::ShardedMemCluster`]
+//! (in-process), [`crate::sim::worlds`] (discrete-event simulation) and
+//! `benches/sharded_throughput.rs` (the E4-style scaling bench).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashSet;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use crate::change::ChangeFn;
+use crate::error::{CasError, CasResult};
+use crate::msg::Key;
+use crate::proposer::{Proposer, ProposerOpts};
+use crate::quorum::{ClusterConfig, QuorumSpec};
+use crate::state::Val;
+use crate::transport::Transport;
+
+/// First proposer id handed out by [`ShardedKv`] pools (clear of
+/// acceptor ids, matches the historical `KvStore` base).
+pub const PROPOSER_ID_BASE: u64 = 1000;
+
+/// FNV-1a digest of a key — deterministic across platforms and builds,
+/// unlike `DefaultHasher` (routing must be stable for operability:
+/// debugging "which shard owns this key" must not depend on the binary).
+fn key_digest(key: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// SplitMix64 finalizer — mixes a key digest with a shard seed into the
+/// rendezvous score.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Rendezvous (highest-random-weight) router from keys to shard indices.
+///
+/// Properties (tested in this module and `tests/chaos.rs`):
+///
+/// * **stable** — same key always routes to the same shard;
+/// * **balanced** — keys spread near-uniformly across shards;
+/// * **monotone** — going from N to N+1 shards only moves keys whose
+///   highest score is on the new shard (≈ 1/(N+1) of the key space).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardRouter {
+    /// One rendezvous seed per shard.
+    seeds: Vec<u64>,
+}
+
+impl ShardRouter {
+    /// Router over `n_shards` shards (indices `0..n_shards`).
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards > 0, "need at least one shard");
+        ShardRouter { seeds: (0..n_shards as u64).map(|i| mix(0x5EED ^ i)).collect() }
+    }
+
+    /// Number of shards routed over.
+    pub fn shards(&self) -> usize {
+        self.seeds.len()
+    }
+
+    /// The shard index that owns `key`.
+    pub fn route(&self, key: &str) -> usize {
+        let digest = key_digest(key);
+        let mut best = 0;
+        let mut best_score = 0u64;
+        for (i, &seed) in self.seeds.iter().enumerate() {
+            let score = mix(digest ^ seed);
+            if i == 0 || score > best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        best
+    }
+}
+
+/// A deployment-level sharding description: one [`ClusterConfig`] per
+/// shard, acceptor sets pairwise disjoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Per-shard cluster configurations, indexed by shard id.
+    pub shards: Vec<ClusterConfig>,
+}
+
+impl ShardPlan {
+    /// The classic unsharded deployment: one shard, the whole cluster.
+    pub fn single(cfg: ClusterConfig) -> Self {
+        ShardPlan { shards: vec![cfg] }
+    }
+
+    /// Partitions `acceptors` into `n_shards` contiguous groups (by
+    /// sorted id). Each shard gets `quorum` as its `(prepare, accept)`
+    /// spec when given (requires equal shard sizes), majority otherwise.
+    pub fn partition(
+        mut acceptors: Vec<u64>,
+        n_shards: usize,
+        quorum: Option<(usize, usize)>,
+    ) -> CasResult<Self> {
+        if n_shards == 0 {
+            return Err(CasError::Config("shard count must be at least 1".into()));
+        }
+        if acceptors.is_empty() || acceptors.len() < n_shards {
+            return Err(CasError::Config(format!(
+                "cannot carve {} acceptors into {} shards",
+                acceptors.len(),
+                n_shards
+            )));
+        }
+        if quorum.is_some() && acceptors.len() % n_shards != 0 {
+            return Err(CasError::Config(
+                "explicit per-shard quorum requires equal shard sizes".into(),
+            ));
+        }
+        acceptors.sort_unstable();
+        acceptors.dedup();
+        let n = acceptors.len();
+        let base = n / n_shards;
+        let extra = n % n_shards;
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut next = 0usize;
+        for s in 0..n_shards {
+            let size = base + usize::from(s < extra);
+            let group: Vec<u64> = acceptors[next..next + size].to_vec();
+            next += size;
+            let spec = match quorum {
+                Some((p, a)) => QuorumSpec::flexible(size, p, a)?,
+                None => QuorumSpec::majority(size),
+            };
+            shards.push(ClusterConfig { epoch: 1, acceptors: group, quorum: spec });
+        }
+        let plan = ShardPlan { shards };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Validates every shard config and the pairwise disjointness of
+    /// their acceptor sets (the share-nothing invariant).
+    pub fn validate(&self) -> CasResult<()> {
+        if self.shards.is_empty() {
+            return Err(CasError::Config("shard plan has no shards".into()));
+        }
+        let mut seen: HashSet<u64> = HashSet::new();
+        for (s, cfg) in self.shards.iter().enumerate() {
+            cfg.validate()?;
+            for &a in &cfg.acceptors {
+                if !seen.insert(a) {
+                    return Err(CasError::Config(format!(
+                        "acceptor {a} appears in more than one shard (shard {s})"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// All acceptor ids across every shard, sorted.
+    pub fn all_acceptors(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.shards.iter().flat_map(|c| c.acceptors.iter().copied()).collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+/// One shard's live handles: its config plus a proposer pool bound to
+/// the shared transport.
+pub struct ShardHandle {
+    cfg: ClusterConfig,
+    proposers: Vec<Arc<Proposer>>,
+}
+
+impl ShardHandle {
+    /// Builds a shard's proposer pool. `id_base` is the first proposer
+    /// id to hand out (ids must be unique across the whole deployment).
+    pub fn new(
+        cfg: ClusterConfig,
+        transport: Arc<dyn Transport>,
+        n_proposers: usize,
+        opts: ProposerOpts,
+        id_base: u64,
+    ) -> Self {
+        assert!(n_proposers > 0, "need at least one proposer per shard");
+        let proposers = (0..n_proposers)
+            .map(|i| {
+                Arc::new(Proposer::with_opts(
+                    id_base + i as u64,
+                    cfg.clone(),
+                    Arc::clone(&transport),
+                    opts.clone(),
+                ))
+            })
+            .collect();
+        ShardHandle { cfg, proposers }
+    }
+
+    /// Wraps an existing proposer pool (all proposers must share the
+    /// shard's config).
+    pub fn from_proposers(proposers: Vec<Arc<Proposer>>) -> Self {
+        assert!(!proposers.is_empty());
+        let cfg = proposers[0].config();
+        ShardHandle { cfg, proposers }
+    }
+
+    /// This shard's cluster configuration.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// This shard's proposer pool.
+    pub fn proposers(&self) -> &[Arc<Proposer>] {
+        &self.proposers
+    }
+
+    /// The pool proposer that owns `key` (stable hash routing keeps
+    /// same-key traffic on the 1-RTT path, §2.2.1).
+    pub fn proposer_for(&self, key: &str) -> &Arc<Proposer> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.proposers[(h.finish() % self.proposers.len() as u64) as usize]
+    }
+}
+
+/// The §3 hashtable of RSMs over a sharded acceptor plane: every key is
+/// an independent CASPaxos register hosted by exactly one shard's
+/// acceptor group. Shards share nothing but the transport.
+pub struct ShardedKv {
+    router: ShardRouter,
+    shards: Vec<ShardHandle>,
+}
+
+impl ShardedKv {
+    /// Builds the store with `proposers_per_shard` proposers per shard
+    /// and default proposer options.
+    pub fn new(
+        plan: ShardPlan,
+        transport: Arc<dyn Transport>,
+        proposers_per_shard: usize,
+    ) -> CasResult<Self> {
+        Self::with_opts(plan, transport, proposers_per_shard, ProposerOpts::default())
+    }
+
+    /// Builds the store with explicit proposer options.
+    pub fn with_opts(
+        plan: ShardPlan,
+        transport: Arc<dyn Transport>,
+        proposers_per_shard: usize,
+        opts: ProposerOpts,
+    ) -> CasResult<Self> {
+        plan.validate()?;
+        let shards: Vec<ShardHandle> = plan
+            .shards
+            .into_iter()
+            .enumerate()
+            .map(|(s, cfg)| {
+                let id_base = PROPOSER_ID_BASE + (s * proposers_per_shard) as u64;
+                ShardHandle::new(cfg, Arc::clone(&transport), proposers_per_shard, opts.clone(), id_base)
+            })
+            .collect();
+        Ok(ShardedKv { router: ShardRouter::new(shards.len()), shards })
+    }
+
+    /// Wraps pre-built shard handles (shared proposers, tests, admin).
+    pub fn from_shards(shards: Vec<ShardHandle>) -> Self {
+        assert!(!shards.is_empty());
+        ShardedKv { router: ShardRouter::new(shards.len()), shards }
+    }
+
+    /// The key→shard router.
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// The shard index that owns `key`.
+    pub fn shard_for(&self, key: &str) -> usize {
+        self.router.route(key)
+    }
+
+    /// All shard handles, indexed by shard id.
+    pub fn shards(&self) -> &[ShardHandle] {
+        &self.shards
+    }
+
+    /// The cluster config of the shard that owns `key` (GC and admin
+    /// tooling must target the owning group, not the union).
+    pub fn config_for(&self, key: &str) -> &ClusterConfig {
+        self.shards[self.shard_for(key)].config()
+    }
+
+    /// The proposer that owns `key`: shard by rendezvous hash, then pool
+    /// slot by stable hash.
+    pub fn proposer_for(&self, key: &str) -> &Arc<Proposer> {
+        self.shards[self.shard_for(key)].proposer_for(key)
+    }
+
+    /// Every proposer across all shards (admin: membership changes and
+    /// GC registration must reach each one).
+    pub fn all_proposers(&self) -> Vec<Arc<Proposer>> {
+        self.shards.iter().flat_map(|s| s.proposers.iter().cloned()).collect()
+    }
+
+    /// Applies `f` to every proposer of every shard.
+    pub fn for_each_proposer(&self, mut f: impl FnMut(&Arc<Proposer>)) {
+        for shard in &self.shards {
+            for p in &shard.proposers {
+                f(p);
+            }
+        }
+    }
+
+    // ---- the KV surface (§2.2 specializations, routed per key) ----
+
+    /// Linearizable read. `Ok(None)` for absent/deleted keys.
+    pub fn get(&self, key: &str) -> CasResult<Option<Val>> {
+        let v = self.proposer_for(key).get(key)?;
+        Ok(match v {
+            Val::Empty | Val::Tombstone => None,
+            other => Some(other),
+        })
+    }
+
+    /// Unconditional write.
+    pub fn set(&self, key: &str, val: i64) -> CasResult<Val> {
+        self.proposer_for(key).set(key, val)
+    }
+
+    /// Compare-and-swap by version.
+    pub fn cas(&self, key: &str, expect: i64, val: i64) -> CasResult<Val> {
+        self.proposer_for(key).cas(key, expect, val)
+    }
+
+    /// Atomic increment.
+    pub fn add(&self, key: &str, delta: i64) -> CasResult<Val> {
+        self.proposer_for(key).add(key, delta)
+    }
+
+    /// Arbitrary change function.
+    pub fn change(&self, key: &str, f: ChangeFn) -> CasResult<Val> {
+        self.proposer_for(key).change(key, f)
+    }
+
+    /// Deletion step 1 (§3.1): write the tombstone on the owning shard.
+    pub fn delete(&self, key: &str) -> CasResult<()> {
+        self.proposer_for(key).delete(key)?;
+        Ok(())
+    }
+
+    /// Routed config lookup for the GC driver: owning shard's config by
+    /// key (see [`crate::gc::GcProcess::collect_all_with`]).
+    pub fn config_fn(&self) -> impl Fn(&Key) -> ClusterConfig + '_ {
+        move |key: &Key| self.config_for(key).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::mem::MemTransport;
+
+    fn sharded(n_shards: usize, per_shard: usize, proposers: usize) -> (ShardedKv, Arc<MemTransport>) {
+        let t = Arc::new(MemTransport::new(n_shards * per_shard));
+        let plan = ShardPlan::partition(t.acceptor_ids(), n_shards, None).unwrap();
+        let kv = ShardedKv::new(plan, t.clone(), proposers).unwrap();
+        (kv, t)
+    }
+
+    #[test]
+    fn router_is_stable() {
+        let r = ShardRouter::new(4);
+        for i in 0..100 {
+            let key = format!("key-{i}");
+            let first = r.route(&key);
+            for _ in 0..5 {
+                assert_eq!(r.route(&key), first, "routing must be deterministic");
+            }
+            // A separately constructed router agrees (no per-instance state).
+            assert_eq!(ShardRouter::new(4).route(&key), first);
+        }
+    }
+
+    #[test]
+    fn router_balances_keys() {
+        // Chi-squared-ish check: 10k keys over 8 shards; every bucket
+        // within ±20% of uniform and the chi² statistic far below the
+        // df=7 rejection region for any sane significance level.
+        let shards = 8usize;
+        let n = 10_000usize;
+        let r = ShardRouter::new(shards);
+        let mut counts = vec![0u64; shards];
+        for i in 0..n {
+            counts[r.route(&format!("user/{i}/profile"))] += 1;
+        }
+        let expected = (n / shards) as f64;
+        let mut chi2 = 0.0;
+        for &c in &counts {
+            let d = c as f64 - expected;
+            chi2 += d * d / expected;
+            assert!(
+                (c as f64) > expected * 0.8 && (c as f64) < expected * 1.2,
+                "bucket {c} outside ±20% of {expected}: {counts:?}"
+            );
+        }
+        assert!(chi2 < 40.0, "chi²={chi2} suggests a skewed router: {counts:?}");
+    }
+
+    #[test]
+    fn router_growth_is_monotone() {
+        // Rendezvous property: adding a shard only moves keys TO the new
+        // shard; keys staying on old shards keep their placement.
+        let r4 = ShardRouter::new(4);
+        let r5 = ShardRouter::new(5);
+        let mut moved = 0usize;
+        let n = 2_000usize;
+        for i in 0..n {
+            let key = format!("k{i}");
+            let (old, new) = (r4.route(&key), r5.route(&key));
+            if old != new {
+                assert_eq!(new, 4, "key may only move to the NEW shard");
+                moved += 1;
+            }
+        }
+        // ≈ n/5 keys move; allow a generous band.
+        assert!(moved > n / 10 && moved < n / 3, "moved {moved} of {n}");
+    }
+
+    #[test]
+    fn plan_partitions_disjointly() {
+        let plan = ShardPlan::partition((1..=12).collect(), 4, None).unwrap();
+        assert_eq!(plan.shard_count(), 4);
+        let mut seen = HashSet::new();
+        for cfg in &plan.shards {
+            assert_eq!(cfg.acceptors.len(), 3);
+            assert_eq!(cfg.quorum, QuorumSpec::majority(3));
+            for &a in &cfg.acceptors {
+                assert!(seen.insert(a), "acceptor {a} in two shards");
+            }
+        }
+        assert_eq!(plan.all_acceptors(), (1..=12).collect::<Vec<u64>>());
+        // Uneven split: 7 acceptors into 2 shards -> 4 + 3.
+        let plan = ShardPlan::partition((1..=7).collect(), 2, None).unwrap();
+        assert_eq!(plan.shards[0].acceptors.len(), 4);
+        assert_eq!(plan.shards[1].acceptors.len(), 3);
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn plan_rejects_bad_inputs() {
+        assert!(ShardPlan::partition(vec![], 1, None).is_err(), "no acceptors");
+        assert!(ShardPlan::partition(vec![1, 2], 3, None).is_err(), "more shards than nodes");
+        assert!(ShardPlan::partition((1..=6).collect(), 2, Some((1, 1))).is_err(), "bad quorum");
+        assert!(
+            ShardPlan::partition((1..=7).collect(), 2, Some((2, 2))).is_err(),
+            "explicit quorum with uneven shards"
+        );
+        // Overlapping handcrafted plan is rejected.
+        let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+        let plan = ShardPlan { shards: vec![cfg.clone(), cfg] };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn plan_with_flexible_per_shard_quorums() {
+        let plan = ShardPlan::partition((1..=8).collect(), 2, Some((2, 3))).unwrap();
+        for cfg in &plan.shards {
+            assert_eq!(cfg.quorum, QuorumSpec { nodes: 4, prepare: 2, accept: 3 });
+        }
+    }
+
+    #[test]
+    fn sharded_kv_round_trips() {
+        let (kv, _t) = sharded(4, 3, 2);
+        for i in 0..40 {
+            kv.set(&format!("k{i}"), i).unwrap();
+        }
+        for i in 0..40 {
+            assert_eq!(kv.get(&format!("k{i}")).unwrap().unwrap().as_num(), Some(i));
+        }
+        assert_eq!(kv.get("missing").unwrap(), None);
+        kv.delete("k0").unwrap();
+        assert_eq!(kv.get("k0").unwrap(), None);
+    }
+
+    #[test]
+    fn keys_live_only_on_their_shard() {
+        let (kv, t) = sharded(4, 3, 1);
+        for i in 0..60 {
+            kv.set(&format!("k{i}"), i).unwrap();
+        }
+        // Every register must live on exactly the acceptors of one shard:
+        // totals per shard add up to 60 with no double-hosting.
+        let mut total = 0usize;
+        for cfg in kv.shards().iter().map(|s| s.config()) {
+            let counts: Vec<usize> =
+                cfg.acceptors.iter().map(|&a| t.register_count(a).unwrap()).collect();
+            // Majority writes: every acceptor of the shard converges to
+            // the same register count eventually; with the mem transport
+            // all 3 get every accept.
+            assert!(counts.windows(2).all(|w| w[0] == w[1]), "uneven within shard: {counts:?}");
+            total += counts[0];
+        }
+        assert_eq!(total, 60, "each key hosted by exactly one shard");
+    }
+
+    #[test]
+    fn shard_proposer_ids_are_globally_unique() {
+        let (kv, _t) = sharded(4, 3, 3);
+        let mut ids = HashSet::new();
+        kv.for_each_proposer(|p| {
+            assert!(ids.insert(p.id()), "duplicate proposer id {}", p.id());
+        });
+        assert_eq!(ids.len(), 12);
+    }
+
+    #[test]
+    fn cross_shard_independence_under_faults() {
+        // Killing a whole shard's acceptors must not affect other shards.
+        let (kv, t) = sharded(2, 3, 1);
+        // Find a key on each shard.
+        let mut on0 = None;
+        let mut on1 = None;
+        for i in 0..100 {
+            let k = format!("k{i}");
+            match kv.shard_for(&k) {
+                0 if on0.is_none() => on0 = Some(k),
+                1 if on1.is_none() => on1 = Some(k),
+                _ => {}
+            }
+            if on0.is_some() && on1.is_some() {
+                break;
+            }
+        }
+        let (k0, k1) = (on0.unwrap(), on1.unwrap());
+        kv.set(&k0, 1).unwrap();
+        kv.set(&k1, 2).unwrap();
+        // Kill shard 1 entirely.
+        let dead: Vec<u64> = kv.shards()[1].config().acceptors.clone();
+        for &a in &dead {
+            t.set_down(a, true);
+        }
+        assert_eq!(kv.get(&k0).unwrap().unwrap().as_num(), Some(1), "shard 0 unaffected");
+        kv.set(&k0, 7).unwrap();
+        assert_eq!(kv.get(&k0).unwrap().unwrap().as_num(), Some(7));
+    }
+}

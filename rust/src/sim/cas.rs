@@ -17,9 +17,11 @@ use crate::acceptor::Acceptor;
 use crate::ballot::BallotGenerator;
 use crate::change::ChangeFn;
 use crate::error::CasError;
+use crate::linearizability::{History, Observed};
 use crate::msg::{Key, ProposerId, Request, Response};
 use crate::proposer::{RoundCore, RttCache, Step};
 use crate::quorum::ClusterConfig;
+use crate::rng::Rng;
 use crate::state::Val;
 
 use super::{Actor, Ctx, NodeId, SimTime};
@@ -358,6 +360,182 @@ impl Actor<CasMsg> for ClientActor {
     }
 }
 
+/// A history-recording client for linearizability testing: runs random
+/// changes over a small key set and records invoke/complete timestamps
+/// into a shared [`History`]. Rounds that fail or time out are left
+/// with *unknown* outcome — a conflicted accept may still have landed
+/// on a minority and be chosen later, which is exactly the ambiguity
+/// the Wing&Gong checker models. The 1-RTT cache is deliberately off:
+/// fresh prepare phases maximize the interleavings under test.
+///
+/// Used by `tests/chaos.rs` and the `jepsen_sim` example; wired into
+/// multi-shard worlds by [`crate::sim::worlds`].
+pub struct HistClient {
+    id: u64,
+    cfg: ClusterConfig,
+    gen: BallotGenerator,
+    history: Arc<History>,
+    rng: Rng,
+    ops_left: u32,
+    round: u64,
+    core: Option<RoundCore>,
+    current_op: Option<u64>,
+    keys: Vec<Key>,
+    round_timeout: SimTime,
+    max_think: SimTime,
+}
+
+impl HistClient {
+    /// Creates a client issuing `ops` random changes over `keys` against
+    /// `cfg`, recording into `history`. `seed` drives op selection and
+    /// think time.
+    pub fn new(
+        id: u64,
+        cfg: ClusterConfig,
+        history: Arc<History>,
+        seed: u64,
+        ops: u32,
+        keys: Vec<Key>,
+    ) -> Self {
+        assert!(!keys.is_empty());
+        HistClient {
+            id,
+            cfg,
+            gen: BallotGenerator::new(id),
+            history,
+            rng: Rng::new(seed),
+            ops_left: ops,
+            round: 0,
+            core: None,
+            current_op: None,
+            keys,
+            round_timeout: 400_000,
+            max_think: 30_000,
+        }
+    }
+
+    /// Sets the per-round abandon timeout (virtual µs).
+    pub fn with_round_timeout(mut self, timeout: SimTime) -> Self {
+        self.round_timeout = timeout;
+        self
+    }
+
+    /// Sets the maximum think time between ops (virtual µs). Larger
+    /// values spread the workload across a longer wall of virtual time —
+    /// chaos drivers use this to guarantee op/fault overlap.
+    pub fn with_think_time(mut self, max_think: SimTime) -> Self {
+        assert!(max_think > 0);
+        self.max_think = max_think;
+        self
+    }
+
+    fn random_change(&mut self) -> ChangeFn {
+        match self.rng.gen_range(4) {
+            0 => ChangeFn::Read,
+            1 => ChangeFn::Add(1 + self.rng.gen_range(9) as i64),
+            2 => ChangeFn::Set(self.rng.gen_range(100) as i64),
+            _ => ChangeFn::InitIfEmpty(7),
+        }
+    }
+
+    fn start_op(&mut self, ctx: &mut Ctx<CasMsg>) {
+        if self.ops_left == 0 {
+            return;
+        }
+        self.ops_left -= 1;
+        let key = self.keys[self.rng.gen_range(self.keys.len() as u64) as usize].clone();
+        let change = self.random_change();
+        let op_id = self.history.invoke(self.id, key.clone(), change.clone(), ctx.now());
+        self.current_op = Some(op_id);
+        self.round += 1;
+        let ballot = self.gen.next();
+        let (core, msgs) = RoundCore::new(
+            key,
+            change,
+            ballot,
+            ProposerId::new(self.id),
+            self.cfg.clone(),
+            false, // no cache: maximize interleavings under test
+        );
+        let token = core.token();
+        self.core = Some(core);
+        let round = self.round;
+        for (to, req) in msgs {
+            ctx.send(to, CasMsg::Req { round, token, req });
+        }
+        ctx.set_timer(self.round_timeout, TAG_ROUND_TIMEOUT_BASE + round);
+    }
+
+    fn schedule_next(&mut self, ctx: &mut Ctx<CasMsg>) {
+        let delay = 1_000 + ctx.rng.gen_range(self.max_think);
+        ctx.set_timer(delay, TAG_RETRY);
+    }
+}
+
+impl Actor<CasMsg> for HistClient {
+    fn on_start(&mut self, ctx: &mut Ctx<CasMsg>) {
+        self.schedule_next(ctx);
+    }
+
+    fn on_msg(&mut self, ctx: &mut Ctx<CasMsg>, from: NodeId, msg: CasMsg) {
+        let CasMsg::Resp { round, token, resp } = msg else { return };
+        if round != self.round {
+            return; // stale round
+        }
+        let Some(core) = self.core.as_mut() else { return };
+        match core.on_reply(token, from, Some(resp)) {
+            Step::Continue => {}
+            Step::Send(more) => {
+                let token = core.token();
+                for (to, req) in more {
+                    ctx.send(to, CasMsg::Req { round, token, req });
+                }
+            }
+            Step::Done(result) => {
+                self.core = None;
+                let op_id = self.current_op.take().expect("op in flight");
+                match result {
+                    Ok(out) => {
+                        self.history.complete(
+                            op_id,
+                            Observed { state: out.state, accepted: out.accepted },
+                            ctx.now(),
+                        );
+                    }
+                    Err(CasError::Conflict(seen)) => {
+                        // Outcome known-not-applied? NO — our accept may
+                        // have landed on a minority. Leave as unknown.
+                        self.gen.fast_forward(seen);
+                        self.history.fail(op_id);
+                    }
+                    Err(_) => self.history.fail(op_id),
+                }
+                self.schedule_next(ctx);
+            }
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx<CasMsg>, tag: u64) {
+        if tag == TAG_RETRY {
+            if self.core.is_none() {
+                self.start_op(ctx);
+            } else {
+                self.schedule_next(ctx);
+            }
+        } else if tag >= TAG_ROUND_TIMEOUT_BASE {
+            let round = tag - TAG_ROUND_TIMEOUT_BASE;
+            if round == self.round && self.core.is_some() {
+                // Abandon: outcome unknown (already recorded as such).
+                self.core = None;
+                if let Some(op) = self.current_op.take() {
+                    self.history.fail(op);
+                }
+                self.schedule_next(ctx);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -467,6 +645,36 @@ mod tests {
             v
         };
         assert_eq!(run(9), run(9), "same seed, same trace");
+    }
+
+    #[test]
+    fn hist_client_records_complete_linearizable_history() {
+        let mut w = World::new(NetModel::uniform(5_000), 3);
+        for id in 1..=3 {
+            w.add_node(id, Region(0), Box::new(AcceptorActor::new(id)));
+        }
+        let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+        let history = Arc::new(History::new());
+        for c in 0..3u64 {
+            let client = HistClient::new(
+                200 + c,
+                cfg.clone(),
+                Arc::clone(&history),
+                77 ^ c,
+                10,
+                vec!["x".into()],
+            );
+            w.add_node(200 + c, Region(0), Box::new(client));
+        }
+        w.start();
+        w.run_to_quiescence();
+        assert_eq!(history.len(), 30, "every op invoked exactly once");
+        let done = history.snapshot().iter().filter(|o| o.complete.is_some()).count();
+        assert_eq!(done, 30, "fault-free world completes every op");
+        assert!(matches!(
+            crate::linearizability::check(&history),
+            crate::linearizability::CheckResult::Linearizable
+        ));
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 pub mod cas;
 pub mod net;
+pub mod worlds;
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};

@@ -1,0 +1,221 @@
+//! Pre-wired simulation worlds: single- and multi-shard CASPaxos
+//! clusters under the discrete-event engine.
+//!
+//! The shard plane ([`crate::shard`]) needs E4-style experiments that
+//! sweep the shard count, and the chaos suite (`tests/chaos.rs`) needs
+//! the same topology under fault schedules. Both get it from here, so
+//! the topology under test is defined exactly once:
+//!
+//! * acceptors `1..=shards*acceptors_per_shard`, carved contiguously by
+//!   [`ShardPlan::partition`] (the same carve [`crate::config`] uses);
+//! * within a shard, acceptor *i* sits in `Region(i % 3)` — region
+//!   partitions therefore cut through every shard at once, the worst
+//!   case for a share-nothing design;
+//! * per-shard clients bound to that shard's config; key names are
+//!   prefixed `s{shard}-` so every register name is globally unique.
+//!
+//! [`sharded_add_world`] runs the closed-loop Add workload
+//! ([`ClientActor`], per-client private keys — disjoint-key scaling);
+//! [`sharded_chaos_world`] runs history-recording random ops
+//! ([`HistClient`], keys shared within a shard — linearizability under
+//! contention).
+
+use std::sync::Arc;
+
+use crate::linearizability::History;
+use crate::msg::Key;
+use crate::rng::Rng;
+use crate::shard::ShardPlan;
+use crate::sim::cas::{AcceptorActor, CasMsg, ClientActor, ClientStats, HistClient, Workload};
+use crate::sim::{NetModel, Region, World};
+
+/// First simulator node id used for clients (acceptors sit below).
+pub const CLIENT_ID_BASE: u64 = 1000;
+
+/// Topology and workload shape for a sharded sim world.
+#[derive(Debug, Clone)]
+pub struct ShardedWorldOpts {
+    /// Number of disjoint acceptor groups.
+    pub shards: usize,
+    /// Acceptors per group (2F+1 within the group).
+    pub acceptors_per_shard: usize,
+    /// Clients bound to each group.
+    pub clients_per_shard: usize,
+    /// Operations (or iterations) per client.
+    pub ops_per_client: u32,
+    /// Shared keys per group (chaos worlds only).
+    pub keys_per_shard: usize,
+    /// Link model for every node pair.
+    pub net: NetModel,
+}
+
+impl Default for ShardedWorldOpts {
+    fn default() -> Self {
+        ShardedWorldOpts {
+            shards: 1,
+            acceptors_per_shard: 3,
+            clients_per_shard: 2,
+            ops_per_client: 15,
+            keys_per_shard: 2,
+            net: NetModel::uniform(5_000),
+        }
+    }
+}
+
+impl ShardedWorldOpts {
+    /// The shard plan this topology induces.
+    pub fn plan(&self) -> ShardPlan {
+        let n = (self.shards * self.acceptors_per_shard) as u64;
+        ShardPlan::partition((1..=n).collect(), self.shards, None)
+            .expect("contiguous carve of fresh ids is valid")
+    }
+
+    fn client_id(&self, shard: usize, client: usize) -> u64 {
+        assert!(self.clients_per_shard <= 100, "client id space is 100 per shard");
+        CLIENT_ID_BASE + (shard * 100 + client) as u64
+    }
+}
+
+/// A built world plus the handles the driver needs.
+pub struct ShardedWorld<S> {
+    /// The simulation world (start/run/fault-inject from the driver).
+    pub world: World<CasMsg>,
+    /// The shard plan (per-shard configs; acceptor ids for the nemesis).
+    pub plan: ShardPlan,
+    /// Per-client harvestable handles (stats or histories), outer index
+    /// = shard, inner = client.
+    pub handles: Vec<Vec<S>>,
+}
+
+fn add_acceptors(world: &mut World<CasMsg>, plan: &ShardPlan) {
+    for cfg in &plan.shards {
+        for (i, &a) in cfg.acceptors.iter().enumerate() {
+            world.add_node(a, Region(i % 3), Box::new(AcceptorActor::new(a)));
+        }
+    }
+}
+
+/// Builds the disjoint-key scaling world: every client runs the
+/// closed-loop `Add` workload on its own private key against its own
+/// shard. Sweeping `opts.shards` with everything else fixed measures
+/// how aggregate throughput scales with acceptor groups (E4 for the
+/// shard plane).
+pub fn sharded_add_world(
+    opts: &ShardedWorldOpts,
+    seed: u64,
+) -> ShardedWorld<Arc<ClientStats>> {
+    let plan = opts.plan();
+    let mut world = World::new(opts.net.clone(), seed);
+    add_acceptors(&mut world, &plan);
+    let mut handles = Vec::with_capacity(plan.shard_count());
+    for (s, cfg) in plan.shards.iter().enumerate() {
+        let mut shard_stats = Vec::with_capacity(opts.clients_per_shard);
+        for c in 0..opts.clients_per_shard {
+            let id = opts.client_id(s, c);
+            let (client, stats) = ClientActor::new(
+                id,
+                format!("s{s}-c{c}"),
+                Workload::Add,
+                cfg.clone(),
+                opts.ops_per_client as u64,
+            );
+            world.add_node(id, Region(c % 3), Box::new(client));
+            shard_stats.push(stats);
+        }
+        handles.push(shard_stats);
+    }
+    ShardedWorld { world, plan, handles }
+}
+
+/// Builds the chaos world: history-recording clients run random changes
+/// over keys *shared within their shard*; one [`History`] per shard
+/// (registers are named per shard, so per-shard checking is exact).
+/// Client seeds derive deterministically from `seed`.
+pub fn sharded_chaos_world(
+    opts: &ShardedWorldOpts,
+    seed: u64,
+) -> ShardedWorld<Arc<History>> {
+    let plan = opts.plan();
+    let mut world = World::new(opts.net.clone(), seed);
+    add_acceptors(&mut world, &plan);
+    let mut seeder = Rng::new(seed ^ 0xC11E57);
+    let mut handles = Vec::with_capacity(plan.shard_count());
+    for (s, cfg) in plan.shards.iter().enumerate() {
+        let history = Arc::new(History::new());
+        let keys: Vec<Key> =
+            (0..opts.keys_per_shard).map(|k| format!("s{s}-k{k}")).collect();
+        let mut shard_handles = Vec::with_capacity(opts.clients_per_shard);
+        for c in 0..opts.clients_per_shard {
+            let id = opts.client_id(s, c);
+            let client = HistClient::new(
+                id,
+                cfg.clone(),
+                Arc::clone(&history),
+                seeder.next_u64(),
+                opts.ops_per_client,
+                keys.clone(),
+            )
+            // Spread ops over seconds of virtual time so fault windows
+            // always overlap in-flight rounds.
+            .with_think_time(300_000);
+            world.add_node(id, Region(c % 3), Box::new(client));
+            shard_handles.push(Arc::clone(&history));
+        }
+        // One history handle per shard is enough for the checker; keep
+        // the per-client shape anyway so callers can attribute progress.
+        handles.push(shard_handles);
+    }
+    ShardedWorld { world, plan, handles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linearizability::{check, CheckResult};
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn add_world_completes_and_scales_topology() {
+        for shards in [1usize, 2, 4] {
+            let opts = ShardedWorldOpts {
+                shards,
+                ops_per_client: 5,
+                ..ShardedWorldOpts::default()
+            };
+            let mut w = sharded_add_world(&opts, 42);
+            assert_eq!(w.plan.shard_count(), shards);
+            w.world.start();
+            w.world.run_to_quiescence();
+            for shard_stats in &w.handles {
+                for stats in shard_stats {
+                    assert_eq!(stats.done.load(Ordering::Relaxed), 5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_world_records_checkable_histories() {
+        let opts = ShardedWorldOpts { shards: 2, ops_per_client: 8, ..Default::default() };
+        let mut w = sharded_chaos_world(&opts, 7);
+        w.world.start();
+        w.world.run_to_quiescence();
+        for shard_handles in &w.handles {
+            let history = &shard_handles[0];
+            assert_eq!(history.len(), 2 * 8, "2 clients x 8 ops per shard");
+            assert_eq!(check(history), CheckResult::Linearizable);
+        }
+    }
+
+    #[test]
+    fn worlds_are_deterministic() {
+        let run = |seed| {
+            let opts = ShardedWorldOpts { shards: 2, ..Default::default() };
+            let mut w = sharded_chaos_world(&opts, seed);
+            w.world.start();
+            w.world.run_to_quiescence();
+            (w.world.now(), w.world.net_stats())
+        };
+        assert_eq!(run(11), run(11));
+    }
+}

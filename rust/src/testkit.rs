@@ -4,6 +4,7 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::rng::Rng;
 
@@ -45,10 +46,54 @@ impl Drop for TempDir {
     }
 }
 
+/// The hook installed by the panic hook (see below).
+#[allow(deprecated)] // PanicInfo: the pre-1.81 name keeps old toolchains compiling
+type PanicHook = Box<dyn Fn(&std::panic::PanicInfo<'_>) + Sync + Send + 'static>;
+
+/// Refcounted panic-hook silencer shared by every concurrently running
+/// `forall_seeds` (libtest runs tests in parallel and the hook is
+/// process-global): the first harness in saves the current hook and
+/// installs a no-op, the last one out restores it.
+static SILENCED: Mutex<(usize, Option<PanicHook>)> = Mutex::new((0, None));
+
+struct SilenceGuard;
+
+impl SilenceGuard {
+    fn new() -> Self {
+        let mut g = SILENCED.lock().unwrap_or_else(|e| e.into_inner());
+        if g.0 == 0 {
+            g.1 = Some(std::panic::take_hook());
+            std::panic::set_hook(Box::new(|_| {}));
+        }
+        g.0 += 1;
+        SilenceGuard
+    }
+}
+
+impl Drop for SilenceGuard {
+    fn drop(&mut self) {
+        let mut g = SILENCED.lock().unwrap_or_else(|e| e.into_inner());
+        g.0 -= 1;
+        if g.0 == 0 {
+            if let Some(prev) = g.1.take() {
+                std::panic::set_hook(prev);
+            }
+        }
+    }
+}
+
 /// Minimal property-test harness: runs `body` for `cases` deterministic
 /// seeds derived from `seed`. On failure the panic message names the
 /// failing case seed so it can be replayed exactly.
+///
+/// The default panic hook is silenced while cases run and restored
+/// afterwards (guard-dropped even on failure): the harness *expects*
+/// assertion panics from failing cases and re-raises them with the
+/// replay seed attached, so the hook's own backtrace spam for the
+/// caught panic is pure noise.
 pub fn forall_seeds(seed: u64, cases: u64, mut body: impl FnMut(&mut Rng)) {
+    let guard = SilenceGuard::new();
+    let mut failure: Option<(u64, u64, String)> = None;
     for case in 0..cases {
         let case_seed = seed
             .wrapping_mul(0x9E3779B97F4A7C15)
@@ -61,8 +106,20 @@ pub fn forall_seeds(seed: u64, cases: u64, mut body: impl FnMut(&mut Rng)) {
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property failed (case {case}, replay seed {case_seed:#x}): {msg}");
+            failure = Some((case, case_seed, msg));
+            break;
         }
+    }
+    // Restore the hook BEFORE re-raising, so the replay-seed message is
+    // reported through the normal (un-silenced) panic path.
+    drop(guard);
+    if let Some((case, case_seed, msg)) = failure {
+        // A concurrently running harness may still be holding the hook
+        // silenced (the refcount only restores on the LAST exit); print
+        // the replay line directly so it always reaches the captured
+        // test output regardless.
+        eprintln!("property failed (case {case}, replay seed {case_seed:#x}): {msg}");
+        panic!("property failed (case {case}, replay seed {case_seed:#x}): {msg}");
     }
 }
 
@@ -96,5 +153,21 @@ mod tests {
             let v = rng.gen_range(1000);
             assert!(v > 1000, "draw {v} can never exceed the bound");
         });
+    }
+
+    #[test]
+    fn forall_failure_restores_hook_and_reports() {
+        let err = std::panic::catch_unwind(|| {
+            forall_seeds(9, 3, |_| panic!("boom"));
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+        // The harness (and the silencer refcount) remain usable after a
+        // failure escaped through the guard.
+        let mut n = 0;
+        forall_seeds(1, 4, |_| n += 1);
+        assert_eq!(n, 4);
     }
 }

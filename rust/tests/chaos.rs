@@ -1,0 +1,144 @@
+//! Deterministic chaos property suite: seeded fault schedules against
+//! single- and multi-shard simulated clusters, verified with the
+//! Wing&Gong linearizability checker.
+//!
+//! Every case is one `forall_seeds` property case: build a
+//! [`sharded_chaos_world`], drive a random nemesis (crashes, restarts,
+//! single-node isolation, region partitions, ambient message loss)
+//! derived from the case seed, heal everything, drain to quiescence,
+//! then check every shard's recorded history. Safety is the assertion;
+//! clients whose rounds die mid-fault record *unknown* outcomes, which
+//! the checker handles soundly (the op may have applied or not).
+//!
+//! 50 seeds x 1 shard and 50 seeds x 4 shards — the multi-shard runs
+//! double as a regression net for the share-nothing invariant: a
+//! routing bug that let two shards host the same register would show up
+//! as a (non-)linearizable history here.
+
+use caspaxos::linearizability::{check, CheckResult};
+use caspaxos::rng::Rng;
+use caspaxos::sim::worlds::{sharded_chaos_world, ShardedWorldOpts};
+use caspaxos::sim::{NetModel, Region};
+use caspaxos::testkit::forall_seeds;
+
+/// One seeded chaos scenario. Returns (invoked, completed) op counts.
+fn run_chaos(shards: usize, seed: u64) -> (usize, usize) {
+    let mut net = NetModel::uniform(5_000);
+    net.jitter = 0.3;
+    net.drop_prob = 0.01; // ambient 1% loss on top of the nemesis
+    let opts = ShardedWorldOpts {
+        shards,
+        acceptors_per_shard: 3,
+        clients_per_shard: 2,
+        ops_per_client: 10,
+        keys_per_shard: 2,
+        net,
+    };
+    let mut w = sharded_chaos_world(&opts, seed);
+    let acceptors = w.plan.all_acceptors();
+    w.world.start();
+
+    // Nemesis: a random fault every 100–400 virtual ms. Clients think
+    // up to 300ms between ops (see `sim::worlds`), so the ~2.5s fault
+    // window always overlaps in-flight rounds.
+    let mut nemesis = Rng::new(seed ^ 0xBADFA17);
+    let mut crashed: Vec<u64> = Vec::new();
+    let mut isolated: Vec<u64> = Vec::new();
+    let mut t = 0u64;
+    for _phase in 0..10 {
+        t += 100_000 + nemesis.gen_range(300_000);
+        w.world.run_until(t);
+        match nemesis.gen_range(5) {
+            0 => {
+                let victim = *nemesis.choose(&acceptors);
+                w.world.crash(victim);
+                crashed.push(victim);
+            }
+            1 => {
+                if let Some(back) = crashed.pop() {
+                    w.world.restart(back);
+                }
+            }
+            2 => {
+                let victim = *nemesis.choose(&acceptors);
+                w.world.isolate(victim);
+                isolated.push(victim);
+            }
+            3 => {
+                if let Some(back) = isolated.pop() {
+                    w.world.reconnect(back);
+                }
+            }
+            _ => {
+                // Cut (or re-cut) a random region pair, healing another:
+                // partitions slice through EVERY shard at once.
+                let a = nemesis.gen_range(3) as usize;
+                let b = (a + 1 + nemesis.gen_range(2) as usize) % 3;
+                w.world.partition(Region(a), Region(b));
+                let c = nemesis.gen_range(3) as usize;
+                let d = (c + 1 + nemesis.gen_range(2) as usize) % 3;
+                w.world.heal(Region(c), Region(d));
+            }
+        }
+    }
+
+    // Heal the world completely, then drain.
+    for &id in &acceptors {
+        w.world.reconnect(id);
+        w.world.restart(id);
+    }
+    for a in 0..3 {
+        for b in (a + 1)..3 {
+            w.world.heal(Region(a), Region(b));
+        }
+    }
+    w.world.run_until(t + 60_000_000);
+    w.world.run_to_quiescence();
+
+    let mut invoked = 0;
+    let mut completed = 0;
+    for shard_handles in &w.handles {
+        let history = shard_handles[0].as_ref();
+        invoked += history.len();
+        completed += history.snapshot().iter().filter(|o| o.complete.is_some()).count();
+        match check(history) {
+            CheckResult::Linearizable => {}
+            CheckResult::Violation(why) => {
+                panic!("chaos violation (shards={shards}, seed={seed:#x}): {why}")
+            }
+            CheckResult::Exhausted => {
+                panic!("checker exhausted (shards={shards}, seed={seed:#x}): shrink the workload")
+            }
+        }
+    }
+    (invoked, completed)
+}
+
+#[test]
+fn chaos_single_shard_50_seeds() {
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_0001, 50, |rng| {
+        let (invoked, completed) = run_chaos(1, rng.next_u64());
+        assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    // Faults eat individual ops, never all progress across 50 schedules.
+    assert!(total_completed > 500, "only {total_completed}/1000 ops completed");
+}
+
+#[test]
+fn chaos_multi_shard_50_seeds() {
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_0004, 50, |rng| {
+        let (invoked, completed) = run_chaos(4, rng.next_u64());
+        assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    assert!(total_completed > 2000, "only {total_completed}/4000 ops completed");
+}
+
+#[test]
+fn chaos_scenarios_replay_deterministically() {
+    let run = |seed| run_chaos(2, seed);
+    assert_eq!(run(0xFEED), run(0xFEED), "same seed, same counts");
+}

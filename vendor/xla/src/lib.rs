@@ -1,0 +1,150 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real `xla` crate links libxla through the PJRT C API and executes
+//! AOT-compiled HLO. This build environment carries no such shared
+//! library, so every entry point here fails at *runtime* with a clear
+//! error while keeping the whole dependency graph compilable offline.
+//! Callers (see `caspaxos::runtime`) already probe for artifacts and
+//! handle `PjRtClient::cpu()` failure by falling back to the pure-Rust
+//! scalar engine, so swapping the real crate back in is a Cargo.toml
+//! change, not a code change.
+//!
+//! The API surface mirrors exactly the subset the caspaxos runtime uses:
+//! client construction + compile, executable execution, HLO parsing, and
+//! literal packing/unpacking.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type returned by every fallible stub entry point.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error("XLA/PJRT is unavailable in this offline build (stub crate)".to_string())
+}
+
+/// Stub PJRT client. [`PjRtClient::cpu`] always fails, which is the
+/// signal `caspaxos::runtime` uses to fall back to the scalar engine.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Would create a CPU PJRT client; always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    /// Platform diagnostics string.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Would compile an XLA computation; always fails in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Would execute the program; always fails in the stub.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Would transfer the buffer to a host literal; always fails.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Would parse an HLO text file; always fails in the stub.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wraps a parsed proto (infallible in the real crate too).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Stub host literal. Construction is infallible (mirroring the real
+/// crate); every operation on it fails.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Would pack a rank-1 array; the stub stores nothing.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Would reshape; always fails in the stub.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    /// Would unpack to a host vector; always fails in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    /// Would split a 3-tuple literal; always fails in the stub.
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal), Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+        let lit = Literal::vec1(&[1i64, 2, 3]);
+        assert!(lit.reshape(&[3]).is_err());
+        assert!(lit.to_vec::<i64>().is_err());
+        assert!(lit.clone().to_tuple3().is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline"), "{err}");
+    }
+}
