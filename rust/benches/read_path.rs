@@ -1,0 +1,259 @@
+//! Bench: the 1-RTT quorum-read fast path vs the classic identity-CAS
+//! read, plus the FileStorage group-commit fsync sweep.
+//!
+//! Measures *protocol* quantities, not just wall-clock: acceptor
+//! requests per read (phases × acceptors), fast-path/fallback counters,
+//! virtual-time RTTs in the simulator, and fsyncs-per-append under
+//! concurrent writers. Emits `BENCH_read_path.json` in the working
+//! directory (CI uploads it as an artifact).
+//!
+//! Run: `cargo bench --bench read_path` (set `BENCH_SMOKE=1` for a
+//! seconds-long smoke run).
+
+use std::io::Write as _;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use caspaxos::acceptor::{FileStorage, GroupCommitOpts, Slot, Storage};
+use caspaxos::ballot::Ballot;
+use caspaxos::proposer::{Proposer, ProposerOpts, ReadMode};
+use caspaxos::quorum::ClusterConfig;
+use caspaxos::shard::{ShardPlan, ShardedKv};
+use caspaxos::sim::cas::{AcceptorActor, CasMsg, ClientActor, Workload};
+use caspaxos::sim::{NetModel, Region, World};
+use caspaxos::state::Val;
+use caspaxos::testkit::TempDir;
+use caspaxos::transport::mem::MemTransport;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok()
+}
+
+/// Requests per committed read on the in-memory transport, by mode.
+/// Returns (requests/read, fast, fallback).
+fn requests_per_read(mode: ReadMode, piggyback: bool, n: u64) -> (f64, u64, u64) {
+    let t = Arc::new(MemTransport::new(3));
+    let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+    let opts = ProposerOpts { read_mode: mode, piggyback, ..Default::default() };
+    let p = Proposer::with_opts(1, cfg, t.clone(), opts);
+    p.set("k", 42).unwrap();
+    let before = t.request_count();
+    for _ in 0..n {
+        p.get("k").unwrap();
+    }
+    let per_read = (t.request_count() - before) as f64 / n as f64;
+    let (fast, fallback) = p.read_stats();
+    (per_read, fast, fallback)
+}
+
+/// Reads against a key another proposer keeps writing: the fast path
+/// must detect the foreign in-flight promise and fall back.
+fn contended_reads(n: u64) -> (u64, u64) {
+    let t = Arc::new(MemTransport::new(3));
+    let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+    let writer = Proposer::new(1, cfg.clone(), t.clone());
+    let reader = Proposer::new(2, cfg, t);
+    for i in 0..n {
+        writer.set("hot", i as i64).unwrap(); // leaves a foreign promise
+        assert_eq!(reader.get("hot").unwrap().as_num(), Some(i as i64));
+    }
+    reader.read_stats()
+}
+
+/// Virtual-time mean read latency (µs) for a workload on a 20ms-RTT net.
+fn sim_read_latency_us(workload: Workload, iterations: u64) -> f64 {
+    let mut w: World<CasMsg> = World::new(NetModel::uniform(10_000), 42);
+    for id in 1..=3u64 {
+        w.add_node(id, Region(0), Box::new(AcceptorActor::new(id)));
+    }
+    let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+    // Seed the register without leaving a promise behind.
+    let (seed_writer, _) = ClientActor::new(100, "k", Workload::Add, cfg.clone(), 1);
+    w.add_node(100, Region(0), Box::new(seed_writer.without_piggyback()));
+    w.start();
+    w.run_to_quiescence();
+    let (reader, stats) = ClientActor::new(101, "k", workload, cfg, iterations);
+    let reader = reader.without_piggyback(); // ablation: no 1-RTT cache
+    w.add_node(101, Region(0), Box::new(reader));
+    w.start();
+    w.run_to_quiescence();
+    let lat = stats.latencies.lock().unwrap();
+    lat.iter().sum::<u64>() as f64 / lat.len().max(1) as f64
+}
+
+/// Wall-clock read throughput over a sharded store. Returns (ops/sec,
+/// fast, fallback).
+fn sharded_read_throughput(shards: usize, threads: usize, secs: f64) -> (f64, u64, u64) {
+    let t = Arc::new(MemTransport::new(3 * shards));
+    let plan = ShardPlan::partition(t.acceptor_ids(), shards, None).unwrap();
+    let kv = Arc::new(ShardedKv::new(plan, t, 4).unwrap());
+    let keys: Vec<String> = (0..256).map(|i| format!("key-{i}")).collect();
+    for (i, k) in keys.iter().enumerate() {
+        kv.set(k, i as i64).unwrap();
+    }
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let done = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for th in 0..threads {
+        let kv = Arc::clone(&kv);
+        let keys = keys.clone();
+        let stop = Arc::clone(&stop);
+        let done = Arc::clone(&done);
+        handles.push(std::thread::spawn(move || {
+            let mut i = th;
+            let mut local = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let k = &keys[i % keys.len()];
+                kv.get(k).unwrap();
+                i += threads;
+                local += 1;
+            }
+            done.fetch_add(local, Ordering::Relaxed);
+        }));
+    }
+    let start = Instant::now();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let ops = done.load(Ordering::Relaxed);
+    let mut fast = 0;
+    let mut fallback = 0;
+    kv.for_each_proposer(|p| {
+        let (f, b) = p.read_stats();
+        fast += f;
+        fallback += b;
+    });
+    (ops as f64 / elapsed, fast, fallback)
+}
+
+/// Group-commit sweep: `threads` writers hammer one FileStorage,
+/// enqueueing under the lock and waiting for durability outside it.
+/// Returns (records/sec, fsyncs-per-append).
+fn group_commit_throughput(
+    dir: &TempDir,
+    label: &str,
+    threads: u64,
+    per_thread: u64,
+    window: Duration,
+) -> (f64, f64) {
+    let path = dir.file(&format!("wal-{label}.log"));
+    let opts = GroupCommitOpts { flush_window: window, ..GroupCommitOpts::default() };
+    let s = Arc::new(Mutex::new(FileStorage::open_with(&path, opts).unwrap()));
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for th in 0..threads {
+        let s = Arc::clone(&s);
+        handles.push(std::thread::spawn(move || {
+            let slot = Slot {
+                promise: Ballot::ZERO,
+                accepted_ballot: Ballot::new(1, th),
+                value: Val::Num { ver: 0, num: th as i64 },
+            };
+            for i in 0..per_thread {
+                let ticket = {
+                    let mut g = s.lock().unwrap();
+                    g.store_deferred(&format!("t{th}-k{}", i % 32), &slot).unwrap()
+                };
+                ticket.wait().unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let stats = s.lock().unwrap().wal_stats();
+    let recs_per_sec = stats.appends as f64 / elapsed;
+    let fsyncs_per_append = stats.fsyncs as f64 / stats.appends.max(1) as f64;
+    (recs_per_sec, fsyncs_per_append)
+}
+
+fn main() {
+    let quick = smoke();
+    let n_reads: u64 = if quick { 50 } else { 2000 };
+    let mut json: Vec<String> = Vec::new();
+
+    println!("# Read fast path — 1-RTT quorum reads vs identity-CAS (3 acceptors)\n");
+    println!("| read mode | acceptor requests / read | fast | fallback |");
+    println!("|---|---|---|---|");
+    let (rq_cas, _, _) = requests_per_read(ReadMode::Cas, false, n_reads);
+    println!("| identity-CAS, no cache (2 phases) | {rq_cas:.2} | - | - |");
+    let (rq_cached, _, _) = requests_per_read(ReadMode::Cas, true, n_reads);
+    println!("| identity-CAS, 1-RTT cache | {rq_cached:.2} | - | - |");
+    let (rq_quorum, fast, fallback) = requests_per_read(ReadMode::Quorum, true, n_reads);
+    println!("| quorum read (fast path) | {rq_quorum:.2} | {fast} | {fallback} |");
+    assert!(
+        rq_quorum < rq_cas,
+        "quorum reads must cost fewer requests than 2-phase reads"
+    );
+    assert_eq!(fast, n_reads, "stable-key reads must all take the fast path");
+    json.push(format!(
+        "\"requests_per_read\": {{\"cas_no_cache\": {rq_cas:.3}, \"cas_cached\": {rq_cached:.3}, \
+         \"quorum\": {rq_quorum:.3}, \"fast\": {fast}, \"fallback\": {fallback}}}"
+    ));
+
+    let (c_fast, c_fallback) = contended_reads(if quick { 20 } else { 500 });
+    println!("\n## Contention (rival writer on the same key)");
+    println!("fast={c_fast} fallback={c_fallback} — the fallback IS taken under contention");
+    assert!(c_fallback > 0, "contended reads must exercise the identity-CAS fallback");
+    json.push(format!(
+        "\"contended_reads\": {{\"fast\": {c_fast}, \"fallback\": {c_fallback}}}"
+    ));
+
+    let iters = if quick { 10 } else { 200 };
+    let lat_quorum = sim_read_latency_us(Workload::QuorumRead, iters);
+    let lat_cas = sim_read_latency_us(Workload::ReadOnly, iters);
+    println!("\n## Simulated WAN (20ms RTT), virtual time per read");
+    println!("quorum read: {:.1} ms   identity-CAS (no cache): {:.1} ms   ratio {:.2}x",
+        lat_quorum / 1000.0, lat_cas / 1000.0, lat_cas / lat_quorum);
+    assert!(
+        (lat_quorum - 20_000.0).abs() < 1.0,
+        "quorum reads must complete in exactly ONE 20ms round trip, got {lat_quorum}µs"
+    );
+    json.push(format!(
+        "\"sim_latency_us\": {{\"quorum\": {lat_quorum:.1}, \"cas\": {lat_cas:.1}}}"
+    ));
+
+    println!("\n## Sharded read throughput (wall clock, 4 proposers/shard, 8 threads)");
+    println!("| shards | reads/sec | fast | fallback |");
+    println!("|---|---|---|---|");
+    let secs = if quick { 0.2 } else { 2.0 };
+    let mut shard_rows = Vec::new();
+    for shards in [1usize, 4] {
+        let (ops, f, b) = sharded_read_throughput(shards, 8, secs);
+        println!("| {shards} | {ops:.0} | {f} | {b} |");
+        shard_rows.push(format!(
+            "{{\"shards\": {shards}, \"reads_per_sec\": {ops:.0}, \
+             \"fast\": {f}, \"fallback\": {b}}}"
+        ));
+    }
+    json.push(format!("\"sharded_reads\": [{}]", shard_rows.join(", ")));
+
+    println!("\n## Group commit (FileStorage WAL, fsyncs coalesced across writers)");
+    println!("| writers | flush window | records/sec | fsyncs per append |");
+    println!("|---|---|---|---|");
+    let dir = TempDir::new("bench-gc").unwrap();
+    let per_thread: u64 = if quick { 25 } else { 400 };
+    let mut gc_rows = Vec::new();
+    for &(threads, window_us) in &[(1u64, 0u64), (4, 0), (8, 0), (8, 100)] {
+        let window = Duration::from_micros(window_us);
+        let label = format!("w{threads}-f{window_us}");
+        let (rps, fpa) = group_commit_throughput(&dir, &label, threads, per_thread, window);
+        println!("| {threads} | {window_us}µs | {rps:.0} | {fpa:.3} |");
+        gc_rows.push(format!(
+            "{{\"writers\": {threads}, \"window_us\": {window_us}, \
+             \"records_per_sec\": {rps:.0}, \"fsyncs_per_append\": {fpa:.4}}}"
+        ));
+    }
+    json.push(format!("\"group_commit\": [{}]", gc_rows.join(", ")));
+
+    let out = format!("{{\n  {}\n}}\n", json.join(",\n  "));
+    let path = "BENCH_read_path.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_read_path.json");
+    f.write_all(out.as_bytes()).expect("write BENCH_read_path.json");
+    println!("\nwrote {path}");
+}

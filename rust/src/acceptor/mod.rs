@@ -16,6 +16,17 @@
 //!
 //! The core is sans-IO and deterministic: `handle(Request) -> Response`.
 //! Drivers (in-memory cluster, simulator, TCP server) own threading.
+//!
+//! Two performance paths layered on the same rules:
+//!
+//! * **Quorum reads** — `Read` is answered straight from the slot with
+//!   *no mutation and no storage write* (zero fsyncs); the proposer
+//!   decides client-side whether the quorum's answers allow a 1-RTT
+//!   read (see `proposer::core::ReadCore`).
+//! * **Group commit** — [`Acceptor::handle_deferred`] splits a request
+//!   into its response and a [`Persist`] durability ticket, so drivers
+//!   can release the acceptor lock before waiting; concurrent accepts
+//!   then coalesce under one fsync ([`storage`] module docs).
 
 pub mod storage;
 
@@ -25,7 +36,7 @@ use crate::ballot::Ballot;
 use crate::msg::{Key, ProposerId, Request, Response};
 use crate::state::Val;
 
-pub use storage::{FileStorage, MemStorage, Slot, Storage};
+pub use storage::{FileStorage, GroupCommitOpts, MemStorage, Persist, Slot, Storage, WalStats};
 
 /// A single acceptor: protocol rules over a [`Storage`] backend.
 pub struct Acceptor<S: Storage = MemStorage> {
@@ -74,38 +85,64 @@ impl<S: Storage> Acceptor<S> {
         }
     }
 
-    /// Handles one request. Pure state transition + storage write.
+    /// Handles one request: state transition + *durable* storage write.
     pub fn handle(&mut self, req: &Request) -> Response {
+        let (resp, persist) = self.handle_deferred(req);
+        match persist.wait() {
+            Ok(()) => resp,
+            Err(e) => Response::Error(e.to_string()),
+        }
+    }
+
+    /// Like [`Acceptor::handle`], but defers the durability wait: the
+    /// returned [`Persist`] MUST be waited on before the response is
+    /// sent to the requester. Drivers that release the acceptor lock in
+    /// between let concurrent writes share one fsync (group commit).
+    pub fn handle_deferred(&mut self, req: &Request) -> (Response, Persist) {
         match req {
             Request::Prepare { key, ballot, from } => self.on_prepare(key, *ballot, from),
             Request::Accept { key, ballot, val, from, promise_next } => {
                 self.on_accept(key, *ballot, val, from, *promise_next)
             }
             Request::SetMinAge { proposer_id, min_age } => {
-                self.on_set_min_age(*proposer_id, *min_age)
+                (self.on_set_min_age(*proposer_id, *min_age), Persist::done())
             }
-            Request::Erase { key, tombstone_ballot } => self.on_erase(key, *tombstone_ballot),
-            Request::Dump { after, limit } => self.on_dump(after.as_ref(), *limit),
-            Request::Install { key, ballot, val } => self.on_install(key, *ballot, val),
-            Request::Ping => Response::Ok,
+            Request::Erase { key, tombstone_ballot } => {
+                (self.on_erase(key, *tombstone_ballot), Persist::done())
+            }
+            Request::Dump { after, limit } => {
+                // Fence the page like a read: never leak pre-durable state.
+                (self.on_dump(after.as_ref(), *limit), self.store.read_fence())
+            }
+            Request::Install { key, ballot, val } => {
+                (self.on_install(key, *ballot, val), Persist::done())
+            }
+            Request::Ping => (Response::Ok, Persist::done()),
+            Request::Read { key, from } => (self.on_read(key, from), self.store.read_fence()),
         }
     }
 
-    fn on_prepare(&mut self, key: &Key, ballot: Ballot, from: &ProposerId) -> Response {
+    fn on_prepare(&mut self, key: &Key, ballot: Ballot, from: &ProposerId) -> (Response, Persist) {
         if let Some(required) = self.is_stale(from) {
-            return Response::StaleAge { required };
+            return (Response::StaleAge { required }, Persist::done());
         }
         let mut slot = self.store.load(key).unwrap_or_default();
         // "Returns a conflict if it already saw a greater ballot number."
         // Equal is a conflict too: a promise can only be given once.
         if slot.max_ballot() >= ballot {
-            return Response::Conflict { seen: slot.max_ballot() };
+            return (Response::Conflict { seen: slot.max_ballot() }, Persist::done());
         }
         slot.promise = ballot;
-        if let Err(e) = self.store.store(key, &slot) {
-            return Response::Error(e.to_string());
+        match self.store.store_deferred(key, &slot) {
+            Ok(persist) => (
+                Response::Promise {
+                    accepted_ballot: slot.accepted_ballot,
+                    accepted_val: slot.value,
+                },
+                persist,
+            ),
+            Err(e) => (Response::Error(e.to_string()), Persist::done()),
         }
-        Response::Promise { accepted_ballot: slot.accepted_ballot, accepted_val: slot.value }
     }
 
     fn on_accept(
@@ -115,16 +152,16 @@ impl<S: Storage> Acceptor<S> {
         val: &Val,
         from: &ProposerId,
         promise_next: Option<Ballot>,
-    ) -> Response {
+    ) -> (Response, Persist) {
         if let Some(required) = self.is_stale(from) {
-            return Response::StaleAge { required };
+            return (Response::StaleAge { required }, Persist::done());
         }
         let mut slot = self.store.load(key).unwrap_or_default();
         // Accept (b, v) iff no ballot greater than b was seen. The
         // proposer's own promise for exactly b authorizes the write; an
         // accepted ballot >= b or a promise > b is a conflict.
         if slot.promise > ballot || slot.accepted_ballot >= ballot {
-            return Response::Conflict { seen: slot.max_ballot() };
+            return (Response::Conflict { seen: slot.max_ballot() }, Persist::done());
         }
         // "Erases the promise, marks the received tuple as accepted."
         slot.promise = Ballot::ZERO;
@@ -137,10 +174,24 @@ impl<S: Storage> Acceptor<S> {
                 slot.promise = next;
             }
         }
-        if let Err(e) = self.store.store(key, &slot) {
-            return Response::Error(e.to_string());
+        match self.store.store_deferred(key, &slot) {
+            Ok(persist) => (Response::Accepted, persist),
+            Err(e) => (Response::Error(e.to_string()), Persist::done()),
         }
-        Response::Accepted
+    }
+
+    /// Quorum-read fast path: report the slot verbatim. No mutation, no
+    /// storage write, no fsync — the 1-RTT decision is the proposer's.
+    fn on_read(&self, key: &Key, from: &ProposerId) -> Response {
+        if let Some(required) = self.is_stale(from) {
+            return Response::StaleAge { required };
+        }
+        let slot = self.store.load(key).unwrap_or_default();
+        Response::ReadState {
+            promise: slot.promise,
+            accepted_ballot: slot.accepted_ballot,
+            accepted_val: slot.value,
+        }
     }
 
     fn on_set_min_age(&mut self, proposer_id: u64, min_age: u64) -> Response {
@@ -176,7 +227,7 @@ impl<S: Storage> Acceptor<S> {
             None => false,
         };
         let entries =
-            page.into_iter().map(|(k, s)| (k, s.accepted_ballot, s.value)).collect();
+            page.into_iter().map(|(k, s)| (k, s.accepted_ballot, s.value.clone())).collect();
         Response::DumpPage { entries, more }
     }
 
@@ -369,6 +420,65 @@ mod tests {
             a.handle(&Request::Erase { key: "k".into(), tombstone_ballot: Ballot::new(4, 1) }),
             Response::Ok
         );
+    }
+
+    #[test]
+    fn read_reports_slot_without_mutating() {
+        let mut a = Acceptor::new(1);
+        a.handle(&prep("k", 2, 1));
+        a.handle(&acc("k", 2, 1, 42));
+        a.handle(&prep("k", 5, 2)); // fresh promise above the accepted pair
+        let read = Request::Read { key: "k".into(), from: ProposerId::new(9) };
+        let before = a.storage().load(&"k".to_string()).unwrap();
+        match a.handle(&read) {
+            Response::ReadState { promise, accepted_ballot, accepted_val } => {
+                assert_eq!(promise, Ballot::new(5, 2));
+                assert_eq!(accepted_ballot, Ballot::new(2, 1));
+                assert_eq!(accepted_val.as_num(), Some(42));
+            }
+            r => panic!("expected ReadState, got {r:?}"),
+        }
+        // Reads never mutate: the slot is bit-identical, and a repeat
+        // read (same "ballot-free" request) still succeeds — unlike
+        // prepare, which burns its ballot.
+        assert_eq!(a.storage().load(&"k".to_string()).unwrap(), before);
+        assert!(matches!(a.handle(&read), Response::ReadState { .. }));
+    }
+
+    #[test]
+    fn read_of_absent_key_is_empty_slot() {
+        let mut a = Acceptor::new(1);
+        match a.handle(&Request::Read { key: "nope".into(), from: ProposerId::new(1) }) {
+            Response::ReadState { promise, accepted_ballot, accepted_val } => {
+                assert_eq!(promise, Ballot::ZERO);
+                assert_eq!(accepted_ballot, Ballot::ZERO);
+                assert!(accepted_val.is_empty());
+            }
+            r => panic!("{r:?}"),
+        }
+        assert_eq!(a.register_count(), 0, "reading must not materialize the register");
+    }
+
+    #[test]
+    fn read_respects_min_age_fence() {
+        let mut a = Acceptor::new(1);
+        a.handle(&Request::SetMinAge { proposer_id: 3, min_age: 2 });
+        let stale = Request::Read { key: "k".into(), from: ProposerId { id: 3, age: 1 } };
+        assert_eq!(a.handle(&stale), Response::StaleAge { required: 2 });
+        let fresh = Request::Read { key: "k".into(), from: ProposerId { id: 3, age: 2 } };
+        assert!(matches!(a.handle(&fresh), Response::ReadState { .. }));
+    }
+
+    #[test]
+    fn deferred_handle_matches_handle() {
+        let mut a = Acceptor::new(1);
+        let (resp, persist) = a.handle_deferred(&prep("k", 1, 1));
+        assert!(matches!(resp, Response::Promise { .. }));
+        persist.wait().unwrap(); // MemStorage: already durable
+        let (resp, persist) = a.handle_deferred(&acc("k", 1, 1, 7));
+        assert_eq!(resp, Response::Accepted);
+        assert!(persist.is_done());
+        assert_eq!(a.storage_value("k"), Some(7));
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::change::ChangeFn;
 use crate::error::{CasError, CasResult};
 use crate::metrics::Counters;
 use crate::msg::{Key, ProposerId, Request, Response};
+use crate::proposer::{ReadCore, ReadStep};
 use crate::quorum::ClusterConfig;
 use crate::runtime::{pack_ballot, Engine, StepInput};
 use crate::state::Val;
@@ -246,6 +247,101 @@ impl BatchProposer {
         }
         Ok(results)
     }
+
+    /// Executes a batch of **linearizable reads** sharing ONE quorum-read
+    /// fan-out: `A × n` `Read` messages, one network phase, zero acceptor
+    /// writes for every key whose quorum agrees. Keys that cannot take
+    /// the fast path (disagreeing replies, foreign in-flight writes,
+    /// timeouts) are retried together through one classic identity-CAS
+    /// [`BatchProposer::execute`] batch. Returns one result per key, in
+    /// order; keys must be distinct.
+    pub fn read_batch(&self, keys: &[Key]) -> CasResult<Vec<CasResult<Val>>> {
+        let n = keys.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let mut seen = HashMap::new();
+        for (i, key) in keys.iter().enumerate() {
+            if seen.insert(key.clone(), i).is_some() {
+                return Err(CasError::Config(format!("duplicate key in batch: {key:?}")));
+            }
+        }
+        self.metrics.rounds.fetch_add(1, Ordering::Relaxed);
+        let from = ProposerId::new(self.id);
+        let acceptors = self.cfg.acceptors.len();
+
+        // ---- One shared fan-out: every key's Read goes out at once;
+        // the reply token carries the key column.
+        let (tx, rx) = mpsc::channel();
+        let mut cores: Vec<ReadCore> = Vec::with_capacity(n);
+        for (col, key) in keys.iter().enumerate() {
+            let (core, msgs) = ReadCore::new(key.clone(), from, self.cfg.clone());
+            cores.push(core);
+            self.transport.fan_out(col as u32, msgs, &tx);
+        }
+
+        let mut outcome: Vec<Option<CasResult<Val>>> = Vec::new();
+        outcome.resize_with(n, || None);
+        let mut decided = vec![false; n];
+        let mut undecided = n;
+        let mut outstanding = acceptors * n;
+        let deadline = Instant::now() + self.opts.phase_timeout;
+        while outstanding > 0 && undecided > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let Ok(reply) = rx.recv_timeout(deadline - now) else { break };
+            outstanding -= 1;
+            let col = reply.token as usize;
+            if col >= n || decided[col] {
+                continue;
+            }
+            match cores[col].on_reply(reply.from, reply.resp) {
+                ReadStep::Continue => {}
+                ReadStep::Done(res) => {
+                    if res.is_ok() {
+                        self.metrics.read_fast.fetch_add(1, Ordering::Relaxed);
+                    }
+                    outcome[col] = Some(res);
+                    decided[col] = true;
+                    undecided -= 1;
+                }
+                ReadStep::Fallback => {
+                    // Leave outcome[col] = None: collected below.
+                    decided[col] = true;
+                    undecided -= 1;
+                }
+            }
+        }
+
+        // ---- Fallback: classic batched rounds for the undecided keys
+        // (also covers timeouts — cols never marked decided). Conflicts
+        // retry with a fast-forwarded ballot (execute() advances the
+        // generator), bounded so a hot rival can't starve the call.
+        let fb_cols: Vec<usize> = (0..n).filter(|&col| outcome[col].is_none()).collect();
+        if !fb_cols.is_empty() {
+            self.metrics.read_fallback.fetch_add(fb_cols.len() as u64, Ordering::Relaxed);
+            let mut pending = fb_cols;
+            let mut attempt = 0;
+            while !pending.is_empty() {
+                attempt += 1;
+                let last = attempt >= 4;
+                let ops: Vec<(Key, ChangeFn)> =
+                    pending.iter().map(|&col| (keys[col].clone(), ChangeFn::Read)).collect();
+                let fb_results = self.execute(&ops)?;
+                let mut still = Vec::new();
+                for (&col, res) in pending.iter().zip(fb_results.into_iter()) {
+                    match res {
+                        Err(CasError::Conflict(_)) if !last => still.push(col),
+                        other => outcome[col] = Some(other),
+                    }
+                }
+                pending = still;
+            }
+        }
+        Ok(outcome.into_iter().map(|r| r.expect("every column resolved")).collect())
+    }
 }
 
 #[cfg(test)]
@@ -366,6 +462,64 @@ mod tests {
     fn empty_batch_is_noop() {
         let (_, _, bp) = setup(3);
         assert!(bp.execute(&[]).unwrap().is_empty());
+        assert!(bp.read_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn read_batch_shares_one_fanout() {
+        let (t, _, bp) = setup(3);
+        let ops: Vec<(Key, ChangeFn)> =
+            (0..10).map(|i| (format!("k{i}"), ChangeFn::Set(i as i64))).collect();
+        bp.execute(&ops).unwrap();
+        let keys: Vec<Key> = (0..10).map(|i| format!("k{i}")).collect();
+        let before = t.request_count();
+        let results = bp.read_batch(&keys).unwrap();
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().as_num(), Some(i as i64));
+        }
+        // Batch execute() uses no piggyback, so no promises linger and
+        // every key reads on the fast path: 3 acceptors × 10 keys, one
+        // phase, nothing else.
+        assert_eq!(t.request_count() - before, 30, "one shared Read fan-out");
+        assert_eq!(bp.metrics.read_fast.load(Ordering::Relaxed), 10);
+        assert_eq!(bp.metrics.read_fallback.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn read_batch_of_absent_keys_is_empty_vals() {
+        let (_, _, bp) = setup(3);
+        let results = bp.read_batch(&["nope1".to_string(), "nope2".to_string()]).unwrap();
+        assert!(results.iter().all(|r| r.as_ref().unwrap().is_empty()));
+    }
+
+    #[test]
+    fn read_batch_falls_back_under_foreign_promises() {
+        let (t, cfg, bp) = setup(3);
+        // A plain proposer's piggybacked promise sits on "hot".
+        let p = Proposer::new(1, cfg, t);
+        p.set("hot", 7).unwrap();
+        bp.execute(&[("cold".to_string(), ChangeFn::Set(2))]).unwrap();
+        let results = bp.read_batch(&["hot".to_string(), "cold".to_string()]).unwrap();
+        assert_eq!(results[0].as_ref().unwrap().as_num(), Some(7), "fallback read");
+        assert_eq!(results[1].as_ref().unwrap().as_num(), Some(2), "fast-path read");
+        assert_eq!(bp.metrics.read_fast.load(Ordering::Relaxed), 1);
+        assert_eq!(bp.metrics.read_fallback.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn read_batch_rejects_duplicates() {
+        let (_, _, bp) = setup(3);
+        let err = bp.read_batch(&["k".to_string(), "k".to_string()]).unwrap_err();
+        assert!(matches!(err, CasError::Config(_)));
+    }
+
+    #[test]
+    fn read_batch_survives_one_acceptor_down() {
+        let (t, _, bp) = setup(3);
+        bp.execute(&[("a".to_string(), ChangeFn::Set(1))]).unwrap();
+        t.set_down(2, true);
+        let results = bp.read_batch(&["a".to_string()]).unwrap();
+        assert_eq!(results[0].as_ref().unwrap().as_num(), Some(1));
     }
 
     #[test]

@@ -111,8 +111,27 @@ impl KvStore {
     }
 
     /// Linearizable read. `Ok(None)` for absent/deleted keys.
+    ///
+    /// Reads ride the **1-RTT quorum-read fast path** (one `Read`
+    /// fan-out to the owning shard, zero acceptor writes) and fall back
+    /// to the classic identity-CAS round when the quorum disagrees —
+    /// see [`crate::proposer::ReadMode`]. Because keys route stably to
+    /// one proposer, the piggybacked promise the store's own writes
+    /// leave behind never blocks its reads.
     pub fn get(&self, key: &str) -> CasResult<Option<Val>> {
         self.inner.get(key)
+    }
+
+    /// (fast-path reads, fallback reads) summed over every proposer.
+    pub fn read_stats(&self) -> (u64, u64) {
+        let mut fast = 0;
+        let mut fallback = 0;
+        for p in &self.flat {
+            let (f, b) = p.read_stats();
+            fast += f;
+            fallback += b;
+        }
+        (fast, fallback)
     }
 
     /// Unconditional write.
@@ -249,6 +268,22 @@ mod tests {
         // A new write revives the key.
         kv.set("a", 2).unwrap();
         assert_eq!(kv.get("a").unwrap().unwrap().as_num(), Some(2));
+    }
+
+    #[test]
+    fn reads_ride_the_fast_path() {
+        let (kv, t) = store(3, 2);
+        for i in 0..10 {
+            kv.set(&format!("k{i}"), i).unwrap();
+        }
+        let before = t.request_count();
+        for i in 0..10 {
+            assert_eq!(kv.get(&format!("k{i}")).unwrap().unwrap().as_num(), Some(i));
+        }
+        let (fast, fallback) = kv.read_stats();
+        assert_eq!(fast, 10, "stable-key reads through the owning proposer are 1-RTT");
+        assert_eq!(fallback, 0);
+        assert_eq!(t.request_count() - before, 30, "one phase x 3 acceptors per read");
     }
 
     #[test]

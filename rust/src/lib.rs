@@ -29,6 +29,39 @@
 //! * Data plane: [`runtime`] (PJRT, loads the AOT-compiled JAX/Pallas
 //!   batched step), [`batch`] (op batcher feeding it).
 //!
+//! ## Read consistency modes
+//!
+//! Every read is linearizable; [`proposer::ReadMode`] picks the cost:
+//!
+//! * [`ReadMode::Quorum`](proposer::ReadMode::Quorum) (default) — the
+//!   **1-RTT fast path**: one `Read` fan-out, served immediately when a
+//!   read quorum (`max(prepare, accept)` acceptors) reports an
+//!   identical `(accepted ballot, value)` with no foreign promise above
+//!   it. One round trip, zero acceptor writes, zero fsyncs. On
+//!   disagreement or an in-flight foreign write it falls back to the
+//!   identity-CAS round, so linearizability is never weakened.
+//! * [`ReadMode::Cas`](proposer::ReadMode::Cas) — always the classic
+//!   §2.2 identity-CAS round (two phases, a quorum of durable writes
+//!   per read). The ablation baseline.
+//!
+//! Per-path counters (`read_fast` / `read_fallback`) live on
+//! [`metrics::Counters`]; batched multi-key reads share one fan-out via
+//! `batch::BatchProposer::read_batch` and the server's `ReadBatch`.
+//!
+//! ## Group commit (write durability)
+//!
+//! [`acceptor::FileStorage`] appends through a write-ahead buffer with
+//! **group commit**: `store_deferred` enqueues and returns a
+//! [`acceptor::Persist`] ticket; the first `wait`er becomes the flush
+//! leader and fsyncs *everything buffered* in one batch. The TCP
+//! acceptor service releases the acceptor lock before waiting, so
+//! concurrent accepts coalesce under a single fsync. Tunables on
+//! [`acceptor::GroupCommitOpts`]: `flush_window` (extra time the leader
+//! waits for stragglers; zero = natural batching, no added latency) and
+//! `max_batch_bytes` (a batch already at the cap skips the window).
+//! `FileStorage::wal_stats()` exposes appends/flushes/fsyncs — the
+//! fsyncs-per-accept ratio is the group-commit win.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

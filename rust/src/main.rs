@@ -27,7 +27,8 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  caspaxos node --id <n> (--config <file> | --peers <1=a,2=b,...>)\n\
          \x20                [--listen-client <addr>] [--data <dir>]\n\
-         \x20 caspaxos client --connect <addr> <get|set|add|cas|del|collect|status> [args...]\n\
+         \x20 caspaxos client --connect <addr> \
+         <get|getcas|getmany|set|add|cas|del|collect|status> [args...]\n\
          \x20 caspaxos rtt-table"
     );
     exit(2)
@@ -145,7 +146,14 @@ fn run_client(mut args: Vec<String>) {
     }
     let cmd = args.remove(0);
     let req = match (cmd.as_str(), args.as_slice()) {
-        ("get", [key]) => ClientReq::Change { key: key.clone(), change: ChangeFn::Read },
+        // Fast-path read (1-RTT quorum read, identity-CAS fallback).
+        ("get", [key]) => ClientReq::Read { key: key.clone() },
+        // Ablation: force the classic identity-CAS read round.
+        ("getcas", [key]) => ClientReq::Change { key: key.clone(), change: ChangeFn::Read },
+        // Batched reads sharing one quorum-read fan-out per shard.
+        ("getmany", keys) if !keys.is_empty() => {
+            ClientReq::ReadBatch { keys: keys.to_vec() }
+        }
         ("set", [key, num]) => ClientReq::Change {
             key: key.clone(),
             change: ChangeFn::Set(num.parse().unwrap_or_else(|_| usage())),

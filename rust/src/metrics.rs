@@ -23,6 +23,10 @@ pub struct Counters {
     pub cache_hits: AtomicU64,
     /// Requests that failed permanently.
     pub failures: AtomicU64,
+    /// Quorum reads served on the 1-RTT zero-write fast path.
+    pub read_fast: AtomicU64,
+    /// Quorum reads that fell back to the identity-CAS round.
+    pub read_fallback: AtomicU64,
 }
 
 impl Counters {
@@ -31,8 +35,9 @@ impl Counters {
         Self::default()
     }
 
-    /// Snapshot as (rounds, commits, conflicts, retries, cache_hits, failures).
-    pub fn snapshot(&self) -> [u64; 6] {
+    /// Snapshot as (rounds, commits, conflicts, retries, cache_hits,
+    /// failures, read_fast, read_fallback).
+    pub fn snapshot(&self) -> [u64; 8] {
         [
             self.rounds.load(Ordering::Relaxed),
             self.commits.load(Ordering::Relaxed),
@@ -40,6 +45,8 @@ impl Counters {
             self.retries.load(Ordering::Relaxed),
             self.cache_hits.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
+            self.read_fast.load(Ordering::Relaxed),
+            self.read_fallback.load(Ordering::Relaxed),
         ]
     }
 }

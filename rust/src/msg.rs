@@ -104,6 +104,17 @@ pub enum Request {
     },
     /// Liveness probe (used by examples and the TCP server).
     Ping,
+    /// Quorum-read fast path: report the register's slot *without
+    /// mutating or persisting anything*. The proposer serves the read in
+    /// one round trip iff a read quorum reports a matching stable state
+    /// (see `proposer::core::ReadCore`); otherwise it falls back to the
+    /// classic identity-CAS round, so linearizability is never weakened.
+    Read {
+        /// Target register.
+        key: Key,
+        /// Sender identity + age (the GC fence applies to reads too).
+        from: ProposerId,
+    },
 }
 
 impl Request {
@@ -113,7 +124,8 @@ impl Request {
             Request::Prepare { key, .. }
             | Request::Accept { key, .. }
             | Request::Erase { key, .. }
-            | Request::Install { key, .. } => Some(key),
+            | Request::Install { key, .. }
+            | Request::Read { key, .. } => Some(key),
             _ => None,
         }
     }
@@ -158,6 +170,11 @@ impl Codec for Request {
                 val.encode(out);
             }
             Request::Ping => out.push(6),
+            Request::Read { key, from } => {
+                out.push(7);
+                key.encode(out);
+                from.encode(out);
+            }
         }
     }
     fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
@@ -189,6 +206,7 @@ impl Codec for Request {
                 val: Val::decode(input)?,
             },
             6 => Request::Ping,
+            7 => Request::Read { key: Key::decode(input)?, from: ProposerId::decode(input)? },
             _ => return Err(CodecError::Invalid("Request tag")),
         })
     }
@@ -229,6 +247,17 @@ pub enum Response {
     },
     /// The acceptor could not serve the request.
     Error(String),
+    /// Quorum-read reply: a verbatim snapshot of the register's slot.
+    /// Produced without any storage write — reads cost zero fsyncs.
+    ReadState {
+        /// Outstanding promise (ZERO if none): a promise above the
+        /// accepted ballot signals a write in flight.
+        promise: Ballot,
+        /// Ballot of the accepted value (ZERO if none).
+        accepted_ballot: Ballot,
+        /// The accepted value (Empty if none).
+        accepted_val: Val,
+    },
 }
 
 impl Codec for Response {
@@ -258,6 +287,12 @@ impl Codec for Response {
                 out.push(6);
                 e.encode(out);
             }
+            Response::ReadState { promise, accepted_ballot, accepted_val } => {
+                out.push(7);
+                promise.encode(out);
+                accepted_ballot.encode(out);
+                accepted_val.encode(out);
+            }
         }
     }
     fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
@@ -272,6 +307,11 @@ impl Codec for Response {
             4 => Response::Ok,
             5 => Response::DumpPage { entries: decode_seq(input)?, more: bool::decode(input)? },
             6 => Response::Error(String::decode(input)?),
+            7 => Response::ReadState {
+                promise: Ballot::decode(input)?,
+                accepted_ballot: Ballot::decode(input)?,
+                accepted_val: Val::decode(input)?,
+            },
             _ => return Err(CodecError::Invalid("Response tag")),
         })
     }
@@ -308,6 +348,7 @@ mod tests {
             Request::Dump { after: Some("z".into()), limit: 10 },
             Request::Install { key: "k".into(), ballot: Ballot::new(3, 3), val: Val::Tombstone },
             Request::Ping,
+            Request::Read { key: "k".into(), from: ProposerId { id: 7, age: 2 } },
         ];
         for r in reqs {
             assert_eq!(Request::from_bytes(&r.to_bytes()).unwrap(), r);
@@ -330,6 +371,16 @@ mod tests {
                 more: true,
             },
             Response::Error("boom".into()),
+            Response::ReadState {
+                promise: Ballot::new(4, 2),
+                accepted_ballot: Ballot::new(3, 1),
+                accepted_val: Val::Num { ver: 1, num: 9 },
+            },
+            Response::ReadState {
+                promise: Ballot::ZERO,
+                accepted_ballot: Ballot::ZERO,
+                accepted_val: Val::Empty,
+            },
         ];
         for r in resps {
             assert_eq!(Response::from_bytes(&r.to_bytes()).unwrap(), r);
@@ -343,6 +394,44 @@ mod tests {
         let mut bytes = Request::Ping.to_bytes();
         bytes.push(0);
         assert!(Request::from_bytes(&bytes).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn read_wire_types_reject_every_truncation() {
+        // Every strict prefix of a valid encoding must fail to decode —
+        // the frame layer depends on it to reject torn frames.
+        let req =
+            Request::Read { key: "key/with/slash".into(), from: ProposerId { id: 7, age: 2 } };
+        let bytes = req.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Request::from_bytes(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let resp = Response::ReadState {
+            promise: Ballot::new(9, 3),
+            accepted_ballot: Ballot::new(8, 1),
+            accepted_val: Val::Bytes { ver: 0, data: vec![1, 2, 3] },
+        };
+        let bytes = resp.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Response::from_bytes(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn read_request_rejects_length_bomb_key() {
+        // Tag 7 (Read), then a key claiming 2^60 bytes with a tiny body.
+        let mut bytes = vec![7u8];
+        (1u64 << 60).encode(&mut bytes);
+        bytes.extend_from_slice(b"k");
+        assert!(Request::from_bytes(&bytes).is_err(), "length bomb accepted");
+    }
+
+    #[test]
+    fn read_wire_types_reject_trailing_bytes() {
+        let mut bytes =
+            Request::Read { key: "k".into(), from: ProposerId::new(1) }.to_bytes();
+        bytes.push(0);
+        assert!(Request::from_bytes(&bytes).is_err(), "trailing bytes accepted");
     }
 
     #[test]

@@ -10,12 +10,20 @@
 //! The cache must be invalidated on any conflict (another proposer won a
 //! higher ballot) and by the deletion GC (§3.1 step 2b), which also
 //! fast-forwards the ballot counter and bumps the proposer's age.
+//!
+//! The cache is **bounded**: under many-key workloads an unbounded map
+//! would grow with the keyspace. At [`RttCache::capacity`] entries the
+//! oldest insertion is evicted (FIFO — dropping an entry only costs the
+//! next round on that key a prepare phase, never correctness).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::ballot::Ballot;
 use crate::msg::Key;
 use crate::state::Val;
+
+/// Default per-proposer entry cap (see [`RttCache::with_capacity`]).
+pub const DEFAULT_CACHE_CAPACITY: usize = 4096;
 
 /// A cached (promised ballot, last written value) pair for one key.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -27,18 +35,48 @@ pub struct CacheEntry {
     pub val: Val,
 }
 
-/// Per-proposer 1-RTT cache.
-#[derive(Debug, Default)]
+/// Per-proposer 1-RTT cache, bounded by a capacity cap.
+#[derive(Debug)]
 pub struct RttCache {
     entries: HashMap<Key, CacheEntry>,
+    /// Insertion order for FIFO eviction. May hold keys whose entry was
+    /// consumed/invalidated since; those are skipped (and periodically
+    /// swept) rather than eagerly removed.
+    order: VecDeque<Key>,
+    capacity: usize,
     hits: u64,
     misses: u64,
+    evictions: u64,
+}
+
+impl Default for RttCache {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl RttCache {
-    /// Empty cache.
+    /// Empty cache with the default capacity.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_capacity(DEFAULT_CACHE_CAPACITY)
+    }
+
+    /// Empty cache holding at most `capacity` entries.
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity > 0, "cache capacity must be positive");
+        RttCache {
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            capacity,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// The entry cap.
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Looks up a usable entry, counting hit/miss.
@@ -58,9 +96,24 @@ impl RttCache {
         }
     }
 
-    /// Installs/refreshes an entry after a successful round.
+    /// Installs/refreshes an entry after a successful round, evicting
+    /// the oldest insertion when the cap is exceeded.
     pub fn put(&mut self, key: Key, ballot: Ballot, val: Val) {
-        self.entries.insert(key, CacheEntry { ballot, val });
+        if self.entries.insert(key.clone(), CacheEntry { ballot, val }).is_none() {
+            self.order.push_back(key);
+        }
+        while self.entries.len() > self.capacity {
+            let Some(old) = self.order.pop_front() else { break };
+            if self.entries.remove(&old).is_some() {
+                self.evictions += 1;
+            }
+        }
+        // Sweep stale order slots (keys taken/invalidated since their
+        // insertion) so the queue stays proportional to the live set.
+        if self.order.len() > 2 * self.entries.len() + 16 {
+            let entries = &self.entries;
+            self.order.retain(|k| entries.contains_key(k));
+        }
     }
 
     /// Invalidates one key (conflict, or GC step 2b).
@@ -71,11 +124,17 @@ impl RttCache {
     /// Drops everything (GC age bump, config change).
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.order.clear();
     }
 
     /// (hits, misses) counters.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
+    }
+
+    /// Entries evicted by the capacity cap.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 
     /// Number of cached keys.
@@ -111,5 +170,51 @@ mod tests {
         assert_eq!(c.len(), 1);
         c.clear();
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn capacity_cap_evicts_oldest_first() {
+        let mut c = RttCache::with_capacity(3);
+        for k in ["a", "b", "c", "d"] {
+            c.put(k.into(), Ballot::new(1, 1), Val::Empty);
+        }
+        assert_eq!(c.len(), 3, "cap holds");
+        assert_eq!(c.evictions(), 1);
+        assert!(c.take(&"a".to_string()).is_none(), "oldest insertion evicted");
+        assert!(c.take(&"d".to_string()).is_some(), "newest survives");
+    }
+
+    #[test]
+    fn refresh_does_not_duplicate_order_slots() {
+        let mut c = RttCache::with_capacity(2);
+        c.put("a".into(), Ballot::new(1, 1), Val::Empty);
+        c.put("a".into(), Ballot::new(2, 1), Val::Empty); // refresh, not insert
+        c.put("b".into(), Ballot::new(1, 1), Val::Empty);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 0, "refreshes must not trigger eviction");
+        // A third distinct key evicts "a" (the oldest), not "b".
+        c.put("x".into(), Ballot::new(1, 1), Val::Empty);
+        assert!(c.take(&"a".to_string()).is_none());
+        assert!(c.take(&"b".to_string()).is_some());
+    }
+
+    #[test]
+    fn bounded_under_many_key_churn() {
+        let mut c = RttCache::with_capacity(64);
+        for i in 0..10_000u64 {
+            let key = format!("k{i}");
+            c.put(key.clone(), Ballot::new(i + 1, 1), Val::Num { ver: 0, num: i as i64 });
+            if i % 3 == 0 {
+                c.take(&key);
+            }
+        }
+        assert!(c.len() <= 64, "cap violated: {}", c.len());
+        assert!(
+            c.order.len() <= 2 * c.entries.len() + 16,
+            "order queue leaked: {} slots for {} entries",
+            c.order.len(),
+            c.entries.len()
+        );
+        assert!(c.evictions() > 0);
     }
 }

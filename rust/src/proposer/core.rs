@@ -283,6 +283,130 @@ impl RoundCore {
     }
 }
 
+/// What a quorum-read round wants the driver to do next.
+#[derive(Debug)]
+pub enum ReadStep {
+    /// Waiting for more replies.
+    Continue,
+    /// Fast path decided: `Ok(value)` serves the read after ONE round
+    /// trip and ZERO acceptor writes; `Err` is a hard protocol failure
+    /// (the GC age fence).
+    Done(CasResult<Val>),
+    /// The fast path cannot be taken (disagreeing replies, a foreign
+    /// promise in flight, or too many failures): the driver must run
+    /// the classic identity-CAS round instead. Linearizability is never
+    /// weakened — the fallback IS the §2.2 read.
+    Fallback,
+}
+
+/// Sans-IO quorum-read state machine: one `Read` fan-out, no prepare, no
+/// accept, no disk writes on any acceptor.
+///
+/// The fast path serves value `v` iff `max(prepare, accept)` replies
+/// report the identical `(accepted_ballot, value)` pair, that ballot is
+/// the highest accepted ballot seen, and no reply carries a *foreign*
+/// promise above it. Safety sketch:
+///
+/// * a set that large intersects every accept quorum, so `v` is chosen
+///   and no higher ballot can be chosen without telling one of our
+///   replies — the read observes every write that completed before it
+///   started;
+/// * two quorum reads can never disagree: the second one's reply set
+///   intersects whatever accept quorum chose the newer value;
+/// * a higher *own* promise (this proposer's piggybacked §2.2.1 ballot)
+///   does not block: any in-flight own write either already reached an
+///   accept quorum (then it IS the max accepted ballot we match on) or
+///   has not completed anywhere and the read linearizes before it.
+///
+/// A foreign promise above the accepted ballot means another proposer
+/// may be mid-write — the conservative answer is the classic round.
+pub struct ReadCore {
+    from: ProposerId,
+    cfg: ClusterConfig,
+    replies: usize,
+    /// (accepted_ballot, value, promise) per `ReadState` reply.
+    states: Vec<(Ballot, Val, Ballot)>,
+    finished: bool,
+}
+
+impl ReadCore {
+    /// Starts a quorum read. Returns the core and the `Read` fan-out.
+    pub fn new(key: Key, from: ProposerId, cfg: ClusterConfig) -> (Self, Vec<(u64, Request)>) {
+        let msgs = cfg
+            .acceptors
+            .iter()
+            .map(|&to| (to, Request::Read { key: key.clone(), from }))
+            .collect();
+        (ReadCore { from, cfg, replies: 0, states: Vec::new(), finished: false }, msgs)
+    }
+
+    /// Matching replies required to serve the fast path: a set this
+    /// large intersects every prepare AND every accept quorum.
+    pub fn needed(&self) -> usize {
+        self.cfg.quorum.prepare.max(self.cfg.quorum.accept)
+    }
+
+    /// Feeds one acceptor reply (or a transport failure as `None`).
+    pub fn on_reply(&mut self, _from: u64, resp: Option<Response>) -> ReadStep {
+        if self.finished {
+            return ReadStep::Continue; // late reply: ignore
+        }
+        self.replies += 1;
+        match resp {
+            Some(Response::ReadState { promise, accepted_ballot, accepted_val }) => {
+                self.states.push((accepted_ballot, accepted_val, promise));
+            }
+            Some(Response::StaleAge { required }) => {
+                // The GC fenced this proposer; a fallback round would be
+                // fenced too, so fail hard like the classic path does.
+                self.finished = true;
+                return ReadStep::Done(Err(CasError::StaleAge {
+                    required,
+                    got: self.from.age,
+                }));
+            }
+            // Transport failure or an unexpected response: counts only
+            // toward `replies` (and therefore toward exhaustion).
+            _ => {}
+        }
+        self.decide()
+    }
+
+    fn decide(&mut self) -> ReadStep {
+        if let Some(max_b) = self.states.iter().map(|(b, _, _)| *b).max() {
+            let matches = self.states.iter().filter(|(b, _, _)| *b == max_b).count();
+            let blocked = self
+                .states
+                .iter()
+                .any(|(_, _, p)| *p > max_b && p.proposer != self.from.id);
+            if blocked {
+                // A foreign write may be in flight; no later reply can
+                // retract a promise, so fall back immediately.
+                self.finished = true;
+                return ReadStep::Fallback;
+            }
+            if matches >= self.needed() {
+                // A ballot is accepted with exactly one value, so every
+                // matching reply carries the same one.
+                let val = self
+                    .states
+                    .iter()
+                    .find(|(b, _, _)| *b == max_b)
+                    .map(|(_, v, _)| v.clone())
+                    .expect("matches >= 1 implies a state at max_b");
+                self.finished = true;
+                return ReadStep::Done(Ok(val));
+            }
+        }
+        if self.replies >= self.cfg.acceptors.len() {
+            // Everyone answered and no stable quorum emerged.
+            self.finished = true;
+            return ReadStep::Fallback;
+        }
+        ReadStep::Continue
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -490,6 +614,143 @@ mod tests {
             Step::Done(Err(CasError::StaleAge { required: 3, got: 0 })) => {}
             s => panic!("{s:?}"),
         }
+    }
+
+    fn read_state(c: u64, p: u64, num: i64, promise: Ballot) -> Response {
+        Response::ReadState {
+            promise,
+            accepted_ballot: Ballot::new(c, p),
+            accepted_val: Val::Num { ver: 0, num },
+        }
+    }
+
+    #[test]
+    fn quorum_read_serves_matching_quorum_in_one_round() {
+        let (mut core, msgs) =
+            ReadCore::new("k".into(), ProposerId::new(9), cfg3());
+        assert_eq!(msgs.len(), 3);
+        assert!(matches!(msgs[0].1, Request::Read { .. }));
+        assert!(matches!(
+            core.on_reply(1, Some(read_state(4, 1, 42, Ballot::ZERO))),
+            ReadStep::Continue
+        ));
+        match core.on_reply(2, Some(read_state(4, 1, 42, Ballot::ZERO))) {
+            ReadStep::Done(Ok(v)) => assert_eq!(v.as_num(), Some(42)),
+            s => panic!("expected fast-path read, got {s:?}"),
+        }
+        // Late reply ignored.
+        assert!(matches!(
+            core.on_reply(3, Some(read_state(4, 1, 42, Ballot::ZERO))),
+            ReadStep::Continue
+        ));
+    }
+
+    #[test]
+    fn quorum_read_of_absent_key_serves_empty() {
+        let (mut core, _) = ReadCore::new("k".into(), ProposerId::new(9), cfg3());
+        let empty = || Response::ReadState {
+            promise: Ballot::ZERO,
+            accepted_ballot: Ballot::ZERO,
+            accepted_val: Val::Empty,
+        };
+        core.on_reply(1, Some(empty()));
+        match core.on_reply(2, Some(empty())) {
+            ReadStep::Done(Ok(v)) => assert!(v.is_empty()),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn quorum_read_falls_back_on_disagreeing_replies() {
+        let (mut core, _) = ReadCore::new("k".into(), ProposerId::new(9), cfg3());
+        core.on_reply(1, Some(read_state(4, 1, 42, Ballot::ZERO)));
+        core.on_reply(2, Some(read_state(5, 2, 43, Ballot::ZERO)));
+        // All three answered, max ballot has only one vote: fallback.
+        match core.on_reply(3, Some(read_state(4, 1, 42, Ballot::ZERO))) {
+            ReadStep::Fallback => {}
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn quorum_read_falls_back_on_foreign_promise() {
+        let (mut core, _) = ReadCore::new("k".into(), ProposerId::new(9), cfg3());
+        // Acceptor 1 promised ballot (7, 2) to ANOTHER proposer: a write
+        // may be in flight — immediate fallback.
+        match core.on_reply(1, Some(read_state(4, 1, 42, Ballot::new(7, 2)))) {
+            ReadStep::Fallback => {}
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn quorum_read_ignores_own_piggybacked_promise() {
+        // Proposer 9 reads a key it also writes: acceptors hold its own
+        // §2.2.1 piggybacked promise. That must NOT force a fallback.
+        let (mut core, _) = ReadCore::new("k".into(), ProposerId::new(9), cfg3());
+        core.on_reply(1, Some(read_state(4, 9, 42, Ballot::new(5, 9))));
+        match core.on_reply(2, Some(read_state(4, 9, 42, Ballot::new(5, 9)))) {
+            ReadStep::Done(Ok(v)) => assert_eq!(v.as_num(), Some(42)),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn quorum_read_newer_accepted_wins_the_match() {
+        // One acceptor is ahead: its ballot is the max, so the stale
+        // pair can never satisfy the fast path.
+        let (mut core, _) = ReadCore::new("k".into(), ProposerId::new(9), cfg3());
+        core.on_reply(1, Some(read_state(9, 2, 99, Ballot::ZERO)));
+        core.on_reply(2, Some(read_state(4, 1, 42, Ballot::ZERO)));
+        match core.on_reply(3, Some(read_state(9, 2, 99, Ballot::ZERO))) {
+            ReadStep::Done(Ok(v)) => {
+                assert_eq!(v.as_num(), Some(99), "must serve the NEWER committed value")
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn quorum_read_transport_failures_force_fallback() {
+        let (mut core, _) = ReadCore::new("k".into(), ProposerId::new(9), cfg3());
+        core.on_reply(1, None);
+        core.on_reply(2, Some(read_state(4, 1, 42, Ballot::ZERO)));
+        match core.on_reply(3, None) {
+            ReadStep::Fallback => {}
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn quorum_read_stale_age_fails_hard() {
+        let (mut core, _) =
+            ReadCore::new("k".into(), ProposerId { id: 9, age: 1 }, cfg3());
+        match core.on_reply(1, Some(Response::StaleAge { required: 3 })) {
+            ReadStep::Done(Err(CasError::StaleAge { required: 3, got: 1 })) => {}
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn quorum_read_respects_flexible_quorums() {
+        // 4 nodes, prepare=2, accept=3: the read quorum is max(2,3)=3.
+        let cfg = ClusterConfig {
+            epoch: 1,
+            acceptors: vec![1, 2, 3, 4],
+            quorum: crate::quorum::QuorumSpec::flexible(4, 2, 3).unwrap(),
+        };
+        let (mut core, msgs) = ReadCore::new("k".into(), ProposerId::new(9), cfg);
+        assert_eq!(msgs.len(), 4);
+        assert_eq!(core.needed(), 3);
+        core.on_reply(1, Some(read_state(4, 1, 42, Ballot::ZERO)));
+        assert!(matches!(
+            core.on_reply(2, Some(read_state(4, 1, 42, Ballot::ZERO))),
+            ReadStep::Continue
+        ));
+        assert!(matches!(
+            core.on_reply(3, Some(read_state(4, 1, 42, Ballot::ZERO))),
+            ReadStep::Done(Ok(_))
+        ));
     }
 
     #[test]

@@ -27,8 +27,21 @@ use crate::rng::Rng;
 use crate::state::Val;
 use crate::transport::Transport;
 
-pub use self::cache::RttCache;
-pub use self::core::{RoundCore, RoundOutcome, Step};
+pub use self::cache::{RttCache, DEFAULT_CACHE_CAPACITY};
+pub use self::core::{ReadCore, ReadStep, RoundCore, RoundOutcome, Step};
+
+/// Consistency route for [`Proposer::get`]. Both modes are
+/// linearizable; they differ only in cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadMode {
+    /// Try the 1-RTT zero-write quorum read first; fall back to the
+    /// identity-CAS round when the quorum disagrees or a foreign write
+    /// is in flight (the default).
+    Quorum,
+    /// Always run the classic §2.2 identity-CAS round (two phases and a
+    /// quorum of durable writes per read). The ablation baseline.
+    Cas,
+}
 
 /// Tunables for the retry/backoff policy.
 #[derive(Debug, Clone)]
@@ -41,6 +54,11 @@ pub struct ProposerOpts {
     pub round_timeout: Duration,
     /// Base backoff between attempts (exponential, jittered).
     pub backoff: Duration,
+    /// How [`Proposer::get`] reads (see [`ReadMode`]).
+    pub read_mode: ReadMode,
+    /// Entry cap for the 1-RTT cache (§2.2.1), see
+    /// [`RttCache::with_capacity`].
+    pub cache_capacity: usize,
 }
 
 impl Default for ProposerOpts {
@@ -50,6 +68,8 @@ impl Default for ProposerOpts {
             max_attempts: 16,
             round_timeout: Duration::from_secs(2),
             backoff: Duration::from_micros(200),
+            read_mode: ReadMode::Quorum,
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
         }
     }
 }
@@ -87,7 +107,7 @@ impl Proposer {
             gen: Mutex::new(BallotGenerator::new(id)),
             cfg: RwLock::new(cfg),
             transport,
-            cache: Mutex::new(RttCache::new()),
+            cache: Mutex::new(RttCache::with_capacity(opts.cache_capacity)),
             jitter: Mutex::new(Rng::from_entropy()),
             opts,
             metrics: Counters::new(),
@@ -258,9 +278,71 @@ impl Proposer {
 
     // ---- convenience API (the §2.2 specializations) ----
 
-    /// Linearizable read: the identity transition `x -> x`.
+    /// Linearizable read.
+    ///
+    /// In [`ReadMode::Quorum`] (the default) this first attempts the
+    /// **1-RTT fast path**: one `Read` fan-out, served immediately when
+    /// a read quorum reports a matching stable state — one round trip,
+    /// zero acceptor writes, zero fsyncs. When the quorum disagrees or
+    /// another proposer's write is in flight it falls back to the
+    /// classic identity-CAS round ([`Proposer::get_via_cas`]), so the
+    /// result is linearizable either way. Per-path counters:
+    /// [`Counters::read_fast`](crate::metrics::Counters) /
+    /// `read_fallback`.
     pub fn get(&self, key: impl Into<Key>) -> CasResult<Val> {
+        let key: Key = key.into();
+        if self.opts.read_mode == ReadMode::Cas {
+            return self.get_via_cas(key);
+        }
+        match self.quorum_read(&key) {
+            Ok(Some(v)) => {
+                self.metrics.read_fast.fetch_add(1, Ordering::Relaxed);
+                Ok(v)
+            }
+            Ok(None) => {
+                self.metrics.read_fallback.fetch_add(1, Ordering::Relaxed);
+                self.get_via_cas(key)
+            }
+            Err(e) => {
+                // Hard failure (GC age fence): count it like the
+                // classic path does.
+                self.metrics.failures.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Linearizable read via the classic identity transition `x -> x`
+    /// (§2.2): a full round with durable acceptor writes. The fallback
+    /// of [`Proposer::get`] and the `ReadMode::Cas` implementation.
+    pub fn get_via_cas(&self, key: impl Into<Key>) -> CasResult<Val> {
         Ok(self.change_detailed(key, ChangeFn::Read)?.state)
+    }
+
+    /// One quorum-read attempt. `Ok(Some(v))` = fast path served;
+    /// `Ok(None)` = fall back to the identity-CAS round; `Err` = hard
+    /// failure (GC age fence).
+    fn quorum_read(&self, key: &Key) -> CasResult<Option<Val>> {
+        let cfg = self.cfg.read().unwrap().clone();
+        let (mut core, msgs) = ReadCore::new(key.clone(), self.proposer_id(), cfg);
+        let (tx, rx) = mpsc::channel();
+        self.transport.fan_out(0, msgs, &tx);
+        let deadline = Instant::now() + self.opts.round_timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None); // timed out: let the classic round try
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(reply) => match core.on_reply(reply.from, reply.resp) {
+                    ReadStep::Continue => {}
+                    ReadStep::Done(Ok(v)) => return Ok(Some(v)),
+                    ReadStep::Done(Err(e)) => return Err(e),
+                    ReadStep::Fallback => return Ok(None),
+                },
+                Err(_) => return Ok(None),
+            }
+        }
     }
 
     /// Initialize-if-empty (the Synod specialization).
@@ -297,6 +379,19 @@ impl Proposer {
     /// Number of keys currently cached (1-RTT).
     pub fn cache_len(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+
+    /// Entries evicted from the 1-RTT cache by its capacity cap.
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache.lock().unwrap().evictions()
+    }
+
+    /// (fast-path reads, fallback reads) served by [`Proposer::get`].
+    pub fn read_stats(&self) -> (u64, u64) {
+        (
+            self.metrics.read_fast.load(Ordering::Relaxed),
+            self.metrics.read_fallback.load(Ordering::Relaxed),
+        )
     }
 }
 
@@ -430,6 +525,92 @@ mod tests {
         assert!(p.cache_len() > 0);
         p.update_config(cfg).unwrap();
         assert_eq!(p.cache_len(), 0);
+    }
+
+    #[test]
+    fn quorum_read_takes_fast_path_on_stable_key() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t.clone());
+        p.set("k", 42).unwrap();
+        let before = t.request_count();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(42));
+        let (fast, fallback) = p.read_stats();
+        assert_eq!(fast, 1, "same-proposer read of a stable key is fast-path");
+        assert_eq!(fallback, 0);
+        // ONE phase: exactly one Read per acceptor, zero writes.
+        assert_eq!(t.request_count() - before, 3, "1 RTT = 3 requests");
+    }
+
+    #[test]
+    fn quorum_read_falls_back_on_foreign_promise() {
+        let (t, cfg) = cluster(3);
+        let writer = Proposer::new(1, cfg.clone(), t.clone());
+        writer.set("k", 7).unwrap(); // leaves writer's piggybacked promise
+        let reader = Proposer::new(2, cfg, t);
+        assert_eq!(reader.get("k").unwrap().as_num(), Some(7));
+        let (fast, fallback) = reader.read_stats();
+        assert_eq!(fast, 0, "foreign promise in flight must not fast-path");
+        assert_eq!(fallback, 1, "must fall back to the identity-CAS round");
+    }
+
+    #[test]
+    fn quorum_read_fast_path_reads_own_writes() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t);
+        for i in 0..5 {
+            p.set("k", i).unwrap();
+            assert_eq!(p.get("k").unwrap().as_num(), Some(i), "read-your-writes");
+        }
+        let (fast, _) = p.read_stats();
+        assert_eq!(fast, 5, "own piggybacked promise never blocks the fast path");
+    }
+
+    #[test]
+    fn quorum_read_falls_back_when_replies_disagree() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t.clone());
+        // Write lands on 1 and 2 only: acceptor 3 is behind.
+        t.set_down(3, true);
+        p.set("k", 9).unwrap();
+        t.set_down(3, false);
+        // Another proposer without cached state reads: acceptor 3
+        // disagrees with the quorum... but 1 and 2 still match, and the
+        // promise on them belongs to p (foreign!) — fallback either way.
+        let reader = Proposer::new(2, cfg, t);
+        assert_eq!(reader.get("k").unwrap().as_num(), Some(9), "fallback serves the value");
+        let (_, fallback) = reader.read_stats();
+        assert_eq!(fallback, 1);
+    }
+
+    #[test]
+    fn cas_read_mode_skips_fast_path() {
+        let (t, cfg) = cluster(3);
+        let opts = ProposerOpts { read_mode: ReadMode::Cas, ..Default::default() };
+        let p = Proposer::with_opts(1, cfg, t, opts);
+        p.set("k", 1).unwrap();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(1));
+        assert_eq!(p.read_stats(), (0, 0), "Cas mode never touches the read path");
+    }
+
+    #[test]
+    fn quorum_read_survives_one_acceptor_down() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t.clone());
+        p.set("k", 5).unwrap();
+        t.set_down(3, true);
+        assert_eq!(p.get("k").unwrap().as_num(), Some(5), "majority still reads");
+    }
+
+    #[test]
+    fn cache_capacity_opt_bounds_cache() {
+        let (t, cfg) = cluster(3);
+        let opts = ProposerOpts { cache_capacity: 8, ..Default::default() };
+        let p = Proposer::with_opts(1, cfg, t, opts);
+        for i in 0..50 {
+            p.set(format!("k{i}"), i).unwrap();
+        }
+        assert!(p.cache_len() <= 8, "cache exceeded its cap: {}", p.cache_len());
+        assert!(p.cache_evictions() >= 42, "evictions counted");
     }
 
     #[test]

@@ -73,6 +73,20 @@ pub enum ClientReq {
         /// Tombstone ballot counter to fast-forward past.
         min_counter: u64,
     },
+    /// Linearizable read, routed to the key's shard proposer. Served on
+    /// the 1-RTT zero-write quorum-read fast path when possible, with
+    /// the identity-CAS fallback otherwise (see
+    /// [`crate::proposer::ReadMode`]).
+    Read {
+        /// Register key.
+        key: Key,
+    },
+    /// Batched linearizable reads: split by shard, each shard's keys
+    /// share ONE quorum-read fan-out ([`BatchProposer::read_batch`]).
+    ReadBatch {
+        /// Distinct register keys.
+        keys: Vec<Key>,
+    },
 }
 
 impl Codec for ClientReq {
@@ -98,6 +112,14 @@ impl Codec for ClientReq {
                 key.encode(out);
                 min_counter.encode(out);
             }
+            ClientReq::Read { key } => {
+                out.push(6);
+                key.encode(out);
+            }
+            ClientReq::ReadBatch { keys } => {
+                out.push(7);
+                encode_seq(keys, out);
+            }
         }
     }
     fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
@@ -108,6 +130,8 @@ impl Codec for ClientReq {
             3 => ClientReq::Collect,
             4 => ClientReq::Status,
             5 => ClientReq::GcSync { key: Key::decode(input)?, min_counter: u64::decode(input)? },
+            6 => ClientReq::Read { key: Key::decode(input)? },
+            7 => ClientReq::ReadBatch { keys: decode_seq(input)? },
             _ => return Err(CodecError::Invalid("ClientReq tag")),
         })
     }
@@ -397,6 +421,11 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
             }
         }
         ClientReq::Batch { ops } => handle_batch(ops, ctx),
+        ClientReq::Read { key } => match ctx.proposer_for(key).get(key.clone()) {
+            Ok(v) => ClientResp::Val(v),
+            Err(e) => ClientResp::Err(e.to_string()),
+        },
+        ClientReq::ReadBatch { keys } => handle_read_batch(keys, ctx),
         ClientReq::Delete { key } => match ctx.proposer_for(key).delete(key.clone()) {
             Ok(_) => {
                 ctx.gc.schedule(key.clone());
@@ -428,16 +457,23 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
             ClientResp::Synced { proposer_id: synced.0, age: synced.1 }
         }
         ClientReq::Status => {
-            let mut snap = [0u64; 6];
+            let mut snap = [0u64; 8];
             for p in &ctx.proposers {
                 for (acc, v) in snap.iter_mut().zip(p.metrics.snapshot()) {
                     *acc += v;
                 }
             }
-            let [rounds, commits, conflicts, retries, cache_hits, failures] = snap;
+            // Batched reads land on the batch proposers' counters.
+            for b in &ctx.batches {
+                snap[6] += b.metrics.read_fast.load(std::sync::atomic::Ordering::Relaxed);
+                snap[7] += b.metrics.read_fallback.load(std::sync::atomic::Ordering::Relaxed);
+            }
+            let [rounds, commits, conflicts, retries, cache_hits, failures, read_fast, read_fb] =
+                snap;
             ClientResp::Status(format!(
                 "id={} shards={} rounds={rounds} commits={commits} conflicts={conflicts} \
-                 retries={retries} cache_hits={cache_hits} failures={failures} gc_pending={}",
+                 retries={retries} cache_hits={cache_hits} failures={failures} \
+                 read_fast={read_fast} read_fallback={read_fb} gc_pending={}",
                 ctx.proposers[0].id(),
                 ctx.shards.len(),
                 ctx.gc.pending()
@@ -489,6 +525,47 @@ fn handle_batch(ops: &[(Key, ChangeFn)], ctx: &NodeCtx) -> ClientResp {
     ClientResp::Batch(results.into_iter().map(|r| r.expect("every slot routed")).collect())
 }
 
+/// Executes a client read batch: each shard's keys share one
+/// quorum-read fan-out; results reassemble in the original order.
+fn handle_read_batch(keys: &[Key], ctx: &NodeCtx) -> ClientResp {
+    if ctx.shards.len() == 1 {
+        return match ctx.batches[0].read_batch(keys) {
+            Ok(results) => ClientResp::Batch(
+                results.into_iter().map(|r| r.map_err(|e| e.to_string())).collect(),
+            ),
+            Err(e) => ClientResp::Err(e.to_string()),
+        };
+    }
+    let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); ctx.shards.len()];
+    for (i, key) in keys.iter().enumerate() {
+        by_shard[ctx.router.route(key)].push(i);
+    }
+    let mut results: Vec<Option<Result<Val, String>>> = Vec::new();
+    results.resize_with(keys.len(), || None);
+    for (s, idxs) in by_shard.iter().enumerate() {
+        if idxs.is_empty() {
+            continue;
+        }
+        let shard_keys: Vec<Key> = idxs.iter().map(|&i| keys[i].clone()).collect();
+        match ctx.batches[s].read_batch(&shard_keys) {
+            Ok(rs) => {
+                for (&i, r) in idxs.iter().zip(rs.into_iter()) {
+                    results[i] = Some(r.map_err(|e| e.to_string()));
+                }
+            }
+            Err(e) => {
+                // Reads are side-effect free, so a whole-shard error is
+                // safe to report per-op (and retry).
+                let msg = e.to_string();
+                for &i in idxs {
+                    results[i] = Some(Err(msg.clone()));
+                }
+            }
+        }
+    }
+    ClientResp::Batch(results.into_iter().map(|r| r.expect("every slot routed")).collect())
+}
+
 /// A minimal blocking client for the client protocol.
 pub struct Client {
     stream: TcpStream,
@@ -519,9 +596,25 @@ impl Client {
         }
     }
 
-    /// Convenience: linearizable read.
+    /// Convenience: linearizable read (1-RTT fast path when possible,
+    /// identity-CAS fallback otherwise).
     pub fn get(&mut self, key: &str) -> CasResult<Val> {
-        self.change(key, ChangeFn::Read)
+        match self.call(&ClientReq::Read { key: key.into() })? {
+            ClientResp::Val(v) => Ok(v),
+            ClientResp::Err(e) => Err(CasError::Transport(e)),
+            other => Err(CasError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Convenience: batched linearizable reads (per-shard shared
+    /// quorum-read fan-outs). One result per key, in order.
+    pub fn get_many(&mut self, keys: &[&str]) -> CasResult<Vec<Result<Val, String>>> {
+        let keys: Vec<Key> = keys.iter().map(|k| k.to_string()).collect();
+        match self.call(&ClientReq::ReadBatch { keys })? {
+            ClientResp::Batch(items) => Ok(items),
+            ClientResp::Err(e) => Err(CasError::Transport(e)),
+            other => Err(CasError::Transport(format!("unexpected response {other:?}"))),
+        }
     }
 }
 
@@ -579,6 +672,8 @@ mod tests {
             ClientReq::Collect,
             ClientReq::Status,
             ClientReq::GcSync { key: "k".into(), min_counter: 9 },
+            ClientReq::Read { key: "k".into() },
+            ClientReq::ReadBatch { keys: vec!["a".into(), "b".into()] },
         ];
         for r in reqs {
             assert_eq!(ClientReq::from_bytes(&r.to_bytes()).unwrap(), r);
@@ -669,6 +764,58 @@ mod tests {
         match c.call(&ClientReq::Status).unwrap() {
             ClientResp::Status(s) => assert!(s.contains("shards=2"), "{s}"),
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_path_over_tcp() {
+        let nodes = launch_cluster(3, None);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        for i in 0..6 {
+            c.change(&format!("r{i}"), ChangeFn::Set(i as i64)).unwrap();
+        }
+        // Single reads through a DIFFERENT node (forces the fallback:
+        // the writer node's promise is foreign there) and through the
+        // writer node (fast path: own promise).
+        let mut c2 = Client::connect(&nodes[2].client_addr.to_string()).unwrap();
+        for i in 0..6 {
+            assert_eq!(c2.get(&format!("r{i}")).unwrap().as_num(), Some(i as i64));
+            assert_eq!(c.get(&format!("r{i}")).unwrap().as_num(), Some(i as i64));
+        }
+        assert_eq!(c.get("absent").unwrap(), Val::Empty);
+        // Batched reads reassemble in order.
+        let many = c.get_many(&["r0", "r3", "absent", "r5"]).unwrap();
+        assert_eq!(many.len(), 4);
+        assert_eq!(many[0].as_ref().unwrap().as_num(), Some(0));
+        assert_eq!(many[1].as_ref().unwrap().as_num(), Some(3));
+        assert_eq!(many[2].as_ref().unwrap(), &Val::Empty);
+        assert_eq!(many[3].as_ref().unwrap().as_num(), Some(5));
+        // The node exports read-path counters.
+        match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => {
+                assert!(s.contains("read_fast="), "{s}");
+                assert!(s.contains("read_fallback="), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_read_batch_spans_shards() {
+        let nodes = launch_cluster_sharded(6, 2, None);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        for i in 0..12 {
+            c.change(&format!("k{i}"), ChangeFn::Set(i as i64)).unwrap();
+        }
+        let keys: Vec<String> = (0..12).map(|i| format!("k{i}")).collect();
+        let refs: Vec<&str> = keys.iter().map(|s| s.as_str()).collect();
+        // Read through a different node: the batch splits across both
+        // shards and reassembles in order.
+        let mut c2 = Client::connect(&nodes[5].client_addr.to_string()).unwrap();
+        let many = c2.get_many(&refs).unwrap();
+        assert_eq!(many.len(), 12);
+        for (i, item) in many.iter().enumerate() {
+            assert_eq!(item.as_ref().unwrap().as_num(), Some(i as i64), "key k{i}");
         }
     }
 

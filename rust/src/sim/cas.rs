@@ -19,7 +19,7 @@ use crate::change::ChangeFn;
 use crate::error::CasError;
 use crate::linearizability::{History, Observed};
 use crate::msg::{Key, ProposerId, Request, Response};
-use crate::proposer::{RoundCore, RttCache, Step};
+use crate::proposer::{ReadCore, ReadStep, RoundCore, RttCache, Step};
 use crate::quorum::ClusterConfig;
 use crate::rng::Rng;
 use crate::state::Val;
@@ -81,8 +81,12 @@ pub enum Workload {
     /// One `Add(1)` round per iteration (the collapsed-RMW the paper
     /// highlights as a CASPaxos advantage).
     Add,
-    /// One linearizable read per iteration.
+    /// One linearizable read per iteration via the classic
+    /// identity-CAS round.
     ReadOnly,
+    /// One linearizable read per iteration via the 1-RTT quorum-read
+    /// fast path (identity-CAS fallback on disagreement).
+    QuorumRead,
 }
 
 /// Shared, harvestable client statistics.
@@ -148,6 +152,9 @@ pub struct ClientActor {
     // In-flight round state.
     round_seq: u64,
     core: Option<RoundCore>,
+    /// In-flight quorum read (Workload::QuorumRead), exclusive with
+    /// `core` — a fallback swaps it for a classic round.
+    read: Option<ReadCore>,
     iter_started: SimTime,
     /// For RMW: version observed by the read half, if in the write half.
     rmw_read: Option<Val>,
@@ -178,6 +185,7 @@ impl ClientActor {
                 round_timeout: 2_000_000, // 2s of virtual time
                 round_seq: 0,
                 core: None,
+                read: None,
                 iter_started: 0,
                 rmw_read: None,
                 attempts: 0,
@@ -204,9 +212,23 @@ impl ClientActor {
 
     fn first_change(&self) -> ChangeFn {
         match self.workload {
-            Workload::ReadModifyWrite | Workload::ReadOnly => ChangeFn::Read,
+            Workload::ReadModifyWrite | Workload::ReadOnly | Workload::QuorumRead => {
+                ChangeFn::Read
+            }
             Workload::Add => ChangeFn::Add(1),
         }
+    }
+
+    /// Starts a quorum read (the 1-RTT fast-path attempt).
+    fn begin_read(&mut self, ctx: &mut Ctx<CasMsg>) {
+        self.round_seq += 1;
+        let (core, msgs) = ReadCore::new(self.key.clone(), self.proposer_id(), self.cfg.clone());
+        let round = self.round_seq;
+        self.read = Some(core);
+        for (to, req) in msgs {
+            ctx.send(to, CasMsg::Req { round, token: 0, req });
+        }
+        ctx.set_timer(self.round_timeout, TAG_ROUND_TIMEOUT_BASE + round);
     }
 
     fn begin_round(&mut self, ctx: &mut Ctx<CasMsg>, change: ChangeFn) {
@@ -243,11 +265,16 @@ impl ClientActor {
         self.iter_started = ctx.now();
         self.rmw_read = None;
         self.attempts = 0;
-        self.begin_round(ctx, self.first_change());
+        if self.workload == Workload::QuorumRead {
+            self.begin_read(ctx);
+        } else {
+            self.begin_round(ctx, self.first_change());
+        }
     }
 
     fn retry(&mut self, ctx: &mut Ctx<CasMsg>) {
         self.core = None;
+        self.read = None;
         self.attempts += 1;
         self.stats.failures.fetch_add(1, Ordering::Relaxed);
         // Exponential backoff with deterministic jitter from the sim rng.
@@ -266,7 +293,9 @@ impl ClientActor {
 
     fn on_round_done(&mut self, ctx: &mut Ctx<CasMsg>, state: Val, accepted: bool) {
         match self.workload {
-            Workload::ReadOnly | Workload::Add => self.complete_iteration(ctx),
+            Workload::ReadOnly | Workload::Add | Workload::QuorumRead => {
+                self.complete_iteration(ctx)
+            }
             Workload::ReadModifyWrite => {
                 if self.rmw_read.is_none() {
                     // Read half done; issue the CAS write half.
@@ -299,6 +328,26 @@ impl Actor<CasMsg> for ClientActor {
         let CasMsg::Resp { round, token, resp } = msg else { return };
         if round != self.round_seq {
             return; // stale round
+        }
+        if let Some(read) = self.read.as_mut() {
+            match read.on_reply(from, Some(resp)) {
+                ReadStep::Continue => {}
+                ReadStep::Done(Ok(v)) => {
+                    self.read = None;
+                    self.on_round_done(ctx, v, true);
+                }
+                ReadStep::Done(Err(_)) => {
+                    self.read = None;
+                    self.retry(ctx);
+                }
+                ReadStep::Fallback => {
+                    // Same iteration, classic round (bumps round_seq, so
+                    // any straggler read replies go stale).
+                    self.read = None;
+                    self.begin_round(ctx, ChangeFn::Read);
+                }
+            }
+            return;
         }
         let Some(core) = self.core.as_mut() else { return };
         match core.on_reply(token, from, Some(resp)) {
@@ -338,7 +387,7 @@ impl Actor<CasMsg> for ClientActor {
 
     fn on_timer(&mut self, ctx: &mut Ctx<CasMsg>, tag: u64) {
         if tag == TAG_RETRY {
-            if self.core.is_none() {
+            if self.core.is_none() && self.read.is_none() {
                 // Retry the *current* workload step from scratch.
                 match (self.workload, self.rmw_read.clone()) {
                     (Workload::ReadModifyWrite, Some(_)) => {
@@ -346,12 +395,13 @@ impl Actor<CasMsg> for ClientActor {
                         self.rmw_read = None;
                         self.begin_round(ctx, ChangeFn::Read);
                     }
+                    (Workload::QuorumRead, _) => self.begin_read(ctx),
                     _ => self.begin_round(ctx, self.first_change()),
                 }
             }
         } else if tag >= TAG_ROUND_TIMEOUT_BASE {
             let round = tag - TAG_ROUND_TIMEOUT_BASE;
-            if round == self.round_seq && self.core.is_some() {
+            if round == self.round_seq && (self.core.is_some() || self.read.is_some()) {
                 // Round stuck (partition/crash ate the quorum): abandon.
                 self.cache.invalidate(&self.key);
                 self.retry(ctx);
@@ -368,6 +418,13 @@ impl Actor<CasMsg> for ClientActor {
 /// the Wing&Gong checker models. The 1-RTT cache is deliberately off:
 /// fresh prepare phases maximize the interleavings under test.
 ///
+/// With [`HistClient::with_quorum_reads`], every other op is a **quorum
+/// read**: it attempts the 1-RTT fast path and falls back to a classic
+/// identity-CAS round mid-op, so the checker sees mixed
+/// fast-path/fallback read histories under faults — exactly the paths
+/// the read optimization must keep linearizable. Off by default so
+/// seed-pinned schedules replay unchanged.
+///
 /// Used by `tests/chaos.rs` and the `jepsen_sim` example; wired into
 /// multi-shard worlds by [`crate::sim::worlds`].
 pub struct HistClient {
@@ -379,10 +436,14 @@ pub struct HistClient {
     ops_left: u32,
     round: u64,
     core: Option<RoundCore>,
+    /// In-flight quorum read, exclusive with `core`.
+    read_core: Option<ReadCore>,
     current_op: Option<u64>,
+    current_key: Option<Key>,
     keys: Vec<Key>,
     round_timeout: SimTime,
     max_think: SimTime,
+    quorum_reads: bool,
 }
 
 impl HistClient {
@@ -407,11 +468,20 @@ impl HistClient {
             ops_left: ops,
             round: 0,
             core: None,
+            read_core: None,
             current_op: None,
+            current_key: None,
             keys,
             round_timeout: 400_000,
             max_think: 30_000,
+            quorum_reads: false,
         }
+    }
+
+    /// Makes every other op a quorum read (read-mixed chaos schedules).
+    pub fn with_quorum_reads(mut self) -> Self {
+        self.quorum_reads = true;
+        self
     }
 
     /// Sets the per-round abandon timeout (virtual µs).
@@ -444,9 +514,29 @@ impl HistClient {
         }
         self.ops_left -= 1;
         let key = self.keys[self.rng.gen_range(self.keys.len() as u64) as usize].clone();
+        // When enabled, every other op is a quorum read (the extra rng
+        // draw happens only then, keeping legacy schedules bit-stable).
+        let quorum_read = self.quorum_reads && self.rng.gen_range(2) == 0;
+        if quorum_read {
+            let op_id =
+                self.history.invoke(self.id, key.clone(), ChangeFn::Read, ctx.now());
+            self.current_op = Some(op_id);
+            self.current_key = Some(key.clone());
+            self.round += 1;
+            let (core, msgs) =
+                ReadCore::new(key, ProposerId::new(self.id), self.cfg.clone());
+            self.read_core = Some(core);
+            let round = self.round;
+            for (to, req) in msgs {
+                ctx.send(to, CasMsg::Req { round, token: 0, req });
+            }
+            ctx.set_timer(self.round_timeout, TAG_ROUND_TIMEOUT_BASE + round);
+            return;
+        }
         let change = self.random_change();
         let op_id = self.history.invoke(self.id, key.clone(), change.clone(), ctx.now());
         self.current_op = Some(op_id);
+        self.current_key = Some(key.clone());
         self.round += 1;
         let ballot = self.gen.next();
         let (core, msgs) = RoundCore::new(
@@ -456,6 +546,29 @@ impl HistClient {
             ProposerId::new(self.id),
             self.cfg.clone(),
             false, // no cache: maximize interleavings under test
+        );
+        let token = core.token();
+        self.core = Some(core);
+        let round = self.round;
+        for (to, req) in msgs {
+            ctx.send(to, CasMsg::Req { round, token, req });
+        }
+        ctx.set_timer(self.round_timeout, TAG_ROUND_TIMEOUT_BASE + round);
+    }
+
+    /// Quorum read could not decide: finish the SAME op with a classic
+    /// identity-CAS round (the fallback the real proposer runs).
+    fn fallback_to_round(&mut self, ctx: &mut Ctx<CasMsg>) {
+        let key = self.current_key.clone().expect("op in flight");
+        self.round += 1;
+        let ballot = self.gen.next();
+        let (core, msgs) = RoundCore::new(
+            key,
+            ChangeFn::Read,
+            ballot,
+            ProposerId::new(self.id),
+            self.cfg.clone(),
+            false,
         );
         let token = core.token();
         self.core = Some(core);
@@ -481,6 +594,32 @@ impl Actor<CasMsg> for HistClient {
         let CasMsg::Resp { round, token, resp } = msg else { return };
         if round != self.round {
             return; // stale round
+        }
+        if let Some(read) = self.read_core.as_mut() {
+            match read.on_reply(from, Some(resp)) {
+                ReadStep::Continue => {}
+                ReadStep::Done(result) => {
+                    self.read_core = None;
+                    let op_id = self.current_op.take().expect("op in flight");
+                    match result {
+                        Ok(v) => {
+                            // Fast path: a read never rejects.
+                            self.history.complete(
+                                op_id,
+                                Observed { state: v, accepted: true },
+                                ctx.now(),
+                            );
+                        }
+                        Err(_) => self.history.fail(op_id),
+                    }
+                    self.schedule_next(ctx);
+                }
+                ReadStep::Fallback => {
+                    self.read_core = None;
+                    self.fallback_to_round(ctx);
+                }
+            }
+            return;
         }
         let Some(core) = self.core.as_mut() else { return };
         match core.on_reply(token, from, Some(resp)) {
@@ -517,16 +656,17 @@ impl Actor<CasMsg> for HistClient {
 
     fn on_timer(&mut self, ctx: &mut Ctx<CasMsg>, tag: u64) {
         if tag == TAG_RETRY {
-            if self.core.is_none() {
+            if self.core.is_none() && self.read_core.is_none() {
                 self.start_op(ctx);
             } else {
                 self.schedule_next(ctx);
             }
         } else if tag >= TAG_ROUND_TIMEOUT_BASE {
             let round = tag - TAG_ROUND_TIMEOUT_BASE;
-            if round == self.round && self.core.is_some() {
+            if round == self.round && (self.core.is_some() || self.read_core.is_some()) {
                 // Abandon: outcome unknown (already recorded as such).
                 self.core = None;
+                self.read_core = None;
                 if let Some(op) = self.current_op.take() {
                     self.history.fail(op);
                 }
@@ -581,6 +721,80 @@ mod tests {
         for &l in &lat[1..] {
             assert_eq!(l, 20_000, "steady state must be 1 RTT");
         }
+    }
+
+    #[test]
+    fn quorum_read_workload_is_one_rtt_from_the_first_read() {
+        // Seed the register with one piggyback-free Add (no promise left
+        // behind), then run quorum reads from a DIFFERENT client: EVERY
+        // read — including the first — is exactly 1 RTT (20ms), with no
+        // warmup round and no cache requirement. The classic ReadOnly
+        // workload pays 2 RTT on its first iteration (prepare + accept).
+        let net = NetModel::uniform(10_000); // 10ms one-way, 20ms RTT
+        let mut w = World::new(net, 7);
+        for id in 1..=3u64 {
+            w.add_node(id, Region(0), Box::new(AcceptorActor::new(id)));
+        }
+        let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+        let (writer, wstats) = ClientActor::new(100, "k", Workload::Add, cfg.clone(), 1);
+        w.add_node(100, Region(0), Box::new(writer.without_piggyback()));
+        w.start();
+        w.run_to_quiescence();
+        assert_eq!(wstats.done.load(Ordering::Relaxed), 1);
+        let (reader, stats) = ClientActor::new(101, "k", Workload::QuorumRead, cfg, 10);
+        w.add_node(101, Region(0), Box::new(reader));
+        w.start();
+        w.run_to_quiescence();
+        assert_eq!(stats.done.load(Ordering::Relaxed), 10);
+        let lat = stats.latencies.lock().unwrap();
+        for (i, &l) in lat.iter().enumerate() {
+            assert_eq!(l, 20_000, "quorum read {i} must be exactly 1 RTT, got {l}µs");
+        }
+    }
+
+    #[test]
+    fn quorum_read_falls_back_but_completes_under_crash() {
+        let (mut w, _seed_stats) = build_world(3, Workload::Add, 1, 9);
+        w.start();
+        w.run_to_quiescence();
+        // One acceptor crashes: reads still decide (2 matching of 3) or
+        // fall back — either way every iteration completes.
+        w.crash(3);
+        let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+        let (reader, stats) = ClientActor::new(101, "k", Workload::QuorumRead, cfg, 5);
+        w.add_node(101, Region(0), Box::new(reader));
+        w.start();
+        w.run_to_quiescence();
+        assert_eq!(stats.done.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn hist_client_quorum_reads_stay_linearizable() {
+        let mut w = World::new(NetModel::uniform(5_000), 11);
+        for id in 1..=3 {
+            w.add_node(id, Region(0), Box::new(AcceptorActor::new(id)));
+        }
+        let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+        let history = Arc::new(History::new());
+        for c in 0..3u64 {
+            let client = HistClient::new(
+                300 + c,
+                cfg.clone(),
+                Arc::clone(&history),
+                91 ^ c,
+                10,
+                vec!["x".into()],
+            )
+            .with_quorum_reads();
+            w.add_node(300 + c, Region(0), Box::new(client));
+        }
+        w.start();
+        w.run_to_quiescence();
+        assert_eq!(history.len(), 30, "every op invoked exactly once");
+        assert!(matches!(
+            crate::linearizability::check(&history),
+            crate::linearizability::CheckResult::Linearizable
+        ));
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct ShardedWorldOpts {
     pub ops_per_client: u32,
     /// Shared keys per group (chaos worlds only).
     pub keys_per_shard: usize,
+    /// Mix 1-RTT quorum reads into chaos clients' schedules (every
+    /// other op; see [`HistClient::with_quorum_reads`]). Off by default
+    /// so legacy seeds replay bit-identically.
+    pub quorum_reads: bool,
     /// Link model for every node pair.
     pub net: NetModel,
 }
@@ -57,6 +61,7 @@ impl Default for ShardedWorldOpts {
             clients_per_shard: 2,
             ops_per_client: 15,
             keys_per_shard: 2,
+            quorum_reads: false,
             net: NetModel::uniform(5_000),
         }
     }
@@ -147,7 +152,7 @@ pub fn sharded_chaos_world(
         let mut shard_handles = Vec::with_capacity(opts.clients_per_shard);
         for c in 0..opts.clients_per_shard {
             let id = opts.client_id(s, c);
-            let client = HistClient::new(
+            let mut client = HistClient::new(
                 id,
                 cfg.clone(),
                 Arc::clone(&history),
@@ -158,6 +163,9 @@ pub fn sharded_chaos_world(
             // Spread ops over seconds of virtual time so fault windows
             // always overlap in-flight rounds.
             .with_think_time(300_000);
+            if opts.quorum_reads {
+                client = client.with_quorum_reads();
+            }
             world.add_node(id, Region(c % 3), Box::new(client));
             shard_handles.push(Arc::clone(&history));
         }

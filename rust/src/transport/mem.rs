@@ -41,7 +41,8 @@ impl<S: Storage> Node<S> {
             Request::Prepare { key, .. }
             | Request::Accept { key, .. }
             | Request::Erase { key, .. }
-            | Request::Install { key, .. } => self.shard_for(key).lock().unwrap().handle(req),
+            | Request::Install { key, .. }
+            | Request::Read { key, .. } => self.shard_for(key).lock().unwrap().handle(req),
             Request::SetMinAge { .. } => {
                 // Age fences must hold on every shard.
                 let mut last = Response::Ok;

@@ -70,9 +70,15 @@ pub fn serve_acceptor<S: Storage + 'static>(
                 Err(_) => break,
             };
             let Some(req) = req else { break };
-            // Handle under the lock; handlers are pure CPU plus (for
-            // FileStorage) an fsync'd append.
-            let resp = acceptor.lock().unwrap().handle(&req);
+            // Handle under the lock, but wait for durability OUTSIDE
+            // it: concurrent connections' writes then coalesce under a
+            // single fsync (FileStorage group commit), and reads never
+            // queue behind another request's disk wait.
+            let (resp, persist) = acceptor.lock().unwrap().handle_deferred(&req);
+            let resp = match persist.wait() {
+                Ok(()) => resp,
+                Err(e) => Response::Error(e.to_string()),
+            };
             if write_frame(&mut stream, &resp).is_err() {
                 break;
             }

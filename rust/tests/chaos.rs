@@ -21,8 +21,11 @@ use caspaxos::sim::worlds::{sharded_chaos_world, ShardedWorldOpts};
 use caspaxos::sim::{NetModel, Region};
 use caspaxos::testkit::forall_seeds;
 
-/// One seeded chaos scenario. Returns (invoked, completed) op counts.
-fn run_chaos(shards: usize, seed: u64) -> (usize, usize) {
+/// One seeded chaos scenario. With `quorum_reads`, every other client
+/// op is a 1-RTT quorum read (fast path + mid-op identity-CAS
+/// fallback), so the checker validates mixed read histories too.
+/// Returns (invoked, completed) op counts.
+fn run_chaos(shards: usize, seed: u64, quorum_reads: bool) -> (usize, usize) {
     let mut net = NetModel::uniform(5_000);
     net.jitter = 0.3;
     net.drop_prob = 0.01; // ambient 1% loss on top of the nemesis
@@ -32,6 +35,7 @@ fn run_chaos(shards: usize, seed: u64) -> (usize, usize) {
         clients_per_shard: 2,
         ops_per_client: 10,
         keys_per_shard: 2,
+        quorum_reads,
         net,
     };
     let mut w = sharded_chaos_world(&opts, seed);
@@ -118,7 +122,7 @@ fn run_chaos(shards: usize, seed: u64) -> (usize, usize) {
 fn chaos_single_shard_50_seeds() {
     let mut total_completed = 0usize;
     forall_seeds(0xCA05_0001, 50, |rng| {
-        let (invoked, completed) = run_chaos(1, rng.next_u64());
+        let (invoked, completed) = run_chaos(1, rng.next_u64(), false);
         assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
@@ -130,7 +134,7 @@ fn chaos_single_shard_50_seeds() {
 fn chaos_multi_shard_50_seeds() {
     let mut total_completed = 0usize;
     forall_seeds(0xCA05_0004, 50, |rng| {
-        let (invoked, completed) = run_chaos(4, rng.next_u64());
+        let (invoked, completed) = run_chaos(4, rng.next_u64(), false);
         assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
@@ -138,7 +142,34 @@ fn chaos_multi_shard_50_seeds() {
 }
 
 #[test]
+fn chaos_quorum_reads_single_shard_40_seeds() {
+    // Read-mixed fault histories: ~half the ops attempt the 1-RTT
+    // quorum read and fall back mid-op when the quorum disagrees. Any
+    // stale fast-path read shows up as a linearizability violation.
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_0007, 40, |rng| {
+        let (invoked, completed) = run_chaos(1, rng.next_u64(), true);
+        assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    assert!(total_completed > 400, "only {total_completed}/800 ops completed");
+}
+
+#[test]
+fn chaos_quorum_reads_multi_shard_40_seeds() {
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_0008, 40, |rng| {
+        let (invoked, completed) = run_chaos(4, rng.next_u64(), true);
+        assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    assert!(total_completed > 1600, "only {total_completed}/3200 ops completed");
+}
+
+#[test]
 fn chaos_scenarios_replay_deterministically() {
-    let run = |seed| run_chaos(2, seed);
+    let run = |seed| run_chaos(2, seed, false);
     assert_eq!(run(0xFEED), run(0xFEED), "same seed, same counts");
+    let run_reads = |seed| run_chaos(2, seed, true);
+    assert_eq!(run_reads(0xFEED), run_reads(0xFEED), "read-mixed schedules replay too");
 }
