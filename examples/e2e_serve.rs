@@ -52,6 +52,7 @@ fn launch() -> Vec<Node> {
                 cluster: cluster.clone(),
                 shard_plan: None,
                 data_dir: None,
+                lease: None,
             })
             .unwrap()
         })

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use caspaxos::acceptor::{FileStorage, GroupCommitOpts, Slot, Storage};
 use caspaxos::ballot::Ballot;
-use caspaxos::proposer::{Proposer, ProposerOpts, ReadMode};
+use caspaxos::proposer::{LeaseOpts, Proposer, ProposerOpts, ReadMode};
 use caspaxos::quorum::ClusterConfig;
 use caspaxos::shard::{ShardPlan, ShardedKv};
 use caspaxos::sim::cas::{AcceptorActor, CasMsg, ClientActor, Workload};
@@ -30,21 +30,48 @@ fn smoke() -> bool {
     std::env::var("BENCH_SMOKE").is_ok()
 }
 
-/// Requests per committed read on the in-memory transport, by mode.
-/// Returns (requests/read, fast, fallback).
-fn requests_per_read(mode: ReadMode, piggyback: bool, n: u64) -> (f64, u64, u64) {
+/// Per-mode read costs over one warm 3-acceptor cluster.
+struct ReadCosts {
+    /// Acceptor requests per committed read.
+    per_read: f64,
+    /// Quorum-read fast path / fallback counters.
+    fast: u64,
+    fallback: u64,
+    /// 0-RTT local reads and grant/renew rounds (lease mode only).
+    lease_local: u64,
+    lease_renews: u64,
+}
+
+/// Runs `n` reads of a stable key in the given mode; one shared harness
+/// so the lease/quorum/CAS rows stay comparable.
+fn requests_per_read(mode: ReadMode, piggyback: bool, n: u64) -> ReadCosts {
     let t = Arc::new(MemTransport::new(3));
     let cfg = ClusterConfig::majority(1, t.acceptor_ids());
-    let opts = ProposerOpts { read_mode: mode, piggyback, ..Default::default() };
+    let opts = ProposerOpts {
+        read_mode: mode,
+        piggyback,
+        lease: LeaseOpts {
+            duration: Duration::from_secs(60),
+            skew_bound: Duration::from_millis(100),
+            renew_margin: Duration::ZERO,
+        },
+        ..Default::default()
+    };
     let p = Proposer::with_opts(1, cfg, t.clone(), opts);
     p.set("k", 42).unwrap();
     let before = t.request_count();
     for _ in 0..n {
         p.get("k").unwrap();
     }
-    let per_read = (t.request_count() - before) as f64 / n as f64;
     let (fast, fallback) = p.read_stats();
-    (per_read, fast, fallback)
+    let (lease_local, lease_renews, _) = p.lease_stats();
+    ReadCosts {
+        per_read: (t.request_count() - before) as f64 / n as f64,
+        fast,
+        fallback,
+        lease_local,
+        lease_renews,
+    }
 }
 
 /// Reads against a key another proposer keeps writing: the fast path
@@ -152,6 +179,7 @@ fn group_commit_throughput(
                 promise: Ballot::ZERO,
                 accepted_ballot: Ballot::new(1, th),
                 value: Val::Num { ver: 0, num: th as i64 },
+                lease: None,
             };
             for i in 0..per_thread {
                 let ticket = {
@@ -177,23 +205,40 @@ fn main() {
     let n_reads: u64 = if quick { 50 } else { 2000 };
     let mut json: Vec<String> = Vec::new();
 
-    println!("# Read fast path — 1-RTT quorum reads vs identity-CAS (3 acceptors)\n");
+    println!(
+        "# Read fast path — 0-RTT leases vs 1-RTT quorum reads vs identity-CAS (3 acceptors)\n"
+    );
     println!("| read mode | acceptor requests / read | fast | fallback |");
     println!("|---|---|---|---|");
-    let (rq_cas, _, _) = requests_per_read(ReadMode::Cas, false, n_reads);
+    let rq_cas = requests_per_read(ReadMode::Cas, false, n_reads).per_read;
     println!("| identity-CAS, no cache (2 phases) | {rq_cas:.2} | - | - |");
-    let (rq_cached, _, _) = requests_per_read(ReadMode::Cas, true, n_reads);
+    let rq_cached = requests_per_read(ReadMode::Cas, true, n_reads).per_read;
     println!("| identity-CAS, 1-RTT cache | {rq_cached:.2} | - | - |");
-    let (rq_quorum, fast, fallback) = requests_per_read(ReadMode::Quorum, true, n_reads);
+    let quorum = requests_per_read(ReadMode::Quorum, true, n_reads);
+    let (rq_quorum, fast, fallback) = (quorum.per_read, quorum.fast, quorum.fallback);
     println!("| quorum read (fast path) | {rq_quorum:.2} | {fast} | {fallback} |");
+    let lease = requests_per_read(ReadMode::Lease, true, n_reads);
+    let (rq_lease, lease_local, lease_renews) =
+        (lease.per_read, lease.lease_local, lease.lease_renews);
+    println!(
+        "| lease read (0-RTT) | {rq_lease:.4} | {lease_local} local | {lease_renews} renews |"
+    );
     assert!(
         rq_quorum < rq_cas,
         "quorum reads must cost fewer requests than 2-phase reads"
     );
     assert_eq!(fast, n_reads, "stable-key reads must all take the fast path");
+    assert!(
+        rq_lease < rq_quorum,
+        "lease reads must cost fewer requests than quorum reads \
+         ({rq_lease:.4} vs {rq_quorum:.2})"
+    );
+    assert_eq!(lease_local, n_reads - 1, "after one acquire every read is 0-RTT");
     json.push(format!(
         "\"requests_per_read\": {{\"cas_no_cache\": {rq_cas:.3}, \"cas_cached\": {rq_cached:.3}, \
-         \"quorum\": {rq_quorum:.3}, \"fast\": {fast}, \"fallback\": {fallback}}}"
+         \"quorum\": {rq_quorum:.3}, \"lease\": {rq_lease:.4}, \"fast\": {fast}, \
+         \"fallback\": {fallback}, \"lease_local\": {lease_local}, \
+         \"lease_renews\": {lease_renews}}}"
     ));
 
     let (c_fast, c_fallback) = contended_reads(if quick { 20 } else { 500 });
@@ -205,17 +250,31 @@ fn main() {
     ));
 
     let iters = if quick { 10 } else { 200 };
+    let lat_lease = sim_read_latency_us(Workload::LeaseRead, iters);
     let lat_quorum = sim_read_latency_us(Workload::QuorumRead, iters);
     let lat_cas = sim_read_latency_us(Workload::ReadOnly, iters);
     println!("\n## Simulated WAN (20ms RTT), virtual time per read");
-    println!("quorum read: {:.1} ms   identity-CAS (no cache): {:.1} ms   ratio {:.2}x",
-        lat_quorum / 1000.0, lat_cas / 1000.0, lat_cas / lat_quorum);
+    println!(
+        "lease read: {:.2} ms   quorum read: {:.1} ms   identity-CAS (no cache): {:.1} ms",
+        lat_lease / 1000.0,
+        lat_quorum / 1000.0,
+        lat_cas / 1000.0
+    );
     assert!(
         (lat_quorum - 20_000.0).abs() < 1.0,
         "quorum reads must complete in exactly ONE 20ms round trip, got {lat_quorum}µs"
     );
+    // One 20ms acquire round amortized over the workload; every other
+    // read is 0-RTT (zero virtual time).
+    let expected_lease = 20_000.0 / iters as f64;
+    assert!(
+        (lat_lease - expected_lease).abs() < 1.0,
+        "lease reads must amortize to one acquire round, got {lat_lease}µs \
+         (expected {expected_lease}µs)"
+    );
     json.push(format!(
-        "\"sim_latency_us\": {{\"quorum\": {lat_quorum:.1}, \"cas\": {lat_cas:.1}}}"
+        "\"sim_latency_us\": {{\"lease\": {lat_lease:.2}, \"quorum\": {lat_quorum:.1}, \
+         \"cas\": {lat_cas:.1}}}"
     ));
 
     println!("\n## Sharded read throughput (wall clock, 4 proposers/shard, 8 threads)");

@@ -36,7 +36,26 @@ use crate::ballot::Ballot;
 use crate::msg::{Key, ProposerId, Request, Response};
 use crate::state::Val;
 
-pub use storage::{FileStorage, GroupCommitOpts, MemStorage, Persist, Slot, Storage, WalStats};
+pub use storage::{
+    FileStorage, GroupCommitOpts, Lease, MemStorage, Persist, Slot, Storage, WalStats,
+};
+
+/// Upper bound on a grantable lease (clamps the wire-supplied duration
+/// so a buggy or hostile proposer cannot lock a key forever).
+pub const MAX_LEASE_US: u64 = 60_000_000;
+
+/// Acceptor-local wall clock in µs since the UNIX epoch — the default
+/// clock for drivers that don't inject one ([`Acceptor::handle`]).
+/// Lease math only ever compares instants from the SAME acceptor's
+/// clock, so the epoch choice is irrelevant; what matters is that it
+/// survives restarts (a rebooted acceptor must keep honoring a
+/// persisted lease window).
+pub fn wall_clock_us() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
 
 /// A single acceptor: protocol rules over a [`Storage`] backend.
 pub struct Acceptor<S: Storage = MemStorage> {
@@ -45,6 +64,12 @@ pub struct Acceptor<S: Storage = MemStorage> {
     store: S,
     /// Cached min-age table (backed by storage).
     min_ages: BTreeMap<u64, u64>,
+    /// Keys whose live lease a rival has bumped into (rejected foreign
+    /// ballot or denied acquire). The holder's next renewal on a
+    /// contested key is denied, bounding rival starvation to one lease
+    /// window. Volatile on purpose: purely a liveness hint — losing it
+    /// on crash only delays a rival, never admits one early.
+    contested: std::collections::BTreeSet<Key>,
 }
 
 impl Acceptor<MemStorage> {
@@ -58,7 +83,7 @@ impl<S: Storage> Acceptor<S> {
     /// Acceptor over an explicit storage backend.
     pub fn with_storage(id: u64, store: S) -> Self {
         let min_ages = store.load_min_ages();
-        Acceptor { id, store, min_ages }
+        Acceptor { id, store, min_ages, contested: std::collections::BTreeSet::new() }
     }
 
     /// Read-only access to the backing storage.
@@ -86,8 +111,16 @@ impl<S: Storage> Acceptor<S> {
     }
 
     /// Handles one request: state transition + *durable* storage write.
+    /// Uses the wall clock for lease windows; simulators inject virtual
+    /// (and deliberately skewed) clocks via [`Acceptor::handle_at`].
     pub fn handle(&mut self, req: &Request) -> Response {
-        let (resp, persist) = self.handle_deferred(req);
+        self.handle_at(req, wall_clock_us())
+    }
+
+    /// Like [`Acceptor::handle`] with an explicit acceptor-local clock
+    /// reading (µs). All lease decisions are made against `now_us`.
+    pub fn handle_at(&mut self, req: &Request, now_us: u64) -> Response {
+        let (resp, persist) = self.handle_deferred_at(req, now_us);
         match persist.wait() {
             Ok(()) => resp,
             Err(e) => Response::Error(e.to_string()),
@@ -99,34 +132,60 @@ impl<S: Storage> Acceptor<S> {
     /// sent to the requester. Drivers that release the acceptor lock in
     /// between let concurrent writes share one fsync (group commit).
     pub fn handle_deferred(&mut self, req: &Request) -> (Response, Persist) {
+        self.handle_deferred_at(req, wall_clock_us())
+    }
+
+    /// [`Acceptor::handle_deferred`] with an explicit clock reading.
+    pub fn handle_deferred_at(&mut self, req: &Request, now_us: u64) -> (Response, Persist) {
         match req {
-            Request::Prepare { key, ballot, from } => self.on_prepare(key, *ballot, from),
+            Request::Prepare { key, ballot, from } => self.on_prepare(key, *ballot, from, now_us),
             Request::Accept { key, ballot, val, from, promise_next } => {
-                self.on_accept(key, *ballot, val, from, *promise_next)
+                self.on_accept(key, *ballot, val, from, *promise_next, now_us)
             }
             Request::SetMinAge { proposer_id, min_age } => {
                 (self.on_set_min_age(*proposer_id, *min_age), Persist::done())
             }
             Request::Erase { key, tombstone_ballot } => {
-                (self.on_erase(key, *tombstone_ballot), Persist::done())
+                (self.on_erase(key, *tombstone_ballot, now_us), Persist::done())
             }
             Request::Dump { after, limit } => {
                 // Fence the page like a read: never leak pre-durable state.
                 (self.on_dump(after.as_ref(), *limit), self.store.read_fence())
             }
             Request::Install { key, ballot, val } => {
-                (self.on_install(key, *ballot, val), Persist::done())
+                (self.on_install(key, *ballot, val, now_us), Persist::done())
             }
             Request::Ping => (Response::Ok, Persist::done()),
             Request::Read { key, from } => (self.on_read(key, from), self.store.read_fence()),
+            Request::LeaseAcquire { key, duration_us, from }
+            | Request::LeaseRenew { key, duration_us, from } => {
+                self.on_lease(key, *duration_us, from, now_us)
+            }
+            Request::LeaseRevoke { key, from } => self.on_lease_revoke(key, from),
         }
     }
 
-    fn on_prepare(&mut self, key: &Key, ballot: Ballot, from: &ProposerId) -> (Response, Persist) {
+    fn on_prepare(
+        &mut self,
+        key: &Key,
+        ballot: Ballot,
+        from: &ProposerId,
+        now_us: u64,
+    ) -> (Response, Persist) {
         if let Some(required) = self.is_stale(from) {
             return (Response::StaleAge { required }, Persist::done());
         }
         let mut slot = self.store.load(key).unwrap_or_default();
+        // Read-lease rule: inside a live lease window only the holder's
+        // ballots pass — a foreign prepare here could commit a write the
+        // holder's 0-RTT local reads would never see. Rejection is
+        // always safe in Paxos; marking the lease contested denies the
+        // holder's next renewal, so the rival waits at most one window
+        // (lease breaks cost the fast path, never safety).
+        if slot.leased_against(from.id, now_us) {
+            self.contested.insert(key.clone());
+            return (Response::Conflict { seen: slot.max_ballot() }, Persist::done());
+        }
         // "Returns a conflict if it already saw a greater ballot number."
         // Equal is a conflict too: a promise can only be given once.
         if slot.max_ballot() >= ballot {
@@ -152,11 +211,18 @@ impl<S: Storage> Acceptor<S> {
         val: &Val,
         from: &ProposerId,
         promise_next: Option<Ballot>,
+        now_us: u64,
     ) -> (Response, Persist) {
         if let Some(required) = self.is_stale(from) {
             return (Response::StaleAge { required }, Persist::done());
         }
         let mut slot = self.store.load(key).unwrap_or_default();
+        // Read-lease rule: foreign accepts are rejected too — a foreign
+        // proposer may hold promises from before the lease was granted.
+        if slot.leased_against(from.id, now_us) {
+            self.contested.insert(key.clone());
+            return (Response::Conflict { seen: slot.max_ballot() }, Persist::done());
+        }
         // Accept (b, v) iff no ballot greater than b was seen. The
         // proposer's own promise for exactly b authorizes the write; an
         // accepted ballot >= b or a promise > b is a conflict.
@@ -194,6 +260,86 @@ impl<S: Storage> Acceptor<S> {
         }
     }
 
+    /// Lease acquire/renew: grant iff the key is unleased, the previous
+    /// lease expired, or `from` already holds it. The grant is recorded
+    /// in the slot and persisted through the WAL — the response MUST
+    /// NOT be sent before the returned ticket resolves, or a crash
+    /// could forget a lease the holder believes in. Denials snapshot
+    /// the slot (like `Read`) and need no persistence.
+    fn on_lease(
+        &mut self,
+        key: &Key,
+        duration_us: u64,
+        from: &ProposerId,
+        now_us: u64,
+    ) -> (Response, Persist) {
+        if let Some(required) = self.is_stale(from) {
+            return (Response::StaleAge { required }, Persist::done());
+        }
+        let mut slot = self.store.load(key).unwrap_or_default();
+        if slot.leased_against(from.id, now_us) {
+            // A rival wants this lease: contest it so the holder's next
+            // renewal is denied and the key changes hands fairly.
+            self.contested.insert(key.clone());
+            let resp = Response::LeaseGranted {
+                granted: false,
+                promise: slot.promise,
+                accepted_ballot: slot.accepted_ballot,
+                accepted_val: slot.value,
+            };
+            // A denial still fences on pending appends: the snapshot it
+            // carries may feed the proposer's read decision.
+            return (resp, self.store.read_fence());
+        }
+        // Contested renewal: deny the sitting holder once. It drops and
+        // revokes its partial grants, freeing the key within one lease
+        // window even under continuous holder read traffic.
+        if self.contested.remove(key)
+            && matches!(&slot.lease, Some(l) if l.holder == from.id && l.live_at(now_us))
+        {
+            let resp = Response::LeaseGranted {
+                granted: false,
+                promise: slot.promise,
+                accepted_ballot: slot.accepted_ballot,
+                accepted_val: slot.value,
+            };
+            return (resp, self.store.read_fence());
+        }
+        slot.lease = Some(Lease {
+            holder: from.id,
+            expires_at: now_us.saturating_add(duration_us.min(MAX_LEASE_US)),
+        });
+        let resp = Response::LeaseGranted {
+            granted: true,
+            promise: slot.promise,
+            accepted_ballot: slot.accepted_ballot,
+            accepted_val: slot.value.clone(),
+        };
+        match self.store.store_deferred(key, &slot) {
+            Ok(persist) => (resp, persist),
+            Err(e) => (Response::Error(e.to_string()), Persist::done()),
+        }
+    }
+
+    /// Explicit lease release: drop the lease iff `from` holds it
+    /// (idempotent otherwise). Persisted so a revoked lease can never be
+    /// resurrected by log replay followed by a stale in-memory state.
+    fn on_lease_revoke(&mut self, key: &Key, from: &ProposerId) -> (Response, Persist) {
+        let Some(mut slot) = self.store.load(key) else {
+            return (Response::Ok, Persist::done());
+        };
+        match &slot.lease {
+            Some(l) if l.holder == from.id => {
+                slot.lease = None;
+                match self.store.store_deferred(key, &slot) {
+                    Ok(persist) => (Response::Ok, persist),
+                    Err(e) => (Response::Error(e.to_string()), Persist::done()),
+                }
+            }
+            _ => (Response::Ok, Persist::done()),
+        }
+    }
+
     fn on_set_min_age(&mut self, proposer_id: u64, min_age: u64) -> Response {
         let cur = self.min_ages.get(&proposer_id).copied().unwrap_or(0);
         let new = cur.max(min_age); // idempotent, monotone
@@ -204,8 +350,19 @@ impl<S: Storage> Acceptor<S> {
         Response::Ok
     }
 
-    fn on_erase(&mut self, key: &Key, tombstone_ballot: Ballot) -> Response {
+    fn on_erase(&mut self, key: &Key, tombstone_ballot: Ballot, now_us: u64) -> Response {
         match self.store.load(key) {
+            // Erasure removes the whole slot — lease included. While a
+            // lease is live that would let a foreign write commit behind
+            // the holder's back (it serves the tombstone locally), so GC
+            // retries after the window (the error keeps the key on the
+            // GC queue). Contesting the lease denies the holder's next
+            // renewal, so steady holder read traffic cannot starve the
+            // erase past one window.
+            Some(slot) if matches!(&slot.lease, Some(l) if l.live_at(now_us)) => {
+                self.contested.insert(key.clone());
+                Response::Error("register is read-leased; retry after expiry".into())
+            }
             // Only erase if the slot still holds the GC's tombstone: a
             // concurrent newer write must survive (§3.1 step 2d).
             Some(slot)
@@ -231,8 +388,15 @@ impl<S: Storage> Acceptor<S> {
         Response::DumpPage { entries, more }
     }
 
-    fn on_install(&mut self, key: &Key, ballot: Ballot, val: &Val) -> Response {
+    fn on_install(&mut self, key: &Key, ballot: Ballot, val: &Val, now_us: u64) -> Response {
         let mut slot = self.store.load(key).unwrap_or_default();
+        // Catch-up installs are fenced like every other mutation: a
+        // value slipped under a live lease would diverge the holder's
+        // 0-RTT state from what quorum reads see. The catch-up driver
+        // surfaces the error and retries after the window.
+        if matches!(&slot.lease, Some(l) if l.live_at(now_us)) && ballot > slot.accepted_ballot {
+            return Response::Error("register is read-leased; retry after expiry".into());
+        }
         // Conflict resolution by ballot (§2.3.3): higher ballot wins.
         if ballot > slot.accepted_ballot {
             slot.accepted_ballot = ballot;
@@ -467,6 +631,210 @@ mod tests {
         assert_eq!(a.handle(&stale), Response::StaleAge { required: 2 });
         let fresh = Request::Read { key: "k".into(), from: ProposerId { id: 3, age: 2 } };
         assert!(matches!(a.handle(&fresh), Response::ReadState { .. }));
+    }
+
+    fn acquire(key: &str, p: u64, dur: u64) -> Request {
+        Request::LeaseAcquire { key: key.into(), duration_us: dur, from: ProposerId::new(p) }
+    }
+
+    #[test]
+    fn lease_grant_renew_and_deny() {
+        let mut a = Acceptor::new(1);
+        a.handle_at(&acc("k", 1, 1, 42), 0);
+        // Grant to proposer 7 at t=1000 for 5ms.
+        match a.handle_at(&acquire("k", 7, 5_000), 1_000) {
+            Response::LeaseGranted { granted: true, accepted_val, .. } => {
+                assert_eq!(accepted_val.as_num(), Some(42), "grant snapshots the slot")
+            }
+            r => panic!("{r:?}"),
+        }
+        assert_eq!(
+            a.storage().load(&"k".to_string()).unwrap().lease,
+            Some(Lease { holder: 7, expires_at: 6_000 })
+        );
+        // The holder renews (window extends from renewal receipt)...
+        let renew =
+            Request::LeaseRenew { key: "k".into(), duration_us: 5_000, from: ProposerId::new(7) };
+        assert!(matches!(a.handle_at(&renew, 2_000), Response::LeaseGranted { granted: true, .. }));
+        assert_eq!(a.storage().load(&"k".to_string()).unwrap().lease.unwrap().expires_at, 7_000);
+        // ...a rival is denied while the window is live (and contests)...
+        assert!(matches!(
+            a.handle_at(&acquire("k", 8, 5_000), 3_000),
+            Response::LeaseGranted { granted: false, .. }
+        ));
+        // ...which costs the holder exactly one renewal...
+        assert!(matches!(
+            a.handle_at(&renew, 4_000),
+            Response::LeaseGranted { granted: false, .. }
+        ));
+        assert!(matches!(a.handle_at(&renew, 4_500), Response::LeaseGranted { granted: true, .. }));
+        assert_eq!(a.storage().load(&"k".to_string()).unwrap().lease.unwrap().expires_at, 9_500);
+        // ...and after expiry the rival gets it.
+        assert!(matches!(
+            a.handle_at(&acquire("k", 8, 5_000), 9_500),
+            Response::LeaseGranted { granted: true, .. }
+        ));
+    }
+
+    #[test]
+    fn lease_blocks_foreign_ballots_until_expiry() {
+        let mut a = Acceptor::new(1);
+        a.handle_at(&acc("k", 1, 1, 42), 0);
+        a.handle_at(&acquire("k", 7, 10_000), 0);
+        // Foreign prepare and accept are rejected inside the window,
+        // regardless of how high their ballots are.
+        assert!(matches!(a.handle_at(&prep("k", 99, 2), 5_000), Response::Conflict { .. }));
+        assert!(matches!(a.handle_at(&acc("k", 99, 2, 1), 5_000), Response::Conflict { .. }));
+        // The holder's own ballots pass and preserve the lease.
+        assert!(matches!(a.handle_at(&prep("k", 2, 7), 5_000), Response::Promise { .. }));
+        assert!(matches!(a.handle_at(&acc("k", 2, 7, 43), 5_000), Response::Accepted));
+        assert!(a.storage().load(&"k".to_string()).unwrap().lease.is_some());
+        // After expiry foreign ballots work again.
+        assert!(matches!(a.handle_at(&prep("k", 99, 2), 10_001), Response::Promise { .. }));
+    }
+
+    #[test]
+    fn lease_revoke_only_by_holder() {
+        let mut a = Acceptor::new(1);
+        a.handle_at(&acquire("k", 7, 10_000), 0);
+        // A rival's revoke is a no-op.
+        let foreign = Request::LeaseRevoke { key: "k".into(), from: ProposerId::new(8) };
+        assert_eq!(a.handle_at(&foreign, 1_000), Response::Ok);
+        assert!(a.storage().load(&"k".to_string()).unwrap().lease.is_some());
+        // The holder's revoke drops it and unblocks rivals immediately.
+        let own = Request::LeaseRevoke { key: "k".into(), from: ProposerId::new(7) };
+        assert_eq!(a.handle_at(&own, 1_000), Response::Ok);
+        assert!(a.storage().load(&"k".to_string()).unwrap().lease.is_none());
+        assert!(matches!(a.handle_at(&prep("k", 1, 8), 1_000), Response::Promise { .. }));
+    }
+
+    #[test]
+    fn contested_lease_denies_one_renewal() {
+        let mut a = Acceptor::new(1);
+        a.handle_at(&acquire("k", 7, 10_000), 0);
+        // A rival's rejected prepare contests the lease...
+        assert!(matches!(a.handle_at(&prep("k", 5, 8), 1_000), Response::Conflict { .. }));
+        // ...so the holder's next renewal is denied (exactly once)...
+        let renew =
+            Request::LeaseRenew { key: "k".into(), duration_us: 10_000, from: ProposerId::new(7) };
+        assert!(matches!(
+            a.handle_at(&renew, 2_000),
+            Response::LeaseGranted { granted: false, .. }
+        ));
+        // ...the holder revokes, and the rival acquires immediately.
+        a.handle_at(&Request::LeaseRevoke { key: "k".into(), from: ProposerId::new(7) }, 2_500);
+        assert!(matches!(
+            a.handle_at(&acquire("k", 8, 10_000), 3_000),
+            Response::LeaseGranted { granted: true, .. }
+        ));
+    }
+
+    #[test]
+    fn rival_acquire_attempt_contests_lease() {
+        let mut a = Acceptor::new(1);
+        a.handle_at(&acquire("k", 7, 10_000), 0);
+        // Rival acquire is denied but contests.
+        assert!(matches!(
+            a.handle_at(&acquire("k", 8, 10_000), 1_000),
+            Response::LeaseGranted { granted: false, .. }
+        ));
+        let renew =
+            Request::LeaseRenew { key: "k".into(), duration_us: 10_000, from: ProposerId::new(7) };
+        assert!(matches!(
+            a.handle_at(&renew, 2_000),
+            Response::LeaseGranted { granted: false, .. }
+        ));
+        // The denial consumed the contest: a later renewal grants again.
+        assert!(matches!(
+            a.handle_at(&renew, 3_000),
+            Response::LeaseGranted { granted: true, .. }
+        ));
+    }
+
+    #[test]
+    fn lease_respects_min_age_fence() {
+        let mut a = Acceptor::new(1);
+        a.handle(&Request::SetMinAge { proposer_id: 7, min_age: 2 });
+        let stale = Request::LeaseAcquire {
+            key: "k".into(),
+            duration_us: 1_000,
+            from: ProposerId { id: 7, age: 1 },
+        };
+        assert_eq!(a.handle_at(&stale, 0), Response::StaleAge { required: 2 });
+    }
+
+    #[test]
+    fn lease_duration_is_clamped() {
+        let mut a = Acceptor::new(1);
+        a.handle_at(&acquire("k", 7, u64::MAX), 1_000);
+        let lease = a.storage().load(&"k".to_string()).unwrap().lease.unwrap();
+        assert_eq!(lease.expires_at, 1_000 + MAX_LEASE_US, "eternal leases are clamped");
+    }
+
+    #[test]
+    fn erase_defers_while_lease_live() {
+        let mut a = Acceptor::new(1);
+        // Tombstone at (2,7), leased by its writer.
+        a.handle_at(
+            &Request::Accept {
+                key: "k".into(),
+                ballot: Ballot::new(2, 7),
+                val: Val::Tombstone,
+                from: ProposerId::new(7),
+                promise_next: None,
+            },
+            0,
+        );
+        a.handle_at(&acquire("k", 7, 10_000), 0);
+        // GC erase inside the window is refused (key stays queued)...
+        let erase = Request::Erase { key: "k".into(), tombstone_ballot: Ballot::new(2, 7) };
+        assert!(matches!(a.handle_at(&erase, 5_000), Response::Error(_)));
+        assert_eq!(a.register_count(), 1);
+        // ...and contests the lease: the holder's next renewal is
+        // denied, so steady reads can't starve the GC past one window.
+        let renew =
+            Request::LeaseRenew { key: "k".into(), duration_us: 10_000, from: ProposerId::new(7) };
+        assert!(matches!(
+            a.handle_at(&renew, 6_000),
+            Response::LeaseGranted { granted: false, .. }
+        ));
+        // After expiry the erase lands.
+        assert_eq!(a.handle_at(&erase, 10_001), Response::Ok);
+        assert_eq!(a.register_count(), 0);
+    }
+
+    #[test]
+    fn install_defers_while_lease_live() {
+        let mut a = Acceptor::new(1);
+        a.handle_at(&acc("k", 1, 1, 42), 0);
+        a.handle_at(&acquire("k", 7, 10_000), 0);
+        let install = Request::Install {
+            key: "k".into(),
+            ballot: Ballot::new(9, 2),
+            val: Val::Num { ver: 1, num: 99 },
+        };
+        // A newer value must not slip under the live lease...
+        assert!(matches!(a.handle_at(&install, 5_000), Response::Error(_)));
+        assert_eq!(a.storage_value("k"), Some(42));
+        // ...a non-newer install is still the idempotent no-op Ok...
+        let stale = Request::Install {
+            key: "k".into(),
+            ballot: Ballot::new(1, 1),
+            val: Val::Num { ver: 0, num: 42 },
+        };
+        assert_eq!(a.handle_at(&stale, 5_000), Response::Ok);
+        // ...and after expiry the newer install lands.
+        assert_eq!(a.handle_at(&install, 10_001), Response::Ok);
+        assert_eq!(a.storage_value("k"), Some(99));
+    }
+
+    #[test]
+    fn lease_grant_is_deferred_durable() {
+        let mut a = Acceptor::new(1);
+        let (resp, persist) = a.handle_deferred_at(&acquire("k", 7, 5_000), 0);
+        assert!(matches!(resp, Response::LeaseGranted { granted: true, .. }));
+        persist.wait().unwrap(); // MemStorage: already durable
+        assert!(a.storage().load(&"k".to_string()).unwrap().lease.is_some());
     }
 
     #[test]

@@ -36,6 +36,42 @@ use crate::error::{CasError, CasResult};
 use crate::msg::Key;
 use crate::state::Val;
 
+/// A read lease granted on one register: a time-bounded promise not to
+/// accept *foreign* ballots, so the holder can serve reads locally with
+/// zero network rounds (see `proposer::core::LeaseCore`).
+///
+/// The lease is part of the slot's **durable** state: an acceptor that
+/// forgot a grant across a crash could promise a foreign ballot while
+/// the holder still serves local reads — exactly the split-brain the
+/// lease exists to prevent. Grants therefore ride the same group-commit
+/// WAL path as promises and accepted pairs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lease {
+    /// Proposer id holding the lease.
+    pub holder: u64,
+    /// Expiry instant in µs on the *granting acceptor's* clock (the
+    /// holder runs its own conservative clock-skew-bounded window and
+    /// never reads this value across machines).
+    pub expires_at: u64,
+}
+
+impl Lease {
+    /// True while the lease must be honored at acceptor-local `now_us`.
+    pub fn live_at(&self, now_us: u64) -> bool {
+        self.expires_at > now_us
+    }
+}
+
+impl Codec for Lease {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.holder.encode(out);
+        self.expires_at.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(Lease { holder: u64::decode(input)?, expires_at: u64::decode(input)? })
+    }
+}
+
 /// One register's durable state on an acceptor.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct Slot {
@@ -45,12 +81,21 @@ pub struct Slot {
     pub accepted_ballot: Ballot,
     /// The accepted value (Empty if none).
     pub value: Val,
+    /// Outstanding read lease, if any (expired leases may linger until
+    /// the next grant overwrites them — liveness, not safety).
+    pub lease: Option<Lease>,
 }
 
 impl Slot {
     /// Highest ballot this slot has ever seen (promise or accepted).
     pub fn max_ballot(&self) -> Ballot {
         self.promise.max(self.accepted_ballot)
+    }
+
+    /// True if a lease held by someone other than `proposer` is live at
+    /// acceptor-local `now_us` — such ballots must be rejected.
+    pub fn leased_against(&self, proposer: u64, now_us: u64) -> bool {
+        matches!(&self.lease, Some(l) if l.holder != proposer && l.live_at(now_us))
     }
 }
 
@@ -59,12 +104,14 @@ impl Codec for Slot {
         self.promise.encode(out);
         self.accepted_ballot.encode(out);
         self.value.encode(out);
+        self.lease.encode(out);
     }
     fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
         Ok(Slot {
             promise: Ballot::decode(input)?,
             accepted_ballot: Ballot::decode(input)?,
             value: Val::decode(input)?,
+            lease: Option::<Lease>::decode(input)?,
         })
     }
 }
@@ -418,6 +465,13 @@ impl Wal {
 /// the log is replayed (last record per key wins); replay stops at the
 /// first torn/corrupt record, which a crash mid-append produces. The log
 /// is rewritten compacted when it exceeds 4× the live set.
+///
+/// Format note: slot records gained a trailing `Option<Lease>` when
+/// read leases landed, so logs written by earlier builds stop replaying
+/// at their first slot record (decode rejects the short body). The tree
+/// has no cross-version log compatibility story yet — see ROADMAP if
+/// one becomes needed; strict decoding is deliberate (the same codec
+/// pins reject torn frames byte-for-byte).
 pub struct FileStorage {
     path: PathBuf,
     wal: Arc<Wal>,
@@ -600,7 +654,12 @@ mod tests {
             promise: Ballot::new(c, 1),
             accepted_ballot: Ballot::new(c, 1),
             value: Val::Num { ver: 0, num: c as i64 },
+            lease: None,
         }
+    }
+
+    fn leased_slot(c: u64, holder: u64, expires_at: u64) -> Slot {
+        Slot { lease: Some(Lease { holder, expires_at }), ..slot(c) }
     }
 
     #[test]
@@ -644,11 +703,35 @@ mod tests {
     fn logrec_codec_roundtrip() {
         for rec in [
             LogRec::Slot { key: "k".into(), slot: slot(3) },
+            LogRec::Slot { key: "k".into(), slot: leased_slot(3, 9, 5_000_000) },
             LogRec::Erase { key: "k".into() },
             LogRec::MinAge { proposer_id: 7, min_age: 2 },
         ] {
             assert_eq!(LogRec::from_bytes(&rec.to_bytes()).unwrap(), rec);
         }
+    }
+
+    #[test]
+    fn slot_codec_rejects_truncation_with_lease() {
+        let s = leased_slot(4, 7, 123_456);
+        let bytes = s.to_bytes();
+        assert_eq!(Slot::from_bytes(&bytes).unwrap(), s);
+        for cut in 0..bytes.len() {
+            assert!(Slot::from_bytes(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn lease_survives_file_storage_reopen() {
+        let dir = TempDir::new("lease").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"k".to_string(), &leased_slot(1, 42, 9_000_000)).unwrap();
+        }
+        let s = FileStorage::open(&path).unwrap();
+        let got = s.load(&"k".to_string()).unwrap();
+        assert_eq!(got.lease, Some(Lease { holder: 42, expires_at: 9_000_000 }));
     }
 
     #[test]

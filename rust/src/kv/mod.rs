@@ -134,6 +134,22 @@ impl KvStore {
         (fast, fallback)
     }
 
+    /// (0-RTT lease reads, grant/renew rounds, lease breaks) summed
+    /// over every proposer ([`crate::proposer::ReadMode::Lease`]
+    /// stores; all zero otherwise).
+    pub fn lease_stats(&self) -> (u64, u64, u64) {
+        let mut local = 0;
+        let mut renews = 0;
+        let mut breaks = 0;
+        for p in &self.flat {
+            let (l, r, b) = p.lease_stats();
+            local += l;
+            renews += r;
+            breaks += b;
+        }
+        (local, renews, breaks)
+    }
+
     /// Unconditional write.
     pub fn set(&self, key: &str, val: i64) -> CasResult<Val> {
         self.inner.set(key, val)
@@ -284,6 +300,43 @@ mod tests {
         assert_eq!(fast, 10, "stable-key reads through the owning proposer are 1-RTT");
         assert_eq!(fallback, 0);
         assert_eq!(t.request_count() - before, 30, "one phase x 3 acceptors per read");
+    }
+
+    #[test]
+    fn lease_mode_store_reads_locally_after_warmup() {
+        use crate::proposer::{LeaseOpts, ProposerOpts, ReadMode};
+        let t = Arc::new(MemTransport::new(3));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        let opts = ProposerOpts {
+            read_mode: ReadMode::Lease,
+            lease: LeaseOpts {
+                duration: std::time::Duration::from_secs(60),
+                skew_bound: std::time::Duration::from_millis(100),
+                renew_margin: std::time::Duration::ZERO,
+            },
+            ..Default::default()
+        };
+        let kv = KvStore::with_opts(cfg, t.clone(), 2, opts);
+        for i in 0..8 {
+            kv.set(&format!("k{i}"), i).unwrap();
+        }
+        // Warm-up read acquires each key's lease (keys route stably to
+        // one proposer, so the same proposer serves every later read).
+        for i in 0..8 {
+            assert_eq!(kv.get(&format!("k{i}")).unwrap().unwrap().as_num(), Some(i));
+        }
+        // Steady state: ZERO transport requests for lease-covered keys.
+        let before = t.request_count();
+        for _ in 0..5 {
+            for i in 0..8 {
+                assert_eq!(kv.get(&format!("k{i}")).unwrap().unwrap().as_num(), Some(i));
+            }
+        }
+        assert_eq!(t.request_count(), before, "lease-covered store reads are 0-RTT");
+        let (local, renews, breaks) = kv.lease_stats();
+        assert_eq!(local, 40);
+        assert_eq!(renews, 8, "one grant round per key");
+        assert_eq!(breaks, 0);
     }
 
     #[test]

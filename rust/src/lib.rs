@@ -43,9 +43,28 @@
 //! * [`ReadMode::Cas`](proposer::ReadMode::Cas) — always the classic
 //!   §2.2 identity-CAS round (two phases, a quorum of durable writes
 //!   per read). The ablation baseline.
+//! * [`ReadMode::Lease`](proposer::ReadMode::Lease) — **0-RTT read
+//!   leases**: every acceptor grants the proposer a time-bounded
+//!   promise (recorded in the slot, WAL-durable) to reject foreign
+//!   ballots on the key; while the full grant set is live the proposer
+//!   serves reads from local state with zero network sends. Tunables
+//!   on [`proposer::LeaseOpts`]: `duration` (acceptor-side window,
+//!   default 2s), `skew_bound` σ (the holder serves only `duration−σ`
+//!   from *sending* the grant round; safe while at most F acceptor
+//!   clocks drift more than σ per window), `renew_margin` (reads near
+//!   expiry renew instead of serving — the renew cadence). Safety: a
+//!   broken lease — crash, restart (grants replay from the WAL),
+//!   holder partition, timeout, revoke on membership change, contested
+//!   renewal — only closes the 0-RTT window; reads degrade to the
+//!   1-RTT grant/quorum round or the identity-CAS round, both
+//!   linearizable on their own. The lease-break chaos campaign
+//!   (`tests/chaos.rs`) drives skewed clocks past σ, partitioned
+//!   leaseholders and mid-lease restarts through the linearizability
+//!   checker.
 //!
-//! Per-path counters (`read_fast` / `read_fallback`) live on
-//! [`metrics::Counters`]; batched multi-key reads share one fan-out via
+//! Per-path counters (`read_fast` / `read_fallback` / `read_lease` /
+//! `lease_renew` / `lease_break`) live on [`metrics::Counters`];
+//! batched multi-key reads share one fan-out via
 //! `batch::BatchProposer::read_batch` and the server's `ReadBatch`.
 //!
 //! ## Group commit (write durability)

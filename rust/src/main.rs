@@ -120,6 +120,7 @@ fn run_node(mut args: Vec<String>) {
         cluster,
         shard_plan,
         data_dir,
+        lease: None,
     })
     .unwrap_or_else(|e| {
         eprintln!("start_node: {e}");

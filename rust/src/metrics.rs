@@ -27,6 +27,14 @@ pub struct Counters {
     pub read_fast: AtomicU64,
     /// Quorum reads that fell back to the identity-CAS round.
     pub read_fallback: AtomicU64,
+    /// Reads served 0-RTT from lease-covered local state (zero
+    /// transport sends).
+    pub read_lease: AtomicU64,
+    /// Lease acquire/renew rounds that armed a full grant set.
+    pub lease_renew: AtomicU64,
+    /// Leases lost before their window ended (failed renewal, own-write
+    /// conflict, config change, GC sync) or found expired on read.
+    pub lease_break: AtomicU64,
 }
 
 impl Counters {
@@ -36,8 +44,9 @@ impl Counters {
     }
 
     /// Snapshot as (rounds, commits, conflicts, retries, cache_hits,
-    /// failures, read_fast, read_fallback).
-    pub fn snapshot(&self) -> [u64; 8] {
+    /// failures, read_fast, read_fallback, read_lease, lease_renew,
+    /// lease_break).
+    pub fn snapshot(&self) -> [u64; 11] {
         [
             self.rounds.load(Ordering::Relaxed),
             self.commits.load(Ordering::Relaxed),
@@ -47,6 +56,9 @@ impl Counters {
             self.failures.load(Ordering::Relaxed),
             self.read_fast.load(Ordering::Relaxed),
             self.read_fallback.load(Ordering::Relaxed),
+            self.read_lease.load(Ordering::Relaxed),
+            self.lease_renew.load(Ordering::Relaxed),
+            self.lease_break.load(Ordering::Relaxed),
         ]
     }
 }

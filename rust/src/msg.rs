@@ -115,6 +115,44 @@ pub enum Request {
         /// Sender identity + age (the GC fence applies to reads too).
         from: ProposerId,
     },
+    /// Read-lease acquisition (0-RTT local reads): "promise me that for
+    /// `duration_us` of *your* clock you will accept no foreign ballot
+    /// on `key`". The grant is recorded in the register's slot and
+    /// persisted (an acceptor that forgot a lease across a crash could
+    /// let a foreign write slip past a still-serving leaseholder). The
+    /// reply snapshots the slot, so an acquire round doubles as a read
+    /// (see `proposer::core::LeaseCore`).
+    LeaseAcquire {
+        /// Target register.
+        key: Key,
+        /// Requested lease length, measured on the acceptor's clock
+        /// from receipt (capped server-side).
+        duration_us: u64,
+        /// Requesting proposer (the lease holder candidate).
+        from: ProposerId,
+    },
+    /// Lease renewal: identical acceptor semantics to `LeaseAcquire`
+    /// (grant iff unleased, expired, or already held by `from`); kept
+    /// as a distinct message so traces and counters can tell steady
+    /// renewals from cold acquisitions.
+    LeaseRenew {
+        /// Target register.
+        key: Key,
+        /// Requested lease length (acceptor clock, from receipt).
+        duration_us: u64,
+        /// The current holder asking to extend.
+        from: ProposerId,
+    },
+    /// Explicit lease release (membership change, failed partial
+    /// acquisition): drop the lease iff `from` holds it. Only the
+    /// holder can revoke — by then it has already stopped serving
+    /// locally, so the release can never strand a stale fast path.
+    LeaseRevoke {
+        /// Target register.
+        key: Key,
+        /// The holder releasing its lease.
+        from: ProposerId,
+    },
 }
 
 impl Request {
@@ -125,7 +163,10 @@ impl Request {
             | Request::Accept { key, .. }
             | Request::Erase { key, .. }
             | Request::Install { key, .. }
-            | Request::Read { key, .. } => Some(key),
+            | Request::Read { key, .. }
+            | Request::LeaseAcquire { key, .. }
+            | Request::LeaseRenew { key, .. }
+            | Request::LeaseRevoke { key, .. } => Some(key),
             _ => None,
         }
     }
@@ -175,6 +216,23 @@ impl Codec for Request {
                 key.encode(out);
                 from.encode(out);
             }
+            Request::LeaseAcquire { key, duration_us, from } => {
+                out.push(8);
+                key.encode(out);
+                duration_us.encode(out);
+                from.encode(out);
+            }
+            Request::LeaseRenew { key, duration_us, from } => {
+                out.push(9);
+                key.encode(out);
+                duration_us.encode(out);
+                from.encode(out);
+            }
+            Request::LeaseRevoke { key, from } => {
+                out.push(10);
+                key.encode(out);
+                from.encode(out);
+            }
         }
     }
     fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
@@ -207,6 +265,20 @@ impl Codec for Request {
             },
             6 => Request::Ping,
             7 => Request::Read { key: Key::decode(input)?, from: ProposerId::decode(input)? },
+            8 => Request::LeaseAcquire {
+                key: Key::decode(input)?,
+                duration_us: u64::decode(input)?,
+                from: ProposerId::decode(input)?,
+            },
+            9 => Request::LeaseRenew {
+                key: Key::decode(input)?,
+                duration_us: u64::decode(input)?,
+                from: ProposerId::decode(input)?,
+            },
+            10 => Request::LeaseRevoke {
+                key: Key::decode(input)?,
+                from: ProposerId::decode(input)?,
+            },
             _ => return Err(CodecError::Invalid("Request tag")),
         })
     }
@@ -258,6 +330,22 @@ pub enum Response {
         /// The accepted value (Empty if none).
         accepted_val: Val,
     },
+    /// Lease acquire/renew reply. `granted = false` means another
+    /// proposer holds a live lease on the key. Either way the reply
+    /// snapshots the slot (like `ReadState`), so the acquisition round
+    /// can serve the read it was issued for without an extra phase. A
+    /// `granted = true` reply is sent only after the lease record is
+    /// durable (group-commit ticket waited).
+    LeaseGranted {
+        /// Whether the lease was granted/extended for the requester.
+        granted: bool,
+        /// Outstanding promise (ZERO if none).
+        promise: Ballot,
+        /// Ballot of the accepted value (ZERO if none).
+        accepted_ballot: Ballot,
+        /// The accepted value (Empty if none).
+        accepted_val: Val,
+    },
 }
 
 impl Codec for Response {
@@ -293,6 +381,13 @@ impl Codec for Response {
                 accepted_ballot.encode(out);
                 accepted_val.encode(out);
             }
+            Response::LeaseGranted { granted, promise, accepted_ballot, accepted_val } => {
+                out.push(8);
+                granted.encode(out);
+                promise.encode(out);
+                accepted_ballot.encode(out);
+                accepted_val.encode(out);
+            }
         }
     }
     fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
@@ -308,6 +403,12 @@ impl Codec for Response {
             5 => Response::DumpPage { entries: decode_seq(input)?, more: bool::decode(input)? },
             6 => Response::Error(String::decode(input)?),
             7 => Response::ReadState {
+                promise: Ballot::decode(input)?,
+                accepted_ballot: Ballot::decode(input)?,
+                accepted_val: Val::decode(input)?,
+            },
+            8 => Response::LeaseGranted {
+                granted: bool::decode(input)?,
                 promise: Ballot::decode(input)?,
                 accepted_ballot: Ballot::decode(input)?,
                 accepted_val: Val::decode(input)?,
@@ -349,6 +450,17 @@ mod tests {
             Request::Install { key: "k".into(), ballot: Ballot::new(3, 3), val: Val::Tombstone },
             Request::Ping,
             Request::Read { key: "k".into(), from: ProposerId { id: 7, age: 2 } },
+            Request::LeaseAcquire {
+                key: "k".into(),
+                duration_us: 2_000_000,
+                from: ProposerId { id: 7, age: 2 },
+            },
+            Request::LeaseRenew {
+                key: "lease/key".into(),
+                duration_us: u64::MAX,
+                from: ProposerId::new(1),
+            },
+            Request::LeaseRevoke { key: "k".into(), from: ProposerId { id: 7, age: 2 } },
         ];
         for r in reqs {
             assert_eq!(Request::from_bytes(&r.to_bytes()).unwrap(), r);
@@ -377,6 +489,18 @@ mod tests {
                 accepted_val: Val::Num { ver: 1, num: 9 },
             },
             Response::ReadState {
+                promise: Ballot::ZERO,
+                accepted_ballot: Ballot::ZERO,
+                accepted_val: Val::Empty,
+            },
+            Response::LeaseGranted {
+                granted: true,
+                promise: Ballot::new(4, 2),
+                accepted_ballot: Ballot::new(3, 1),
+                accepted_val: Val::Num { ver: 1, num: 9 },
+            },
+            Response::LeaseGranted {
+                granted: false,
                 promise: Ballot::ZERO,
                 accepted_ballot: Ballot::ZERO,
                 accepted_val: Val::Empty,
@@ -435,12 +559,130 @@ mod tests {
     }
 
     #[test]
+    fn lease_wire_types_reject_every_truncation() {
+        // Same pin the Read/ReadState pair carries: every strict prefix
+        // of a valid encoding must fail to decode, or the frame layer
+        // would accept torn frames.
+        let msgs = vec![
+            Request::LeaseAcquire {
+                key: "key/with/slash".into(),
+                duration_us: 5_000_000,
+                from: ProposerId { id: 7, age: 2 },
+            },
+            Request::LeaseRenew {
+                key: "k".into(),
+                duration_us: 1,
+                from: ProposerId::new(3),
+            },
+            Request::LeaseRevoke { key: "kk".into(), from: ProposerId { id: 9, age: 1 } },
+        ];
+        for msg in msgs {
+            let bytes = msg.to_bytes();
+            for cut in 0..bytes.len() {
+                assert!(Request::from_bytes(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+            }
+        }
+        let resp = Response::LeaseGranted {
+            granted: true,
+            promise: Ballot::new(9, 3),
+            accepted_ballot: Ballot::new(8, 1),
+            accepted_val: Val::Bytes { ver: 0, data: vec![1, 2, 3] },
+        };
+        let bytes = resp.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Response::from_bytes(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn lease_requests_reject_length_bomb_key() {
+        // Tags 8/9/10 (lease messages), then a key claiming 2^60 bytes
+        // with a tiny body — must be rejected before any allocation.
+        for tag in [8u8, 9, 10] {
+            let mut bytes = vec![tag];
+            (1u64 << 60).encode(&mut bytes);
+            bytes.extend_from_slice(b"k");
+            assert!(Request::from_bytes(&bytes).is_err(), "tag {tag} length bomb accepted");
+        }
+    }
+
+    #[test]
+    fn lease_wire_types_reject_trailing_bytes() {
+        let mut bytes = Request::LeaseAcquire {
+            key: "k".into(),
+            duration_us: 7,
+            from: ProposerId::new(1),
+        }
+        .to_bytes();
+        bytes.push(0);
+        assert!(Request::from_bytes(&bytes).is_err(), "trailing bytes accepted");
+        let mut bytes = Response::LeaseGranted {
+            granted: false,
+            promise: Ballot::ZERO,
+            accepted_ballot: Ballot::ZERO,
+            accepted_val: Val::Empty,
+        }
+        .to_bytes();
+        bytes.push(1);
+        assert!(Response::from_bytes(&bytes).is_err(), "trailing bytes accepted");
+    }
+
+    #[test]
+    fn lease_wire_fuzz_roundtrip_and_truncation() {
+        // Seeded fuzz over the whole lease message space: every encode
+        // must roundtrip exactly, every strict prefix must be rejected,
+        // and decoding never panics (forall_seeds re-raises with the
+        // replay seed on failure).
+        crate::testkit::forall_seeds(0x1EA5E, 64, |rng| {
+            let key_len = rng.gen_range(24) as usize;
+            let key: Key =
+                (0..key_len).map(|_| (b'a' + rng.gen_range(26) as u8) as char).collect();
+            let from = ProposerId { id: rng.next_u64(), age: rng.next_u64() };
+            let duration_us = rng.next_u64();
+            let req = match rng.gen_range(3) {
+                0 => Request::LeaseAcquire { key: key.clone(), duration_us, from },
+                1 => Request::LeaseRenew { key: key.clone(), duration_us, from },
+                _ => Request::LeaseRevoke { key: key.clone(), from },
+            };
+            let bytes = req.to_bytes();
+            assert_eq!(Request::from_bytes(&bytes).unwrap(), req);
+            for cut in 0..bytes.len() {
+                assert!(Request::from_bytes(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+            }
+            let resp = Response::LeaseGranted {
+                granted: rng.gen_range(2) == 0,
+                promise: Ballot::new(rng.next_u64(), rng.next_u64()),
+                accepted_ballot: Ballot::new(rng.next_u64(), rng.next_u64()),
+                accepted_val: match rng.gen_range(3) {
+                    0 => Val::Empty,
+                    1 => Val::Num { ver: rng.next_u64() as i64, num: rng.next_u64() as i64 },
+                    _ => Val::Bytes {
+                        ver: rng.gen_range(100) as i64,
+                        data: (0..rng.gen_range(16)).map(|_| rng.next_u64() as u8).collect(),
+                    },
+                },
+            };
+            let bytes = resp.to_bytes();
+            assert_eq!(Response::from_bytes(&bytes).unwrap(), resp);
+            for cut in 0..bytes.len() {
+                assert!(Response::from_bytes(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+            }
+        });
+    }
+
+    #[test]
     fn request_key_accessor() {
         assert_eq!(
             Request::Prepare { key: "x".into(), ballot: Ballot::ZERO, from: ProposerId::new(0) }
                 .key()
                 .map(|s| s.as_str()),
             Some("x")
+        );
+        assert_eq!(
+            Request::LeaseAcquire { key: "l".into(), duration_us: 1, from: ProposerId::new(0) }
+                .key()
+                .map(|s| s.as_str()),
+            Some("l")
         );
         assert_eq!(Request::Ping.key(), None);
     }

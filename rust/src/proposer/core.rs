@@ -299,6 +299,42 @@ pub enum ReadStep {
     Fallback,
 }
 
+/// How a set of `(accepted_ballot, value, promise)` slot snapshots
+/// reads out under the quorum-agreement rule (shared by [`ReadCore`]
+/// and [`LeaseRound`] so the two fast paths can never diverge).
+enum Agreement {
+    /// A promise from another proposer sits above the max accepted
+    /// ballot: a foreign write may be in flight.
+    Blocked,
+    /// `needed` replies agree on the max accepted ballot: this IS the
+    /// committed value.
+    Agreed(Val),
+    /// Not decided yet (more replies could still tip it).
+    Pending,
+}
+
+/// The agreement rule: serve the max-accepted-ballot value iff `needed`
+/// snapshots report it and no promise above it belongs to a proposer
+/// other than `self_id`.
+fn agreement(states: &[(Ballot, Val, Ballot)], needed: usize, self_id: u64) -> Agreement {
+    let Some(max_b) = states.iter().map(|(b, _, _)| *b).max() else {
+        return Agreement::Pending;
+    };
+    if states.iter().any(|(_, _, p)| *p > max_b && p.proposer != self_id) {
+        return Agreement::Blocked;
+    }
+    let matches = states.iter().filter(|(b, _, _)| *b == max_b).count();
+    if matches < needed {
+        return Agreement::Pending;
+    }
+    // A ballot is accepted with exactly one value, so every matching
+    // reply carries the same one.
+    match states.iter().find(|(b, _, _)| *b == max_b) {
+        Some((_, v, _)) => Agreement::Agreed(v.clone()),
+        None => Agreement::Pending,
+    }
+}
+
 /// Sans-IO quorum-read state machine: one `Read` fan-out, no prepare, no
 /// accept, no disk writes on any acceptor.
 ///
@@ -373,30 +409,18 @@ impl ReadCore {
     }
 
     fn decide(&mut self) -> ReadStep {
-        if let Some(max_b) = self.states.iter().map(|(b, _, _)| *b).max() {
-            let matches = self.states.iter().filter(|(b, _, _)| *b == max_b).count();
-            let blocked = self
-                .states
-                .iter()
-                .any(|(_, _, p)| *p > max_b && p.proposer != self.from.id);
-            if blocked {
+        match agreement(&self.states, self.needed(), self.from.id) {
+            Agreement::Blocked => {
                 // A foreign write may be in flight; no later reply can
                 // retract a promise, so fall back immediately.
                 self.finished = true;
                 return ReadStep::Fallback;
             }
-            if matches >= self.needed() {
-                // A ballot is accepted with exactly one value, so every
-                // matching reply carries the same one.
-                let val = self
-                    .states
-                    .iter()
-                    .find(|(b, _, _)| *b == max_b)
-                    .map(|(_, v, _)| v.clone())
-                    .expect("matches >= 1 implies a state at max_b");
+            Agreement::Agreed(val) => {
                 self.finished = true;
                 return ReadStep::Done(Ok(val));
             }
+            Agreement::Pending => {}
         }
         if self.replies >= self.cfg.acceptors.len() {
             // Everyone answered and no stable quorum emerged.
@@ -404,6 +428,439 @@ impl ReadCore {
             return ReadStep::Fallback;
         }
         ReadStep::Continue
+    }
+}
+
+/// Outcome of one lease acquire/renew fan-out.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeaseOutcome {
+    /// Every configured acceptor granted: the 0-RTT window may be armed.
+    pub complete: bool,
+    /// How many acceptors granted (an incomplete round with grants > 0
+    /// holds partial state worth revoking; an all-denied round holds
+    /// nothing).
+    pub grants: usize,
+    /// The committed value per the read-quorum agreement rule over the
+    /// grant snapshots (`None` when replies disagree or a foreign write
+    /// is in flight) — lets an acquisition round double as a 1-RTT read.
+    pub value: Option<Val>,
+    /// When the round was sent (holder clock, µs). [`LeaseCore::install`]
+    /// refuses to arm `value` while an unknown-outcome own write's
+    /// straggler horizon covers this instant.
+    pub t_send: u64,
+    /// The key's own-write sequence number when the round was sent
+    /// (`u64::MAX` if a write was mid-flight): [`LeaseCore::install`]
+    /// arms `value` only if it is unchanged, i.e. no own write raced
+    /// the round's snapshots.
+    pub write_mark: u64,
+    /// End of the holder's conservative serving window, on the
+    /// *holder's* clock: `t_send + duration - skew_bound`.
+    pub valid_until: u64,
+}
+
+/// What a lease acquire/renew round wants the driver to do next.
+#[derive(Debug)]
+pub enum LeaseStep {
+    /// Waiting for more replies.
+    Continue,
+    /// Every acceptor answered (or a grant became impossible).
+    Done(LeaseOutcome),
+}
+
+/// Sans-IO lease acquire/renew round: one `LeaseAcquire`/`LeaseRenew`
+/// fan-out whose replies snapshot each acceptor's slot.
+///
+/// The 0-RTT window arms only when **every** configured acceptor
+/// grants. A mere quorum of grants is NOT enough under clock skew: a
+/// foreign write needs one expired acceptor per quorum, and with
+/// quorum-sized grant sets the single acceptor in the intersection of
+/// the holder's and the writer's quorums can be the one whose clock
+/// runs fast — its early expiry alone would break linearizability.
+/// With a full grant set every foreign write quorum must contain at
+/// least `nodes - skewed` honestly-measured leases, so up to
+/// `fault_tolerance()` clocks may violate the skew bound without any
+/// safety loss (the chaos suite drives exactly that). The price is
+/// availability of the *fast path only*: any unreachable acceptor
+/// degrades reads to the 1-RTT quorum path, never breaks them.
+pub struct LeaseRound {
+    holder: u64,
+    n: usize,
+    needed_match: usize,
+    t_send: u64,
+    write_mark: u64,
+    valid_until: u64,
+    replies: usize,
+    grants: usize,
+    denied: bool,
+    /// (accepted_ballot, value, promise) per grant snapshot.
+    states: Vec<(Ballot, Val, Ballot)>,
+    finished: bool,
+}
+
+impl LeaseRound {
+    fn new(
+        holder: u64,
+        cfg: &ClusterConfig,
+        t_send: u64,
+        write_mark: u64,
+        valid_until: u64,
+    ) -> Self {
+        LeaseRound {
+            holder,
+            n: cfg.acceptors.len(),
+            needed_match: cfg.quorum.prepare.max(cfg.quorum.accept),
+            t_send,
+            write_mark,
+            valid_until,
+            replies: 0,
+            grants: 0,
+            denied: false,
+            states: Vec::new(),
+            finished: false,
+        }
+    }
+
+    /// Feeds one acceptor reply (or a transport failure as `None`).
+    pub fn on_reply(&mut self, _from: u64, resp: Option<Response>) -> LeaseStep {
+        if self.finished {
+            return LeaseStep::Continue; // late reply: ignore
+        }
+        self.replies += 1;
+        match resp {
+            Some(Response::LeaseGranted { granted, promise, accepted_ballot, accepted_val }) => {
+                if granted {
+                    self.grants += 1;
+                } else {
+                    self.denied = true;
+                }
+                self.states.push((accepted_ballot, accepted_val, promise));
+            }
+            // StaleAge, Error, unexpected response or transport failure:
+            // this acceptor will not grant, so the set can't complete.
+            _ => self.denied = true,
+        }
+        if self.replies >= self.n {
+            self.finished = true;
+            return LeaseStep::Done(self.outcome());
+        }
+        LeaseStep::Continue
+    }
+
+    /// The outcome from the replies seen so far (drivers call this on
+    /// timeout; `on_reply` calls it once every acceptor answered).
+    pub fn outcome(&self) -> LeaseOutcome {
+        LeaseOutcome {
+            complete: !self.denied && self.grants == self.n,
+            grants: self.grants,
+            value: self.decide_value(),
+            t_send: self.t_send,
+            write_mark: self.write_mark,
+            valid_until: self.valid_until,
+        }
+    }
+
+    /// The shared [`agreement`] rule over the grant snapshots: serve
+    /// the max-accepted-ballot value iff a read quorum reports it and
+    /// no *foreign* promise sits above it.
+    fn decide_value(&self) -> Option<Val> {
+        match agreement(&self.states, self.needed_match, self.holder) {
+            Agreement::Agreed(v) => Some(v),
+            Agreement::Blocked | Agreement::Pending => None,
+        }
+    }
+}
+
+/// Result of a 0-RTT local-read attempt against [`LeaseCore`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LeaseRead {
+    /// Lease live and value known: serve with zero transport sends.
+    Hit(Val),
+    /// Lease live but inside the renewal margin: the read should pay a
+    /// renew round now (1 RTT) so later reads stay 0-RTT. The held
+    /// value is deliberately NOT carried: the renew round may outlive
+    /// the old window, so serving it after a failed renewal would be
+    /// unsound — failures drop to the classic fallback instead.
+    NeedsRenew,
+    /// A previously held window has ended (a lease *break*).
+    Expired,
+    /// No lease held (or the window is armed but the value unknown).
+    Miss,
+}
+
+/// Sans-IO per-proposer lease table: the grant/renew/expiry state
+/// machine behind `ReadMode::Lease`.
+///
+/// All instants are µs on an injectable monotonic clock supplied by the
+/// driver (`Instant`-derived in the real proposer, virtual time in the
+/// simulator — which is how the chaos suite drives clock skew
+/// deterministically). The serving window for a grant issued at
+/// `t_send` is `[t_send, t_send + duration - skew_bound)`: it starts
+/// counting *before* any acceptor could have started its own
+/// `duration`-long window, so the holder always stops serving first as
+/// long as relative clock-rate drift over one window stays under
+/// `skew_bound`.
+///
+/// ## Safety argument (why a broken lease can only lose the fast path)
+///
+/// A local read is served only while (a) the window above is open and
+/// (b) the latest acquire/renew round was granted by **every**
+/// acceptor. For a foreign write to commit behind the holder's back it
+/// needs an accept quorum of acceptors whose lease windows have ended
+/// on their own clocks. Every such acceptor either measured honestly —
+/// then its window outlives the holder's conservative one and the
+/// write linearizes after local serving stopped — or violates the skew
+/// bound. Since a full grant set leaves no quorum made only of
+/// skew-violating acceptors (up to `fault_tolerance()` of them), every
+/// break path — crash, restart (grants are WAL-durable and re-honored
+/// after replay), partition of the holder, timeout, explicit revoke —
+/// merely closes the 0-RTT window and drops the reader onto the 1-RTT
+/// quorum path or the identity-CAS round, both linearizable on their
+/// own.
+pub struct LeaseCore {
+    holder: u64,
+    duration_us: u64,
+    skew_us: u64,
+    margin_us: u64,
+    entries: std::collections::HashMap<Key, LeaseEntry>,
+    /// Own-write tracking per key (see [`LeaseCore::write_started`]):
+    /// grant-round values must not be armed over a concurrent own
+    /// write whose commit the snapshots may have missed.
+    writes: std::collections::HashMap<Key, WriteTrack>,
+}
+
+#[derive(Debug)]
+struct LeaseEntry {
+    /// Committed value as of the last agreement/own write; `None` while
+    /// unknown (window may still be armed — blocks rivals, serves
+    /// nothing).
+    value: Option<Val>,
+    /// End of the conservative serving window (holder clock, µs).
+    valid_until: u64,
+}
+
+#[derive(Debug, Default)]
+struct WriteTrack {
+    /// Own writes currently in flight on the key.
+    open: u32,
+    /// Bumped on every completed own write: a grant round whose
+    /// captured mark no longer matches raced a write (clock-resolution
+    /// free, unlike a timestamp comparison).
+    seq: u64,
+    /// Instant (holder clock) before which grant-round snapshots may
+    /// have missed an own write: known outcomes dirty up to their
+    /// completion, unknown outcomes one extra lease duration (straggler
+    /// accepts may land that long after).
+    dirty_until: u64,
+}
+
+impl LeaseCore {
+    /// New table for proposer `holder`. `duration_us` is what acquire
+    /// rounds request; `skew_us` is subtracted from every serving
+    /// window; reads within `margin_us` of expiry trigger a renewal
+    /// round (the renew cadence).
+    ///
+    /// Inputs are made safe rather than rejected (a `Proposer` builds
+    /// this even when leases are disabled): the duration is clamped to
+    /// the acceptor-side grant cap — the holder's window math MUST
+    /// match what an acceptor will actually honor, or windows past the
+    /// cap would outlive every grant — and the skew bound is clamped
+    /// below the duration so the serving window is never empty-by-
+    /// underflow.
+    pub fn new(holder: u64, duration_us: u64, skew_us: u64, margin_us: u64) -> Self {
+        let duration_us = duration_us.clamp(1, crate::acceptor::MAX_LEASE_US);
+        let skew_us = skew_us.min(duration_us - 1);
+        LeaseCore {
+            holder,
+            duration_us,
+            skew_us,
+            margin_us,
+            entries: std::collections::HashMap::new(),
+            writes: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Marks one of the holder's own writes on `key` as in flight. A
+    /// write committing between a grant round's acceptor snapshots and
+    /// its install would otherwise arm the PRE-write value for 0-RTT
+    /// serving (the snapshots can't see a commit that lands after
+    /// them). Drivers call this when a write round starts and pair it
+    /// with [`LeaseCore::write_finished`] on every exit path.
+    pub fn write_started(&mut self, key: &Key) {
+        self.writes.entry(key.clone()).or_default().open += 1;
+    }
+
+    /// Closes an own write at holder-clock `now_us`. `known` = the
+    /// outcome is decided (committed, and noted via
+    /// [`LeaseCore::note_write`]); unknown outcomes (timeouts,
+    /// conflicts with possible minority accepts) keep value installs
+    /// blocked for one extra lease duration — the horizon after which
+    /// straggler accepts are presumed dead.
+    pub fn write_finished(&mut self, key: &Key, now_us: u64, known: bool) {
+        let horizon =
+            if known { now_us } else { now_us.saturating_add(self.duration_us) };
+        let track = self.writes.entry(key.clone()).or_default();
+        track.open = track.open.saturating_sub(1);
+        track.seq += 1;
+        track.dirty_until = track.dirty_until.max(horizon);
+        // Keep the map proportional to the active write set. The wide
+        // retention margin keeps any round that could still hold a
+        // matching mark from seeing its track vanish (absence reads as
+        // mark 0, which the stale mark then fails to match anyway —
+        // pruning can only over-block, never over-arm).
+        if self.writes.len() > 4096 {
+            let margin = 2 * self.duration_us;
+            self.writes
+                .retain(|_, w| w.open > 0 || w.dirty_until.saturating_add(margin) >= now_us);
+        }
+    }
+
+    /// The key's current write mark, captured by [`LeaseCore::begin`]:
+    /// the sequence number, or `u64::MAX` while a write is mid-flight
+    /// (which no later state ever matches).
+    fn write_mark(&self, key: &Key) -> u64 {
+        match self.writes.get(key) {
+            None => 0,
+            Some(w) if w.open > 0 => u64::MAX,
+            Some(w) => w.seq,
+        }
+    }
+
+    /// True iff no own write raced a round begun with `outcome`'s mark:
+    /// nothing in flight now, the sequence number is unchanged, and any
+    /// unknown-outcome straggler horizon had passed by send time.
+    fn writes_clean(&self, key: &Key, outcome: &LeaseOutcome) -> bool {
+        match self.writes.get(key) {
+            None => outcome.write_mark == 0,
+            Some(w) => {
+                w.open == 0 && w.seq == outcome.write_mark && w.dirty_until <= outcome.t_send
+            }
+        }
+    }
+
+    /// The requested lease duration (µs).
+    pub fn duration_us(&self) -> u64 {
+        self.duration_us
+    }
+
+    /// Attempts a 0-RTT local read at holder-clock `now_us`.
+    pub fn local_read(&mut self, key: &Key, now_us: u64) -> LeaseRead {
+        let expired = match self.entries.get(key) {
+            None => return LeaseRead::Miss,
+            Some(entry) => now_us >= entry.valid_until,
+        };
+        if expired {
+            self.entries.remove(key);
+            return LeaseRead::Expired;
+        }
+        let entry = &self.entries[key];
+        match &entry.value {
+            None => LeaseRead::Miss,
+            Some(_) if now_us.saturating_add(self.margin_us) >= entry.valid_until => {
+                LeaseRead::NeedsRenew
+            }
+            Some(v) => LeaseRead::Hit(v.clone()),
+        }
+    }
+
+    /// Starts an acquire (no entry) or renew (entry held) round at
+    /// holder-clock `now_us`. Returns the round and the full fan-out.
+    pub fn begin(
+        &self,
+        key: &Key,
+        now_us: u64,
+        from: ProposerId,
+        cfg: &ClusterConfig,
+    ) -> (LeaseRound, Vec<(u64, Request)>) {
+        let renew = self.entries.contains_key(key);
+        let msgs = cfg
+            .acceptors
+            .iter()
+            .map(|&to| {
+                let req = if renew {
+                    Request::LeaseRenew {
+                        key: key.clone(),
+                        duration_us: self.duration_us,
+                        from,
+                    }
+                } else {
+                    Request::LeaseAcquire {
+                        key: key.clone(),
+                        duration_us: self.duration_us,
+                        from,
+                    }
+                };
+                (to, req)
+            })
+            .collect();
+        let valid_until = now_us.saturating_add(self.duration_us - self.skew_us);
+        let mark = self.write_mark(key);
+        (LeaseRound::new(self.holder, cfg, now_us, mark, valid_until), msgs)
+    }
+
+    /// Installs a finished round's outcome: a complete grant set arms
+    /// (or re-arms) the window; anything else drops the entry. The
+    /// round's VALUE is armed only when no own write raced the round
+    /// ([`LeaseCore::write_started`]) — a valueless window still fences
+    /// rivals, and the next read's renew round re-reads fresh
+    /// snapshots. Returns whether the key is now lease-covered.
+    pub fn install(&mut self, key: &Key, outcome: &LeaseOutcome) -> bool {
+        if outcome.complete {
+            let value = if self.writes_clean(key, outcome) {
+                outcome.value.clone()
+            } else {
+                None
+            };
+            self.entries
+                .insert(key.clone(), LeaseEntry { value, valid_until: outcome.valid_until });
+            true
+        } else {
+            self.entries.remove(key);
+            false
+        }
+    }
+
+    /// Records this proposer's own committed write. While the window is
+    /// open only the holder can commit (acceptors reject foreign
+    /// ballots), so the written state IS the register's current value.
+    pub fn note_write(&mut self, key: &Key, val: Val, now_us: u64) {
+        let live = match self.entries.get(key) {
+            None => return,
+            Some(entry) => now_us < entry.valid_until,
+        };
+        if live {
+            if let Some(entry) = self.entries.get_mut(key) {
+                entry.value = Some(val);
+            }
+        } else {
+            self.entries.remove(key);
+        }
+    }
+
+    /// Drops a key's lease state (own-write conflict, GC sync). Returns
+    /// true if a lease was actually held (a break worth counting).
+    pub fn invalidate(&mut self, key: &Key) -> bool {
+        self.entries.remove(key).is_some()
+    }
+
+    /// Keys currently holding (possibly expired) lease state — the set
+    /// to revoke on a configuration change.
+    pub fn held_keys(&self) -> Vec<Key> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Drops everything (configuration change).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Number of keys with lease state.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no lease state is held.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
     }
 }
 
@@ -751,6 +1208,296 @@ mod tests {
             core.on_reply(3, Some(read_state(4, 1, 42, Ballot::ZERO))),
             ReadStep::Done(Ok(_))
         ));
+    }
+
+    fn granted(c: u64, p: u64, num: i64, promise: Ballot) -> Response {
+        Response::LeaseGranted {
+            granted: true,
+            promise,
+            accepted_ballot: Ballot::new(c, p),
+            accepted_val: Val::Num { ver: 0, num },
+        }
+    }
+
+    fn lease_core() -> LeaseCore {
+        // duration 1s, skew bound 100ms, renew margin 200ms.
+        LeaseCore::new(9, 1_000_000, 100_000, 200_000)
+    }
+
+    #[test]
+    fn lease_round_arms_only_on_full_grant_set() {
+        let core = lease_core();
+        let (mut round, msgs) = core.begin(&"k".into(), 0, ProposerId::new(9), &cfg3());
+        assert_eq!(msgs.len(), 3, "acquire fans out to EVERY acceptor");
+        assert!(matches!(msgs[0].1, Request::LeaseAcquire { .. }));
+        let ok = granted(4, 1, 42, Ballot::ZERO);
+        assert!(matches!(round.on_reply(1, Some(ok.clone())), LeaseStep::Continue));
+        assert!(matches!(round.on_reply(2, Some(ok.clone())), LeaseStep::Continue));
+        match round.on_reply(3, Some(ok)) {
+            LeaseStep::Done(out) => {
+                assert!(out.complete);
+                assert_eq!(out.value.as_ref().and_then(|v| v.as_num()), Some(42));
+                assert_eq!(out.valid_until, 900_000, "duration minus skew bound");
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn lease_round_quorum_of_grants_is_not_enough() {
+        // 2 grants + 1 transport failure: a quorum, but under clock
+        // skew a quorum-sized grant set is unsafe — must not arm.
+        let core = lease_core();
+        let (mut round, _) = core.begin(&"k".into(), 0, ProposerId::new(9), &cfg3());
+        round.on_reply(1, Some(granted(4, 1, 42, Ballot::ZERO)));
+        round.on_reply(2, Some(granted(4, 1, 42, Ballot::ZERO)));
+        match round.on_reply(3, None) {
+            LeaseStep::Done(out) => {
+                assert!(!out.complete, "a failed acceptor must block the 0-RTT window");
+                // ...but the read itself is still decided 1-RTT.
+                assert_eq!(out.value.as_ref().and_then(|v| v.as_num()), Some(42));
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn lease_round_denial_blocks_window_but_can_serve_value() {
+        let core = lease_core();
+        let (mut round, _) = core.begin(&"k".into(), 0, ProposerId::new(9), &cfg3());
+        round.on_reply(1, Some(granted(4, 1, 42, Ballot::ZERO)));
+        round.on_reply(2, Some(granted(4, 1, 42, Ballot::ZERO)));
+        let denial = Response::LeaseGranted {
+            granted: false,
+            promise: Ballot::ZERO,
+            accepted_ballot: Ballot::new(4, 1),
+            accepted_val: Val::Num { ver: 0, num: 42 },
+        };
+        match round.on_reply(3, Some(denial)) {
+            LeaseStep::Done(out) => {
+                assert!(!out.complete, "a foreign leaseholder denies the window");
+                assert_eq!(out.value.as_ref().and_then(|v| v.as_num()), Some(42));
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn lease_round_foreign_promise_blocks_value() {
+        let core = lease_core();
+        let (mut round, _) = core.begin(&"k".into(), 0, ProposerId::new(9), &cfg3());
+        round.on_reply(1, Some(granted(4, 1, 42, Ballot::new(7, 2))));
+        round.on_reply(2, Some(granted(4, 1, 42, Ballot::ZERO)));
+        match round.on_reply(3, Some(granted(4, 1, 42, Ballot::ZERO))) {
+            LeaseStep::Done(out) => {
+                assert!(out.complete, "grants are complete");
+                assert!(out.value.is_none(), "a foreign in-flight write blocks the value");
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn lease_round_own_promise_does_not_block() {
+        let core = lease_core();
+        let (mut round, _) = core.begin(&"k".into(), 0, ProposerId::new(9), &cfg3());
+        for a in 1..=3 {
+            round.on_reply(a, Some(granted(4, 9, 42, Ballot::new(5, 9))));
+        }
+        assert_eq!(round.outcome().value.as_ref().and_then(|v| v.as_num()), Some(42));
+    }
+
+    #[test]
+    fn lease_local_read_lifecycle() {
+        let mut core = lease_core();
+        let key: Key = "k".into();
+        assert_eq!(core.local_read(&key, 0), LeaseRead::Miss);
+        // Arm a window [0, 900_000) with value 7.
+        let out = LeaseOutcome {
+            complete: true,
+            grants: 3,
+            value: Some(Val::Num { ver: 0, num: 7 }),
+            t_send: 0,
+            write_mark: 0,
+            valid_until: 900_000,
+        };
+        assert!(core.install(&key, &out));
+        match core.local_read(&key, 100_000) {
+            LeaseRead::Hit(v) => assert_eq!(v.as_num(), Some(7)),
+            r => panic!("{r:?}"),
+        }
+        // Inside the 200ms renewal margin: the read must renew.
+        assert_eq!(core.local_read(&key, 750_000), LeaseRead::NeedsRenew);
+        // Past the window: a break; the entry is gone.
+        assert_eq!(core.local_read(&key, 900_000), LeaseRead::Expired);
+        assert_eq!(core.local_read(&key, 900_000), LeaseRead::Miss);
+    }
+
+    #[test]
+    fn lease_note_write_keeps_value_current() {
+        let mut core = lease_core();
+        let key: Key = "k".into();
+        core.install(
+            &key,
+            &LeaseOutcome {
+                complete: true,
+                grants: 3,
+                value: None,
+                t_send: 0,
+                write_mark: 0,
+                valid_until: 900_000,
+            },
+        );
+        // Window armed, value unknown: Miss (rivals blocked, nothing
+        // served) until our own write fills it.
+        assert_eq!(core.local_read(&key, 1), LeaseRead::Miss);
+        core.note_write(&key, Val::Num { ver: 0, num: 5 }, 10);
+        match core.local_read(&key, 11) {
+            LeaseRead::Hit(v) => assert_eq!(v.as_num(), Some(5)),
+            r => panic!("{r:?}"),
+        }
+        // A write AFTER expiry must not resurrect the window.
+        core.note_write(&key, Val::Num { ver: 1, num: 6 }, 2_000_000);
+        assert_eq!(core.local_read(&key, 2_000_001), LeaseRead::Miss);
+    }
+
+    #[test]
+    fn lease_install_failure_drops_entry_and_renew_uses_renew_message() {
+        let mut core = lease_core();
+        let key: Key = "k".into();
+        core.install(
+            &key,
+            &LeaseOutcome {
+                complete: true,
+                grants: 3,
+                value: Some(Val::Num { ver: 0, num: 1 }),
+                t_send: 0,
+                write_mark: 0,
+                valid_until: 900_000,
+            },
+        );
+        // Held entry: the next round is a renew.
+        let (_, msgs) = core.begin(&key, 500_000, ProposerId::new(9), &cfg3());
+        assert!(matches!(msgs[0].1, Request::LeaseRenew { .. }));
+        // Failed round: entry dropped, next round is an acquire again.
+        assert!(!core.install(
+            &key,
+            &LeaseOutcome {
+                complete: false,
+                grants: 0,
+                value: None,
+                t_send: 0,
+                write_mark: 0,
+                valid_until: 0,
+            }
+        ));
+        assert!(core.is_empty());
+        let (_, msgs) = core.begin(&key, 600_000, ProposerId::new(9), &cfg3());
+        assert!(matches!(msgs[0].1, Request::LeaseAcquire { .. }));
+    }
+
+    /// Completes a begun round with `n` identical grants and returns
+    /// its outcome (all-N grant set, agreed value `num`).
+    fn grant_all(mut round: LeaseRound, num: i64) -> LeaseOutcome {
+        let mut last = None;
+        for a in 1..=3 {
+            if let LeaseStep::Done(out) = round.on_reply(a, Some(granted(4, 1, num, Ballot::ZERO)))
+            {
+                last = Some(out);
+            }
+        }
+        last.expect("3 replies complete the round")
+    }
+
+    #[test]
+    fn racing_own_write_blocks_value_install() {
+        // A write committing between a grant round's snapshots and its
+        // install must not let the PRE-write value arm for 0-RTT
+        // serving: the window arms, the value does not.
+        let mut core = lease_core();
+        let key: Key = "k".into();
+        // Round begun at t=100 while a write is already in flight...
+        core.write_started(&key);
+        let (round, _) = core.begin(&key, 100, ProposerId::new(9), &cfg3());
+        let raced = grant_all(round, 7);
+        // ...and the write commits (same clock µs or later) mid-round.
+        core.write_finished(&key, 100, true);
+        assert!(core.install(&key, &raced), "window still arms (rivals stay fenced)");
+        assert_eq!(core.local_read(&key, 300), LeaseRead::Miss, "stale value must not serve");
+        // The write's own note_write (which carries the NEW value) and
+        // a later round's fresh snapshots are the repair paths.
+        core.note_write(&key, Val::Num { ver: 1, num: 8 }, 300);
+        match core.local_read(&key, 301) {
+            LeaseRead::Hit(v) => assert_eq!(v.as_num(), Some(8)),
+            r => panic!("{r:?}"),
+        }
+        // A round begun AFTER the write completed is clean again — even
+        // at the very same clock reading (the mark is logical).
+        let (round, _) = core.begin(&key, 100, ProposerId::new(9), &cfg3());
+        let clean = grant_all(round, 8);
+        assert!(core.install(&key, &clean));
+        assert!(matches!(core.local_read(&key, 500), LeaseRead::Hit(_)));
+    }
+
+    #[test]
+    fn unknown_outcome_write_poisons_installs_for_horizon() {
+        // A timed-out/conflicted write's accepts may land long after the
+        // error: rounds begun within one lease duration of it must not
+        // arm their value.
+        let mut core = lease_core(); // duration 1s
+        let key: Key = "k".into();
+        core.write_started(&key);
+        core.write_finished(&key, 1_000, false); // unknown: dirty to 1_001_000
+        let (round, _) = core.begin(&key, 500_000, ProposerId::new(9), &cfg3());
+        let inside = grant_all(round, 7);
+        core.install(&key, &inside);
+        assert_eq!(core.local_read(&key, 600_000), LeaseRead::Miss);
+        // Past the straggler horizon the same flow arms again.
+        let (round, _) = core.begin(&key, 1_100_000, ProposerId::new(9), &cfg3());
+        let beyond = grant_all(round, 7);
+        core.install(&key, &beyond);
+        assert!(matches!(core.local_read(&key, 1_200_000), LeaseRead::Hit(_)));
+    }
+
+    #[test]
+    fn lease_core_clamps_degenerate_opts() {
+        // Requesting more than the acceptor-side cap must clamp the
+        // HOLDER's window too, or it would outlive every grant.
+        let core = LeaseCore::new(1, u64::MAX, 100, 0);
+        assert_eq!(core.duration_us(), crate::acceptor::MAX_LEASE_US);
+        // Zeroed opts must not panic (Proposer builds a LeaseCore even
+        // when leases are disabled).
+        let _ = LeaseCore::new(1, 0, 0, 0);
+        // Skew at/above duration clamps below it (non-empty window).
+        let core = LeaseCore::new(9, 1_000, 5_000, 0);
+        let (round, _) = core.begin(&"k".into(), 0, ProposerId::new(9), &cfg3());
+        assert!(round.outcome().valid_until >= 1, "window must be non-empty");
+    }
+
+    #[test]
+    fn lease_invalidate_and_clear() {
+        let mut core = lease_core();
+        for k in ["a", "b"] {
+            core.install(
+                &k.to_string(),
+                &LeaseOutcome {
+                    complete: true,
+                    grants: 3,
+                    value: None,
+                    t_send: 0,
+                    write_mark: 0,
+                    valid_until: 1_000,
+                },
+            );
+        }
+        assert_eq!(core.len(), 2);
+        assert!(core.invalidate(&"a".to_string()));
+        assert!(!core.invalidate(&"a".to_string()), "second invalidate is a no-op");
+        let mut held = core.held_keys();
+        held.sort();
+        assert_eq!(held, vec!["b".to_string()]);
+        core.clear();
+        assert!(core.is_empty());
     }
 
     #[test]

@@ -28,9 +28,12 @@ use crate::state::Val;
 use crate::transport::Transport;
 
 pub use self::cache::{RttCache, DEFAULT_CACHE_CAPACITY};
-pub use self::core::{ReadCore, ReadStep, RoundCore, RoundOutcome, Step};
+pub use self::core::{
+    LeaseCore, LeaseOutcome, LeaseRead, LeaseRound, LeaseStep, ReadCore, ReadStep, RoundCore,
+    RoundOutcome, Step,
+};
 
-/// Consistency route for [`Proposer::get`]. Both modes are
+/// Consistency route for [`Proposer::get`]. Every mode is
 /// linearizable; they differ only in cost.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReadMode {
@@ -41,6 +44,42 @@ pub enum ReadMode {
     /// Always run the classic §2.2 identity-CAS round (two phases and a
     /// quorum of durable writes per read). The ablation baseline.
     Cas,
+    /// **0-RTT read leases**: acceptors grant this proposer a
+    /// time-bounded promise to reject foreign ballots on a key; while
+    /// the full grant set is live (within the clock-skew bound) reads
+    /// are served from local state with zero transport sends. Expired,
+    /// denied or broken leases degrade to a 1-RTT grant round and then
+    /// the identity-CAS round — a broken lease can only cost the fast
+    /// path, never linearizability (see
+    /// [`LeaseCore`](core::LeaseCore)). Tunables: [`LeaseOpts`].
+    Lease,
+}
+
+/// Tunables for [`ReadMode::Lease`].
+#[derive(Debug, Clone)]
+pub struct LeaseOpts {
+    /// Lease length requested from each acceptor (measured on the
+    /// acceptor's clock from receipt; capped server-side at 60s).
+    pub duration: Duration,
+    /// Clock-skew bound σ: the holder serves locally only within
+    /// `duration - σ` of *sending* the grant round. Safety holds as
+    /// long as no more than `fault_tolerance()` acceptor clocks drift
+    /// more than σ relative to the holder over one lease window.
+    pub skew_bound: Duration,
+    /// Renew cadence: a read landing within this margin of expiry runs
+    /// a renew round (1 RTT) instead of serving 0-RTT, keeping steady
+    /// read traffic permanently lease-covered.
+    pub renew_margin: Duration,
+}
+
+impl Default for LeaseOpts {
+    fn default() -> Self {
+        LeaseOpts {
+            duration: Duration::from_secs(2),
+            skew_bound: Duration::from_millis(200),
+            renew_margin: Duration::from_millis(500),
+        }
+    }
 }
 
 /// Tunables for the retry/backoff policy.
@@ -59,6 +98,8 @@ pub struct ProposerOpts {
     /// Entry cap for the 1-RTT cache (§2.2.1), see
     /// [`RttCache::with_capacity`].
     pub cache_capacity: usize,
+    /// Read-lease tunables (used only in [`ReadMode::Lease`]).
+    pub lease: LeaseOpts,
 }
 
 impl Default for ProposerOpts {
@@ -70,6 +111,7 @@ impl Default for ProposerOpts {
             backoff: Duration::from_micros(200),
             read_mode: ReadMode::Quorum,
             cache_capacity: DEFAULT_CACHE_CAPACITY,
+            lease: LeaseOpts::default(),
         }
     }
 }
@@ -80,8 +122,18 @@ pub struct Proposer {
     age: AtomicU64,
     gen: Mutex<BallotGenerator>,
     cfg: RwLock<ClusterConfig>,
+    /// Bumped by every [`Proposer::update_config`] (under the lease
+    /// lock): lets a grant round detect that a config change — even an
+    /// idempotent re-push of an identical config, which already revoked
+    /// acceptor-side leases — landed while it was in flight. Structural
+    /// config equality cannot see that case.
+    cfg_gen: AtomicU64,
     transport: Arc<dyn Transport>,
     cache: Mutex<RttCache>,
+    /// Per-key read-lease state ([`ReadMode::Lease`]).
+    lease: Mutex<LeaseCore>,
+    /// Epoch for the monotonic lease clock (µs since construction).
+    clock_epoch: Instant,
     jitter: Mutex<Rng>,
     opts: ProposerOpts,
     /// Protocol counters (rounds, conflicts, cache hits, ...).
@@ -101,17 +153,31 @@ impl Proposer {
         transport: Arc<dyn Transport>,
         opts: ProposerOpts,
     ) -> Self {
+        let lease = LeaseCore::new(
+            id,
+            opts.lease.duration.as_micros() as u64,
+            opts.lease.skew_bound.as_micros() as u64,
+            opts.lease.renew_margin.as_micros() as u64,
+        );
         Proposer {
             id,
             age: AtomicU64::new(0),
             gen: Mutex::new(BallotGenerator::new(id)),
             cfg: RwLock::new(cfg),
+            cfg_gen: AtomicU64::new(0),
             transport,
             cache: Mutex::new(RttCache::with_capacity(opts.cache_capacity)),
+            lease: Mutex::new(lease),
+            clock_epoch: Instant::now(),
             jitter: Mutex::new(Rng::from_entropy()),
             opts,
             metrics: Counters::new(),
         }
+    }
+
+    /// Monotonic holder clock for lease windows (µs since construction).
+    fn lease_now_us(&self) -> u64 {
+        self.clock_epoch.elapsed().as_micros() as u64
     }
 
     /// This proposer's numeric id.
@@ -135,20 +201,60 @@ impl Proposer {
     }
 
     /// Installs a new cluster configuration (membership change driver,
-    /// §2.3). Clears the 1-RTT cache: cached promises were granted under
-    /// the old acceptor set / quorum sizes.
+    /// §2.3). Clears the 1-RTT cache (cached promises were granted under
+    /// the old acceptor set / quorum sizes) and **revokes held read
+    /// leases** first — local serving stops before the release goes
+    /// out, so the old acceptors are never left blocking writers for a
+    /// holder that moved on.
     pub fn update_config(&self, cfg: ClusterConfig) -> CasResult<()> {
         cfg.validate()?;
-        *self.cfg.write().unwrap() = cfg;
+        // Clear lease state and swap the config ATOMICALLY under the
+        // lease lock (lock order lease → cfg, same as lease_round's
+        // install): an in-flight grant round must never observe the old
+        // config, then arm its window after this clear.
+        let (held, old_cfg) = {
+            let mut lease = self.lease.lock().unwrap();
+            let held = lease.held_keys();
+            lease.clear();
+            let mut cur = self.cfg.write().unwrap();
+            let old = cur.clone();
+            *cur = cfg;
+            self.cfg_gen.fetch_add(1, Ordering::SeqCst);
+            (held, old)
+        };
+        if !held.is_empty() {
+            self.revoke_leases(&held, &old_cfg);
+        }
         self.cache.lock().unwrap().clear();
         Ok(())
     }
 
-    /// GC step 2b (§3.1): invalidate the cache entry for `key`,
-    /// fast-forward the ballot counter past `min_counter`, bump the age.
-    /// Returns the new age.
+    /// Best-effort `LeaseRevoke` fan-out for `keys` (explicit lease
+    /// break on membership change / failed partial acquisition). Safe
+    /// to lose: an undelivered revoke just lets the lease time out.
+    fn revoke_leases(&self, keys: &[Key], cfg: &ClusterConfig) {
+        let from = self.proposer_id();
+        let msgs: Vec<(u64, Request)> = keys
+            .iter()
+            .flat_map(|key| {
+                cfg.acceptors
+                    .iter()
+                    .map(|&to| (to, Request::LeaseRevoke { key: key.clone(), from }))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let (tx, _rx) = mpsc::channel();
+        self.transport.fan_out(0, msgs, &tx);
+    }
+
+    /// GC step 2b (§3.1): invalidate the cache and lease entries for
+    /// `key`, fast-forward the ballot counter past `min_counter`, bump
+    /// the age. Returns the new age.
     pub fn gc_sync(&self, key: &Key, min_counter: u64) -> u64 {
         self.cache.lock().unwrap().invalidate(key);
+        if self.lease.lock().unwrap().invalidate(key) {
+            self.metrics.lease_break.fetch_add(1, Ordering::Relaxed);
+        }
         self.gen.lock().unwrap().fast_forward(Ballot::new(min_counter, 0));
         self.age.fetch_add(1, Ordering::SeqCst) + 1
     }
@@ -175,6 +281,39 @@ impl Proposer {
         change: ChangeFn,
     ) -> CasResult<RoundOutcome> {
         let key: Key = key.into();
+        if self.opts.read_mode != ReadMode::Lease {
+            return self.change_rounds(&key, change);
+        }
+        // Lease mode: bracket the write so a concurrent grant round
+        // can't arm a value whose snapshots missed this write's commit,
+        // and keep the 0-RTT value in step with the outcome.
+        self.lease.lock().unwrap().write_started(&key);
+        let result = self.change_rounds(&key, change);
+        let now = self.lease_now_us();
+        let mut lease = self.lease.lock().unwrap();
+        match &result {
+            Ok(out) => {
+                // Committed: the outcome is known and, inside a live
+                // lease, IS the register's current value.
+                lease.write_finished(&key, now, true);
+                lease.note_write(&key, out.state.clone(), now);
+            }
+            Err(_) => {
+                // Unknown outcome (a conflicted/timed-out accept may
+                // still land): poison value installs for the straggler
+                // horizon and stop serving locally.
+                lease.write_finished(&key, now, false);
+                if lease.invalidate(&key) {
+                    self.metrics.lease_break.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        drop(lease);
+        result
+    }
+
+    /// The retry loop behind [`Proposer::change_detailed`].
+    fn change_rounds(&self, key: &Key, change: ChangeFn) -> CasResult<RoundOutcome> {
         let mut last_err = CasError::RetriesExhausted { attempts: 0 };
         for attempt in 0..self.opts.max_attempts {
             if attempt > 0 {
@@ -182,7 +321,7 @@ impl Proposer {
                 self.backoff(attempt);
             }
             self.metrics.rounds.fetch_add(1, Ordering::Relaxed);
-            let (core, msgs) = self.build_round(&key, change.clone());
+            let (core, msgs) = self.build_round(key, change.clone());
             match self.run_round(core, msgs) {
                 Ok(out) => {
                     if self.opts.piggyback {
@@ -199,7 +338,7 @@ impl Proposer {
                 Err(CasError::Conflict(seen)) => {
                     self.metrics.conflicts.fetch_add(1, Ordering::Relaxed);
                     self.gen.lock().unwrap().fast_forward(seen);
-                    self.cache.lock().unwrap().invalidate(&key);
+                    self.cache.lock().unwrap().invalidate(key);
                     last_err = CasError::Conflict(seen);
                 }
                 Err(e @ CasError::StaleAge { .. }) => {
@@ -209,7 +348,7 @@ impl Proposer {
                     return Err(e);
                 }
                 Err(e) => {
-                    self.cache.lock().unwrap().invalidate(&key);
+                    self.cache.lock().unwrap().invalidate(key);
                     last_err = e;
                 }
             }
@@ -291,8 +430,10 @@ impl Proposer {
     /// `read_fallback`.
     pub fn get(&self, key: impl Into<Key>) -> CasResult<Val> {
         let key: Key = key.into();
-        if self.opts.read_mode == ReadMode::Cas {
-            return self.get_via_cas(key);
+        match self.opts.read_mode {
+            ReadMode::Cas => return self.get_via_cas(key),
+            ReadMode::Lease => return self.get_via_lease(key),
+            ReadMode::Quorum => {}
         }
         match self.quorum_read(&key) {
             Ok(Some(v)) => {
@@ -310,6 +451,112 @@ impl Proposer {
                 Err(e)
             }
         }
+    }
+
+    /// [`ReadMode::Lease`] read: serve 0-RTT from lease-covered local
+    /// state when possible; otherwise run a grant round (which doubles
+    /// as a 1-RTT read); otherwise fall back to the identity-CAS round.
+    fn get_via_lease(&self, key: Key) -> CasResult<Val> {
+        let now = self.lease_now_us();
+        match self.lease.lock().unwrap().local_read(&key, now) {
+            LeaseRead::Hit(v) => {
+                // ZERO transport sends: the whole read is this lookup.
+                self.metrics.read_lease.fetch_add(1, Ordering::Relaxed);
+                return Ok(v);
+            }
+            // Renew cadence: inside the margin a read pays 1 RTT (the
+            // grant round below) so later reads stay 0-RTT; a failed
+            // renewal drops to the classic fallback.
+            LeaseRead::NeedsRenew | LeaseRead::Miss => {}
+            LeaseRead::Expired => {
+                self.metrics.lease_break.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if let Some(v) = self.lease_round(&key) {
+            return Ok(v);
+        }
+        self.metrics.read_fallback.fetch_add(1, Ordering::Relaxed);
+        self.get_via_cas(key)
+    }
+
+    /// One lease acquire/renew fan-out. Returns the read value when the
+    /// grant snapshots agree (1 RTT); arms the 0-RTT window when every
+    /// acceptor granted; revokes partial grant sets so a half-acquired
+    /// lease never blocks rival writers for the full duration.
+    fn lease_round(&self, key: &Key) -> Option<Val> {
+        let now_us = self.lease_now_us();
+        // Capture config + generation and begin the round atomically
+        // w.r.t. update_config (which mutates both under the lease
+        // lock; lock order lease → cfg everywhere).
+        let (mut round, msgs, cfg, begun_gen) = {
+            let lease = self.lease.lock().unwrap();
+            let cfg = self.cfg.read().unwrap().clone();
+            let begun_gen = self.cfg_gen.load(Ordering::SeqCst);
+            let (round, msgs) = lease.begin(key, now_us, self.proposer_id(), &cfg);
+            (round, msgs, cfg, begun_gen)
+        };
+        let (tx, rx) = mpsc::channel();
+        self.transport.fan_out(0, msgs, &tx);
+        let deadline = Instant::now() + self.opts.round_timeout;
+        let outcome = loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break round.outcome();
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(reply) => match round.on_reply(reply.from, reply.resp) {
+                    LeaseStep::Continue => {}
+                    LeaseStep::Done(outcome) => break outcome,
+                },
+                Err(_) => break round.outcome(),
+            }
+        };
+        // A config change (even an idempotent re-push — it already
+        // revoked acceptor-side leases) may have landed while the
+        // round was in flight: its grants must neither arm a window
+        // nor serve a value. The generation check runs under the lease
+        // lock — update_config bumps the generation under the same
+        // lock, so a stale install cannot interleave with its clear().
+        let (armed, cfg_unchanged) = {
+            let mut lease = self.lease.lock().unwrap();
+            let unchanged = self.cfg_gen.load(Ordering::SeqCst) == begun_gen;
+            let armed = if unchanged {
+                lease.install(key, &outcome)
+            } else {
+                lease.invalidate(key);
+                false
+            };
+            (armed, unchanged)
+        };
+        if armed {
+            self.metrics.lease_renew.fetch_add(1, Ordering::Relaxed);
+        } else if outcome.grants > 0 {
+            // Drop whatever subset did grant: leaving a partial set
+            // in place would stall rival writers without buying us the
+            // fast path. (Right for the config-raced case too: the
+            // grants live on the OLD acceptors in `cfg`.) All-denied
+            // rounds skip this — there is nothing to release.
+            self.revoke_leases(std::slice::from_ref(key), &cfg);
+        }
+        if cfg_unchanged {
+            outcome.value
+        } else {
+            None // re-read under the new config
+        }
+    }
+
+    /// (0-RTT lease reads, grant/renew rounds armed, lease breaks).
+    pub fn lease_stats(&self) -> (u64, u64, u64) {
+        (
+            self.metrics.read_lease.load(Ordering::Relaxed),
+            self.metrics.lease_renew.load(Ordering::Relaxed),
+            self.metrics.lease_break.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Number of keys with live local lease state.
+    pub fn leased_keys(&self) -> usize {
+        self.lease.lock().unwrap().len()
     }
 
     /// Linearizable read via the classic identity transition `x -> x`
@@ -611,6 +858,139 @@ mod tests {
         }
         assert!(p.cache_len() <= 8, "cache exceeded its cap: {}", p.cache_len());
         assert!(p.cache_evictions() >= 42, "evictions counted");
+    }
+
+    fn lease_opts(duration_ms: u64, skew_ms: u64) -> ProposerOpts {
+        ProposerOpts {
+            read_mode: ReadMode::Lease,
+            lease: LeaseOpts {
+                duration: Duration::from_millis(duration_ms),
+                skew_bound: Duration::from_millis(skew_ms),
+                renew_margin: Duration::ZERO,
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn lease_covered_reads_send_zero_requests() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::with_opts(1, cfg, t.clone(), lease_opts(60_000, 100));
+        p.set("k", 42).unwrap();
+        // First read acquires the lease: exactly one full fan-out.
+        let before = t.request_count();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(42));
+        assert_eq!(t.request_count() - before, 3, "acquire round = 1 RTT to all acceptors");
+        // Every subsequent read is 0-RTT: ZERO transport requests.
+        let before = t.request_count();
+        for _ in 0..50 {
+            assert_eq!(p.get("k").unwrap().as_num(), Some(42));
+        }
+        assert_eq!(t.request_count(), before, "lease-covered reads must not touch the network");
+        let (local, renews, breaks) = p.lease_stats();
+        assert_eq!(local, 50);
+        assert_eq!(renews, 1);
+        assert_eq!(breaks, 0);
+        assert_eq!(p.leased_keys(), 1);
+    }
+
+    #[test]
+    fn lease_reads_see_own_writes_without_network() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::with_opts(1, cfg, t.clone(), lease_opts(60_000, 100));
+        p.set("k", 1).unwrap();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(1)); // arms the lease
+        for i in 2..6 {
+            p.set("k", i).unwrap(); // note_write keeps the local value current
+            let before = t.request_count();
+            assert_eq!(p.get("k").unwrap().as_num(), Some(i), "read-your-writes");
+            assert_eq!(t.request_count(), before, "still 0-RTT after a write");
+        }
+    }
+
+    #[test]
+    fn lease_blocks_foreign_writers_until_expiry() {
+        let (t, cfg) = cluster(3);
+        let holder = Proposer::with_opts(1, cfg.clone(), t.clone(), lease_opts(40, 5));
+        holder.set("k", 7).unwrap();
+        assert_eq!(holder.get("k").unwrap().as_num(), Some(7));
+        // A rival's write is rejected while the ~40ms window lives, but
+        // its retry/backoff schedule outlasts the window: it must
+        // eventually commit (a lease can delay writers, never kill them).
+        let rival = Proposer::new(2, cfg, t);
+        assert_eq!(rival.set("k", 8).unwrap().as_num(), Some(8));
+    }
+
+    #[test]
+    fn foreign_leaseholder_read_falls_back_but_serves() {
+        let (t, cfg) = cluster(3);
+        let holder = Proposer::with_opts(1, cfg.clone(), t.clone(), lease_opts(40, 5));
+        holder.set("k", 7).unwrap();
+        assert_eq!(holder.get("k").unwrap().as_num(), Some(7)); // holder leased
+        // Another lease-mode reader is denied the lease but still gets
+        // a linearizable answer (grant-round read or CAS fallback).
+        let reader = Proposer::with_opts(2, cfg, t, lease_opts(40, 5));
+        assert_eq!(reader.get("k").unwrap().as_num(), Some(7));
+        assert_eq!(reader.leased_keys(), 0, "denied acquisition must not arm a window");
+    }
+
+    #[test]
+    fn lease_expiry_breaks_then_reacquires() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::with_opts(1, cfg, t, lease_opts(30, 5));
+        p.set("k", 1).unwrap();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(1));
+        std::thread::sleep(Duration::from_millis(40)); // outlive the window
+        assert_eq!(p.get("k").unwrap().as_num(), Some(1), "re-acquires after expiry");
+        let (_, renews, breaks) = p.lease_stats();
+        assert!(breaks >= 1, "expiry must count as a lease break");
+        assert!(renews >= 2, "expiry forces a fresh acquisition");
+    }
+
+    #[test]
+    fn lease_survives_one_acceptor_down_via_fallback() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::with_opts(1, cfg, t.clone(), lease_opts(60_000, 100));
+        p.set("k", 5).unwrap();
+        t.set_down(3, true);
+        // The full grant set is unreachable: the 0-RTT window must NOT
+        // arm, but the read itself is still served (grant-round value).
+        assert_eq!(p.get("k").unwrap().as_num(), Some(5));
+        assert_eq!(p.leased_keys(), 0, "partial grant set must not arm");
+        assert_eq!(p.get("k").unwrap().as_num(), Some(5), "reads keep working degraded");
+    }
+
+    #[test]
+    fn update_config_revokes_leases() {
+        let (t, cfg) = cluster(3);
+        let holder = Proposer::with_opts(1, cfg.clone(), t.clone(), lease_opts(60_000, 100));
+        holder.set("k", 7).unwrap();
+        assert_eq!(holder.get("k").unwrap().as_num(), Some(7));
+        assert_eq!(holder.leased_keys(), 1);
+        // Membership change: local state drops AND acceptors release,
+        // so a rival writes immediately (no 60s wait).
+        holder.update_config(cfg.clone()).unwrap();
+        assert_eq!(holder.leased_keys(), 0);
+        let rival = Proposer::with_opts(
+            2,
+            cfg,
+            t,
+            ProposerOpts { max_attempts: 3, ..Default::default() },
+        );
+        assert_eq!(rival.set("k", 8).unwrap().as_num(), Some(8), "revoke freed the key");
+    }
+
+    #[test]
+    fn gc_sync_drops_lease_state() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::with_opts(1, cfg, t, lease_opts(60_000, 100));
+        p.set("k", 1).unwrap();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(1));
+        assert_eq!(p.leased_keys(), 1);
+        p.gc_sync(&"k".to_string(), 10);
+        assert_eq!(p.leased_keys(), 0, "GC sync must stop local serving");
+        let (_, _, breaks) = p.lease_stats();
+        assert!(breaks >= 1);
     }
 
     #[test]

@@ -271,6 +271,10 @@ pub struct NodeOpts {
     pub shard_plan: Option<ShardPlan>,
     /// Durable storage directory (`None` = in-memory).
     pub data_dir: Option<String>,
+    /// Enable 0-RTT read leases on every shard proposer (each becomes
+    /// the per-shard lease manager for the keys it owns). `None` =
+    /// 1-RTT quorum reads (the default).
+    pub lease: Option<crate::proposer::LeaseOpts>,
 }
 
 /// A running node (handles held for inspection; threads detached).
@@ -340,13 +344,26 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     let engine = auto_engine();
     let mut shard_proposers: Vec<Arc<Proposer>> = Vec::new();
     let mut batches: Vec<Arc<BatchProposer>> = Vec::new();
+    let proposer_opts = match &opts.lease {
+        Some(lease) => crate::proposer::ProposerOpts {
+            read_mode: crate::proposer::ReadMode::Lease,
+            lease: lease.clone(),
+            ..Default::default()
+        },
+        None => crate::proposer::ProposerOpts::default(),
+    };
     for (s, cfg) in plan.shards.iter().enumerate() {
         // Proposer ids must be globally unique per (node, shard). Shard 0
         // keeps the historical `id == node id`, so unsharded deployments
         // are identical to the pre-shard ones; batch proposers live in
         // their own 500k block (assumes node ids < 1000, shards < ~100).
         let pid = opts.id + (s as u64) * 1000;
-        shard_proposers.push(Arc::new(Proposer::new(pid, cfg.clone(), transport.clone())));
+        shard_proposers.push(Arc::new(Proposer::with_opts(
+            pid,
+            cfg.clone(),
+            transport.clone(),
+            proposer_opts.clone(),
+        )));
         batches.push(Arc::new(BatchProposer::new(
             500_000 + pid,
             cfg.clone(),
@@ -457,7 +474,7 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
             ClientResp::Synced { proposer_id: synced.0, age: synced.1 }
         }
         ClientReq::Status => {
-            let mut snap = [0u64; 8];
+            let mut snap = [0u64; 11];
             for p in &ctx.proposers {
                 for (acc, v) in snap.iter_mut().zip(p.metrics.snapshot()) {
                     *acc += v;
@@ -468,14 +485,23 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 snap[6] += b.metrics.read_fast.load(std::sync::atomic::Ordering::Relaxed);
                 snap[7] += b.metrics.read_fallback.load(std::sync::atomic::Ordering::Relaxed);
             }
-            let [rounds, commits, conflicts, retries, cache_hits, failures, read_fast, read_fb] =
-                snap;
             ClientResp::Status(format!(
-                "id={} shards={} rounds={rounds} commits={commits} conflicts={conflicts} \
-                 retries={retries} cache_hits={cache_hits} failures={failures} \
-                 read_fast={read_fast} read_fallback={read_fb} gc_pending={}",
+                "id={} shards={} rounds={} commits={} conflicts={} retries={} \
+                 cache_hits={} failures={} read_fast={} read_fallback={} \
+                 read_lease={} lease_renew={} lease_break={} gc_pending={}",
                 ctx.proposers[0].id(),
                 ctx.shards.len(),
+                snap[0],
+                snap[1],
+                snap[2],
+                snap[3],
+                snap[4],
+                snap[5],
+                snap[6],
+                snap[7],
+                snap[8],
+                snap[9],
+                snap[10],
                 ctx.gc.pending()
             ))
         }
@@ -623,7 +649,12 @@ mod tests {
     use super::*;
     use crate::testkit::TempDir;
 
-    fn launch_cluster_sharded(n: u64, shards: usize, data: Option<&TempDir>) -> Vec<Node> {
+    fn launch_cluster_opts(
+        n: u64,
+        shards: usize,
+        data: Option<&TempDir>,
+        lease: Option<crate::proposer::LeaseOpts>,
+    ) -> Vec<Node> {
         // Two-phase bind: reserve acceptor AND client ports first so
         // every node knows every peer address before starting (a bind
         // learns a free port, releases it, the node re-binds — benign
@@ -651,10 +682,15 @@ mod tests {
                     cluster: cluster.clone(),
                     shard_plan: shard_plan.clone(),
                     data_dir: data.map(|d| d.path().to_str().unwrap().to_string()),
+                    lease: lease.clone(),
                 })
                 .unwrap()
             })
             .collect()
+    }
+
+    fn launch_cluster_sharded(n: u64, shards: usize, data: Option<&TempDir>) -> Vec<Node> {
+        launch_cluster_opts(n, shards, data, None)
     }
 
     fn launch_cluster(n: u64, data: Option<&TempDir>) -> Vec<Node> {
@@ -798,6 +834,41 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn lease_mode_node_serves_and_exports_counters() {
+        use crate::proposer::LeaseOpts;
+        // Short window: node 2's fallback read below must be able to
+        // wait it out inside one retry budget.
+        let lease = LeaseOpts {
+            duration: std::time::Duration::from_millis(300),
+            skew_bound: std::time::Duration::from_millis(50),
+            renew_margin: std::time::Duration::ZERO,
+        };
+        let nodes = launch_cluster_opts(3, 1, None, Some(lease));
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        c.change("k", ChangeFn::Set(7)).unwrap();
+        // Repeat reads through the writer node: first acquires, the
+        // rest serve from the per-shard lease manager's local state.
+        for _ in 0..5 {
+            assert_eq!(c.get("k").unwrap().as_num(), Some(7));
+        }
+        let (local, renews, _) = nodes[0].proposer.lease_stats();
+        assert!(renews >= 1, "first read must run a grant round");
+        assert!(local >= 3, "later reads must be lease-local, got {local}");
+        match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => {
+                assert!(s.contains("read_lease="), "{s}");
+                assert!(s.contains("lease_renew="), "{s}");
+                assert!(s.contains("lease_break="), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // A different node's reads still work (denied the lease, they
+        // fall back) — any node serves any client, leases or not.
+        let mut c2 = Client::connect(&nodes[2].client_addr.to_string()).unwrap();
+        assert_eq!(c2.get("k").unwrap().as_num(), Some(7));
     }
 
     #[test]

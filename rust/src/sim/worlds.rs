@@ -49,6 +49,16 @@ pub struct ShardedWorldOpts {
     /// other op; see [`HistClient::with_quorum_reads`]). Off by default
     /// so legacy seeds replay bit-identically.
     pub quorum_reads: bool,
+    /// Mix 0-RTT lease reads into chaos clients' schedules (every
+    /// other op; see [`HistClient::with_lease_reads`]). Off by default
+    /// so legacy seeds replay bit-identically.
+    pub lease_reads: bool,
+    /// Skew acceptor clocks: within every shard, acceptor 0 runs 1.75×
+    /// fast (past the lease skew bound — the dangerous direction, only
+    /// tolerable for ≤F acceptors per group) and acceptor 1 carries a
+    /// large benign offset (lease math is duration-based, so offsets
+    /// must not matter). Off by default.
+    pub skew_clocks: bool,
     /// Link model for every node pair.
     pub net: NetModel,
 }
@@ -62,6 +72,8 @@ impl Default for ShardedWorldOpts {
             ops_per_client: 15,
             keys_per_shard: 2,
             quorum_reads: false,
+            lease_reads: false,
+            skew_clocks: false,
             net: NetModel::uniform(5_000),
         }
     }
@@ -79,6 +91,18 @@ impl ShardedWorldOpts {
         assert!(self.clients_per_shard <= 100, "client id space is 100 per shard");
         CLIENT_ID_BASE + (shard * 100 + client) as u64
     }
+
+    /// Every client node id in this topology (nemesis target list for
+    /// leaseholder-partition faults).
+    pub fn client_ids(&self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        for s in 0..self.shards {
+            for c in 0..self.clients_per_shard {
+                ids.push(self.client_id(s, c));
+            }
+        }
+        ids
+    }
 }
 
 /// A built world plus the handles the driver needs.
@@ -92,10 +116,22 @@ pub struct ShardedWorld<S> {
     pub handles: Vec<Vec<S>>,
 }
 
-fn add_acceptors(world: &mut World<CasMsg>, plan: &ShardPlan) {
+fn add_acceptors(world: &mut World<CasMsg>, plan: &ShardPlan, skew_clocks: bool) {
     for cfg in &plan.shards {
         for (i, &a) in cfg.acceptors.iter().enumerate() {
-            world.add_node(a, Region(i % 3), Box::new(AcceptorActor::new(a)));
+            let actor = if skew_clocks {
+                match i {
+                    // One fast clock per shard: past the lease skew
+                    // bound, within the ≤F tolerance of the design.
+                    0 => AcceptorActor::with_clock(a, 0, 1.75),
+                    // A large constant offset: must be harmless.
+                    1 => AcceptorActor::with_clock(a, 500_000, 1.0),
+                    _ => AcceptorActor::new(a),
+                }
+            } else {
+                AcceptorActor::new(a)
+            };
+            world.add_node(a, Region(i % 3), Box::new(actor));
         }
     }
 }
@@ -111,7 +147,7 @@ pub fn sharded_add_world(
 ) -> ShardedWorld<Arc<ClientStats>> {
     let plan = opts.plan();
     let mut world = World::new(opts.net.clone(), seed);
-    add_acceptors(&mut world, &plan);
+    add_acceptors(&mut world, &plan, opts.skew_clocks);
     let mut handles = Vec::with_capacity(plan.shard_count());
     for (s, cfg) in plan.shards.iter().enumerate() {
         let mut shard_stats = Vec::with_capacity(opts.clients_per_shard);
@@ -142,7 +178,7 @@ pub fn sharded_chaos_world(
 ) -> ShardedWorld<Arc<History>> {
     let plan = opts.plan();
     let mut world = World::new(opts.net.clone(), seed);
-    add_acceptors(&mut world, &plan);
+    add_acceptors(&mut world, &plan, opts.skew_clocks);
     let mut seeder = Rng::new(seed ^ 0xC11E57);
     let mut handles = Vec::with_capacity(plan.shard_count());
     for (s, cfg) in plan.shards.iter().enumerate() {
@@ -165,6 +201,9 @@ pub fn sharded_chaos_world(
             .with_think_time(300_000);
             if opts.quorum_reads {
                 client = client.with_quorum_reads();
+            }
+            if opts.lease_reads {
+                client = client.with_lease_reads();
             }
             world.add_node(id, Region(c % 3), Box::new(client));
             shard_handles.push(Arc::clone(&history));
@@ -213,6 +252,26 @@ mod tests {
             assert_eq!(history.len(), 2 * 8, "2 clients x 8 ops per shard");
             assert_eq!(check(history), CheckResult::Linearizable);
         }
+    }
+
+    #[test]
+    fn lease_chaos_world_checkable_under_skewed_clocks() {
+        let opts = ShardedWorldOpts {
+            shards: 2,
+            ops_per_client: 8,
+            lease_reads: true,
+            skew_clocks: true,
+            ..Default::default()
+        };
+        let mut w = sharded_chaos_world(&opts, 19);
+        w.world.start();
+        w.world.run_to_quiescence();
+        for shard_handles in &w.handles {
+            let history = &shard_handles[0];
+            assert_eq!(history.len(), 2 * 8);
+            assert_eq!(check(history), CheckResult::Linearizable);
+        }
+        assert_eq!(opts.client_ids().len(), 4, "2 shards x 2 clients");
     }
 
     #[test]

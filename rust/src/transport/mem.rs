@@ -42,7 +42,10 @@ impl<S: Storage> Node<S> {
             | Request::Accept { key, .. }
             | Request::Erase { key, .. }
             | Request::Install { key, .. }
-            | Request::Read { key, .. } => self.shard_for(key).lock().unwrap().handle(req),
+            | Request::Read { key, .. }
+            | Request::LeaseAcquire { key, .. }
+            | Request::LeaseRenew { key, .. }
+            | Request::LeaseRevoke { key, .. } => self.shard_for(key).lock().unwrap().handle(req),
             Request::SetMinAge { .. } => {
                 // Age fences must hold on every shard.
                 let mut last = Response::Ok;

@@ -14,6 +14,13 @@
 //! double as a regression net for the share-nothing invariant: a
 //! routing bug that let two shards host the same register would show up
 //! as a (non-)linearizable history here.
+//!
+//! The read campaigns layer on top: 2×40 seeds of quorum-read mixes
+//! (PR 2) and 2×40 seeds of **lease-read mixes** under skewed acceptor
+//! clocks, leaseholder partitions and mid-lease acceptor restarts —
+//! every way a read lease can break, checked against the same
+//! linearizability oracle. `CHAOS_SEED_MULT=4` (the `chaos-extended`
+//! CI job) multiplies every campaign's seed count.
 
 use caspaxos::linearizability::{check, CheckResult};
 use caspaxos::rng::Rng;
@@ -21,11 +28,32 @@ use caspaxos::sim::worlds::{sharded_chaos_world, ShardedWorldOpts};
 use caspaxos::sim::{NetModel, Region};
 use caspaxos::testkit::forall_seeds;
 
-/// One seeded chaos scenario. With `quorum_reads`, every other client
-/// op is a 1-RTT quorum read (fast path + mid-op identity-CAS
-/// fallback), so the checker validates mixed read histories too.
-/// Returns (invoked, completed) op counts.
-fn run_chaos(shards: usize, seed: u64, quorum_reads: bool) -> (usize, usize) {
+/// Seed count for one campaign: `base`, scaled by the `CHAOS_SEED_MULT`
+/// env var (the nightly `chaos-extended` CI job runs with 4×; failing
+/// case seeds print via `forall_seeds` and are uploaded as artifacts).
+fn seeds(base: u64) -> u64 {
+    let mult = std::env::var("CHAOS_SEED_MULT")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(1);
+    base * mult.max(1)
+}
+
+/// Which read mix a chaos schedule drives alongside its random writes.
+#[derive(Clone, Copy, PartialEq)]
+enum ReadMix {
+    /// Writes only (the PR-1 schedules, bit-stable).
+    None,
+    /// Every other op a 1-RTT quorum read (the PR-2 schedules).
+    Quorum,
+    /// Every other op a 0-RTT lease read, acceptor clocks skewed past
+    /// the bound, and the nemesis also partitions *leaseholders*
+    /// (client nodes) and restarts acceptors mid-lease.
+    Lease,
+}
+
+/// One seeded chaos scenario. Returns (invoked, completed) op counts.
+fn run_chaos(shards: usize, seed: u64, mix: ReadMix) -> (usize, usize) {
     let mut net = NetModel::uniform(5_000);
     net.jitter = 0.3;
     net.drop_prob = 0.01; // ambient 1% loss on top of the nemesis
@@ -35,11 +63,14 @@ fn run_chaos(shards: usize, seed: u64, quorum_reads: bool) -> (usize, usize) {
         clients_per_shard: 2,
         ops_per_client: 10,
         keys_per_shard: 2,
-        quorum_reads,
+        quorum_reads: mix == ReadMix::Quorum,
+        lease_reads: mix == ReadMix::Lease,
+        skew_clocks: mix == ReadMix::Lease,
         net,
     };
     let mut w = sharded_chaos_world(&opts, seed);
     let acceptors = w.plan.all_acceptors();
+    let clients = opts.client_ids();
     w.world.start();
 
     // Nemesis: a random fault every 100–400 virtual ms. Clients think
@@ -49,10 +80,14 @@ fn run_chaos(shards: usize, seed: u64, quorum_reads: bool) -> (usize, usize) {
     let mut crashed: Vec<u64> = Vec::new();
     let mut isolated: Vec<u64> = Vec::new();
     let mut t = 0u64;
+    // Lease schedules add a 6th fault: isolating a CLIENT node — the
+    // partitioned-leaseholder case (it keeps serving 0-RTT reads until
+    // its conservative window ends, then goes dark until reconnected).
+    let faults = if mix == ReadMix::Lease { 6 } else { 5 };
     for _phase in 0..10 {
         t += 100_000 + nemesis.gen_range(300_000);
         w.world.run_until(t);
-        match nemesis.gen_range(5) {
+        match nemesis.gen_range(faults) {
             0 => {
                 let victim = *nemesis.choose(&acceptors);
                 w.world.crash(victim);
@@ -73,7 +108,7 @@ fn run_chaos(shards: usize, seed: u64, quorum_reads: bool) -> (usize, usize) {
                     w.world.reconnect(back);
                 }
             }
-            _ => {
+            4 => {
                 // Cut (or re-cut) a random region pair, healing another:
                 // partitions slice through EVERY shard at once.
                 let a = nemesis.gen_range(3) as usize;
@@ -83,6 +118,11 @@ fn run_chaos(shards: usize, seed: u64, quorum_reads: bool) -> (usize, usize) {
                 let d = (c + 1 + nemesis.gen_range(2) as usize) % 3;
                 w.world.heal(Region(c), Region(d));
             }
+            _ => {
+                let victim = *nemesis.choose(&clients);
+                w.world.isolate(victim);
+                isolated.push(victim);
+            }
         }
     }
 
@@ -90,6 +130,9 @@ fn run_chaos(shards: usize, seed: u64, quorum_reads: bool) -> (usize, usize) {
     for &id in &acceptors {
         w.world.reconnect(id);
         w.world.restart(id);
+    }
+    for &id in &clients {
+        w.world.reconnect(id);
     }
     for a in 0..3 {
         for b in (a + 1)..3 {
@@ -120,25 +163,29 @@ fn run_chaos(shards: usize, seed: u64, quorum_reads: bool) -> (usize, usize) {
 
 #[test]
 fn chaos_single_shard_50_seeds() {
+    let n = seeds(50);
     let mut total_completed = 0usize;
-    forall_seeds(0xCA05_0001, 50, |rng| {
-        let (invoked, completed) = run_chaos(1, rng.next_u64(), false);
+    forall_seeds(0xCA05_0001, n, |rng| {
+        let (invoked, completed) = run_chaos(1, rng.next_u64(), ReadMix::None);
         assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
-    // Faults eat individual ops, never all progress across 50 schedules.
-    assert!(total_completed > 500, "only {total_completed}/1000 ops completed");
+    // Faults eat individual ops, never all progress across the campaign.
+    let total = n as usize * 20;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
 }
 
 #[test]
 fn chaos_multi_shard_50_seeds() {
+    let n = seeds(50);
     let mut total_completed = 0usize;
-    forall_seeds(0xCA05_0004, 50, |rng| {
-        let (invoked, completed) = run_chaos(4, rng.next_u64(), false);
+    forall_seeds(0xCA05_0004, n, |rng| {
+        let (invoked, completed) = run_chaos(4, rng.next_u64(), ReadMix::None);
         assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
-    assert!(total_completed > 2000, "only {total_completed}/4000 ops completed");
+    let total = n as usize * 80;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
 }
 
 #[test]
@@ -146,30 +193,71 @@ fn chaos_quorum_reads_single_shard_40_seeds() {
     // Read-mixed fault histories: ~half the ops attempt the 1-RTT
     // quorum read and fall back mid-op when the quorum disagrees. Any
     // stale fast-path read shows up as a linearizability violation.
+    let n = seeds(40);
     let mut total_completed = 0usize;
-    forall_seeds(0xCA05_0007, 40, |rng| {
-        let (invoked, completed) = run_chaos(1, rng.next_u64(), true);
+    forall_seeds(0xCA05_0007, n, |rng| {
+        let (invoked, completed) = run_chaos(1, rng.next_u64(), ReadMix::Quorum);
         assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
-    assert!(total_completed > 400, "only {total_completed}/800 ops completed");
+    let total = n as usize * 20;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
 }
 
 #[test]
 fn chaos_quorum_reads_multi_shard_40_seeds() {
+    let n = seeds(40);
     let mut total_completed = 0usize;
-    forall_seeds(0xCA05_0008, 40, |rng| {
-        let (invoked, completed) = run_chaos(4, rng.next_u64(), true);
+    forall_seeds(0xCA05_0008, n, |rng| {
+        let (invoked, completed) = run_chaos(4, rng.next_u64(), ReadMix::Quorum);
         assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
-    assert!(total_completed > 1600, "only {total_completed}/3200 ops completed");
+    let total = n as usize * 80;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
+fn chaos_lease_reads_single_shard_40_seeds() {
+    // THE lease-break campaign: ~half the ops are 0-RTT lease reads;
+    // one acceptor clock per shard runs 1.75× fast (past the 80ms skew
+    // bound the clients assume), another carries a 500ms offset, and
+    // the nemesis crashes/restarts acceptors mid-lease and partitions
+    // leaseholding CLIENTS on top of the usual faults. A lease serving
+    // one stale read anywhere in any schedule fails the Wing&Gong
+    // check here.
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_000A, n, |rng| {
+        let (invoked, completed) = run_chaos(1, rng.next_u64(), ReadMix::Lease);
+        assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    // Leases block rival writers for whole windows, so completion runs
+    // lower than the write-only campaigns — but never collapses.
+    let total = n as usize * 20;
+    assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
+fn chaos_lease_reads_multi_shard_40_seeds() {
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_000B, n, |rng| {
+        let (invoked, completed) = run_chaos(4, rng.next_u64(), ReadMix::Lease);
+        assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    let total = n as usize * 80;
+    assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
 }
 
 #[test]
 fn chaos_scenarios_replay_deterministically() {
-    let run = |seed| run_chaos(2, seed, false);
+    let run = |seed| run_chaos(2, seed, ReadMix::None);
     assert_eq!(run(0xFEED), run(0xFEED), "same seed, same counts");
-    let run_reads = |seed| run_chaos(2, seed, true);
+    let run_reads = |seed| run_chaos(2, seed, ReadMix::Quorum);
     assert_eq!(run_reads(0xFEED), run_reads(0xFEED), "read-mixed schedules replay too");
+    let run_lease = |seed| run_chaos(2, seed, ReadMix::Lease);
+    assert_eq!(run_lease(0xFEED), run_lease(0xFEED), "lease schedules replay too");
 }

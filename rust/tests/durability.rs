@@ -4,6 +4,12 @@
 //! The paper requires acceptors to persist the promise and the accepted
 //! pair *before* confirming — these tests pin the whole path: protocol →
 //! TCP frames → CRC'd append log → replay.
+//!
+//! The group-commit WAL campaign pins the crash semantics of deferred
+//! durability: a record is on disk iff some `Persist` ticket at or
+//! after it was waited on. Acked state (accepted ballots AND granted
+//! read leases) survives kill+replay; unacked or torn state is dropped,
+//! never resurrected.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -105,6 +111,207 @@ fn min_age_fence_survives_restart() {
         from: ProposerId { id: 7, age: 2 },
     });
     assert_eq!(resp, Response::StaleAge { required: 3 });
+}
+
+#[test]
+fn unwaited_buffered_writes_die_with_the_process() {
+    // "Kill mid-flush": records enqueued via store_deferred whose
+    // Persist tickets were never waited on sit in the WAL buffer, not
+    // on disk. Dropping the storage (the crash) must lose exactly
+    // those — acked state survives, unacked state is NOT resurrected.
+    use caspaxos::acceptor::{FileStorage, Slot, Storage};
+    use caspaxos::ballot::Ballot;
+    use caspaxos::Val;
+    let dir = TempDir::new("wal-crash").unwrap();
+    let path = dir.file("acceptor.log");
+    let slot = |c: u64| Slot {
+        promise: Ballot::ZERO,
+        accepted_ballot: Ballot::new(c, 1),
+        value: Val::Num { ver: 0, num: c as i64 },
+        lease: None,
+    };
+    {
+        let mut s = FileStorage::open(&path).unwrap();
+        // Acked: ticket waited => durable.
+        s.store_deferred(&"acked".to_string(), &slot(1)).unwrap().wait().unwrap();
+        // Buffered: tickets dropped without waiting => never flushed.
+        let t1 = s.store_deferred(&"lost1".to_string(), &slot(2)).unwrap();
+        let t2 = s.store_deferred(&"lost2".to_string(), &slot(3)).unwrap();
+        // In-memory view sees them (that's the deferred contract)...
+        assert!(s.load(&"lost1".to_string()).is_some());
+        drop(t1);
+        drop(t2);
+        // ...crash before any flush leader ran.
+    }
+    let s = FileStorage::open(&path).unwrap();
+    assert_eq!(s.load(&"acked".to_string()), Some(slot(1)), "acked write lost");
+    assert!(s.load(&"lost1".to_string()).is_none(), "unacked write resurrected");
+    assert!(s.load(&"lost2".to_string()).is_none(), "unacked write resurrected");
+}
+
+#[test]
+fn one_waited_ticket_flushes_the_whole_batch() {
+    // Group-commit atomicity pin: the flush leader writes EVERYTHING
+    // buffered before it, so waiting on the LAST ticket makes every
+    // earlier enqueued record durable too — an acceptor reply fenced on
+    // its own ticket can therefore never leak ahead of earlier state.
+    use caspaxos::acceptor::{FileStorage, Slot, Storage};
+    use caspaxos::ballot::Ballot;
+    use caspaxos::Val;
+    let dir = TempDir::new("wal-batch").unwrap();
+    let path = dir.file("acceptor.log");
+    let slot = |c: u64| Slot {
+        promise: Ballot::ZERO,
+        accepted_ballot: Ballot::new(c, 1),
+        value: Val::Num { ver: 0, num: c as i64 },
+        lease: None,
+    };
+    {
+        let mut s = FileStorage::open(&path).unwrap();
+        let _t1 = s.store_deferred(&"a".to_string(), &slot(1)).unwrap();
+        let _t2 = s.store_deferred(&"b".to_string(), &slot(2)).unwrap();
+        let t3 = s.store_deferred(&"c".to_string(), &slot(3)).unwrap();
+        t3.wait().unwrap(); // leader-flushes a and b as well
+        let stats = s.wal_stats();
+        assert_eq!(stats.appends, 3);
+        assert_eq!(stats.fsyncs, 1, "one batch, one fsync");
+    }
+    let s = FileStorage::open(&path).unwrap();
+    for (k, c) in [("a", 1), ("b", 2), ("c", 3)] {
+        assert_eq!(s.load(&k.to_string()), Some(slot(c)), "{k} lost from the batch");
+    }
+}
+
+#[test]
+fn granted_lease_survives_replay_unwaited_grant_does_not() {
+    // A lease whose grant ticket was waited (the reply went out) must
+    // be honored after crash+replay; a grant whose ticket was dropped
+    // (no reply ever sent) must NOT be resurrected.
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    let dir = TempDir::new("lease-replay").unwrap();
+    let acquire = |key: &str, p: u64| Request::LeaseAcquire {
+        key: key.into(),
+        duration_us: 10_000_000,
+        from: ProposerId::new(p),
+    };
+    {
+        let mut a = file_acceptor(&dir, 1);
+        // Acked grant on "held": handle() waits the ticket internally.
+        assert!(matches!(
+            a.handle_at(&acquire("held", 7), 1_000),
+            Response::LeaseGranted { granted: true, .. }
+        ));
+        // Unacked grant on "ghost": ticket dropped, reply never sent.
+        let (resp, persist) = a.handle_deferred_at(&acquire("ghost", 7), 1_000);
+        assert!(matches!(resp, Response::LeaseGranted { granted: true, .. }));
+        drop(persist); // crash before durability
+    }
+    let mut revived = file_acceptor(&dir, 1);
+    // "held" keeps rejecting foreign ballots inside its window...
+    let foreign = Request::Prepare {
+        key: "held".into(),
+        ballot: Ballot::new(5, 2),
+        from: ProposerId::new(2),
+    };
+    assert!(
+        matches!(revived.handle_at(&foreign, 2_000), Response::Conflict { .. }),
+        "replayed lease must still fence foreign ballots"
+    );
+    // ...and honors them after it ends.
+    assert!(matches!(
+        revived.handle_at(&foreign, 20_000_000),
+        Response::Promise { .. }
+    ));
+    // "ghost" was never durable: foreign ballots pass immediately.
+    let foreign_ghost = Request::Prepare {
+        key: "ghost".into(),
+        ballot: Ballot::new(5, 2),
+        from: ProposerId::new(2),
+    };
+    assert!(
+        matches!(revived.handle_at(&foreign_ghost, 2_000), Response::Promise { .. }),
+        "an unacked lease grant must not be resurrected"
+    );
+}
+
+#[test]
+fn revoked_lease_stays_revoked_across_replay() {
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    let dir = TempDir::new("lease-revoke").unwrap();
+    {
+        let mut a = file_acceptor(&dir, 1);
+        a.handle_at(
+            &Request::LeaseAcquire {
+                key: "k".into(),
+                duration_us: 10_000_000,
+                from: ProposerId::new(7),
+            },
+            1_000,
+        );
+        a.handle_at(
+            &Request::LeaseRevoke { key: "k".into(), from: ProposerId::new(7) },
+            2_000,
+        );
+    }
+    let mut revived = file_acceptor(&dir, 1);
+    let foreign = Request::Prepare {
+        key: "k".into(),
+        ballot: Ballot::new(5, 2),
+        from: ProposerId::new(2),
+    };
+    assert!(
+        matches!(revived.handle_at(&foreign, 3_000), Response::Promise { .. }),
+        "a revoked lease must not come back from the log"
+    );
+}
+
+#[test]
+fn torn_tail_mid_flush_loses_only_the_torn_record() {
+    // A crash mid-flush leaves a half-written frame at the log tail.
+    // Replay must keep everything before it — accepted ballots AND
+    // granted leases — and drop only the torn record.
+    use caspaxos::acceptor::Storage;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    use std::io::Write as _;
+    let dir = TempDir::new("torn").unwrap();
+    {
+        let mut a = file_acceptor(&dir, 1);
+        a.handle_at(
+            &Request::Accept {
+                key: "k".into(),
+                ballot: caspaxos::Ballot::new(3, 1),
+                val: caspaxos::Val::Num { ver: 0, num: 9 },
+                from: ProposerId::new(1),
+                promise_next: None,
+            },
+            0,
+        );
+        assert!(matches!(
+            a.handle_at(
+                &Request::LeaseAcquire {
+                    key: "k".into(),
+                    duration_us: 10_000_000,
+                    from: ProposerId::new(7),
+                },
+                1_000,
+            ),
+            Response::LeaseGranted { granted: true, .. }
+        ));
+    }
+    // Simulate the torn flush: half a frame appended.
+    {
+        let path = dir.path().join("acceptor-1.log");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[77, 0, 0, 0, 1, 2, 3]).unwrap();
+    }
+    let revived = file_acceptor(&dir, 1);
+    let slot = revived.storage().load(&"k".to_string()).expect("slot survived");
+    assert_eq!(slot.value.as_num(), Some(9));
+    let lease = slot.lease.expect("lease survived the torn tail");
+    assert_eq!(lease.holder, 7);
+    assert_eq!(lease.expires_at, 10_001_000, "granted at 1_000 for 10s");
 }
 
 #[test]
