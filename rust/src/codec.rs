@@ -176,6 +176,43 @@ pub fn decode_seq<T: Codec>(input: &mut &[u8]) -> Result<Vec<T>, CodecError> {
     Ok(items)
 }
 
+/// Correlation-id envelope wrapping every frame of the pipelined TCP
+/// protocols (acceptor *and* client service).
+///
+/// A connection carries many requests concurrently; replies may come
+/// back **in any order** (a read overtakes a write stalled on its
+/// group-commit fsync). `corr` is what matches a reply to its request:
+/// the requester picks a connection-unique id, the responder echoes it
+/// verbatim. Ids carry no ordering semantics — only equality matters —
+/// and a reply with an unknown or already-answered id is dropped by the
+/// receiver (late replies after a timeout sweep look exactly like
+/// that).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Envelope<T> {
+    /// Correlation id, echoed verbatim on the reply.
+    pub corr: u64,
+    /// The enveloped message.
+    pub body: T,
+}
+
+/// Appends `corr` + `body` exactly as [`Envelope::encode`] does — the
+/// borrowed-body twin for write paths that frame a message they don't
+/// own. THE single statement of the envelope layout: `Envelope`'s
+/// `Codec` impl delegates here, so the two can never diverge.
+pub fn encode_envelope<T: Codec>(corr: u64, body: &T, out: &mut Vec<u8>) {
+    corr.encode(out);
+    body.encode(out);
+}
+
+impl<T: Codec> Codec for Envelope<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        encode_envelope(self.corr, &self.body, out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
+        Ok(Envelope { corr: u64::decode(input)?, body: T::decode(input)? })
+    }
+}
+
 impl<A: Codec, B: Codec> Codec for (A, B) {
     fn encode(&self, out: &mut Vec<u8>) {
         self.0.encode(out);
@@ -265,6 +302,31 @@ mod tests {
         (1u64 << 60).encode(&mut bytes);
         bytes.push(b'x');
         assert!(matches!(String::from_bytes(&bytes), Err(CodecError::Invalid(_))));
+    }
+
+    #[test]
+    fn envelope_roundtrip_and_truncation() {
+        let env = Envelope { corr: u64::MAX, body: "payload".to_string() };
+        let bytes = env.to_bytes();
+        assert_eq!(Envelope::<String>::from_bytes(&bytes).unwrap(), env);
+        // Every strict prefix must fail: the frame layer depends on it
+        // to reject torn frames.
+        for cut in 0..bytes.len() {
+            assert!(Envelope::<String>::from_bytes(&bytes[..cut]).is_err(), "prefix {cut}");
+        }
+        let mut bytes = env.to_bytes();
+        bytes.push(0);
+        assert!(Envelope::<String>::from_bytes(&bytes).is_err(), "trailing bytes accepted");
+    }
+
+    #[test]
+    fn envelope_length_bomb_rejected() {
+        // corr, then a body claiming 2^60 bytes with a tiny payload.
+        let mut bytes = Vec::new();
+        7u64.encode(&mut bytes);
+        (1u64 << 60).encode(&mut bytes);
+        bytes.push(b'x');
+        assert!(matches!(Envelope::<String>::from_bytes(&bytes), Err(CodecError::Invalid(_))));
     }
 
     #[test]

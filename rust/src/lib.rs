@@ -14,10 +14,13 @@
 //! * Protocol core (sans-IO, deterministic, shared by every driver):
 //!   [`ballot`], [`state`], [`change`], [`msg`], [`quorum`],
 //!   [`acceptor`], [`proposer`].
-//! * Substrates: [`transport`] (in-memory, TCP), [`sim`] (deterministic
-//!   discrete-event network with fault injection), [`wan`] (the paper's
-//!   Azure RTT matrix), [`codec`] (binary wire format), [`rng`]
-//!   (deterministic PRNG).
+//! * Substrates: [`transport`] (in-memory, and multiplexed *pipelined*
+//!   TCP — correlation-id envelopes, out-of-order replies, so a slow
+//!   write round never head-of-line blocks the reads beside it), [`sim`]
+//!   (deterministic discrete-event network with fault injection),
+//!   [`wan`] (the paper's Azure RTT matrix), [`codec`] (binary wire
+//!   format + the [`codec::Envelope`] frame), [`rng`] (deterministic
+//!   PRNG).
 //! * Systems built on the core: [`shard`] (rendezvous-routed disjoint
 //!   acceptor groups — the horizontal-scaling plane), [`kv`] (hashtable
 //!   of per-key RSMs, §3, routed over the shards), [`membership`]

@@ -671,6 +671,118 @@ mod tests {
     }
 
     #[test]
+    fn enveloped_wire_types_reject_every_truncation() {
+        // The pipelined TCP transport frames every Request/Response in a
+        // correlation-id envelope; a torn envelope frame must fail to
+        // decode at EVERY strict prefix or the demux could mis-deliver.
+        use crate::codec::Envelope;
+        let req = Envelope {
+            corr: 0xDEAD_BEEF_u64,
+            body: Request::Accept {
+                key: "key/with/slash".into(),
+                ballot: Ballot::new(3, 2),
+                val: Val::Bytes { ver: 1, data: vec![0, 255, 7] },
+                from: ProposerId { id: 2, age: 3 },
+                promise_next: Some(Ballot::new(4, 2)),
+            },
+        };
+        let bytes = req.to_bytes();
+        assert_eq!(Envelope::<Request>::from_bytes(&bytes).unwrap(), req);
+        for cut in 0..bytes.len() {
+            assert!(
+                Envelope::<Request>::from_bytes(&bytes[..cut]).is_err(),
+                "prefix {cut} accepted"
+            );
+        }
+        let resp = Envelope {
+            corr: 1,
+            body: Response::ReadState {
+                promise: Ballot::new(9, 3),
+                accepted_ballot: Ballot::new(8, 1),
+                accepted_val: Val::Num { ver: 2, num: -9 },
+            },
+        };
+        let bytes = resp.to_bytes();
+        assert_eq!(Envelope::<Response>::from_bytes(&bytes).unwrap(), resp);
+        for cut in 0..bytes.len() {
+            assert!(
+                Envelope::<Response>::from_bytes(&bytes[..cut]).is_err(),
+                "prefix {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn enveloped_request_rejects_length_bomb_key() {
+        // corr id, tag 0 (Prepare), then a key claiming 2^60 bytes with
+        // a tiny body — must be rejected before any allocation.
+        use crate::codec::Envelope;
+        let mut bytes = Vec::new();
+        42u64.encode(&mut bytes);
+        bytes.push(0u8);
+        (1u64 << 60).encode(&mut bytes);
+        bytes.extend_from_slice(b"k");
+        assert!(Envelope::<Request>::from_bytes(&bytes).is_err(), "length bomb accepted");
+    }
+
+    #[test]
+    fn envelope_wire_fuzz_roundtrip_and_truncation() {
+        // Seeded fuzz over enveloped requests/responses: every encode
+        // must roundtrip exactly (corr id included), every strict prefix
+        // must be rejected, and decoding never panics.
+        use crate::codec::Envelope;
+        crate::testkit::forall_seeds(0xC0_11E1A7E, 64, |rng| {
+            let key_len = rng.gen_range(24) as usize;
+            let key: Key =
+                (0..key_len).map(|_| (b'a' + rng.gen_range(26) as u8) as char).collect();
+            let from = ProposerId { id: rng.next_u64(), age: rng.next_u64() };
+            let body = match rng.gen_range(4) {
+                0 => Request::Prepare {
+                    key,
+                    ballot: Ballot::new(rng.next_u64(), rng.next_u64()),
+                    from,
+                },
+                1 => Request::Read { key, from },
+                2 => Request::LeaseAcquire { key, duration_us: rng.next_u64(), from },
+                _ => Request::Ping,
+            };
+            let req = Envelope { corr: rng.next_u64(), body };
+            let bytes = req.to_bytes();
+            assert_eq!(Envelope::<Request>::from_bytes(&bytes).unwrap(), req);
+            for cut in 0..bytes.len() {
+                assert!(
+                    Envelope::<Request>::from_bytes(&bytes[..cut]).is_err(),
+                    "prefix {cut} accepted"
+                );
+            }
+            let body = match rng.gen_range(4) {
+                0 => Response::Accepted,
+                1 => Response::Conflict {
+                    seen: Ballot::new(rng.next_u64(), rng.next_u64()),
+                },
+                2 => Response::ReadState {
+                    promise: Ballot::new(rng.next_u64(), rng.next_u64()),
+                    accepted_ballot: Ballot::new(rng.next_u64(), rng.next_u64()),
+                    accepted_val: Val::Num {
+                        ver: rng.next_u64() as i64,
+                        num: rng.next_u64() as i64,
+                    },
+                },
+                _ => Response::Error("boom".into()),
+            };
+            let resp = Envelope { corr: rng.next_u64(), body };
+            let bytes = resp.to_bytes();
+            assert_eq!(Envelope::<Response>::from_bytes(&bytes).unwrap(), resp);
+            for cut in 0..bytes.len() {
+                assert!(
+                    Envelope::<Response>::from_bytes(&bytes[..cut]).is_err(),
+                    "prefix {cut} accepted"
+                );
+            }
+        });
+    }
+
+    #[test]
     fn request_key_accessor() {
         assert_eq!(
             Request::Prepare { key: "x".into(), ballot: Ballot::ZERO, from: ProposerId::new(0) }

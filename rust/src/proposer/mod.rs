@@ -849,6 +849,25 @@ mod tests {
     }
 
     #[test]
+    fn rounds_survive_reordered_replies() {
+        // The pipelined TCP transport delivers a fan-out's replies in
+        // completion order, not send order; the mem transport's reorder
+        // knob models that. Writes, quorum reads and lease rounds must
+        // all be insensitive to reply order.
+        let (t, cfg) = cluster(3);
+        t.reorder_replies(0xD15C0);
+        let p = Proposer::new(1, cfg.clone(), t.clone());
+        for i in 0..5 {
+            p.set("k", i).unwrap();
+            assert_eq!(p.get("k").unwrap().as_num(), Some(i), "read-your-writes");
+        }
+        let (fast, fallback) = p.read_stats();
+        assert_eq!(fast + fallback, 5);
+        let leased = Proposer::with_opts(2, cfg, t, lease_opts(60_000, 100));
+        assert_eq!(leased.get("k").unwrap().as_num(), Some(4), "grant round reordered");
+    }
+
+    #[test]
     fn cache_capacity_opt_bounds_cache() {
         let (t, cfg) = cluster(3);
         let opts = ProposerOpts { cache_capacity: 8, ..Default::default() };

@@ -6,9 +6,13 @@
 //!
 //! * the **acceptor protocol** (proposer→acceptor [`Request`]s) on the
 //!   acceptor port — consumed by every node's proposers;
-//! * the **client protocol** ([`ClientReq`]/[`ClientResp`], same framed
-//!   codec) on the client port — consumed by applications. Any node
-//!   serves any client: there is no leader (§3.2, §3.3).
+//! * the **client protocol** ([`ClientReq`]/[`ClientResp`], same
+//!   correlation-id envelope framing as the acceptor protocol) on the
+//!   client port — consumed by applications. Any node serves any
+//!   client: there is no leader (§3.2, §3.3). Requests on one
+//!   connection are handled **concurrently** and replies return in
+//!   completion order, matched by correlation id — a slow `Change`
+//!   never head-of-line blocks a `Read` multiplexed beside it.
 //!
 //! Client batches route through the PJRT data plane ([`BatchProposer`])
 //! when AOT artifacts are available, scalar fallback otherwise.
@@ -30,7 +34,7 @@ use std::sync::Arc;
 use crate::acceptor::{Acceptor, FileStorage, MemStorage};
 use crate::batch::BatchProposer;
 use crate::change::ChangeFn;
-use crate::codec::{decode_seq, encode_seq, Codec, CodecError};
+use crate::codec::{decode_seq, encode_seq, Codec, CodecError, Envelope};
 use crate::error::{CasError, CasResult};
 use crate::gc::GcProcess;
 use crate::msg::Key;
@@ -39,7 +43,9 @@ use crate::quorum::ClusterConfig;
 use crate::runtime::auto_engine;
 use crate::shard::{ShardPlan, ShardRouter};
 use crate::state::Val;
-use crate::transport::tcp::{read_frame, serve_acceptor, write_frame, TcpTransport};
+use crate::transport::tcp::{
+    read_frame, serve_acceptor, serve_pipelined, write_envelope, Handled, TcpTransport,
+};
 
 /// Client-facing request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -413,19 +419,26 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     })
 }
 
-fn serve_client(mut stream: TcpStream, ctx: Arc<NodeCtx>) {
-    stream.set_nodelay(true).ok();
-    loop {
-        let req: Option<ClientReq> = match read_frame(&mut stream) {
-            Ok(r) => r,
-            Err(_) => break,
-        };
-        let Some(req) = req else { break };
-        let resp = handle_client(&req, &ctx);
-        if write_frame(&mut stream, &resp).is_err() {
-            break;
+/// One client-service connection, on the same pipelined shell as the
+/// acceptor service ([`serve_pipelined`]): `Status` (which never runs a
+/// proposer round) is answered inline; every other request runs off the
+/// read loop — client ops run whole proposer rounds, seconds in the
+/// worst case, and a slow `Change` must never head-of-line block a
+/// `Read` multiplexed on the same connection.
+fn serve_client(stream: TcpStream, ctx: Arc<NodeCtx>) {
+    serve_pipelined(stream, move |req: ClientReq| {
+        if matches!(req, ClientReq::Status) {
+            return Handled::Inline(handle_client(&req, &ctx));
         }
-    }
+        let ctx = Arc::clone(&ctx);
+        Handled::Deferred(Box::new(move || {
+            // The read loop and socket outlive the reply thread, so a
+            // handler panic must still produce a reply — the blocking
+            // Client would otherwise wait forever for this corr id.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle_client(&req, &ctx)))
+                .unwrap_or_else(|_| ClientResp::Err("request handler panicked".into()))
+        }))
+    })
 }
 
 fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
@@ -592,9 +605,15 @@ fn handle_read_batch(keys: &[Key], ctx: &NodeCtx) -> ClientResp {
     ClientResp::Batch(results.into_iter().map(|r| r.expect("every slot routed")).collect())
 }
 
-/// A minimal blocking client for the client protocol.
+/// A minimal blocking client for the client protocol. One request in
+/// flight at a time; the correlation id it stamps on each request lets
+/// it discard stale replies to calls it abandoned (the server answers
+/// out of order, so an interleaved concurrent client would use one
+/// connection per thread — or a pending map like
+/// [`crate::transport::tcp::TcpTransport`]'s).
 pub struct Client {
     stream: TcpStream,
+    next_corr: u64,
 }
 
 impl Client {
@@ -603,14 +622,22 @@ impl Client {
         let stream =
             TcpStream::connect(addr).map_err(|e| CasError::Transport(format!("{addr}: {e}")))?;
         stream.set_nodelay(true).ok();
-        Ok(Client { stream })
+        Ok(Client { stream, next_corr: 0 })
     }
 
-    /// Sends one request, awaits one response.
+    /// Sends one request, awaits its response (matched by correlation
+    /// id; replies to earlier abandoned calls are skipped).
     pub fn call(&mut self, req: &ClientReq) -> CasResult<ClientResp> {
-        write_frame(&mut self.stream, req)?;
-        read_frame(&mut self.stream)?
-            .ok_or_else(|| CasError::Transport("connection closed".into()))
+        self.next_corr += 1;
+        let corr = self.next_corr;
+        write_envelope(&mut self.stream, corr, req)?;
+        loop {
+            let env: Envelope<ClientResp> = read_frame(&mut self.stream)?
+                .ok_or_else(|| CasError::Transport("connection closed".into()))?;
+            if env.corr == corr {
+                return Ok(env.body);
+            }
+        }
     }
 
     /// Convenience: apply a change.
@@ -888,6 +915,29 @@ mod tests {
         for (i, item) in many.iter().enumerate() {
             assert_eq!(item.as_ref().unwrap().as_num(), Some(i as i64), "key k{i}");
         }
+    }
+
+    #[test]
+    fn client_protocol_pipelines_on_one_connection() {
+        // Raw enveloped frames: two requests in flight on ONE client
+        // connection; both replies arrive, matched by correlation id,
+        // in whatever order they completed.
+        let nodes = launch_cluster(3, None);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        c.change("p0", ChangeFn::Set(1)).unwrap();
+        let mut raw = TcpStream::connect(nodes[0].client_addr.to_string()).unwrap();
+        write_envelope(&mut raw, 5, &ClientReq::Read { key: "p0".into() }).unwrap();
+        write_envelope(&mut raw, 6, &ClientReq::Status).unwrap();
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..2 {
+            let env: Envelope<ClientResp> = read_frame(&mut raw).unwrap().unwrap();
+            seen.insert(env.corr, env.body);
+        }
+        match seen.remove(&5) {
+            Some(ClientResp::Val(v)) => assert_eq!(v.as_num(), Some(1)),
+            other => panic!("corr 5: {other:?}"),
+        }
+        assert!(matches!(seen.remove(&6), Some(ClientResp::Status(_))));
     }
 
     #[test]

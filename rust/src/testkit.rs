@@ -82,6 +82,19 @@ impl Drop for SilenceGuard {
     }
 }
 
+/// Seed count for one chaos campaign: `base`, scaled by the
+/// `CHAOS_SEED_MULT` env var (the nightly `chaos-extended` and
+/// `tcp-chaos` CI legs run with 4×; failing case seeds print via
+/// [`forall_seeds`] and are uploaded as artifacts for replay). Shared
+/// by every campaign so scaling rules can't drift between suites.
+pub fn chaos_seed_count(base: u64) -> u64 {
+    let mult = std::env::var("CHAOS_SEED_MULT")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(1);
+    base * mult.max(1)
+}
+
 /// Minimal property-test harness: runs `body` for `cases` deterministic
 /// seeds derived from `seed`. On failure the panic message names the
 /// failing case seed so it can be replayed exactly.

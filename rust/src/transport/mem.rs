@@ -8,13 +8,14 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 
 use crate::acceptor::{Acceptor, MemStorage, Storage};
 use crate::error::{CasError, CasResult};
 use crate::msg::{Request, Response};
+use crate::rng::Rng;
 
-use super::Transport;
+use super::{Reply, Transport};
 
 struct Node<S: Storage> {
     /// Lock-striped acceptor: keyed requests route to a shard by key
@@ -92,6 +93,11 @@ pub struct MemTransport<S: Storage = MemStorage> {
     nodes: RwLock<HashMap<u64, Arc<Node<S>>>>,
     /// Total requests served (all nodes).
     requests: AtomicU64,
+    /// When set, fan-out replies are delivered in a seeded shuffled
+    /// order — the same out-of-order reply model the pipelined TCP
+    /// transport exhibits (see [`crate::transport::tcp`]), so protocol
+    /// cores can be pinned against reordering without sockets.
+    reorder: Mutex<Option<Rng>>,
 }
 
 impl MemTransport<MemStorage> {
@@ -105,7 +111,11 @@ impl MemTransport<MemStorage> {
     /// acceptor lock).
     pub fn new_sharded(n: usize, shards: usize) -> Self {
         assert!(shards >= 1);
-        let t = MemTransport { nodes: RwLock::new(HashMap::new()), requests: AtomicU64::new(0) };
+        let t = MemTransport {
+            nodes: RwLock::new(HashMap::new()),
+            requests: AtomicU64::new(0),
+            reorder: Mutex::new(None),
+        };
         for id in 1..=n as u64 {
             t.nodes.write().unwrap().insert(
                 id,
@@ -123,7 +133,11 @@ impl MemTransport<MemStorage> {
 impl<S: Storage> MemTransport<S> {
     /// Builds a transport over pre-constructed acceptors.
     pub fn from_acceptors(acceptors: Vec<Acceptor<S>>) -> Self {
-        let t = MemTransport { nodes: RwLock::new(HashMap::new()), requests: AtomicU64::new(0) };
+        let t = MemTransport {
+            nodes: RwLock::new(HashMap::new()),
+            requests: AtomicU64::new(0),
+            reorder: Mutex::new(None),
+        };
         for a in acceptors {
             t.add_acceptor(a);
         }
@@ -193,6 +207,19 @@ impl<S: Storage> MemTransport<S> {
     pub fn request_count(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
+
+    /// Delivers every subsequent fan-out's replies in a deterministic
+    /// (seeded) shuffled order — the TCP transport's out-of-order reply
+    /// model, minus the sockets. Protocol cores must not care which
+    /// order a round's replies land in; the proposer tests pin it.
+    pub fn reorder_replies(&self, seed: u64) {
+        *self.reorder.lock().unwrap() = Some(Rng::new(seed));
+    }
+
+    /// Restores in-order (streaming) fan-out delivery.
+    pub fn deliver_in_order(&self) {
+        *self.reorder.lock().unwrap() = None;
+    }
 }
 
 impl<S: Storage> Transport for MemTransport<S> {
@@ -212,6 +239,29 @@ impl<S: Storage> Transport for MemTransport<S> {
         }
         self.requests.fetch_add(1, Ordering::Relaxed);
         Ok(node.handle(req))
+    }
+
+    fn fan_out(&self, token: u32, msgs: Vec<(u64, Request)>, tx: &mpsc::Sender<Reply>) {
+        if self.reorder.lock().unwrap().is_none() {
+            // Stream replies as they are produced (the default model).
+            for (to, req) in msgs {
+                let resp = self.send(to, &req).ok();
+                let _ = tx.send(Reply { token, from: to, resp });
+            }
+            return;
+        }
+        // Reorder knob armed: produce all replies, then deliver them in
+        // a seeded shuffled order.
+        let mut replies: Vec<Reply> = msgs
+            .into_iter()
+            .map(|(to, req)| Reply { token, from: to, resp: self.send(to, &req).ok() })
+            .collect();
+        if let Some(rng) = self.reorder.lock().unwrap().as_mut() {
+            rng.shuffle(&mut replies);
+        }
+        for r in replies {
+            let _ = tx.send(r);
+        }
     }
 }
 
@@ -299,6 +349,23 @@ mod tests {
             r => panic!("{r:?}"),
         }
         assert_eq!(t.register_count(1), Some(4));
+    }
+
+    #[test]
+    fn reordered_fanout_delivers_each_reply_exactly_once() {
+        let t = MemTransport::new(3);
+        t.reorder_replies(7);
+        let (tx, rx) = mpsc::channel();
+        t.fan_out(9, vec![(1, Request::Ping), (2, Request::Ping), (3, Request::Ping)], &tx);
+        drop(tx);
+        let replies: Vec<Reply> = rx.into_iter().collect();
+        assert_eq!(replies.len(), 3);
+        assert!(replies.iter().all(|r| r.token == 9 && r.resp.is_some()));
+        let mut from: Vec<u64> = replies.iter().map(|r| r.from).collect();
+        from.sort_unstable();
+        assert_eq!(from, vec![1, 2, 3], "one reply per acceptor, none duplicated");
+        t.deliver_in_order();
+        assert!(t.reorder.lock().unwrap().is_none());
     }
 
     #[test]

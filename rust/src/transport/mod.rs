@@ -9,11 +9,20 @@
 //! Implementations:
 //!
 //! * [`mem::MemTransport`] — direct in-process calls (tests, quickstart,
-//!   protocol-overhead benchmarks);
-//! * [`tcp::TcpTransport`] — framed binary protocol over TCP with one
-//!   connection-owning worker thread per acceptor;
+//!   protocol-overhead benchmarks); its reply-reordering knob
+//!   ([`mem::MemTransport::reorder_replies`]) models the TCP
+//!   transport's out-of-order replies without sockets;
+//! * [`tcp::TcpTransport`] — **multiplexed, pipelined** framed binary
+//!   protocol over TCP: one connection per acceptor, any number of
+//!   requests in flight, replies matched by correlation-id envelope
+//!   and delivered in completion order (a stalled write round cannot
+//!   head-of-line block the reads multiplexed beside it);
 //! * the discrete-event simulator ([`crate::sim`]) bypasses this trait
 //!   and drives [`crate::proposer::RoundCore`] under virtual time.
+//!
+//! Replies carry **no ordering guarantee** in any implementation — a
+//! fan-out's replies may land in any order, and protocol cores must
+//! not care (the proposer's reordered-replies tests pin this).
 
 pub mod mem;
 pub mod tcp;

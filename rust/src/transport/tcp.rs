@@ -1,19 +1,54 @@
-//! TCP transport: length-prefixed binary frames over std TCP.
+//! TCP transport: multiplexed, pipelined, length-prefixed binary frames.
 //!
 //! Wire format: 4-byte little-endian length, then a [`Codec`]-encoded
-//! [`Request`] or [`Response`]. The client side runs one connection-owning
-//! worker thread per acceptor, so a proposer's fan-out to N acceptors
-//! proceeds in parallel even though the public API is blocking.
+//! [`Envelope`] carrying a correlation id and a [`Request`] or
+//! [`Response`]. One connection carries many requests **concurrently**
+//! and replies come back **in any order** — the correlation id is the
+//! only thing that matches a reply to its request.
+//!
+//! ## Client side
+//!
+//! [`TcpTransport`] keeps one connection per acceptor, split into a
+//! writer thread (owns the stream's write half, assigns correlation
+//! ids, registers each request in a pending map) and a reader-demux
+//! thread (reads reply envelopes, resolves pending entries by id). A
+//! timeout sweeper fails pending entries whose deadline passed — the
+//! connection stays up, and the late reply is dropped as unknown when
+//! it eventually arrives. A broken connection (EOF, read/write error,
+//! malformed frame, [`TcpTransport::kill_connection`]) **errors every
+//! pending request immediately** — nothing ever hangs on a dead peer —
+//! and the next dispatch opens a fresh connection.
+//!
+//! ## Server side
+//!
+//! [`serve_acceptor`] handles each request under the acceptor lock
+//! (fast, in-memory), then resolves the durability ticket and writes
+//! the reply **off the read loop**: a quorum read or lease grant
+//! pipelined behind a write is dispatched while that write still waits
+//! on its group-commit fsync, and replies go out out-of-order under a
+//! shared per-connection frame lock. This is what gives `Read` /
+//! `LeaseAcquire` over TCP the same latency profile the in-memory
+//! transport shows — a stalled identity-CAS round no longer head-of-line
+//! blocks the fast paths behind it.
+//!
+//! ## Ordering guarantees
+//!
+//! None beyond correlation: requests on one connection may be handled
+//! and answered in any order. That is safe here because every protocol
+//! message carries its own ballot/lease discipline — CASPaxos never
+//! relies on transport ordering (the in-memory chaos simulator reorders
+//! aggressively and the linearizability campaigns pass).
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::acceptor::{Acceptor, Storage};
-use crate::codec::Codec;
+use crate::codec::{encode_envelope, Codec, Envelope};
 use crate::error::{CasError, CasResult};
 use crate::msg::{Request, Response};
 
@@ -22,16 +57,28 @@ use super::{Reply, Transport};
 /// Maximum accepted frame size (16 MiB) — guards against corrupt peers.
 const MAX_FRAME: u32 = 1 << 24;
 
-/// Writes one length-prefixed frame.
-pub fn write_frame<T: Codec>(stream: &mut TcpStream, msg: &T) -> CasResult<()> {
-    let body = msg.to_bytes();
+/// Writes one length-prefixed frame from pre-encoded bytes.
+fn write_frame_bytes(stream: &mut TcpStream, body: &[u8]) -> CasResult<()> {
     if body.len() as u64 > MAX_FRAME as u64 {
         return Err(CasError::Transport(format!("frame too large: {}", body.len())));
     }
     let mut buf = Vec::with_capacity(4 + body.len());
     buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    buf.extend_from_slice(&body);
+    buf.extend_from_slice(body);
     stream.write_all(&buf).map_err(|e| CasError::Transport(e.to_string()))
+}
+
+/// Writes one length-prefixed frame.
+pub fn write_frame<T: Codec>(stream: &mut TcpStream, msg: &T) -> CasResult<()> {
+    write_frame_bytes(stream, &msg.to_bytes())
+}
+
+/// Writes one length-prefixed [`Envelope`] frame without cloning the
+/// body (the reply path writes borrowed responses under a frame lock).
+pub fn write_envelope<T: Codec>(stream: &mut TcpStream, corr: u64, body: &T) -> CasResult<()> {
+    let mut buf = Vec::with_capacity(40);
+    encode_envelope(corr, body, &mut buf);
+    write_frame_bytes(stream, &buf)
 }
 
 /// Reads one length-prefixed frame. `Ok(None)` on clean EOF.
@@ -52,38 +99,152 @@ pub fn read_frame<T: Codec>(stream: &mut TcpStream) -> CasResult<Option<T>> {
     Ok(Some(msg))
 }
 
-/// Serves one acceptor over TCP: accepts connections forever, one handler
-/// thread per connection. Call from a dedicated thread.
+/// Server-side reply hook (tests, benches, fault injection): called on
+/// every reply path after the handler ran and its durability ticket
+/// resolved, just before the reply frame goes out. It runs on the
+/// request's own reply thread, so sleeping here stalls THAT reply only
+/// — concurrent requests on the same connection still complete and
+/// reply out of order (the head-of-line regression tests pin this).
+pub type ReplyHook = Arc<dyn Fn(&Request, &Response) + Send + Sync>;
+
+/// Serves one acceptor over TCP: accepts connections forever, one
+/// reader thread per connection, requests handled concurrently (see the
+/// module docs). Call from a dedicated thread.
 pub fn serve_acceptor<S: Storage + 'static>(
     listener: TcpListener,
     acceptor: Acceptor<S>,
 ) -> CasResult<()> {
+    serve_acceptor_with(listener, acceptor, None)
+}
+
+/// [`serve_acceptor`] with an optional [`ReplyHook`].
+pub fn serve_acceptor_with<S: Storage + 'static>(
+    listener: TcpListener,
+    acceptor: Acceptor<S>,
+    hook: Option<ReplyHook>,
+) -> CasResult<()> {
     let acceptor = Arc::new(Mutex::new(acceptor));
     loop {
-        let (mut stream, _) =
-            listener.accept().map_err(|e| CasError::Transport(e.to_string()))?;
-        stream.set_nodelay(true).ok();
+        let (stream, _) = listener.accept().map_err(|e| CasError::Transport(e.to_string()))?;
         let acceptor = Arc::clone(&acceptor);
-        std::thread::spawn(move || loop {
-            let req: Option<Request> = match read_frame(&mut stream) {
-                Ok(r) => r,
-                Err(_) => break,
-            };
-            let Some(req) = req else { break };
-            // Handle under the lock, but wait for durability OUTSIDE
-            // it: concurrent connections' writes then coalesce under a
-            // single fsync (FileStorage group commit), and reads never
-            // queue behind another request's disk wait.
-            let (resp, persist) = acceptor.lock().unwrap().handle_deferred(&req);
+        let hook = hook.clone();
+        std::thread::spawn(move || serve_conn(stream, acceptor, hook));
+    }
+}
+
+/// How [`serve_pipelined`]'s handler disposed of one request: answer
+/// now on the read loop, or finish on a spawned reply thread.
+pub(crate) enum Handled<Resp> {
+    /// The reply is ready and the handler cannot have blocked: write it
+    /// inline, skipping the thread spawn (the hot path for reads).
+    Inline(Resp),
+    /// The reply needs blocking work (a durability ticket, a proposer
+    /// round, a stall hook): run it off the read loop and write the
+    /// reply whenever it completes.
+    Deferred(Box<dyn FnOnce() -> Resp + Send>),
+}
+
+/// Cap on concurrently in-flight deferred replies per connection. A
+/// peer that pipelines more blocking requests than this is
+/// backpressured at the read loop (the connection stops reading new
+/// frames until a reply thread finishes) instead of fanning out
+/// unbounded server threads — one unauthenticated connection must not
+/// be able to exhaust the process.
+const MAX_DEFERRED_PER_CONN: usize = 256;
+
+/// The pipelined connection shell shared by the acceptor service and
+/// the KV server's client service: read request envelopes in a loop,
+/// dispatch each through `handle`, and write replies — inline or from
+/// per-request reply threads, in completion order — under a shared
+/// frame lock, matched to requests by correlation id.
+pub(crate) fn serve_pipelined<Req, Resp, F>(mut stream: TcpStream, mut handle: F)
+where
+    Req: Codec,
+    Resp: Codec + Send + 'static,
+    F: FnMut(Req) -> Handled<Resp>,
+{
+    stream.set_nodelay(true).ok();
+    let Ok(write_half) = stream.try_clone() else { return };
+    let write_half = Arc::new(Mutex::new(write_half));
+    let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+    loop {
+        let env: Envelope<Req> = match read_frame(&mut stream) {
+            Ok(Some(e)) => e,
+            _ => break,
+        };
+        match handle(env.body) {
+            Handled::Inline(resp) => {
+                if write_envelope(&mut *write_half.lock().unwrap(), env.corr, &resp).is_err() {
+                    break;
+                }
+            }
+            Handled::Deferred(finish) => {
+                // Take an in-flight slot; reply threads never depend on
+                // this read loop, so blocking here cannot deadlock.
+                {
+                    let (count, cond) = &*gate;
+                    let mut inflight = count.lock().unwrap_or_else(|e| e.into_inner());
+                    while *inflight >= MAX_DEFERRED_PER_CONN {
+                        inflight = cond.wait(inflight).unwrap_or_else(|e| e.into_inner());
+                    }
+                    *inflight += 1;
+                }
+                let write_half = Arc::clone(&write_half);
+                let gate = Arc::clone(&gate);
+                std::thread::spawn(move || {
+                    // Slot released on EVERY exit: a panicking handler
+                    // (fault hooks are arbitrary closures) must not
+                    // leak its slot and wedge the read loop at the cap.
+                    struct SlotGuard(Arc<(Mutex<usize>, Condvar)>);
+                    impl Drop for SlotGuard {
+                        fn drop(&mut self) {
+                            let (count, cond) = &*self.0;
+                            *count.lock().unwrap_or_else(|e| e.into_inner()) -= 1;
+                            cond.notify_one();
+                        }
+                    }
+                    let _slot = SlotGuard(gate);
+                    // A panicked request sends no reply (its caller
+                    // times out, bounded); the connection survives.
+                    let unwound =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| finish()));
+                    if let Ok(resp) = unwound {
+                        let _ =
+                            write_envelope(&mut *write_half.lock().unwrap(), env.corr, &resp);
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// One acceptor-service connection: handle under the acceptor lock
+/// (fast, in-memory), but resolve durability OFF the read loop — a read
+/// or lease grant pipelined behind a write round is dispatched while
+/// that write still waits for its group-commit ticket.
+fn serve_conn<S: Storage + 'static>(
+    stream: TcpStream,
+    acceptor: Arc<Mutex<Acceptor<S>>>,
+    hook: Option<ReplyHook>,
+) {
+    serve_pipelined(stream, move |req: Request| {
+        let (resp, persist) = acceptor.lock().unwrap().handle_deferred(&req);
+        if persist.is_done() && hook.is_none() {
+            // Already durable, nothing to stall on.
+            return Handled::Inline(resp);
+        }
+        let hook = hook.clone();
+        Handled::Deferred(Box::new(move || {
             let resp = match persist.wait() {
                 Ok(()) => resp,
                 Err(e) => Response::Error(e.to_string()),
             };
-            if write_frame(&mut stream, &resp).is_err() {
-                break;
+            if let Some(hook) = &hook {
+                hook(&req, &resp);
             }
-        });
-    }
+            resp
+        }))
+    })
 }
 
 /// Spawns an acceptor server on `addr` (use port 0 for an ephemeral
@@ -92,53 +253,235 @@ pub fn spawn_acceptor<S: Storage + 'static>(
     addr: &str,
     acceptor: Acceptor<S>,
 ) -> CasResult<std::net::SocketAddr> {
+    spawn_acceptor_with(addr, acceptor, None)
+}
+
+/// [`spawn_acceptor`] with an optional [`ReplyHook`].
+pub fn spawn_acceptor_with<S: Storage + 'static>(
+    addr: &str,
+    acceptor: Acceptor<S>,
+    hook: Option<ReplyHook>,
+) -> CasResult<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr).map_err(|e| CasError::Transport(e.to_string()))?;
     let local = listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
     std::thread::spawn(move || {
-        let _ = serve_acceptor(listener, acceptor);
+        let _ = serve_acceptor_with(listener, acceptor, hook);
     });
     Ok(local)
 }
 
 type Job = (u32, Request, mpsc::Sender<Reply>);
 
-/// Per-acceptor connection worker: owns the TcpStream, reconnects on
-/// failure, applies read timeouts.
-struct Worker {
-    tx: mpsc::Sender<Job>,
+/// One in-flight request on a connection, keyed by correlation id.
+struct PendingReq {
+    token: u32,
+    reply_tx: mpsc::Sender<Reply>,
+    deadline: Instant,
 }
 
-fn worker_loop(addr: String, id: u64, timeout: Duration, rx: mpsc::Receiver<Job>) {
-    let mut conn: Option<TcpStream> = None;
-    while let Ok((token, req, reply_tx)) = rx.recv() {
-        let mut attempt = || -> CasResult<Response> {
-            if conn.is_none() {
-                let stream = TcpStream::connect(&addr)
-                    .map_err(|e| CasError::Transport(format!("connect {addr}: {e}")))?;
-                stream.set_nodelay(true).ok();
-                stream.set_read_timeout(Some(timeout)).ok();
-                stream.set_write_timeout(Some(timeout)).ok();
-                conn = Some(stream);
-            }
-            let stream = conn.as_mut().unwrap();
-            write_frame(stream, &req)?;
-            read_frame::<Response>(stream)?
-                .ok_or_else(|| CasError::Transport("connection closed".into()))
-        };
-        let resp = match attempt() {
-            Ok(r) => Some(r),
-            Err(_) => {
-                conn = None; // drop the broken connection; reconnect next time
-                None
-            }
-        };
-        let _ = reply_tx.send(Reply { token, from: id, resp });
+/// State shared by a connection's writer, reader-demux and sweeper
+/// threads (and the transport's dispatch/kill paths).
+struct ConnShared {
+    /// Acceptor this connection talks to (stamped on failure replies).
+    id: u64,
+    /// Correlation id → in-flight request.
+    pending: Mutex<HashMap<u64, PendingReq>>,
+    /// Set once the connection is unusable; dispatch replaces it.
+    dead: AtomicBool,
+    /// Socket handle for unblocking the reader on [`ConnShared::die`].
+    shutdown: Mutex<Option<TcpStream>>,
+}
+
+impl ConnShared {
+    /// Kills the connection: marks it dead, unblocks the reader, and
+    /// **errors every pending request immediately**. Idempotent, and
+    /// the drain is unconditional so an entry registered concurrently
+    /// with an earlier `die` still fails fast instead of leaking until
+    /// its deadline.
+    fn die(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+        if let Some(s) = self.shutdown.lock().unwrap().take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let drained: Vec<PendingReq> =
+            self.pending.lock().unwrap().drain().map(|(_, p)| p).collect();
+        for p in drained {
+            let _ = p.reply_tx.send(Reply { token: p.token, from: self.id, resp: None });
+        }
     }
 }
 
-/// Client-side transport: one pooled worker (and connection) per acceptor.
+/// Per-acceptor connection handle held by the transport.
+struct Conn {
+    tx: mpsc::Sender<Job>,
+    shared: Arc<ConnShared>,
+}
+
+/// Fails every job still queued (or racing in) on a dead connection
+/// until the transport drops or replaces it.
+fn drain_jobs(rx: &mpsc::Receiver<Job>, id: u64) {
+    while let Ok((token, _req, reply_tx)) = rx.recv() {
+        let _ = reply_tx.send(Reply { token, from: id, resp: None });
+    }
+}
+
+/// Writer thread: connects, spawns the reader-demux and the timeout
+/// sweeper, then pipelines jobs — register in the pending map, write
+/// the envelope, move on. It never blocks on a reply.
+fn writer_loop(
+    addr: String,
+    timeout: Duration,
+    rx: mpsc::Receiver<Job>,
+    shared: Arc<ConnShared>,
+) {
+    // Bounded connect: a black-holed peer (dropped SYNs) must not park
+    // this thread for the OS retry limit — jobs queued here are not in
+    // the pending map yet, so only this bound keeps them near the
+    // transport timeout. Like `TcpStream::connect`, every resolved
+    // address is tried in turn (a hostname may resolve to ::1 and
+    // 127.0.0.1 with the server bound on one family only).
+    use std::net::ToSocketAddrs;
+    let mut connected = None;
+    if let Ok(socks) = addr.to_socket_addrs() {
+        for sock in socks {
+            if let Ok(s) = TcpStream::connect_timeout(&sock, timeout) {
+                connected = Some(s);
+                break;
+            }
+        }
+    }
+    let mut stream = match connected {
+        Some(s) => s,
+        None => {
+            shared.die();
+            drain_jobs(&rx, shared.id);
+            return;
+        }
+    };
+    stream.set_nodelay(true).ok();
+    stream.set_write_timeout(Some(timeout)).ok();
+    let reader = match stream.try_clone() {
+        Ok(r) => r,
+        Err(_) => {
+            shared.die();
+            drain_jobs(&rx, shared.id);
+            return;
+        }
+    };
+    *shared.shutdown.lock().unwrap() = stream.try_clone().ok();
+    // A kill that raced the connect found no shutdown handle to close:
+    // honor it now, BEFORE spawning the reader that would otherwise
+    // block forever on the (healthy) socket.
+    if shared.dead.load(Ordering::SeqCst) {
+        shared.die();
+        drain_jobs(&rx, shared.id);
+        return;
+    }
+    {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || reader_loop(reader, shared));
+    }
+    {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || sweep_loop(shared, timeout));
+    }
+    let mut corr: u64 = 0;
+    while let Ok((token, req, reply_tx)) = rx.recv() {
+        if shared.dead.load(Ordering::SeqCst) {
+            let _ = reply_tx.send(Reply { token, from: shared.id, resp: None });
+            continue;
+        }
+        corr += 1;
+        let mut body = Vec::with_capacity(64);
+        encode_envelope(corr, &req, &mut body);
+        if body.len() as u64 > MAX_FRAME as u64 {
+            // Local error, no bytes on the wire: the connection (and
+            // everything multiplexed on it) is fine — fail THIS
+            // request only.
+            let _ = reply_tx.send(Reply { token, from: shared.id, resp: None });
+            continue;
+        }
+        shared
+            .pending
+            .lock()
+            .unwrap()
+            .insert(corr, PendingReq { token, reply_tx, deadline: Instant::now() + timeout });
+        let failed = write_frame_bytes(&mut stream, &body).is_err();
+        // Re-checking `dead` closes the race with a concurrent kill:
+        // either the killer's drain saw our entry, or we see its flag.
+        if failed || shared.dead.load(Ordering::SeqCst) {
+            shared.die();
+        }
+    }
+    // Transport dropped or replaced the connection.
+    shared.die();
+}
+
+/// Reader-demux thread: resolves reply envelopes against the pending
+/// map. Unknown or already-answered correlation ids are dropped (late
+/// replies after a timeout sweep look exactly like that). EOF or any
+/// read/decode error kills the connection — and with it every pending
+/// request, immediately.
+fn reader_loop(mut stream: TcpStream, shared: Arc<ConnShared>) {
+    loop {
+        match read_frame::<Envelope<Response>>(&mut stream) {
+            Ok(Some(env)) => {
+                let entry = shared.pending.lock().unwrap().remove(&env.corr);
+                if let Some(p) = entry {
+                    let _ = p.reply_tx.send(Reply {
+                        token: p.token,
+                        from: shared.id,
+                        resp: Some(env.body),
+                    });
+                }
+            }
+            Ok(None) | Err(_) => break,
+        }
+    }
+    shared.die();
+}
+
+/// Timeout sweeper: periodically fails pending requests whose deadline
+/// passed. The connection itself stays up — one slow request must not
+/// sever everything multiplexed beside it; a genuinely dead peer is
+/// caught by the reader/writer error paths instead.
+fn sweep_loop(shared: Arc<ConnShared>, timeout: Duration) {
+    // Wake only when something could expire: sleep to the earliest
+    // pending deadline, with an idle beat of timeout/2 otherwise. A
+    // request registered mid-sleep carries deadline now+timeout, so the
+    // next beat always lands before it can expire; the beat also bounds
+    // how long a dead connection keeps this thread alive.
+    let idle = (timeout / 2).max(Duration::from_millis(5));
+    while !shared.dead.load(Ordering::SeqCst) {
+        let now = Instant::now();
+        let (expired, next_deadline) = {
+            let mut pending = shared.pending.lock().unwrap();
+            let ids: Vec<u64> = pending
+                .iter()
+                .filter(|(_, p)| p.deadline <= now)
+                .map(|(&corr, _)| corr)
+                .collect();
+            let expired: Vec<PendingReq> =
+                ids.iter().filter_map(|corr| pending.remove(corr)).collect();
+            let next = pending.values().map(|p| p.deadline).min();
+            (expired, next)
+        };
+        for p in expired {
+            let _ = p.reply_tx.send(Reply { token: p.token, from: shared.id, resp: None });
+        }
+        let sleep_for = match next_deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()).min(idle),
+            None => idle,
+        };
+        std::thread::sleep(sleep_for.max(Duration::from_millis(1)));
+    }
+}
+
+/// Client-side transport: one pipelined connection per acceptor, any
+/// number of requests in flight, replies demultiplexed by correlation
+/// id (see the module docs).
 pub struct TcpTransport {
-    workers: Mutex<HashMap<u64, Worker>>,
+    workers: Mutex<HashMap<u64, Conn>>,
     addrs: Mutex<HashMap<u64, String>>,
     timeout: Duration,
 }
@@ -157,26 +500,56 @@ impl TcpTransport {
     /// Adds/updates an acceptor address (membership change).
     pub fn set_addr(&self, id: u64, addr: String) {
         self.addrs.lock().unwrap().insert(id, addr);
-        self.workers.lock().unwrap().remove(&id); // rebuild on next use
+        // Dropping the handle closes the job channel; the writer exits
+        // and errors whatever was still pending on the old address.
+        self.workers.lock().unwrap().remove(&id);
+    }
+
+    /// Chaos/test hook: severs the live connection to acceptor `to`.
+    /// Every pending request on it errors immediately and the next
+    /// dispatch reconnects. Returns whether a connection existed.
+    pub fn kill_connection(&self, to: u64) -> bool {
+        // Remove eagerly (not just mark dead): dropping the handle
+        // closes the job channel, so the writer thread exits now
+        // instead of parking until the next dispatch to this acceptor.
+        match self.workers.lock().unwrap().remove(&to) {
+            Some(conn) => {
+                conn.shared.die();
+                true
+            }
+            None => false,
+        }
     }
 
     fn dispatch(&self, to: u64, token: u32, req: Request, tx: &mpsc::Sender<Reply>) {
         let mut workers = self.workers.lock().unwrap();
-        let worker = match workers.get(&to) {
-            Some(w) => w,
+        let stale =
+            workers.get(&to).map(|c| c.shared.dead.load(Ordering::SeqCst)).unwrap_or(false);
+        if stale {
+            workers.remove(&to); // reconnect below
+        }
+        let conn = match workers.get(&to) {
+            Some(c) => c,
             None => {
                 let Some(addr) = self.addrs.lock().unwrap().get(&to).cloned() else {
                     let _ = tx.send(Reply { token, from: to, resp: None });
                     return;
                 };
+                let shared = Arc::new(ConnShared {
+                    id: to,
+                    pending: Mutex::new(HashMap::new()),
+                    dead: AtomicBool::new(false),
+                    shutdown: Mutex::new(None),
+                });
                 let (jtx, jrx) = mpsc::channel::<Job>();
                 let timeout = self.timeout;
-                std::thread::spawn(move || worker_loop(addr, to, timeout, jrx));
-                workers.entry(to).or_insert(Worker { tx: jtx })
+                let writer_shared = Arc::clone(&shared);
+                std::thread::spawn(move || writer_loop(addr, timeout, jrx, writer_shared));
+                workers.entry(to).or_insert(Conn { tx: jtx, shared })
             }
         };
-        if worker.tx.send((token, req, tx.clone())).is_err() {
-            // Worker died; report failure and forget it.
+        if conn.tx.send((token, req, tx.clone())).is_err() {
+            // Writer died; report failure and forget it.
             let _ = tx.send(Reply { token, from: to, resp: None });
             workers.remove(&to);
         }
@@ -206,8 +579,10 @@ impl Transport for TcpTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::msg::ProposerId;
     use crate::proposer::Proposer;
     use crate::quorum::ClusterConfig;
+    use crate::state::Val;
 
     fn spawn_cluster(n: u64) -> HashMap<u64, String> {
         let mut addrs = HashMap::new();
@@ -247,8 +622,8 @@ mod tests {
         let big = Request::Accept {
             key: "k".into(),
             ballot: crate::ballot::Ballot::new(1, 1),
-            val: crate::state::Val::Bytes { ver: 0, data: vec![7u8; 100_000] },
-            from: crate::msg::ProposerId::new(1),
+            val: Val::Bytes { ver: 0, data: vec![7u8; 100_000] },
+            from: ProposerId::new(1),
             promise_next: None,
         };
         assert_eq!(t.send(1, &big).unwrap(), Response::Accepted);
@@ -261,5 +636,220 @@ mod tests {
         for id in 1..=3 {
             assert_eq!(t.send(id, &Request::Ping).unwrap(), Response::Ok);
         }
+    }
+
+    #[test]
+    fn deferred_backpressure_survives_a_flood() {
+        // A no-op hook forces EVERY request onto the deferred reply
+        // path; pipelining far more than MAX_DEFERRED_PER_CONN requests
+        // on one connection must backpressure the read loop (bounded
+        // server threads), not deadlock, and still answer every one.
+        let hook: ReplyHook = Arc::new(|_req, _resp| {});
+        let addr = spawn_acceptor_with("127.0.0.1:0", Acceptor::new(1), Some(hook)).unwrap();
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = TcpTransport::new(addrs);
+        let n = 2 * MAX_DEFERRED_PER_CONN as u32 + 50;
+        let (tx, rx) = mpsc::channel();
+        t.fan_out(1, (0..n).map(|_| (1u64, Request::Ping)).collect(), &tx);
+        for _ in 0..n {
+            let reply = rx.recv_timeout(Duration::from_secs(10)).expect("flood reply");
+            assert_eq!(reply.resp, Some(Response::Ok));
+        }
+    }
+
+    #[test]
+    fn oversized_frame_fails_only_its_own_request() {
+        let addrs = spawn_cluster(1);
+        let t = TcpTransport::new(addrs);
+        assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Ok);
+        let big = Request::Accept {
+            key: "k".into(),
+            ballot: crate::ballot::Ballot::new(1, 1),
+            val: Val::Bytes { ver: 0, data: vec![0u8; MAX_FRAME as usize + 16] },
+            from: ProposerId::new(1),
+            promise_next: None,
+        };
+        assert!(t.send(1, &big).is_err(), "oversized frame must fail its caller");
+        // Local error, no bytes written: the CONNECTION must survive —
+        // everything multiplexed beside the oversized request is fine.
+        let alive = t
+            .workers
+            .lock()
+            .unwrap()
+            .get(&1)
+            .map(|c| !c.shared.dead.load(Ordering::SeqCst))
+            .unwrap_or(false);
+        assert!(alive, "oversized request must not tear down the connection");
+        assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Ok);
+    }
+
+    #[test]
+    fn kill_connection_reconnects_cleanly() {
+        let addrs = spawn_cluster(1);
+        let t = TcpTransport::new(addrs);
+        assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Ok);
+        assert!(t.kill_connection(1), "a live connection existed");
+        assert!(!t.kill_connection(99), "unknown acceptor has no connection");
+        // The next request transparently opens a fresh connection.
+        assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Ok);
+    }
+
+    /// THE head-of-line regression pin. ONE acceptor, so every round
+    /// needs *its* reply — nothing can hide behind the rest of a
+    /// quorum. A server hook stalls CAS (Accept) replies; a concurrent
+    /// quorum read on the SAME connection must complete in bounded time
+    /// instead of queueing behind the stalled reply. The pre-pipelining
+    /// worker loop fails this test: its one-job-at-a-time connection
+    /// made the read wait out the whole stall.
+    #[test]
+    fn pipelined_read_overtakes_stalled_cas() {
+        let stall = Arc::new(AtomicBool::new(false));
+        let hook: ReplyHook = {
+            let stall = Arc::clone(&stall);
+            Arc::new(move |req, _resp| {
+                if stall.load(Ordering::SeqCst) && matches!(req, Request::Accept { .. }) {
+                    std::thread::sleep(Duration::from_millis(600));
+                }
+            })
+        };
+        let addr = spawn_acceptor_with("127.0.0.1:0", Acceptor::new(1), Some(hook)).unwrap();
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = Arc::new(TcpTransport::new(addrs));
+        let cfg = ClusterConfig::majority(1, vec![1]);
+        let writer = Proposer::new(1, cfg.clone(), t.clone());
+        let reader = Proposer::new(2, cfg, t);
+        writer.set("hot", 1).unwrap();
+        stall.store(true, Ordering::SeqCst);
+        let w = std::thread::spawn(move || writer.set("hot", 2));
+        // Let the CAS round reach its stalled Accept reply.
+        std::thread::sleep(Duration::from_millis(100));
+        let start = Instant::now();
+        assert_eq!(reader.get("cold").unwrap(), Val::Empty);
+        let read_lat = start.elapsed();
+        assert!(
+            read_lat < Duration::from_millis(300),
+            "quorum read waited on the stalled CAS reply: {read_lat:?}"
+        );
+        assert_eq!(w.join().unwrap().unwrap().as_num(), Some(2), "the stalled write lands");
+    }
+
+    /// Satellite pin: a server death mid-request must error EVERY
+    /// pending request promptly — never strand reply channels until the
+    /// transport timeout (the old worker's silent-hang mode).
+    #[test]
+    fn dead_server_fails_pending_fast_not_at_timeout() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Read ONE request, reply to none, kill the connection.
+            let _ = read_frame::<Envelope<Request>>(&mut s);
+            drop(s);
+        });
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = TcpTransport::with_timeout(addrs, Duration::from_secs(10));
+        let (tx, rx) = mpsc::channel();
+        t.fan_out(3, vec![(1, Request::Ping), (1, Request::Ping), (1, Request::Ping)], &tx);
+        let start = Instant::now();
+        for _ in 0..3 {
+            let reply = rx.recv_timeout(Duration::from_secs(5)).expect("reply must arrive");
+            assert_eq!(reply.token, 3);
+            assert!(reply.resp.is_none(), "broken connection must error the request");
+        }
+        assert!(
+            start.elapsed() < Duration::from_secs(2),
+            "pending requests must fail fast, not ride out the 10s timeout"
+        );
+    }
+
+    /// Adversarial demux pin: replies bearing unknown or duplicate
+    /// correlation ids are dropped — no panic, no mis-delivery, no hung
+    /// pending request, and no leakage into the NEXT request's reply.
+    #[test]
+    fn unknown_and_duplicate_corr_replies_are_ignored() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let env: Envelope<Request> = read_frame(&mut s).unwrap().unwrap();
+            // Unknown corr first, then the real reply, then a duplicate.
+            write_envelope(&mut s, env.corr ^ 0xFFFF, &Response::Error("bogus".into())).unwrap();
+            write_envelope(&mut s, env.corr, &Response::Ok).unwrap();
+            write_envelope(&mut s, env.corr, &Response::Error("dup".into())).unwrap();
+            // A second request must get ITS reply, not the leaked dup.
+            let env2: Envelope<Request> = read_frame(&mut s).unwrap().unwrap();
+            write_envelope(&mut s, env2.corr, &Response::Accepted).unwrap();
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = TcpTransport::new(addrs);
+        assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Ok);
+        assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Accepted);
+    }
+
+    /// Interleaving pin: two requests in flight on one connection,
+    /// answered in REVERSE order — each caller gets its own reply, and
+    /// the later request completes first (true pipelining, no barrier).
+    #[test]
+    fn out_of_order_replies_demux_by_corr() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let name = |e: &Envelope<Request>| match &e.body {
+                Request::Read { key, .. } => key.clone(),
+                _ => "?".into(),
+            };
+            let (mut s, _) = listener.accept().unwrap();
+            let e1: Envelope<Request> = read_frame(&mut s).unwrap().unwrap();
+            let e2: Envelope<Request> = read_frame(&mut s).unwrap().unwrap();
+            write_envelope(&mut s, e2.corr, &Response::Error(name(&e2))).unwrap();
+            write_envelope(&mut s, e1.corr, &Response::Error(name(&e1))).unwrap();
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = Arc::new(TcpTransport::new(addrs));
+        let ta = Arc::clone(&t);
+        let first = std::thread::spawn(move || {
+            ta.send(1, &Request::Read { key: "a".into(), from: ProposerId::new(1) })
+        });
+        // Make sure "a" is on the wire before "b".
+        std::thread::sleep(Duration::from_millis(100));
+        let second = t.send(1, &Request::Read { key: "b".into(), from: ProposerId::new(1) });
+        assert_eq!(second.unwrap(), Response::Error("b".into()));
+        assert_eq!(first.join().unwrap().unwrap(), Response::Error("a".into()));
+    }
+
+    /// A reply slower than the per-request timeout fails THAT request
+    /// (sweeper), while the connection survives for later traffic and
+    /// the late reply is dropped as unknown.
+    #[test]
+    fn timeout_sweep_fails_request_but_keeps_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let e1: Envelope<Request> = read_frame(&mut s).unwrap().unwrap();
+            // Outlive the client's 200ms timeout, then reply late.
+            std::thread::sleep(Duration::from_millis(500));
+            write_envelope(&mut s, e1.corr, &Response::Ok).unwrap();
+            // The connection still serves the next request promptly.
+            let e2: Envelope<Request> = read_frame(&mut s).unwrap().unwrap();
+            write_envelope(&mut s, e2.corr, &Response::Accepted).unwrap();
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = TcpTransport::with_timeout(addrs, Duration::from_millis(200));
+        let start = Instant::now();
+        assert!(t.send(1, &Request::Ping).is_err(), "slow reply must time out");
+        assert!(start.elapsed() < Duration::from_millis(450), "sweeper, not the late reply");
+        // Wait past the late reply so it exercises the unknown-corr drop.
+        std::thread::sleep(Duration::from_millis(350));
+        assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Accepted);
     }
 }

@@ -26,18 +26,7 @@ use caspaxos::linearizability::{check, CheckResult};
 use caspaxos::rng::Rng;
 use caspaxos::sim::worlds::{sharded_chaos_world, ShardedWorldOpts};
 use caspaxos::sim::{NetModel, Region};
-use caspaxos::testkit::forall_seeds;
-
-/// Seed count for one campaign: `base`, scaled by the `CHAOS_SEED_MULT`
-/// env var (the nightly `chaos-extended` CI job runs with 4×; failing
-/// case seeds print via `forall_seeds` and are uploaded as artifacts).
-fn seeds(base: u64) -> u64 {
-    let mult = std::env::var("CHAOS_SEED_MULT")
-        .ok()
-        .and_then(|v| v.parse::<u64>().ok())
-        .unwrap_or(1);
-    base * mult.max(1)
-}
+use caspaxos::testkit::{chaos_seed_count as seeds, forall_seeds};
 
 /// Which read mix a chaos schedule drives alongside its random writes.
 #[derive(Clone, Copy, PartialEq)]
