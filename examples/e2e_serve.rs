@@ -51,6 +51,7 @@ fn launch() -> Vec<Node> {
                 client_peers: client_peers.clone(),
                 cluster: cluster.clone(),
                 shard_plan: None,
+                stripes: 1,
                 data_dir: None,
                 lease: None,
             })

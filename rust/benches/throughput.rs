@@ -23,7 +23,7 @@ fn run_perkey(threads: u64, proposers: usize) -> f64 {
 }
 
 fn run_perkey_sharded(threads: u64, proposers: usize, shards: usize) -> f64 {
-    let t = Arc::new(MemTransport::new_sharded(3, shards));
+    let t = Arc::new(MemTransport::new_striped(3, shards));
     let cfg = ClusterConfig::majority(1, t.acceptor_ids());
     let kv = Arc::new(KvStore::new(cfg, t, proposers));
     // Pre-create keys.

@@ -27,22 +27,35 @@
 //!   into its response and a [`Persist`] durability ticket, so drivers
 //!   can release the acceptor lock before waiting; concurrent accepts
 //!   then coalesce under one fsync ([`storage`] module docs).
+//! * **Lock striping** — [`StripedAcceptor`] spreads one node's
+//!   registers over N key-hashed stripes, each an independent
+//!   [`Acceptor`] behind its own lock, all sharing one group-commit
+//!   WAL: requests on independent keys never contend on a lock, yet
+//!   their records still coalesce under one fsync. CASPaxos registers
+//!   are independent RSMs (§3), so striping is semantics-preserving;
+//!   at one stripe it IS the classic acceptor.
 
 pub mod storage;
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use crate::ballot::Ballot;
 use crate::msg::{Key, ProposerId, Request, Response};
 use crate::state::Val;
 
 pub use storage::{
-    FileStorage, GroupCommitOpts, Lease, MemStorage, Persist, Slot, Storage, WalStats,
+    stripe_of, FileStorage, GroupCommitOpts, Lease, MemStorage, Persist, Slot, Storage, WalStats,
 };
 
 /// Upper bound on a grantable lease (clamps the wire-supplied duration
 /// so a buggy or hostile proposer cannot lock a key forever).
 pub const MAX_LEASE_US: u64 = 60_000_000;
+
+/// Hard cap on one `Dump` page. Shared by the single-acceptor pager
+/// and the striped merge — they MUST clamp identically or the merged
+/// `more` flag diverges from what the stripes can actually return.
+pub const MAX_DUMP_PAGE: usize = 4096;
 
 /// Acceptor-local wall clock in µs since the UNIX epoch — the default
 /// clock for drivers that don't inject one ([`Acceptor::handle`]).
@@ -378,7 +391,7 @@ impl<S: Storage> Acceptor<S> {
     }
 
     fn on_dump(&self, after: Option<&Key>, limit: usize) -> Response {
-        let page = self.store.scan(after, limit.min(4096));
+        let page = self.store.scan(after, limit.min(MAX_DUMP_PAGE));
         let more = match page.last() {
             Some((last, _)) => !self.store.scan(Some(last), 1).is_empty(),
             None => false,
@@ -406,6 +419,207 @@ impl<S: Storage> Acceptor<S> {
             }
         }
         Response::Ok
+    }
+}
+
+/// Lock-striped acceptor: `N` key-hashed stripes, each an independent
+/// [`Acceptor`] (own slot map, lease table and min-age cache) behind
+/// its own lock — all sharing ONE group-commit WAL when file-backed
+/// ([`FileStorage::open_striped`]). Requests on different stripes never
+/// contend on a lock, yet their records coalesce under one fsync: the
+/// write path scales across cores without multiplying fsync traffic.
+///
+/// Routing: keyed requests go to [`stripe_of`]`(key)` — the same
+/// function the shared WAL's replay routes by, so a restarted node
+/// rebuilds exactly the maps its dispatch will consult. `SetMinAge`
+/// broadcasts to every stripe (a fenced proposer's keys hash anywhere,
+/// so the §3.1 age rule must hold on all of them); `Erase` and lease
+/// operations route per stripe like any keyed request; `Dump` merges
+/// ordered pages across stripes. At `stripes = 1` this is exactly the
+/// classic single-lock acceptor.
+///
+/// All methods take `&self`: the stripe mutexes are the only locks, so
+/// drivers share one handle across connection threads without an outer
+/// lock. Multi-stripe file-backed sets should come from
+/// [`FileStorage::open_striped`] — the shared WAL is what lets
+/// concurrent stripes coalesce their fsyncs (independent per-stripe
+/// storages stay *correct*, they just fsync separately).
+pub struct StripedAcceptor<S: Storage = MemStorage> {
+    /// This acceptor's node id (shared by every stripe).
+    pub id: u64,
+    stripes: Vec<Mutex<Acceptor<S>>>,
+}
+
+impl StripedAcceptor<MemStorage> {
+    /// In-memory striped acceptor (tests, simulation, mem transport).
+    pub fn new_mem(id: u64, stripes: usize) -> Self {
+        assert!(stripes >= 1, "stripe count must be at least 1");
+        StripedAcceptor {
+            id,
+            stripes: (0..stripes).map(|_| Mutex::new(Acceptor::new(id))).collect(),
+        }
+    }
+}
+
+impl StripedAcceptor<FileStorage> {
+    /// Opens a file-backed striped acceptor: one shared group-commit
+    /// WAL, `stripes` independent slot maps rebuilt by stripe-filtered
+    /// replay (legacy single-stripe logs replay fine — routing is by
+    /// key hash, see [`FileStorage::open_striped`]).
+    pub fn open(
+        id: u64,
+        path: impl Into<std::path::PathBuf>,
+        opts: GroupCommitOpts,
+        stripes: usize,
+    ) -> crate::error::CasResult<Self> {
+        Ok(Self::from_storages(id, FileStorage::open_striped(path, opts, stripes)?))
+    }
+
+    /// Counters of the shared WAL. Every stripe appends to the same
+    /// one, so any handle reports the aggregate: the gap between
+    /// `appends` and `fsyncs` is the group-commit win *across* stripes.
+    pub fn wal_stats(&self) -> WalStats {
+        self.stripes[0].lock().unwrap().storage().wal_stats()
+    }
+}
+
+impl<S: Storage> StripedAcceptor<S> {
+    /// Builds the striped acceptor over pre-opened per-stripe storages
+    /// (one per stripe, index = stripe id).
+    pub fn from_storages(id: u64, stores: Vec<S>) -> Self {
+        assert!(!stores.is_empty(), "at least one stripe required");
+        let stripes =
+            stores.into_iter().map(|s| Mutex::new(Acceptor::with_storage(id, s))).collect();
+        StripedAcceptor { id, stripes }
+    }
+
+    /// Wraps an existing acceptor as the 1-stripe degenerate case, so
+    /// unstriped drivers reuse the striped serving shell unchanged.
+    pub fn from_acceptor(acceptor: Acceptor<S>) -> Self {
+        StripedAcceptor { id: acceptor.id, stripes: vec![Mutex::new(acceptor)] }
+    }
+
+    /// Number of stripes.
+    pub fn stripe_count(&self) -> usize {
+        self.stripes.len()
+    }
+
+    /// Runs `f` against stripe `i`'s acceptor (tests, inspection).
+    pub fn with_stripe<R>(&self, i: usize, f: impl FnOnce(&mut Acceptor<S>) -> R) -> R {
+        f(&mut self.stripes[i].lock().unwrap())
+    }
+
+    /// Total registers held across all stripes.
+    pub fn register_count(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().register_count()).sum()
+    }
+
+    /// Convenience inspector: the accepted numeric value for `key`
+    /// (routed to its owning stripe).
+    pub fn storage_value(&self, key: &str) -> Option<i64> {
+        self.stripes[stripe_of(key, self.stripes.len())].lock().unwrap().storage_value(key)
+    }
+
+    /// Handles one request with the wall clock (see
+    /// [`StripedAcceptor::handle_deferred_at`] for the routing rules).
+    pub fn handle(&self, req: &Request) -> Response {
+        self.handle_at(req, wall_clock_us())
+    }
+
+    /// [`StripedAcceptor::handle`] with an explicit clock reading.
+    pub fn handle_at(&self, req: &Request, now_us: u64) -> Response {
+        let (resp, persist) = self.handle_deferred_at(req, now_us);
+        match persist.wait() {
+            Ok(()) => resp,
+            Err(e) => Response::Error(e.to_string()),
+        }
+    }
+
+    /// Like [`Acceptor::handle_deferred`], routed: the owning stripe's
+    /// lock is held only for the in-memory transition.
+    pub fn handle_deferred(&self, req: &Request) -> (Response, Persist) {
+        self.handle_deferred_at(req, wall_clock_us())
+    }
+
+    /// Routes one request to its stripe. The returned [`Persist`] is
+    /// waited on OUTSIDE every stripe lock, where concurrent stripes'
+    /// records share a flush batch — the grant-before-reply and
+    /// read-fence durability contracts hold per stripe exactly as on
+    /// the single-lock acceptor.
+    pub fn handle_deferred_at(&self, req: &Request, now_us: u64) -> (Response, Persist) {
+        match req {
+            Request::Prepare { key, .. }
+            | Request::Accept { key, .. }
+            | Request::Erase { key, .. }
+            | Request::Install { key, .. }
+            | Request::Read { key, .. }
+            | Request::LeaseAcquire { key, .. }
+            | Request::LeaseRenew { key, .. }
+            | Request::LeaseRevoke { key, .. } => {
+                let stripe = stripe_of(key, self.stripes.len());
+                self.stripes[stripe].lock().unwrap().handle_deferred_at(req, now_us)
+            }
+            Request::SetMinAge { .. } => {
+                // The GC age fence must hold on EVERY stripe: the
+                // fenced proposer's keys hash anywhere. Min-age writes
+                // are synchronously durable, so there is no ticket to
+                // thread through. Cost: N sequential durable appends on
+                // a file-backed node — acceptable because SetMinAge
+                // only runs during GC collections (replay would accept
+                // a single record: it re-fences all stripes from any
+                // min-age record; see `replay_log`).
+                let mut last = Response::Ok;
+                for stripe in &self.stripes {
+                    let (resp, _persist) = stripe.lock().unwrap().handle_deferred_at(req, now_us);
+                    if matches!(resp, Response::Error(_)) {
+                        return (resp, Persist::done());
+                    }
+                    last = resp;
+                }
+                (last, Persist::done())
+            }
+            Request::Dump { after, limit } => self.dump(after.as_ref(), *limit, now_us),
+            Request::Ping => (Response::Ok, Persist::done()),
+        }
+    }
+
+    /// Merged, ordered dump across stripes, fenced like a read: every
+    /// stripe's fence is honored — the earlier stripes' fences are
+    /// waited here (no-ops on a shared WAL, where the last fence's tail
+    /// covers them, and on always-durable mem storages) and the last
+    /// one rides the reply, so the page never leaks pre-durable state
+    /// even over independent per-stripe storages.
+    fn dump(&self, after: Option<&Key>, limit: usize, now_us: u64) -> (Response, Persist) {
+        let req = Request::Dump { after: after.cloned(), limit };
+        if self.stripes.len() == 1 {
+            return self.stripes[0].lock().unwrap().handle_deferred_at(&req, now_us);
+        }
+        let mut entries: Vec<(Key, Ballot, Val)> = Vec::new();
+        let mut fences: Vec<Persist> = Vec::with_capacity(self.stripes.len());
+        // A stripe reporting `more` means the merged page is incomplete
+        // even if the merged length stays under the limit — dropping
+        // that flag would end catch-up pagination early and silently
+        // under-replicate a new acceptor.
+        let mut stripe_more = false;
+        for stripe in &self.stripes {
+            let (resp, persist) = stripe.lock().unwrap().handle_deferred_at(&req, now_us);
+            fences.push(persist);
+            if let Response::DumpPage { entries: page, more } = resp {
+                entries.extend(page);
+                stripe_more |= more;
+            }
+        }
+        let last_fence = fences.pop().unwrap_or_else(Persist::done);
+        for fence in fences {
+            if let Err(e) = fence.wait() {
+                return (Response::Error(e.to_string()), Persist::done());
+            }
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let limit = limit.min(MAX_DUMP_PAGE);
+        let more = stripe_more || entries.len() > limit;
+        entries.truncate(limit);
+        (Response::DumpPage { entries, more }, last_fence)
     }
 }
 
@@ -870,5 +1084,185 @@ mod tests {
         }
         assert_eq!(dst.storage().load(&"a".to_string()).unwrap().value.as_num(), Some(777));
         assert_eq!(dst.storage().load(&"b".to_string()).unwrap().value.as_num(), Some(1));
+    }
+
+    // ---- StripedAcceptor ----
+
+    #[test]
+    fn striped_routes_keys_to_their_hash_stripe() {
+        let a = StripedAcceptor::new_mem(1, 4);
+        for i in 0..16 {
+            let key = format!("k{i}");
+            assert!(matches!(
+                a.handle(&Request::Accept {
+                    key: key.clone(),
+                    ballot: Ballot::new(1, 1),
+                    val: Val::Num { ver: 0, num: i },
+                    from: ProposerId::new(1),
+                    promise_next: None,
+                }),
+                Response::Accepted
+            ));
+            assert_eq!(a.storage_value(&key), Some(i));
+            let owner = stripe_of(&key, 4);
+            a.with_stripe(owner, |s| {
+                assert_eq!(s.storage_value(&key), Some(i), "{key} missing on stripe {owner}")
+            });
+            for wrong in (0..4).filter(|&s| s != owner) {
+                a.with_stripe(wrong, |s| {
+                    assert!(s.storage_value(&key).is_none(), "{key} leaked to stripe {wrong}")
+                });
+            }
+        }
+        assert_eq!(a.register_count(), 16);
+    }
+
+    #[test]
+    fn one_stripe_matches_classic_acceptor_exactly() {
+        // The degenerate case must be bit-identical to Acceptor: run an
+        // adversarial mixed sequence through both and compare every
+        // response.
+        let mut classic = Acceptor::new(1);
+        let striped = StripedAcceptor::new_mem(1, 1);
+        let reqs = vec![
+            prep("k", 1, 1),
+            acc("k", 1, 1, 42),
+            prep("k", 1, 2), // conflict
+            Request::Read { key: "k".into(), from: ProposerId::new(3) },
+            Request::LeaseAcquire { key: "k".into(), duration_us: 5_000, from: ProposerId::new(7) },
+            prep("k", 9, 2), // leased against: conflict + contest
+            Request::LeaseRenew { key: "k".into(), duration_us: 5_000, from: ProposerId::new(7) },
+            Request::LeaseRevoke { key: "k".into(), from: ProposerId::new(7) },
+            Request::SetMinAge { proposer_id: 2, min_age: 3 },
+            prep("k2", 1, 2), // fenced: StaleAge
+            Request::Dump { after: None, limit: 10 },
+            Request::Erase { key: "k".into(), tombstone_ballot: Ballot::new(99, 1) },
+            Request::Ping,
+        ];
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(classic.handle_at(req, 1_000), striped.handle_at(req, 1_000), "req {i}");
+        }
+    }
+
+    #[test]
+    fn striped_min_age_fences_every_stripe() {
+        let a = StripedAcceptor::new_mem(1, 4);
+        assert_eq!(a.handle(&Request::SetMinAge { proposer_id: 3, min_age: 2 }), Response::Ok);
+        // Whatever stripe a key hashes to, the fence holds.
+        for key in ["a", "b", "c", "d", "e", "f"] {
+            let stale = Request::Prepare {
+                key: key.into(),
+                ballot: Ballot::new(1, 3),
+                from: ProposerId { id: 3, age: 1 },
+            };
+            assert_eq!(a.handle(&stale), Response::StaleAge { required: 2 }, "key {key}");
+        }
+    }
+
+    #[test]
+    fn striped_dump_merges_ordered_pages() {
+        let a = StripedAcceptor::new_mem(1, 4);
+        for key in ["d", "a", "c", "b"] {
+            a.handle(&acc(key, 1, 1, 1));
+        }
+        match a.handle(&Request::Dump { after: None, limit: 3 }) {
+            Response::DumpPage { entries, more } => {
+                let keys: Vec<&str> = entries.iter().map(|(k, _, _)| k.as_str()).collect();
+                assert_eq!(keys, vec!["a", "b", "c"]);
+                assert!(more);
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn striped_dump_keeps_more_flag_when_one_stripe_overflows_the_page() {
+        // 5 keys all hashed onto stripe 0, dump limit 4: the stripe
+        // returns 4 entries + more=true, the merged page is EXACTLY the
+        // limit. Dropping the stripe's flag here (computing `more` from
+        // the merged length alone) would end catch-up pagination early
+        // and silently under-replicate a new acceptor.
+        let a = StripedAcceptor::new_mem(1, 4);
+        let keys: Vec<Key> =
+            (0..5).map(|i| crate::testkit::key_on_stripe(0, 4, 100 + i)).collect();
+        for (i, key) in keys.iter().enumerate() {
+            a.handle(&acc(key, i as u64 + 1, 1, i as i64));
+        }
+        match a.handle(&Request::Dump { after: None, limit: 4 }) {
+            Response::DumpPage { entries, more } => {
+                assert_eq!(entries.len(), 4);
+                assert!(more, "the overflowing stripe's `more` must survive the merge");
+            }
+            r => panic!("{r:?}"),
+        }
+        // Paging past the last returned key reaches the fifth record.
+        let mut sorted = keys.clone();
+        sorted.sort();
+        let after = sorted[3].clone();
+        match a.handle(&Request::Dump { after: Some(after), limit: 4 }) {
+            Response::DumpPage { entries, more } => {
+                assert_eq!(entries.len(), 1, "the fifth record is reachable");
+                assert!(!more);
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn striped_lease_and_erase_stay_per_stripe() {
+        let a = StripedAcceptor::new_mem(1, 4);
+        a.handle_at(&acc("k", 1, 7, 42), 0);
+        assert!(matches!(
+            a.handle_at(
+                &Request::LeaseAcquire {
+                    key: "k".into(),
+                    duration_us: 10_000,
+                    from: ProposerId::new(7),
+                },
+                0,
+            ),
+            Response::LeaseGranted { granted: true, .. }
+        ));
+        // Foreign ballots rejected on the leased key, but OTHER keys
+        // (wherever they hash) are untouched by the lease.
+        assert!(matches!(a.handle_at(&prep("k", 99, 2), 5_000), Response::Conflict { .. }));
+        assert!(matches!(a.handle_at(&prep("other", 1, 2), 5_000), Response::Promise { .. }));
+        // Erase defers while the lease is live, then lands.
+        a.handle_at(
+            &Request::Accept {
+                key: "k".into(),
+                ballot: Ballot::new(2, 7),
+                val: Val::Tombstone,
+                from: ProposerId::new(7),
+                promise_next: None,
+            },
+            6_000,
+        );
+        let erase = Request::Erase { key: "k".into(), tombstone_ballot: Ballot::new(2, 7) };
+        assert!(matches!(a.handle_at(&erase, 7_000), Response::Error(_)));
+        assert_eq!(a.handle_at(&erase, 20_000), Response::Ok);
+        assert_eq!(a.storage_value("k"), None);
+    }
+
+    #[test]
+    fn striped_deferred_contract_matches_handle() {
+        let a = StripedAcceptor::new_mem(1, 2);
+        let (resp, persist) = a.handle_deferred(&prep("k", 1, 1));
+        assert!(matches!(resp, Response::Promise { .. }));
+        persist.wait().unwrap();
+        let (resp, persist) = a.handle_deferred(&acc("k", 1, 1, 7));
+        assert_eq!(resp, Response::Accepted);
+        assert!(persist.is_done());
+        assert_eq!(a.storage_value("k"), Some(7));
+    }
+
+    #[test]
+    fn striped_from_acceptor_preserves_state() {
+        let mut classic = Acceptor::new(9);
+        classic.handle(&acc("k", 1, 1, 5));
+        let striped = StripedAcceptor::from_acceptor(classic);
+        assert_eq!(striped.id, 9);
+        assert_eq!(striped.stripe_count(), 1);
+        assert_eq!(striped.storage_value("k"), Some(5));
     }
 }

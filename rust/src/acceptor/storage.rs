@@ -22,6 +22,20 @@
 //! skips the window). [`Storage::store`] is simply `store_deferred` + `wait`,
 //! so single-threaded callers keep the classic durable-before-return
 //! contract.
+//!
+//! ## Stripe-shared WAL
+//!
+//! [`FileStorage::open_striped`] opens ONE log shared by N acceptor
+//! stripes (see [`crate::acceptor::StripedAcceptor`]): every handle
+//! appends into the same group-commit [`Wal`] — so stripes that never
+//! contend on a lock still coalesce under one fsync — while each handle
+//! indexes only the registers that hash to its stripe. Records written
+//! by striped handles are tagged with their stripe id; replay routes
+//! slot records by [`stripe_of`] over the *current* stripe count (never
+//! by the tag alone), so legacy logs and re-striped reopens land every
+//! key on the stripe that will serve it. At `stripes = 1` the records
+//! are the legacy untagged kind and the log stays byte-compatible with
+//! pre-stripe builds.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -241,12 +255,32 @@ impl Storage for MemStorage {
     }
 }
 
-/// One append-only log record.
+/// Key → stripe routing, shared by the striped acceptor's dispatch
+/// ([`crate::acceptor::StripedAcceptor`]) and the shared-WAL replay. A
+/// stable hash (CRC32 over the key bytes — already the log's framing
+/// checksum, stable across processes and versions), so a log written
+/// under one stripe count replays correctly under another: replay
+/// routes by THIS function over the current count, never by the
+/// recorded stripe tag alone.
+pub fn stripe_of(key: &str, stripes: usize) -> usize {
+    if stripes <= 1 {
+        return 0;
+    }
+    crc32fast::hash(key.as_bytes()) as usize % stripes
+}
+
+/// One append-only log record. The `Striped*` variants tag the owning
+/// stripe id ([`stripe_of`] at write time) so a shared-WAL log can be
+/// audited per stripe; legacy untagged records are what single-stripe
+/// logs keep writing (byte-compatible with pre-stripe builds).
 #[derive(Debug, PartialEq)]
 enum LogRec {
     Slot { key: Key, slot: Slot },
     Erase { key: Key },
     MinAge { proposer_id: u64, min_age: u64 },
+    StripedSlot { stripe: u32, key: Key, slot: Slot },
+    StripedErase { stripe: u32, key: Key },
+    StripedMinAge { stripe: u32, proposer_id: u64, min_age: u64 },
 }
 
 impl Codec for LogRec {
@@ -266,6 +300,23 @@ impl Codec for LogRec {
                 proposer_id.encode(out);
                 min_age.encode(out);
             }
+            LogRec::StripedSlot { stripe, key, slot } => {
+                out.push(3);
+                stripe.encode(out);
+                key.encode(out);
+                slot.encode(out);
+            }
+            LogRec::StripedErase { stripe, key } => {
+                out.push(4);
+                stripe.encode(out);
+                key.encode(out);
+            }
+            LogRec::StripedMinAge { stripe, proposer_id, min_age } => {
+                out.push(5);
+                stripe.encode(out);
+                proposer_id.encode(out);
+                min_age.encode(out);
+            }
         }
     }
     fn decode(input: &mut &[u8]) -> Result<Self, CodecError> {
@@ -273,6 +324,17 @@ impl Codec for LogRec {
             0 => LogRec::Slot { key: Key::decode(input)?, slot: Slot::decode(input)? },
             1 => LogRec::Erase { key: Key::decode(input)? },
             2 => LogRec::MinAge { proposer_id: u64::decode(input)?, min_age: u64::decode(input)? },
+            3 => LogRec::StripedSlot {
+                stripe: u32::decode(input)?,
+                key: Key::decode(input)?,
+                slot: Slot::decode(input)?,
+            },
+            4 => LogRec::StripedErase { stripe: u32::decode(input)?, key: Key::decode(input)? },
+            5 => LogRec::StripedMinAge {
+                stripe: u32::decode(input)?,
+                proposer_id: u64::decode(input)?,
+                min_age: u64::decode(input)?,
+            },
             _ => return Err(CodecError::Invalid("LogRec tag")),
         })
     }
@@ -468,10 +530,12 @@ impl Wal {
 ///
 /// Format note: slot records gained a trailing `Option<Lease>` when
 /// read leases landed, so logs written by earlier builds stop replaying
-/// at their first slot record (decode rejects the short body). The tree
-/// has no cross-version log compatibility story yet — see ROADMAP if
-/// one becomes needed; strict decoding is deliberate (the same codec
-/// pins reject torn frames byte-for-byte).
+/// at their first slot record (decode rejects the short body). The
+/// stripe bump (PR 5) was additive instead: striped handles write NEW
+/// record tags while `stripes = 1` keeps the legacy byte stream, and
+/// replay hash-routes either kind — logs stay readable across
+/// stripe-count changes in both directions. Strict decoding remains
+/// deliberate (the same codec pins reject torn frames byte-for-byte).
 pub struct FileStorage {
     path: PathBuf,
     wal: Arc<Wal>,
@@ -479,6 +543,55 @@ pub struct FileStorage {
     records: usize,
     /// fsync every write (safe default). Disable for throughput benches.
     pub fsync: bool,
+    /// `Some(i)` when this handle is stripe `i` of a shared-WAL set
+    /// ([`FileStorage::open_striped`]): appended records are tagged
+    /// with the stripe id, and runtime compaction is refused (one
+    /// stripe rewriting the file would drop its siblings' records).
+    stripe: Option<u32>,
+}
+
+/// Replays a log's bytes into `stripes` in-memory indexes. Slot and
+/// erase records route by [`stripe_of`] over the CURRENT stripe count —
+/// legacy untagged and striped records alike, so a log written under a
+/// different stripe count still lands every key on the stripe that
+/// will serve it. Min-age fences apply to EVERY stripe (the table is
+/// monotone-max, so over-application is always safe). Replay stops at
+/// the first torn or corrupt record. Returns the per-stripe indexes
+/// and the number of intact records replayed.
+fn replay_log(buf: &[u8], stripes: usize) -> (Vec<MemStorage>, usize) {
+    let mut mems: Vec<MemStorage> = (0..stripes.max(1)).map(|_| MemStorage::new()).collect();
+    let n = mems.len();
+    let mut records = 0;
+    let mut input = buf;
+    while input.len() >= 8 {
+        let len = u32::from_le_bytes(input[0..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(input[4..8].try_into().unwrap());
+        if input.len() < 8 + len {
+            break; // torn tail
+        }
+        let body = &input[8..8 + len];
+        if crc32fast::hash(body) != crc {
+            break; // corrupt record: stop replay
+        }
+        match LogRec::from_bytes(body) {
+            Ok(LogRec::Slot { key, slot }) | Ok(LogRec::StripedSlot { key, slot, .. }) => {
+                mems[stripe_of(&key, n)].store(&key, &slot).ok();
+            }
+            Ok(LogRec::Erase { key }) | Ok(LogRec::StripedErase { key, .. }) => {
+                mems[stripe_of(&key, n)].erase(&key).ok();
+            }
+            Ok(LogRec::MinAge { proposer_id, min_age })
+            | Ok(LogRec::StripedMinAge { proposer_id, min_age, .. }) => {
+                for mem in &mut mems {
+                    mem.store_min_age(proposer_id, min_age).ok();
+                }
+            }
+            Err(_) => break,
+        }
+        records += 1;
+        input = &input[8 + len..];
+    }
+    (mems, records)
 }
 
 impl FileStorage {
@@ -491,51 +604,16 @@ impl FileStorage {
     /// Opens (or creates) a log with explicit group-commit options.
     pub fn open_with(path: impl Into<PathBuf>, opts: GroupCommitOpts) -> CasResult<Self> {
         let path = path.into();
-        let mut mem = MemStorage::new();
-        let mut records = 0;
-        if path.exists() {
-            let mut buf = Vec::new();
-            std::fs::File::open(&path)
-                .and_then(|mut f| f.read_to_end(&mut buf))
-                .map_err(|e| CasError::Transport(format!("open {path:?}: {e}")))?;
-            let mut input = buf.as_slice();
-            while input.len() >= 8 {
-                let len = u32::from_le_bytes(input[0..4].try_into().unwrap()) as usize;
-                let crc = u32::from_le_bytes(input[4..8].try_into().unwrap());
-                if input.len() < 8 + len {
-                    break; // torn tail
-                }
-                let body = &input[8..8 + len];
-                if crc32fast::hash(body) != crc {
-                    break; // corrupt record: stop replay
-                }
-                match LogRec::from_bytes(body) {
-                    Ok(LogRec::Slot { key, slot }) => {
-                        mem.store(&key, &slot).ok();
-                    }
-                    Ok(LogRec::Erase { key }) => {
-                        mem.erase(&key).ok();
-                    }
-                    Ok(LogRec::MinAge { proposer_id, min_age }) => {
-                        mem.store_min_age(proposer_id, min_age).ok();
-                    }
-                    Err(_) => break,
-                }
-                records += 1;
-                input = &input[8 + len..];
-            }
-        }
-        let file = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&path)
-            .map_err(|e| CasError::Transport(format!("append {path:?}: {e}")))?;
+        let (mut mems, records) = Self::replay_path(&path, 1)?;
+        let mem = mems.pop().expect("replay_log yields at least one stripe");
+        let file = Self::open_append(&path)?;
         let mut s = FileStorage {
             path,
             wal: Arc::new(Wal::new(file, opts)),
             mem,
             records,
             fsync: true,
+            stripe: None,
         };
         if s.records > 64 && s.records > 4 * (s.mem.len() + s.mem.min_ages.len()) {
             s.compact()?;
@@ -543,28 +621,156 @@ impl FileStorage {
         Ok(s)
     }
 
+    /// Opens ONE log shared by `stripes` acceptor stripes: one handle
+    /// per stripe, all appending into a single group-commit [`Wal`]
+    /// (stripes that never contend on a lock still coalesce under one
+    /// fsync) while each handle indexes only the registers that hash to
+    /// its stripe ([`stripe_of`] — the same routing
+    /// [`crate::acceptor::StripedAcceptor`] dispatches by).
+    ///
+    /// `stripes = 1` delegates to [`FileStorage::open_with`] and stays
+    /// byte-compatible with pre-stripe logs; striped handles tag their
+    /// records, and replay's hash routing keeps the log readable across
+    /// stripe-count changes in either direction. An oversized log is
+    /// compacted here, before the handles are built — the runtime
+    /// [`FileStorage::compact`] is refused on shared handles.
+    pub fn open_striped(
+        path: impl Into<PathBuf>,
+        opts: GroupCommitOpts,
+        stripes: usize,
+    ) -> CasResult<Vec<FileStorage>> {
+        assert!(stripes >= 1, "stripe count must be at least 1");
+        let path = path.into();
+        if stripes == 1 {
+            return Ok(vec![Self::open_with(path, opts)?]);
+        }
+        let (mems, mut records) = Self::replay_path(&path, stripes)?;
+        let live: usize = mems.iter().map(|m| m.len() + m.min_ages.len()).sum();
+        if records > 64 && records > 4 * live {
+            records = Self::rewrite_compacted(&path, &mems)?;
+        }
+        let file = Self::open_append(&path)?;
+        let wal = Arc::new(Wal::new(file, opts));
+        Ok(mems
+            .into_iter()
+            .enumerate()
+            .map(|(i, mem)| FileStorage {
+                path: path.clone(),
+                wal: Arc::clone(&wal),
+                // Whole-log record count mirrored on every handle; only
+                // informational for shared handles (compaction happens
+                // at open).
+                records,
+                mem,
+                fsync: true,
+                stripe: Some(i as u32),
+            })
+            .collect())
+    }
+
+    /// Reads and replays the log at `path` (absent = empty stripes).
+    fn replay_path(path: &std::path::Path, stripes: usize) -> CasResult<(Vec<MemStorage>, usize)> {
+        if !path.exists() {
+            return Ok(((0..stripes.max(1)).map(|_| MemStorage::new()).collect(), 0));
+        }
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut buf))
+            .map_err(|e| CasError::Transport(format!("open {path:?}: {e}")))?;
+        Ok(replay_log(&buf, stripes))
+    }
+
+    /// Opens (creating if needed) the log file for appending.
+    fn open_append(path: &std::path::Path) -> CasResult<std::fs::File> {
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| CasError::Transport(format!("append {path:?}: {e}")))
+    }
+
+    /// Rewrites an oversized shared log with exactly the live records
+    /// (open-time compaction for striped sets). Returns the new record
+    /// count.
+    fn rewrite_compacted(path: &std::path::Path, mems: &[MemStorage]) -> CasResult<usize> {
+        let tmp = path.with_extension("compact");
+        let mut records = 0;
+        {
+            let mut f =
+                std::fs::File::create(&tmp).map_err(|e| CasError::Transport(e.to_string()))?;
+            let mut frame = Vec::new();
+            for (i, mem) in mems.iter().enumerate() {
+                for (key, slot) in mem.scan(None, usize::MAX) {
+                    frame.clear();
+                    frame_record(
+                        &LogRec::StripedSlot { stripe: i as u32, key, slot: (*slot).clone() },
+                        &mut frame,
+                    );
+                    f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+                    records += 1;
+                }
+            }
+            // Every stripe holds the same (union) min-age table, and a
+            // legacy record re-fences ALL stripes on replay: one record
+            // per proposer suffices.
+            for (proposer_id, min_age) in mems[0].load_min_ages() {
+                frame.clear();
+                frame_record(&LogRec::MinAge { proposer_id, min_age }, &mut frame);
+                f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+                records += 1;
+            }
+            f.sync_data().map_err(|e| CasError::Transport(e.to_string()))?;
+        }
+        std::fs::rename(&tmp, path).map_err(|e| CasError::Transport(e.to_string()))?;
+        Ok(records)
+    }
+
+    /// This handle's stripe id within a shared-WAL set (`None` for a
+    /// classic sole-owner log).
+    pub fn stripe(&self) -> Option<u32> {
+        self.stripe
+    }
+
     /// Enqueues one record; the returned ticket must be waited on.
-    fn append_deferred(&mut self, rec: &LogRec) -> CasResult<Persist> {
+    /// Shared-WAL handles tag the record with their stripe id first.
+    fn append_deferred(&mut self, rec: LogRec) -> CasResult<Persist> {
+        let rec = match self.stripe {
+            None => rec,
+            Some(stripe) => match rec {
+                LogRec::Slot { key, slot } => LogRec::StripedSlot { stripe, key, slot },
+                LogRec::Erase { key } => LogRec::StripedErase { stripe, key },
+                LogRec::MinAge { proposer_id, min_age } => {
+                    LogRec::StripedMinAge { stripe, proposer_id, min_age }
+                }
+                tagged => tagged,
+            },
+        };
         let mut frame = Vec::new();
-        frame_record(rec, &mut frame);
+        frame_record(&rec, &mut frame);
         let seq = self.wal.append(&frame, self.fsync)?;
         self.records += 1;
         Ok(Persist::pending(Arc::clone(&self.wal), seq))
     }
 
     /// Appends one record durably (enqueue + wait).
-    fn append(&mut self, rec: &LogRec) -> CasResult<()> {
+    fn append(&mut self, rec: LogRec) -> CasResult<()> {
         self.append_deferred(rec)?.wait()
     }
 
     /// WAL counters: the fsyncs-per-accept ratio is
-    /// `fsyncs / appends` (1.0 without group commit).
+    /// `fsyncs / appends` (1.0 without group commit). On a shared-WAL
+    /// stripe set every handle reports the same (aggregate) counters.
     pub fn wal_stats(&self) -> WalStats {
         self.wal.stats()
     }
 
     /// Rewrites the log with exactly the live records.
     pub fn compact(&mut self) -> CasResult<()> {
+        if self.stripe.is_some() {
+            return Err(CasError::Transport(
+                "striped shared-WAL logs compact on open, not per handle".into(),
+            ));
+        }
         // Drain pending appends first: `&mut self` keeps new appends
         // out, and outstanding tickets resolve without flushing.
         self.wal.flush_all()?;
@@ -606,8 +812,7 @@ impl Storage for FileStorage {
     }
 
     fn store_deferred(&mut self, key: &Key, slot: &Slot) -> CasResult<Persist> {
-        let ticket =
-            self.append_deferred(&LogRec::Slot { key: key.clone(), slot: slot.clone() })?;
+        let ticket = self.append_deferred(LogRec::Slot { key: key.clone(), slot: slot.clone() })?;
         self.mem.store(key, slot)?;
         Ok(ticket)
     }
@@ -622,7 +827,7 @@ impl Storage for FileStorage {
     }
 
     fn erase(&mut self, key: &Key) -> CasResult<()> {
-        self.append(&LogRec::Erase { key: key.clone() })?;
+        self.append(LogRec::Erase { key: key.clone() })?;
         self.mem.erase(key)
     }
 
@@ -635,7 +840,7 @@ impl Storage for FileStorage {
     }
 
     fn store_min_age(&mut self, proposer_id: u64, min_age: u64) -> CasResult<()> {
-        self.append(&LogRec::MinAge { proposer_id, min_age })?;
+        self.append(LogRec::MinAge { proposer_id, min_age })?;
         self.mem.store_min_age(proposer_id, min_age)
     }
 
@@ -647,7 +852,7 @@ impl Storage for FileStorage {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testkit::TempDir;
+    use crate::testkit::{key_on_stripe, TempDir};
 
     fn slot(c: u64) -> Slot {
         Slot {
@@ -706,9 +911,31 @@ mod tests {
             LogRec::Slot { key: "k".into(), slot: leased_slot(3, 9, 5_000_000) },
             LogRec::Erase { key: "k".into() },
             LogRec::MinAge { proposer_id: 7, min_age: 2 },
+            LogRec::StripedSlot { stripe: 3, key: "k".into(), slot: slot(3) },
+            LogRec::StripedSlot { stripe: 0, key: "k".into(), slot: leased_slot(3, 9, 5) },
+            LogRec::StripedErase { stripe: 2, key: "k".into() },
+            LogRec::StripedMinAge { stripe: 1, proposer_id: 7, min_age: 2 },
         ] {
             assert_eq!(LogRec::from_bytes(&rec.to_bytes()).unwrap(), rec);
         }
+    }
+
+    #[test]
+    fn stripe_of_is_stable_and_in_range() {
+        for key in ["a", "b", "hot", "s0-k1", ""] {
+            assert_eq!(stripe_of(key, 1), 0);
+            for n in [2usize, 4, 7] {
+                let s = stripe_of(key, n);
+                assert!(s < n);
+                assert_eq!(s, stripe_of(key, n), "routing must be deterministic");
+            }
+        }
+        // Spreads: 256 distinct keys over 4 stripes never all collide.
+        let mut seen = [false; 4];
+        for i in 0..256 {
+            seen[stripe_of(&format!("key-{i}"), 4)] = true;
+        }
+        assert!(seen.iter().all(|s| *s), "hash routing must reach every stripe");
     }
 
     #[test]
@@ -917,5 +1144,158 @@ mod tests {
         fence.wait().unwrap();
         ticket.wait().unwrap(); // already durable; returns immediately
         assert!(s.read_fence().is_done());
+    }
+
+    #[test]
+    fn striped_handles_share_one_wal_and_filter_replay() {
+        let dir = TempDir::new("striped").unwrap();
+        let path = dir.file("acceptor.log");
+        let keys: Vec<Key> = (0..4).map(|s| key_on_stripe(s, 4, 1)).collect();
+        {
+            let mut stripes = FileStorage::open_striped(&path, GroupCommitOpts::default(), 4)
+                .unwrap();
+            // Interleave appends across stripes; one wait flushes all
+            // four records in one shared batch.
+            let tickets: Vec<Persist> = (0..4)
+                .map(|s| stripes[s].store_deferred(&keys[s], &slot(s as u64 + 1)).unwrap())
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
+            }
+            let stats = stripes[0].wal_stats();
+            assert_eq!(stats.appends, 4);
+            assert_eq!(stats.fsyncs, 1, "four stripes, one shared fsync");
+            // Every handle reports the same shared counters.
+            assert_eq!(stripes[3].wal_stats(), stats);
+        }
+        let stripes = FileStorage::open_striped(&path, GroupCommitOpts::default(), 4).unwrap();
+        for (s, stripe) in stripes.iter().enumerate() {
+            assert_eq!(stripe.stripe(), Some(s as u32));
+            assert_eq!(
+                stripe.load(&keys[s]),
+                Some(slot(s as u64 + 1)),
+                "stripe {s} lost its record"
+            );
+            assert_eq!(stripe.len(), 1, "stripe {s} must hold ONLY its own key");
+        }
+    }
+
+    #[test]
+    fn legacy_log_replays_into_striped_set_by_key_hash() {
+        // A pre-stripe log (untagged records) opened striped: every key
+        // lands on the stripe that will serve it, min-age fences on all.
+        let dir = TempDir::new("striped-legacy").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            for i in 0..8u64 {
+                s.store(&format!("k{i}"), &slot(i)).unwrap();
+            }
+            s.store_min_age(7, 3).unwrap();
+        }
+        let stripes = FileStorage::open_striped(&path, GroupCommitOpts::default(), 4).unwrap();
+        for i in 0..8u64 {
+            let key = format!("k{i}");
+            let owner = stripe_of(&key, 4);
+            assert_eq!(stripes[owner].load(&key), Some(slot(i)), "k{i} missing on its stripe");
+            for (s, stripe) in stripes.iter().enumerate() {
+                if s != owner {
+                    assert!(stripe.load(&key).is_none(), "k{i} leaked onto stripe {s}");
+                }
+                assert_eq!(stripe.load_min_ages().get(&7), Some(&3), "fence missing on {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn restriping_reopens_route_by_hash_not_tag() {
+        // Written under 4 stripes, reopened under 2 (and back under 1):
+        // hash routing over the CURRENT count keeps every key readable.
+        let dir = TempDir::new("restripe").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut stripes =
+                FileStorage::open_striped(&path, GroupCommitOpts::default(), 4).unwrap();
+            for i in 0..8u64 {
+                let key = format!("k{i}");
+                let owner = stripe_of(&key, 4);
+                stripes[owner].store(&key, &slot(i)).unwrap();
+            }
+        }
+        let stripes = FileStorage::open_striped(&path, GroupCommitOpts::default(), 2).unwrap();
+        for i in 0..8u64 {
+            let key = format!("k{i}");
+            assert_eq!(stripes[stripe_of(&key, 2)].load(&key), Some(slot(i)), "k{i} lost");
+        }
+        drop(stripes);
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.len(), 8, "single-stripe reopen reads tagged records too");
+    }
+
+    #[test]
+    fn single_stripe_log_stays_byte_identical_to_legacy_format() {
+        // open_striped(.., 1) IS the legacy opener: same records, same
+        // bytes — pre-stripe logs and stripes=1 logs are interchangeable.
+        let dir = TempDir::new("stripe1").unwrap();
+        let legacy_path = dir.file("legacy.log");
+        let striped_path = dir.file("striped.log");
+        {
+            let mut legacy = FileStorage::open(&legacy_path).unwrap();
+            let mut striped =
+                FileStorage::open_striped(&striped_path, GroupCommitOpts::default(), 1).unwrap();
+            assert_eq!(striped.len(), 1);
+            let one = &mut striped[0];
+            assert_eq!(one.stripe(), None, "a sole stripe is a classic unshared log");
+            for i in 0..5u64 {
+                legacy.store(&format!("k{i}"), &slot(i)).unwrap();
+                one.store(&format!("k{i}"), &slot(i)).unwrap();
+            }
+            legacy.erase(&"k0".to_string()).unwrap();
+            one.erase(&"k0".to_string()).unwrap();
+            legacy.store_min_age(9, 2).unwrap();
+            one.store_min_age(9, 2).unwrap();
+        }
+        assert_eq!(
+            std::fs::read(&legacy_path).unwrap(),
+            std::fs::read(&striped_path).unwrap(),
+            "stripes=1 must write the exact legacy byte stream"
+        );
+    }
+
+    #[test]
+    fn shared_handles_refuse_runtime_compaction() {
+        let dir = TempDir::new("striped-compact").unwrap();
+        let path = dir.file("acceptor.log");
+        let mut stripes = FileStorage::open_striped(&path, GroupCommitOpts::default(), 2).unwrap();
+        stripes[0].store(&key_on_stripe(0, 2, 2), &slot(1)).unwrap();
+        assert!(
+            stripes[0].compact().is_err(),
+            "a shared handle must not rewrite the whole log"
+        );
+    }
+
+    #[test]
+    fn striped_open_compacts_oversized_logs() {
+        let dir = TempDir::new("striped-gc").unwrap();
+        let path = dir.file("acceptor.log");
+        let hot0 = key_on_stripe(0, 2, 3);
+        let hot1 = key_on_stripe(1, 2, 3);
+        {
+            let mut stripes =
+                FileStorage::open_striped(&path, GroupCommitOpts::default(), 2).unwrap();
+            for s in &mut stripes {
+                s.fsync = false;
+            }
+            for i in 0..200u64 {
+                stripes[0].store(&hot0, &slot(i)).unwrap();
+                stripes[1].store(&hot1, &slot(i)).unwrap();
+            }
+        }
+        let before = std::fs::metadata(&path).unwrap().len();
+        let stripes = FileStorage::open_striped(&path, GroupCommitOpts::default(), 2).unwrap();
+        assert_eq!(stripes[0].load(&hot0), Some(slot(199)));
+        assert_eq!(stripes[1].load(&hot1), Some(slot(199)));
+        let after = std::fs::metadata(&path).unwrap().len();
+        assert!(after < before / 10, "striped open compaction shrank {before} -> {after}");
     }
 }

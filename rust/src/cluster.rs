@@ -29,6 +29,16 @@ impl MemCluster {
         MemCluster { transport, cfg }
     }
 
+    /// Builds a cluster of `n` acceptors, each lock-striped `stripes`
+    /// ways ([`crate::acceptor::StripedAcceptor`]): requests on
+    /// independent keys never contend on a node's acceptor lock.
+    /// Protocol semantics are identical to [`MemCluster::new`].
+    pub fn new_striped(n: usize, stripes: usize) -> Self {
+        let transport = Arc::new(MemTransport::new_striped(n, stripes));
+        let cfg = ClusterConfig::majority(1, transport.acceptor_ids());
+        MemCluster { transport, cfg }
+    }
+
     /// The shared transport (fault toggles, inspection).
     pub fn transport(&self) -> Arc<MemTransport> {
         Arc::clone(&self.transport)
@@ -142,6 +152,20 @@ mod tests {
         for i in 0..16 {
             assert_eq!(kv.get(&format!("k{i}")).unwrap().unwrap().as_num(), Some(i));
         }
+    }
+
+    #[test]
+    fn striped_cluster_same_semantics() {
+        let cluster = MemCluster::new_striped(3, 4);
+        let kv = cluster.kv(2);
+        for i in 0..16 {
+            kv.set(&format!("k{i}"), i).unwrap();
+        }
+        for i in 0..16 {
+            assert_eq!(kv.get(&format!("k{i}")).unwrap().unwrap().as_num(), Some(i));
+        }
+        let p = cluster.proposer(9);
+        assert_eq!(p.add("k0", 5).unwrap().as_num(), Some(5));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! quorum 2 2          # optional: prepare accept (default: majority)
 //! shards 2            # optional: acceptor shard count (default: 1)
 //! shard_quorum 2 2    # optional: per-shard prepare accept
+//! stripes 4           # optional: per-node acceptor lock stripes (default: 1)
 //! ```
 //!
 //! The same `id=addr` pairs are accepted from the command line:
@@ -19,6 +20,13 @@
 //! contiguous disjoint groups ([`crate::shard::ShardPlan`]); the
 //! whole-cluster `quorum` directive is then meaningless and rejected —
 //! use `shard_quorum` to tune the per-group FPaxos spec instead.
+//!
+//! `stripes` is orthogonal to `shards`: shards partition the CLUSTER
+//! into disjoint acceptor groups, stripes lock-stripe EACH node's own
+//! acceptor across cores (N key-hashed slot maps sharing one
+//! group-commit WAL, see [`crate::acceptor::StripedAcceptor`]). The
+//! on-disk log stays compatible across stripe-count changes in either
+//! direction (replay routes by key hash).
 
 use std::collections::HashMap;
 
@@ -37,6 +45,9 @@ pub struct Deployment {
     pub shards: usize,
     /// Per-shard (prepare, accept) quorum override.
     pub shard_quorum: Option<(usize, usize)>,
+    /// Per-node acceptor lock-stripe count (1 = classic single-lock
+    /// acceptor). See `crate::server::NodeOpts::stripes`.
+    pub stripes: usize,
 }
 
 impl Deployment {
@@ -46,6 +57,7 @@ impl Deployment {
         let mut quorum: Option<(usize, usize)> = None;
         let mut shards: Option<usize> = None;
         let mut shard_quorum: Option<(usize, usize)> = None;
+        let mut stripes: Option<usize> = None;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
@@ -78,11 +90,18 @@ impl Deployment {
                     let a = a.parse().map_err(|_| bad(lineno, "bad shard accept quorum"))?;
                     shard_quorum = Some((p, a));
                 }
+                ["stripes", n] => {
+                    let n: usize = n.parse().map_err(|_| bad(lineno, "bad stripe count"))?;
+                    if n == 0 {
+                        return Err(bad(lineno, "stripe count must be at least 1"));
+                    }
+                    stripes = Some(n);
+                }
                 _ => {
                     return Err(bad(
                         lineno,
-                        "expected `node <id> <addr>`, `quorum <p> <a>`, \
-                         `shards <n>` or `shard_quorum <p> <a>`",
+                        "expected `node <id> <addr>`, `quorum <p> <a>`, `shards <n>`, \
+                         `shard_quorum <p> <a>` or `stripes <n>`",
                     ))
                 }
             }
@@ -111,7 +130,8 @@ impl Deployment {
             Some((p, a)) => QuorumSpec::flexible(n, p, a)?,
             None => QuorumSpec::majority(n),
         };
-        let deployment = Deployment { peers, quorum, shards, shard_quorum };
+        let stripes = stripes.unwrap_or(1);
+        let deployment = Deployment { peers, quorum, shards, shard_quorum, stripes };
         // Fail at parse time, not at node start: a bad shard carve
         // (uneven groups with an explicit shard_quorum, non-intersecting
         // per-shard quorums) is a config error.
@@ -247,6 +267,25 @@ mod tests {
             Deployment::parse(&format!("{base}quorum 2 2\nshard_quorum 2 2\n")).is_err(),
             "both quorum directives"
         );
+    }
+
+    #[test]
+    fn parse_striped_config() {
+        let base = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\n";
+        let d = Deployment::parse(base).unwrap();
+        assert_eq!(d.stripes, 1, "default is the classic single-lock acceptor");
+        let d = Deployment::parse(&format!("{base}stripes 4\n")).unwrap();
+        assert_eq!(d.stripes, 4);
+        // Orthogonal to shards: both directives may coexist.
+        let sharded = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\nnode 4 a:4\n\
+                       node 5 a:5\nnode 6 a:6\nshards 2\nstripes 8\n";
+        let d = Deployment::parse(sharded).unwrap();
+        assert_eq!((d.shards, d.stripes), (2, 8));
+        // Stripe counts may exceed the node count (they're per-node).
+        let d = Deployment::parse(&format!("{base}stripes 64\n")).unwrap();
+        assert_eq!(d.stripes, 64);
+        assert!(Deployment::parse(&format!("{base}stripes 0\n")).is_err(), "zero stripes");
+        assert!(Deployment::parse(&format!("{base}stripes x\n")).is_err(), "bad stripe count");
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //!
 //! Every step is idempotent, so a failed run can simply be retried
 //! (`collect` returns an error and the queue holds the key).
+//!
+//! Lock-striped acceptors (`acceptor::StripedAcceptor`) are
+//! transparent to this process: step 2c's `SetMinAge` broadcasts to
+//! every stripe inside the acceptor (the fence must hold wherever a
+//! fenced proposer's keys hash), and step 2d's `Erase` routes to the
+//! key's owning stripe — collect walks all stripes without knowing
+//! they exist.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -393,6 +400,37 @@ mod tests {
         // shard's acceptors.
         for a in 1..=6 {
             assert_eq!(transport.register_count(a), Some(0), "acceptor {a} not empty");
+        }
+    }
+
+    #[test]
+    fn collect_walks_striped_acceptors() {
+        // 4-stripe nodes: erase must reclaim every key on its owning
+        // stripe, and the 2c min-age fence must hold on EVERY stripe.
+        let transport = Arc::new(MemTransport::new_striped(3, 4));
+        let cfg = ClusterConfig::majority(1, transport.acceptor_ids());
+        let p = Arc::new(Proposer::new(1, cfg.clone(), transport.clone()));
+        let gc = GcProcess::new(transport.clone(), vec![p.clone()]);
+        for i in 0..8 {
+            p.set(format!("k{i}"), i).unwrap();
+        }
+        for i in 0..8 {
+            p.delete(format!("k{i}")).unwrap();
+            gc.schedule(format!("k{i}"));
+        }
+        let (ok, sup, failed) = gc.collect_all(&cfg);
+        assert_eq!((ok, sup, failed), (8, 0, 0));
+        for a in 1..=3 {
+            assert_eq!(transport.register_count(a), Some(0), "acceptor {a} not reclaimed");
+        }
+        // An old incarnation (age 0) is fenced no matter which stripe
+        // its key hashes to.
+        let old = Proposer::new(1, cfg, transport.clone());
+        for i in 0..8 {
+            assert!(
+                matches!(old.set(format!("k{i}"), 1), Err(CasError::StaleAge { .. })),
+                "k{i}'s stripe missed the min-age fence"
+            );
         }
     }
 

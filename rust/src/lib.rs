@@ -84,6 +84,20 @@
 //! `FileStorage::wal_stats()` exposes appends/flushes/fsyncs — the
 //! fsyncs-per-accept ratio is the group-commit win.
 //!
+//! ## Striped write path
+//!
+//! Registers are independent RSMs, so a node's acceptor lock-stripes
+//! ([`acceptor::StripedAcceptor`]): N key-hashed stripes, each an
+//! independent slot map + lease table behind its own lock, all
+//! appending into ONE shared group-commit WAL
+//! ([`acceptor::FileStorage::open_striped`]) — requests on independent
+//! keys never contend on a lock while their records still coalesce
+//! under shared fsyncs. Replay is stripe-filtered and hash-routed
+//! (tolerates stripe-count changes; `stripes = 1` stays byte-compatible
+//! with pre-stripe logs). Configure via the `stripes` config directive
+//! / `server::NodeOpts::stripes`; `benches/write_path.rs` measures the
+//! scaling.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

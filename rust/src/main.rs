@@ -26,7 +26,7 @@ use caspaxos::server::{start_node, Client, ClientReq, ClientResp, NodeOpts};
 fn usage() -> ! {
     eprintln!(
         "usage:\n  caspaxos node --id <n> (--config <file> | --peers <1=a,2=b,...>)\n\
-         \x20                [--listen-client <addr>] [--data <dir>]\n\
+         \x20                [--listen-client <addr>] [--data <dir>] [--stripes <n>]\n\
          \x20 caspaxos client --connect <addr> \
          <get|getcas|getmany|set|add|cas|del|collect|status> [args...]\n\
          \x20 caspaxos rtt-table"
@@ -62,7 +62,7 @@ fn run_node(mut args: Vec<String>) {
         .unwrap_or_else(|| usage())
         .parse()
         .unwrap_or_else(|_| usage());
-    let (peers, quorum, shard_plan): (HashMap<u64, String>, _, _) =
+    let (peers, quorum, shard_plan, cfg_stripes): (HashMap<u64, String>, _, _, usize) =
         if let Some(path) = take_flag(&mut args, "--config") {
             let d = Deployment::load(&path).unwrap_or_else(|e| {
                 eprintln!("config: {e}");
@@ -73,16 +73,28 @@ fn run_node(mut args: Vec<String>) {
                 exit(1)
             });
             let plan = if d.shards > 1 { Some(plan) } else { None };
-            (d.peers.clone(), Some(d.quorum), plan)
+            (d.peers.clone(), Some(d.quorum), plan, d.stripes)
         } else if let Some(spec) = take_flag(&mut args, "--peers") {
             let peers = Deployment::parse_peers(&spec).unwrap_or_else(|e| {
                 eprintln!("peers: {e}");
                 exit(1)
             });
-            (peers, None, None)
+            (peers, None, None, 1)
         } else {
             usage()
         };
+    // `--stripes` overrides the config's `stripes` directive.
+    let stripes: usize = match take_flag(&mut args, "--stripes") {
+        Some(n) => {
+            let n = n.parse().unwrap_or_else(|_| usage());
+            if n == 0 {
+                eprintln!("--stripes must be at least 1");
+                exit(1)
+            }
+            n
+        }
+        None => cfg_stripes,
+    };
     let Some(acceptor_addr) = peers.get(&id).cloned() else {
         eprintln!("node id {id} not in peer map");
         exit(1)
@@ -119,6 +131,7 @@ fn run_node(mut args: Vec<String>) {
         client_peers,
         cluster,
         shard_plan,
+        stripes,
         data_dir,
         lease: None,
     })
@@ -127,7 +140,8 @@ fn run_node(mut args: Vec<String>) {
         exit(1)
     });
     println!(
-        "caspaxos node {id}: acceptor on {}, clients on {} ({shards} shard(s))",
+        "caspaxos node {id}: acceptor on {}, clients on {} \
+         ({shards} shard(s), {stripes} stripe(s))",
         node.acceptor_addr, node.client_addr
     );
     // Serve until killed.

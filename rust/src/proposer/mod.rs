@@ -640,6 +640,17 @@ impl Proposer {
             self.metrics.read_fallback.load(Ordering::Relaxed),
         )
     }
+
+    /// In-flight request depth on this proposer's transport (`None`
+    /// when the transport doesn't track one — in-process transports
+    /// complete synchronously). The backpressure gauge: it rises while
+    /// an acceptor stalls and drains as replies land or the transport's
+    /// timeout sweep expires the stuck requests. Callers shedding load
+    /// should throttle new rounds when this climbs, instead of piling
+    /// more requests onto a struggling connection.
+    pub fn transport_inflight(&self) -> Option<usize> {
+        self.transport.inflight()
+    }
 }
 
 #[cfg(test)]
@@ -762,6 +773,16 @@ mod tests {
         let total = reader.get("ctr").unwrap().as_num().unwrap();
         assert_eq!(total, ok, "every acknowledged increment is counted exactly once");
         assert!(ok > 0);
+    }
+
+    #[test]
+    fn mem_transport_reports_no_inflight_depth() {
+        // The in-process transport completes sends synchronously:
+        // there is no pending map, so no depth gauge to surface.
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t);
+        p.set("k", 1).unwrap();
+        assert_eq!(p.transport_inflight(), None);
     }
 
     #[test]

@@ -26,12 +26,22 @@
 //! a node hosts one acceptor, and which shard that acceptor belongs to
 //! is entirely a property of the plan. Deletion GC collects each key
 //! against its owning group only ([`GcProcess::collect_all_with`]).
+//!
+//! ## Striped acceptor core
+//!
+//! Orthogonally, [`NodeOpts::stripes`] lock-stripes the node's OWN
+//! acceptor ([`StripedAcceptor`]): requests on independent keys are
+//! handled under independent locks while every stripe appends into one
+//! shared group-commit WAL, so a multi-client write load scales across
+//! cores without multiplying fsyncs. `Status` exports the shared WAL's
+//! `wal_appends`/`wal_fsyncs` (their gap is the group-commit win) and
+//! the transport's `inflight` depth (proposer-side backpressure).
 
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use crate::acceptor::{Acceptor, FileStorage, MemStorage};
+use crate::acceptor::{GroupCommitOpts, StripedAcceptor, WalStats};
 use crate::batch::BatchProposer;
 use crate::change::ChangeFn;
 use crate::codec::{decode_seq, encode_seq, Codec, CodecError, Envelope};
@@ -44,7 +54,7 @@ use crate::runtime::auto_engine;
 use crate::shard::{ShardPlan, ShardRouter};
 use crate::state::Val;
 use crate::transport::tcp::{
-    read_frame, serve_acceptor, serve_pipelined, write_envelope, Handled, TcpTransport,
+    read_frame, serve_pipelined, serve_striped_acceptor, write_envelope, Handled, TcpTransport,
 };
 
 /// Client-facing request.
@@ -275,6 +285,15 @@ pub struct NodeOpts {
     pub cluster: ClusterConfig,
     /// Acceptor sharding. `None` = one shard over `cluster` (classic).
     pub shard_plan: Option<ShardPlan>,
+    /// Acceptor lock-stripe count: this node's registers spread over
+    /// `stripes` independently locked slot maps sharing ONE group-commit
+    /// WAL ([`StripedAcceptor`]), so requests on independent keys never
+    /// contend on the acceptor lock while their records still coalesce
+    /// under one fsync. `0` is treated as 1 (the classic single-lock
+    /// acceptor; on-disk format unchanged). Orthogonal to `shard_plan`:
+    /// shards scale the CLUSTER across disjoint acceptor groups,
+    /// stripes scale ONE node across cores.
+    pub stripes: usize,
     /// Durable storage directory (`None` = in-memory).
     pub data_dir: Option<String>,
     /// Enable 0-RTT read leases on every shard proposer (each becomes
@@ -295,6 +314,8 @@ pub struct Node {
     pub shard_proposers: Vec<Arc<Proposer>>,
     /// The node's GC process.
     pub gc: Arc<GcProcess>,
+    /// Acceptor lock-stripe count this node runs with.
+    pub stripes: usize,
 }
 
 /// Everything the client service needs to route a request: the key→shard
@@ -305,6 +326,12 @@ struct NodeCtx {
     proposers: Vec<Arc<Proposer>>,
     batches: Vec<Arc<BatchProposer>>,
     gc: Arc<GcProcess>,
+    /// Acceptor lock-stripe count (exported through `Status`).
+    stripes: usize,
+    /// Shared-WAL counter snapshot for `Status` (file-backed acceptors
+    /// only; every stripe appends to the one WAL, so this IS the
+    /// aggregate across stripes).
+    wal_stats: Option<Arc<dyn Fn() -> WalStats + Send + Sync>>,
 }
 
 impl NodeCtx {
@@ -320,23 +347,31 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         .map_err(|e| CasError::Transport(format!("bind {}: {e}", opts.acceptor_addr)))?;
     let acceptor_addr =
         acceptor_listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
-    match &opts.data_dir {
+    let stripes = opts.stripes.max(1);
+    let wal_stats: Option<Arc<dyn Fn() -> WalStats + Send + Sync>> = match &opts.data_dir {
         Some(dir) => {
             std::fs::create_dir_all(dir)
                 .map_err(|e| CasError::Transport(format!("mkdir {dir}: {e}")))?;
-            let store = FileStorage::open(format!("{dir}/acceptor-{}.log", opts.id))?;
-            let acc = Acceptor::with_storage(opts.id, store);
+            let acc = Arc::new(StripedAcceptor::open(
+                opts.id,
+                format!("{dir}/acceptor-{}.log", opts.id),
+                GroupCommitOpts::default(),
+                stripes,
+            )?);
+            let serve = Arc::clone(&acc);
             std::thread::spawn(move || {
-                let _ = serve_acceptor(acceptor_listener, acc);
+                let _ = serve_striped_acceptor(acceptor_listener, serve);
             });
+            Some(Arc::new(move || acc.wal_stats()))
         }
         None => {
-            let acc = Acceptor::with_storage(opts.id, MemStorage::new());
+            let acc = Arc::new(StripedAcceptor::new_mem(opts.id, stripes));
             std::thread::spawn(move || {
-                let _ = serve_acceptor(acceptor_listener, acc);
+                let _ = serve_striped_acceptor(acceptor_listener, acc);
             });
+            None
         }
-    }
+    };
 
     // ---- per-shard proposers + batchers + gc over the peer transport ----
     let mut peers = opts.peers.clone();
@@ -395,6 +430,8 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         proposers: shard_proposers.clone(),
         batches,
         gc: Arc::clone(&gc),
+        stripes,
+        wal_stats,
     });
 
     // ---- client service ----
@@ -416,6 +453,7 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         proposer: shard_proposers[0].clone(),
         shard_proposers,
         gc,
+        stripes,
     })
 }
 
@@ -498,10 +536,20 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 snap[6] += b.metrics.read_fast.load(std::sync::atomic::Ordering::Relaxed);
                 snap[7] += b.metrics.read_fallback.load(std::sync::atomic::Ordering::Relaxed);
             }
+            // Shared-WAL counters (file-backed nodes; one WAL serves
+            // every stripe, so this IS the per-stripe aggregate) and
+            // the proposer-side in-flight depth (backpressure gauge).
+            let wal = ctx.wal_stats.as_ref().map(|f| f()).unwrap_or(WalStats {
+                appends: 0,
+                flushes: 0,
+                fsyncs: 0,
+            });
+            let inflight = ctx.proposers[0].transport_inflight().unwrap_or(0);
             ClientResp::Status(format!(
                 "id={} shards={} rounds={} commits={} conflicts={} retries={} \
                  cache_hits={} failures={} read_fast={} read_fallback={} \
-                 read_lease={} lease_renew={} lease_break={} gc_pending={}",
+                 read_lease={} lease_renew={} lease_break={} gc_pending={} \
+                 stripes={} wal_appends={} wal_flushes={} wal_fsyncs={} inflight={}",
                 ctx.proposers[0].id(),
                 ctx.shards.len(),
                 snap[0],
@@ -515,7 +563,12 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 snap[8],
                 snap[9],
                 snap[10],
-                ctx.gc.pending()
+                ctx.gc.pending(),
+                ctx.stripes,
+                wal.appends,
+                wal.flushes,
+                wal.fsyncs,
+                inflight
             ))
         }
     }
@@ -679,6 +732,7 @@ mod tests {
     fn launch_cluster_opts(
         n: u64,
         shards: usize,
+        stripes: usize,
         data: Option<&TempDir>,
         lease: Option<crate::proposer::LeaseOpts>,
     ) -> Vec<Node> {
@@ -708,6 +762,7 @@ mod tests {
                     client_peers: client_peers.clone(),
                     cluster: cluster.clone(),
                     shard_plan: shard_plan.clone(),
+                    stripes,
                     data_dir: data.map(|d| d.path().to_str().unwrap().to_string()),
                     lease: lease.clone(),
                 })
@@ -717,7 +772,7 @@ mod tests {
     }
 
     fn launch_cluster_sharded(n: u64, shards: usize, data: Option<&TempDir>) -> Vec<Node> {
-        launch_cluster_opts(n, shards, data, None)
+        launch_cluster_opts(n, shards, 1, data, None)
     }
 
     fn launch_cluster(n: u64, data: Option<&TempDir>) -> Vec<Node> {
@@ -864,6 +919,50 @@ mod tests {
     }
 
     #[test]
+    fn striped_node_cluster_serves_and_exports_wal_counters() {
+        // 4-stripe nodes over durable storage: the whole client surface
+        // works unchanged, and Status exports the shared-WAL counters
+        // with appends outrunning fsyncs (group commit across stripes).
+        let dir = TempDir::new("striped-node").unwrap();
+        let nodes = launch_cluster_opts(3, 1, 4, Some(&dir), None);
+        assert_eq!(nodes[0].stripes, 4);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        for i in 0..12 {
+            c.change(&format!("k{i}"), ChangeFn::Set(i as i64)).unwrap();
+        }
+        // Any node serves any key, whatever stripe it hashes to.
+        let mut c2 = Client::connect(&nodes[2].client_addr.to_string()).unwrap();
+        for i in 0..12 {
+            assert_eq!(c2.get(&format!("k{i}")).unwrap().as_num(), Some(i as i64));
+        }
+        // Delete + collect walks the striped acceptors.
+        c.call(&ClientReq::Delete { key: "k0".into() }).unwrap();
+        match c.call(&ClientReq::Collect).unwrap() {
+            ClientResp::Status(s) => assert!(s.contains("collected=1"), "{s}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c2.get("k0").unwrap(), Val::Empty, "erased after GC");
+        match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => {
+                assert!(s.contains("stripes=4"), "{s}");
+                assert!(s.contains("inflight="), "{s}");
+                let field = |name: &str| -> u64 {
+                    s.split_whitespace()
+                        .find_map(|kv| kv.strip_prefix(name))
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or_else(|| panic!("missing {name} in {s}"))
+                };
+                assert!(field("wal_appends=") > 0, "writes must hit the shared WAL: {s}");
+                assert!(
+                    field("wal_fsyncs=") <= field("wal_appends="),
+                    "fsyncs can never outrun appends: {s}"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn lease_mode_node_serves_and_exports_counters() {
         use crate::proposer::LeaseOpts;
         // Short window: node 2's fallback read below must be able to
@@ -873,7 +972,7 @@ mod tests {
             skew_bound: std::time::Duration::from_millis(50),
             renew_margin: std::time::Duration::ZERO,
         };
-        let nodes = launch_cluster_opts(3, 1, None, Some(lease));
+        let nodes = launch_cluster_opts(3, 1, 1, None, Some(lease));
         let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
         c.change("k", ChangeFn::Set(7)).unwrap();
         // Repeat reads through the writer node: first acquires, the

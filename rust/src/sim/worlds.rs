@@ -59,6 +59,12 @@ pub struct ShardedWorldOpts {
     /// large benign offset (lease math is duration-based, so offsets
     /// must not matter). Off by default.
     pub skew_clocks: bool,
+    /// Lock-stripe every acceptor `stripes` ways
+    /// ([`crate::acceptor::StripedAcceptor`]). Semantics-preserving, so
+    /// legacy seeds replay bit-identically at 1 (the default); striped
+    /// worlds route every request through the striped dispatch — and
+    /// nemesis restarts land on striped nodes.
+    pub stripes: usize,
     /// Link model for every node pair.
     pub net: NetModel,
 }
@@ -74,6 +80,7 @@ impl Default for ShardedWorldOpts {
             quorum_reads: false,
             lease_reads: false,
             skew_clocks: false,
+            stripes: 1,
             net: NetModel::uniform(5_000),
         }
     }
@@ -116,7 +123,7 @@ pub struct ShardedWorld<S> {
     pub handles: Vec<Vec<S>>,
 }
 
-fn add_acceptors(world: &mut World<CasMsg>, plan: &ShardPlan, skew_clocks: bool) {
+fn add_acceptors(world: &mut World<CasMsg>, plan: &ShardPlan, skew_clocks: bool, stripes: usize) {
     for cfg in &plan.shards {
         for (i, &a) in cfg.acceptors.iter().enumerate() {
             let actor = if skew_clocks {
@@ -131,7 +138,7 @@ fn add_acceptors(world: &mut World<CasMsg>, plan: &ShardPlan, skew_clocks: bool)
             } else {
                 AcceptorActor::new(a)
             };
-            world.add_node(a, Region(i % 3), Box::new(actor));
+            world.add_node(a, Region(i % 3), Box::new(actor.striped(stripes.max(1))));
         }
     }
 }
@@ -147,7 +154,7 @@ pub fn sharded_add_world(
 ) -> ShardedWorld<Arc<ClientStats>> {
     let plan = opts.plan();
     let mut world = World::new(opts.net.clone(), seed);
-    add_acceptors(&mut world, &plan, opts.skew_clocks);
+    add_acceptors(&mut world, &plan, opts.skew_clocks, opts.stripes);
     let mut handles = Vec::with_capacity(plan.shard_count());
     for (s, cfg) in plan.shards.iter().enumerate() {
         let mut shard_stats = Vec::with_capacity(opts.clients_per_shard);
@@ -178,7 +185,7 @@ pub fn sharded_chaos_world(
 ) -> ShardedWorld<Arc<History>> {
     let plan = opts.plan();
     let mut world = World::new(opts.net.clone(), seed);
-    add_acceptors(&mut world, &plan, opts.skew_clocks);
+    add_acceptors(&mut world, &plan, opts.skew_clocks, opts.stripes);
     let mut seeder = Rng::new(seed ^ 0xC11E57);
     let mut handles = Vec::with_capacity(plan.shard_count());
     for (s, cfg) in plan.shards.iter().enumerate() {
@@ -272,6 +279,20 @@ mod tests {
             assert_eq!(check(history), CheckResult::Linearizable);
         }
         assert_eq!(opts.client_ids().len(), 4, "2 shards x 2 clients");
+    }
+
+    #[test]
+    fn striped_chaos_world_records_checkable_histories() {
+        let opts =
+            ShardedWorldOpts { shards: 2, ops_per_client: 8, stripes: 4, ..Default::default() };
+        let mut w = sharded_chaos_world(&opts, 23);
+        w.world.start();
+        w.world.run_to_quiescence();
+        for shard_handles in &w.handles {
+            let history = &shard_handles[0];
+            assert_eq!(history.len(), 2 * 8);
+            assert_eq!(check(history), CheckResult::Linearizable);
+        }
     }
 
     #[test]

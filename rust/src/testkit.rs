@@ -82,6 +82,42 @@ impl Drop for SilenceGuard {
     }
 }
 
+/// Opens (or reopens) a file-backed lock-striped acceptor in `dir` —
+/// the shared constructor of the striped crash-recovery pins
+/// (`tests/durability.rs`) and any chaos world that wants durable
+/// striped nodes. One shared group-commit WAL at
+/// `dir/acceptor-{id}.log`, `stripes` slot maps rebuilt by
+/// stripe-filtered replay. fsync is off (tmpfs CI keeps the tests
+/// fast); CRC framing, replay and the torn-tail rules are unaffected.
+pub fn striped_file_acceptor(
+    dir: &TempDir,
+    id: u64,
+    stripes: usize,
+) -> crate::acceptor::StripedAcceptor<crate::acceptor::FileStorage> {
+    let mut stores = crate::acceptor::FileStorage::open_striped(
+        dir.file(&format!("acceptor-{id}.log")),
+        crate::acceptor::GroupCommitOpts::default(),
+        stripes,
+    )
+    .expect("open striped log");
+    for s in &mut stores {
+        s.fsync = false;
+    }
+    crate::acceptor::StripedAcceptor::from_storages(id, stores)
+}
+
+/// A key routed to stripe `want` of `stripes` by
+/// [`crate::acceptor::stripe_of`] (probes the shared hash; `salt`
+/// namespaces the keys so callers never share a register). Shared by
+/// the striped storage tests and `benches/write_path.rs`, so a routing
+/// change can't silently strand one of them.
+pub fn key_on_stripe(want: usize, stripes: usize, salt: u64) -> String {
+    (0..)
+        .map(|i| format!("s{salt}-{i}"))
+        .find(|k| crate::acceptor::stripe_of(k, stripes) == want)
+        .expect("crc32 reaches every stripe")
+}
+
 /// Seed count for one chaos campaign: `base`, scaled by the
 /// `CHAOS_SEED_MULT` env var (the nightly `chaos-extended` and
 /// `tcp-chaos` CI legs run with 4×; failing case seeds print via

@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 
-use crate::acceptor::{Acceptor, MemStorage, Storage};
+use crate::acceptor::{Acceptor, MemStorage, Storage, StripedAcceptor};
 use crate::error::{CasError, CasResult};
 use crate::msg::{Request, Response};
 use crate::rng::Rng;
@@ -18,71 +18,14 @@ use crate::rng::Rng;
 use super::{Reply, Transport};
 
 struct Node<S: Storage> {
-    /// Lock-striped acceptor: keyed requests route to a shard by key
-    /// hash, so ops on different keys don't contend (perf pass,
-    /// EXPERIMENTS.md §Perf). Registers are independent RSMs (§3), so
-    /// striping is semantics-preserving; the per-proposer min-age table
-    /// is broadcast to every shard. Default = 1 shard.
-    shards: Vec<Mutex<Acceptor<S>>>,
+    /// The hosted acceptor, behind the same [`StripedAcceptor`] the TCP
+    /// service uses: keyed requests route to a stripe by key hash (ops
+    /// on different keys don't contend), min-age fences broadcast to
+    /// every stripe, dumps merge ordered. Default = 1 stripe.
+    acc: StripedAcceptor<S>,
     down: AtomicBool,
     /// Drop the next N requests (returns transport error).
     drop_next: AtomicU64,
-}
-
-impl<S: Storage> Node<S> {
-    fn shard_for(&self, key: &str) -> &Mutex<Acceptor<S>> {
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        &self.shards[(h.finish() % self.shards.len() as u64) as usize]
-    }
-
-    fn handle(&self, req: &Request) -> Response {
-        match req {
-            Request::Prepare { key, .. }
-            | Request::Accept { key, .. }
-            | Request::Erase { key, .. }
-            | Request::Install { key, .. }
-            | Request::Read { key, .. }
-            | Request::LeaseAcquire { key, .. }
-            | Request::LeaseRenew { key, .. }
-            | Request::LeaseRevoke { key, .. } => self.shard_for(key).lock().unwrap().handle(req),
-            Request::SetMinAge { .. } => {
-                // Age fences must hold on every shard.
-                let mut last = Response::Ok;
-                for shard in &self.shards {
-                    last = shard.lock().unwrap().handle(req);
-                }
-                last
-            }
-            Request::Dump { after, limit } => self.dump(after.as_ref(), *limit),
-            Request::Ping => Response::Ok,
-        }
-    }
-
-    /// Merged, ordered dump across shards.
-    fn dump(&self, after: Option<&String>, limit: usize) -> Response {
-        if self.shards.len() == 1 {
-            return self.shards[0]
-                .lock()
-                .unwrap()
-                .handle(&Request::Dump { after: after.cloned(), limit });
-        }
-        let mut entries: Vec<(String, crate::ballot::Ballot, crate::state::Val)> = Vec::new();
-        for shard in &self.shards {
-            if let Response::DumpPage { entries: page, .. } = shard
-                .lock()
-                .unwrap()
-                .handle(&Request::Dump { after: after.cloned(), limit })
-            {
-                entries.extend(page);
-            }
-        }
-        entries.sort_by(|a, b| a.0.cmp(&b.0));
-        let more = entries.len() > limit;
-        entries.truncate(limit);
-        Response::DumpPage { entries, more }
-    }
 }
 
 /// Transport over a set of in-process acceptors.
@@ -101,16 +44,16 @@ pub struct MemTransport<S: Storage = MemStorage> {
 }
 
 impl MemTransport<MemStorage> {
-    /// Builds `n` in-memory acceptors with ids `1..=n` (single shard).
+    /// Builds `n` in-memory acceptors with ids `1..=n` (single stripe).
     pub fn new(n: usize) -> Self {
         Self::from_acceptors((1..=n as u64).map(Acceptor::new).collect())
     }
 
-    /// Builds `n` acceptors, each lock-striped into `shards` shards —
+    /// Builds `n` acceptors, each lock-striped into `stripes` stripes —
     /// the multi-core configuration (different keys never contend on an
-    /// acceptor lock).
-    pub fn new_sharded(n: usize, shards: usize) -> Self {
-        assert!(shards >= 1);
+    /// acceptor lock; see [`StripedAcceptor`]).
+    pub fn new_striped(n: usize, stripes: usize) -> Self {
+        assert!(stripes >= 1);
         let t = MemTransport {
             nodes: RwLock::new(HashMap::new()),
             requests: AtomicU64::new(0),
@@ -120,7 +63,7 @@ impl MemTransport<MemStorage> {
             t.nodes.write().unwrap().insert(
                 id,
                 Arc::new(Node {
-                    shards: (0..shards).map(|_| Mutex::new(Acceptor::new(id))).collect(),
+                    acc: StripedAcceptor::new_mem(id, stripes),
                     down: AtomicBool::new(false),
                     drop_next: AtomicU64::new(0),
                 }),
@@ -144,12 +87,12 @@ impl<S: Storage> MemTransport<S> {
         t
     }
 
-    /// Adds a fresh acceptor (cluster expansion; single shard).
+    /// Adds a fresh acceptor (cluster expansion; single stripe).
     pub fn add_acceptor(&self, a: Acceptor<S>) {
         self.nodes.write().unwrap().insert(
             a.id,
             Arc::new(Node {
-                shards: vec![Mutex::new(a)],
+                acc: StripedAcceptor::from_acceptor(a),
                 down: AtomicBool::new(false),
                 drop_next: AtomicU64::new(0),
             }),
@@ -180,20 +123,18 @@ impl<S: Storage> MemTransport<S> {
     }
 
     /// Runs `f` against a node's acceptor (inspection in tests/GC).
-    /// With lock striping, `f` sees the shard that owns `register_count`
-    /// semantics only when shards == 1; sharded transports should use
-    /// [`MemTransport::register_count`] instead.
+    /// With lock striping there is no single acceptor to hand out;
+    /// striped transports should use [`MemTransport::register_count`]
+    /// instead.
     pub fn with_acceptor<R>(&self, id: u64, f: impl FnOnce(&mut Acceptor<S>) -> R) -> Option<R> {
         let node = self.node(id)?;
-        assert_eq!(node.shards.len(), 1, "with_acceptor requires an unsharded node");
-        let result = f(&mut node.shards[0].lock().unwrap());
-        Some(result)
+        assert_eq!(node.acc.stripe_count(), 1, "with_acceptor requires an unstriped node");
+        Some(node.acc.with_stripe(0, f))
     }
 
-    /// Total registers held by a node (summed across shards).
+    /// Total registers held by a node (summed across stripes).
     pub fn register_count(&self, id: u64) -> Option<usize> {
-        self.node(id)
-            .map(|n| n.shards.iter().map(|s| s.lock().unwrap().register_count()).sum())
+        self.node(id).map(|n| n.acc.register_count())
     }
 
     /// Ids of all hosted acceptors, sorted.
@@ -238,7 +179,7 @@ impl<S: Storage> Transport for MemTransport<S> {
             return Err(CasError::Transport(format!("message to {to} dropped")));
         }
         self.requests.fetch_add(1, Ordering::Relaxed);
-        Ok(node.handle(req))
+        Ok(node.acc.handle(req))
     }
 
     fn fan_out(&self, token: u32, msgs: Vec<(u64, Request)>, tx: &mpsc::Sender<Reply>) {
@@ -304,8 +245,8 @@ mod tests {
     }
 
     #[test]
-    fn sharded_node_same_semantics() {
-        let t = MemTransport::new_sharded(3, 8);
+    fn striped_node_same_semantics() {
+        let t = MemTransport::new_striped(3, 8);
         let prep = |key: &str, c: u64| Request::Prepare {
             key: key.into(),
             ballot: Ballot::new(c, 1),
@@ -325,8 +266,8 @@ mod tests {
     }
 
     #[test]
-    fn sharded_dump_merges_ordered() {
-        let t = MemTransport::new_sharded(1, 4);
+    fn striped_dump_merges_ordered() {
+        let t = MemTransport::new_striped(1, 4);
         for key in ["d", "a", "c", "b"] {
             t.send(
                 1,

@@ -60,6 +60,15 @@ pub trait Transport: Send + Sync {
             let _ = tx.send(Reply { token, from: to, resp });
         }
     }
+
+    /// Requests currently in flight on this transport, when it tracks
+    /// them (the pipelined TCP transport's per-connection pending
+    /// maps). `None` = not tracked (in-process transports complete
+    /// synchronously). Surfaced through `Proposer::transport_inflight`
+    /// as the proposer-side backpressure signal.
+    fn inflight(&self) -> Option<usize> {
+        None
+    }
 }
 
 #[cfg(test)]

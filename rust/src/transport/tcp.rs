@@ -21,15 +21,20 @@
 //!
 //! ## Server side
 //!
-//! [`serve_acceptor`] handles each request under the acceptor lock
-//! (fast, in-memory), then resolves the durability ticket and writes
-//! the reply **off the read loop**: a quorum read or lease grant
-//! pipelined behind a write is dispatched while that write still waits
-//! on its group-commit fsync, and replies go out out-of-order under a
-//! shared per-connection frame lock. This is what gives `Read` /
-//! `LeaseAcquire` over TCP the same latency profile the in-memory
-//! transport shows — a stalled identity-CAS round no longer head-of-line
-//! blocks the fast paths behind it.
+//! [`serve_acceptor`] (and its lock-striped twin
+//! [`serve_striped_acceptor`]) handles each request under the key's
+//! stripe lock (fast, in-memory), then resolves the durability ticket
+//! and writes the reply **off the read loop**: a quorum read or lease
+//! grant pipelined behind a write is dispatched while that write still
+//! waits on its group-commit fsync, and replies go out out-of-order
+//! under a shared per-connection frame lock. This is what gives `Read`
+//! / `LeaseAcquire` over TCP the same latency profile the in-memory
+//! transport shows — a stalled identity-CAS round no longer
+//! head-of-line blocks the fast paths behind it. Deferred replies run
+//! on a per-connection **reply-worker pool** (reused threads, grown
+//! only when every worker is busy, bounded by the 256-in-flight cap):
+//! the spawn cost is amortized under pipelined load without giving up
+//! the no-head-of-line guarantee.
 //!
 //! ## Ordering guarantees
 //!
@@ -47,7 +52,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::acceptor::{Acceptor, Storage};
+use crate::acceptor::{Acceptor, Storage, StripedAcceptor};
 use crate::codec::{encode_envelope, Codec, Envelope};
 use crate::error::{CasError, CasResult};
 use crate::msg::{Request, Response};
@@ -117,13 +122,35 @@ pub fn serve_acceptor<S: Storage + 'static>(
     serve_acceptor_with(listener, acceptor, None)
 }
 
-/// [`serve_acceptor`] with an optional [`ReplyHook`].
+/// [`serve_acceptor`] with an optional [`ReplyHook`]. The unstriped
+/// acceptor is wrapped as the 1-stripe degenerate case and served by
+/// the striped shell — one serving path for both.
 pub fn serve_acceptor_with<S: Storage + 'static>(
     listener: TcpListener,
     acceptor: Acceptor<S>,
     hook: Option<ReplyHook>,
 ) -> CasResult<()> {
-    let acceptor = Arc::new(Mutex::new(acceptor));
+    serve_striped_acceptor_with(listener, Arc::new(StripedAcceptor::from_acceptor(acceptor)), hook)
+}
+
+/// Serves a lock-striped acceptor over TCP: the same pipelined shell as
+/// [`serve_acceptor`], but each request locks only its key's stripe —
+/// requests on independent keys multiplexed on one (or many)
+/// connections are handled without contending on a single acceptor
+/// lock, and their WAL records still coalesce under one fsync.
+pub fn serve_striped_acceptor<S: Storage + 'static>(
+    listener: TcpListener,
+    acceptor: Arc<StripedAcceptor<S>>,
+) -> CasResult<()> {
+    serve_striped_acceptor_with(listener, acceptor, None)
+}
+
+/// [`serve_striped_acceptor`] with an optional [`ReplyHook`].
+pub fn serve_striped_acceptor_with<S: Storage + 'static>(
+    listener: TcpListener,
+    acceptor: Arc<StripedAcceptor<S>>,
+    hook: Option<ReplyHook>,
+) -> CasResult<()> {
     loop {
         let (stream, _) = listener.accept().map_err(|e| CasError::Transport(e.to_string()))?;
         let acceptor = Arc::clone(&acceptor);
@@ -147,15 +174,161 @@ pub(crate) enum Handled<Resp> {
 /// Cap on concurrently in-flight deferred replies per connection. A
 /// peer that pipelines more blocking requests than this is
 /// backpressured at the read loop (the connection stops reading new
-/// frames until a reply thread finishes) instead of fanning out
+/// frames until a reply worker finishes one) instead of fanning out
 /// unbounded server threads — one unauthenticated connection must not
 /// be able to exhaust the process.
 const MAX_DEFERRED_PER_CONN: usize = 256;
 
+/// Holds one of a connection's [`MAX_DEFERRED_PER_CONN`] in-flight
+/// slots. Released on drop on EVERY path — panicking handlers, jobs
+/// still queued when the pool shuts down — so the read loop can never
+/// wedge at the cap on a leaked slot.
+struct SlotGuard(Arc<(Mutex<usize>, Condvar)>);
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        let (count, cond) = &*self.0;
+        *count.lock().unwrap_or_else(|e| e.into_inner()) -= 1;
+        cond.notify_one();
+    }
+}
+
+/// One queued deferred reply: correlation id, the blocking completion,
+/// and the in-flight slot it occupies.
+type ReplyJob<Resp> = (u64, Box<dyn FnOnce() -> Resp + Send>, SlotGuard);
+
+/// How long a parked reply worker waits for a job before retiring. A
+/// one-time 256-deep burst must not pin 256 idle threads for the
+/// connection's lifetime; after this much quiet the pool shrinks back
+/// toward zero (workers respawn on demand).
+const REPLY_WORKER_IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The job queue + worker accounting behind one [`ReplyPool`]. The
+/// invariant that makes the no-head-of-line guarantee real:
+/// `idle == workers − unfinished jobs` at every step, so there is
+/// always a worker per unfinished job.
+struct PoolQueue<Resp> {
+    jobs: std::collections::VecDeque<ReplyJob<Resp>>,
+    /// Workers currently parked (minus reservations made by submitters).
+    idle: usize,
+    /// Set when the connection's read loop drops the pool.
+    closed: bool,
+}
+
+struct PoolShared<Resp> {
+    queue: Mutex<PoolQueue<Resp>>,
+    available: Condvar,
+    write_half: Arc<Mutex<TcpStream>>,
+}
+
+/// Per-connection reply-worker pool: deferred replies run on a small
+/// set of REUSED threads instead of one fresh thread each, amortizing
+/// spawn cost under pipelined load. The pool grows by exactly one
+/// worker whenever a job is submitted with no idle worker guaranteed
+/// free — so a stalled reply can never head-of-line block the reply
+/// behind it (the pipelining guarantee the thread-per-reply model
+/// gave), while the steady state runs a handful of workers. Growth is
+/// bounded by the in-flight cap; every parked worker waits on one
+/// condvar with its own [`REPLY_WORKER_IDLE_TIMEOUT`], so after a
+/// one-time burst the whole surplus retires within one idle window
+/// (not one worker per window), and all workers exit when the read
+/// loop drops the pool at connection close.
+struct ReplyPool<Resp> {
+    shared: Arc<PoolShared<Resp>>,
+}
+
+impl<Resp: Codec + Send + 'static> ReplyPool<Resp> {
+    fn new(write_half: Arc<Mutex<TcpStream>>) -> Self {
+        ReplyPool {
+            shared: Arc::new(PoolShared {
+                queue: Mutex::new(PoolQueue {
+                    jobs: std::collections::VecDeque::new(),
+                    idle: 0,
+                    closed: false,
+                }),
+                available: Condvar::new(),
+                write_half,
+            }),
+        }
+    }
+
+    /// Queues one reply job, spawning a worker iff no idle worker is
+    /// guaranteed to pick it up (the reservation closes the race where
+    /// two quick submissions both see the same idle worker).
+    fn submit(&self, job: ReplyJob<Resp>) {
+        let spawn = {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            q.jobs.push_back(job);
+            if q.idle > 0 {
+                q.idle -= 1; // reserve a parked worker for this job
+                false
+            } else {
+                true
+            }
+        };
+        if spawn {
+            self.spawn_worker();
+        }
+        self.shared.available.notify_one();
+    }
+
+    fn spawn_worker(&self) {
+        let shared = Arc::clone(&self.shared);
+        std::thread::spawn(move || loop {
+            let job = {
+                let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if let Some(job) = q.jobs.pop_front() {
+                        break Some(job);
+                    }
+                    if q.closed {
+                        break None;
+                    }
+                    let (guard, timeout) = shared
+                        .available
+                        .wait_timeout(q, REPLY_WORKER_IDLE_TIMEOUT)
+                        .unwrap_or_else(|e| e.into_inner());
+                    q = guard;
+                    // Retire on a quiet timeout iff an idle token is
+                    // free; a zero count means a submitter reserved a
+                    // worker for a job in flight toward the queue, so
+                    // keep waiting for it.
+                    if timeout.timed_out() && q.jobs.is_empty() && !q.closed && q.idle > 0 {
+                        q.idle -= 1;
+                        break None;
+                    }
+                }
+            };
+            let Some((corr, finish, slot)) = job else { break };
+            // A panicked request sends no reply (its caller times out,
+            // bounded); the worker and the connection survive, and the
+            // slot guard releases either way.
+            let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(finish));
+            if let Ok(resp) = unwound {
+                let _ = write_envelope(&mut *shared.write_half.lock().unwrap(), corr, &resp);
+            }
+            drop(slot);
+            shared.queue.lock().unwrap_or_else(|e| e.into_inner()).idle += 1;
+        });
+    }
+}
+
+impl<Resp> Drop for ReplyPool<Resp> {
+    fn drop(&mut self) {
+        // Connection closed: retire every worker and drop queued jobs
+        // (their slot guards release; the peer is gone anyway).
+        let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+        q.closed = true;
+        q.jobs.clear();
+        drop(q);
+        self.shared.available.notify_all();
+    }
+}
+
 /// The pipelined connection shell shared by the acceptor service and
 /// the KV server's client service: read request envelopes in a loop,
 /// dispatch each through `handle`, and write replies — inline or from
-/// per-request reply threads, in completion order — under a shared
+/// the connection's [`ReplyPool`], in completion order — under a shared
 /// frame lock, matched to requests by correlation id.
 pub(crate) fn serve_pipelined<Req, Resp, F>(mut stream: TcpStream, mut handle: F)
 where
@@ -167,6 +340,7 @@ where
     let Ok(write_half) = stream.try_clone() else { return };
     let write_half = Arc::new(Mutex::new(write_half));
     let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+    let pool = ReplyPool::new(Arc::clone(&write_half));
     loop {
         let env: Envelope<Req> = match read_frame(&mut stream) {
             Ok(Some(e)) => e,
@@ -179,7 +353,7 @@ where
                 }
             }
             Handled::Deferred(finish) => {
-                // Take an in-flight slot; reply threads never depend on
+                // Take an in-flight slot; reply workers never depend on
                 // this read loop, so blocking here cannot deadlock.
                 {
                     let (count, cond) = &*gate;
@@ -189,46 +363,27 @@ where
                     }
                     *inflight += 1;
                 }
-                let write_half = Arc::clone(&write_half);
-                let gate = Arc::clone(&gate);
-                std::thread::spawn(move || {
-                    // Slot released on EVERY exit: a panicking handler
-                    // (fault hooks are arbitrary closures) must not
-                    // leak its slot and wedge the read loop at the cap.
-                    struct SlotGuard(Arc<(Mutex<usize>, Condvar)>);
-                    impl Drop for SlotGuard {
-                        fn drop(&mut self) {
-                            let (count, cond) = &*self.0;
-                            *count.lock().unwrap_or_else(|e| e.into_inner()) -= 1;
-                            cond.notify_one();
-                        }
-                    }
-                    let _slot = SlotGuard(gate);
-                    // A panicked request sends no reply (its caller
-                    // times out, bounded); the connection survives.
-                    let unwound =
-                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| finish()));
-                    if let Ok(resp) = unwound {
-                        let _ =
-                            write_envelope(&mut *write_half.lock().unwrap(), env.corr, &resp);
-                    }
-                });
+                pool.submit((env.corr, finish, SlotGuard(Arc::clone(&gate))));
             }
         }
     }
+    // Dropping `pool` closes the job queue: workers retire, and
+    // queued-but-unstarted jobs drop (their slots release; the peer is
+    // gone anyway).
 }
 
-/// One acceptor-service connection: handle under the acceptor lock
-/// (fast, in-memory), but resolve durability OFF the read loop — a read
-/// or lease grant pipelined behind a write round is dispatched while
-/// that write still waits for its group-commit ticket.
+/// One acceptor-service connection: handle under the key's STRIPE lock
+/// (fast, in-memory — independent keys never contend), but resolve
+/// durability OFF the read loop — a read or lease grant pipelined
+/// behind a write round is dispatched while that write still waits for
+/// its group-commit ticket.
 fn serve_conn<S: Storage + 'static>(
     stream: TcpStream,
-    acceptor: Arc<Mutex<Acceptor<S>>>,
+    acceptor: Arc<StripedAcceptor<S>>,
     hook: Option<ReplyHook>,
 ) {
     serve_pipelined(stream, move |req: Request| {
-        let (resp, persist) = acceptor.lock().unwrap().handle_deferred(&req);
+        let (resp, persist) = acceptor.handle_deferred(&req);
         if persist.is_done() && hook.is_none() {
             // Already durable, nothing to stall on.
             return Handled::Inline(resp);
@@ -262,10 +417,28 @@ pub fn spawn_acceptor_with<S: Storage + 'static>(
     acceptor: Acceptor<S>,
     hook: Option<ReplyHook>,
 ) -> CasResult<std::net::SocketAddr> {
+    spawn_striped_acceptor_with(addr, Arc::new(StripedAcceptor::from_acceptor(acceptor)), hook)
+}
+
+/// Spawns a lock-striped acceptor server on `addr`; returns the bound
+/// address (the striped twin of [`spawn_acceptor`]).
+pub fn spawn_striped_acceptor<S: Storage + 'static>(
+    addr: &str,
+    acceptor: Arc<StripedAcceptor<S>>,
+) -> CasResult<std::net::SocketAddr> {
+    spawn_striped_acceptor_with(addr, acceptor, None)
+}
+
+/// [`spawn_striped_acceptor`] with an optional [`ReplyHook`].
+pub fn spawn_striped_acceptor_with<S: Storage + 'static>(
+    addr: &str,
+    acceptor: Arc<StripedAcceptor<S>>,
+    hook: Option<ReplyHook>,
+) -> CasResult<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr).map_err(|e| CasError::Transport(e.to_string()))?;
     let local = listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
     std::thread::spawn(move || {
-        let _ = serve_acceptor_with(listener, acceptor, hook);
+        let _ = serve_striped_acceptor_with(listener, acceptor, hook);
     });
     Ok(local)
 }
@@ -505,6 +678,20 @@ impl TcpTransport {
         self.workers.lock().unwrap().remove(&id);
     }
 
+    /// Requests currently in flight across every live connection —
+    /// registered in a pending map, reply not yet delivered. The
+    /// proposer-side backpressure signal: depth rises while an acceptor
+    /// stalls (replies stop draining the maps) and falls back to zero
+    /// when replies land or the timeout sweeper expires the entries.
+    pub fn inflight(&self) -> usize {
+        self.workers
+            .lock()
+            .unwrap()
+            .values()
+            .map(|c| c.shared.pending.lock().unwrap().len())
+            .sum()
+    }
+
     /// Chaos/test hook: severs the live connection to acceptor `to`.
     /// Every pending request on it errors immediately and the next
     /// dispatch reconnects. Returns whether a connection existed.
@@ -573,6 +760,10 @@ impl Transport for TcpTransport {
         for (to, req) in msgs {
             self.dispatch(to, token, req, tx);
         }
+    }
+
+    fn inflight(&self) -> Option<usize> {
+        Some(TcpTransport::inflight(self))
     }
 }
 
@@ -682,6 +873,98 @@ mod tests {
             .unwrap_or(false);
         assert!(alive, "oversized request must not tear down the connection");
         assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Ok);
+    }
+
+    /// Reply-pool satellite pin: sequential deferred replies on one
+    /// connection REUSE a worker thread instead of spawning one per
+    /// reply (the old model used a distinct thread every time).
+    #[test]
+    fn reply_workers_are_reused_across_requests() {
+        let threads = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        let hook: ReplyHook = {
+            let threads = Arc::clone(&threads);
+            // The hook runs on the reply worker; a no-op hook forces
+            // every request onto the deferred path.
+            Arc::new(move |_req, _resp| {
+                threads.lock().unwrap().insert(std::thread::current().id());
+            })
+        };
+        let addr = spawn_acceptor_with("127.0.0.1:0", Acceptor::new(1), Some(hook)).unwrap();
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = TcpTransport::new(addrs);
+        for _ in 0..50 {
+            assert_eq!(t.send(1, &Request::Ping).unwrap(), Response::Ok);
+        }
+        let distinct = threads.lock().unwrap().len();
+        assert!(
+            distinct < 10,
+            "50 sequential deferred replies must reuse pool workers, saw {distinct} threads"
+        );
+    }
+
+    /// Striped service pin: a 4-stripe acceptor behind the real TCP
+    /// stack serves the full protocol — writes and reads across many
+    /// keys, min-age fences on every stripe.
+    #[test]
+    fn striped_acceptor_serves_over_tcp() {
+        let striped = Arc::new(StripedAcceptor::new_mem(1, 4));
+        let addr = spawn_striped_acceptor("127.0.0.1:0", Arc::clone(&striped)).unwrap();
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = Arc::new(TcpTransport::new(addrs));
+        let cfg = ClusterConfig::majority(1, vec![1]);
+        let p = Proposer::new(1, cfg.clone(), t.clone());
+        for i in 0..12 {
+            assert_eq!(p.set(format!("k{i}"), i).unwrap().as_num(), Some(i));
+        }
+        let reader = Proposer::new(2, cfg, t.clone());
+        for i in 0..12 {
+            assert_eq!(reader.get(format!("k{i}")).unwrap().as_num(), Some(i));
+        }
+        assert_eq!(striped.register_count(), 12);
+        // The GC fence holds regardless of which stripe a key hashes to.
+        let fence = Request::SetMinAge { proposer_id: 9, min_age: 4 };
+        assert_eq!(t.send(1, &fence).unwrap(), Response::Ok);
+        for key in ["a", "b", "c", "d"] {
+            let stale = Request::Read { key: key.into(), from: ProposerId { id: 9, age: 1 } };
+            assert_eq!(t.send(1, &stale).unwrap(), Response::StaleAge { required: 4 });
+        }
+    }
+
+    /// In-flight depth satellite pin: the pending-map gauge rises while
+    /// an acceptor stalls and drains back to zero after the timeout
+    /// sweep fails the stuck requests.
+    #[test]
+    fn inflight_depth_rises_under_stall_and_drains_after_sweep() {
+        // A server that accepts and reads frames but never replies.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            while let Ok(Some(_)) = read_frame::<Envelope<Request>>(&mut s) {}
+        });
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        // Sweep timeout well past the rise-observation window so a
+        // descheduled test thread can't race the sweeper into draining
+        // the maps before the poll loop ever sees the depth.
+        let t = TcpTransport::with_timeout(addrs, Duration::from_secs(3));
+        assert_eq!(t.inflight(), 0, "idle transport has no pending requests");
+        let (tx, rx) = mpsc::channel();
+        t.fan_out(1, (0..5).map(|_| (1u64, Request::Ping)).collect(), &tx);
+        // Depth rises as the writer registers the requests.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while t.inflight() < 5 {
+            assert!(Instant::now() < deadline, "inflight never reached 5: {}", t.inflight());
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // The sweeper expires all five; every caller gets its failure.
+        for _ in 0..5 {
+            let reply = rx.recv_timeout(Duration::from_secs(10)).expect("swept reply");
+            assert!(reply.resp.is_none(), "stalled request must fail, not hang");
+        }
+        assert_eq!(t.inflight(), 0, "swept requests must leave the pending maps");
     }
 
     #[test]

@@ -21,6 +21,14 @@
 //! every way a read lease can break, checked against the same
 //! linearizability oracle. `CHAOS_SEED_MULT=4` (the `chaos-extended`
 //! CI job) multiplies every campaign's seed count.
+//!
+//! The **stripe axis** (PR 5): the same campaigns run against
+//! `{1,4}`-stripe acceptors (`StripedAcceptor` — N key-hashed slot
+//! maps per node behind independent locks). Legacy campaigns stay at 1
+//! stripe so their seeds replay bit-identically; the 4-stripe runs put
+//! mid-round crashes and restarts on striped nodes, where a routing
+//! bug (two stripes answering for one register, a min-age fence
+//! missing a stripe) surfaces as a linearizability violation.
 
 use caspaxos::linearizability::{check, CheckResult};
 use caspaxos::rng::Rng;
@@ -41,8 +49,10 @@ enum ReadMix {
     Lease,
 }
 
-/// One seeded chaos scenario. Returns (invoked, completed) op counts.
-fn run_chaos(shards: usize, seed: u64, mix: ReadMix) -> (usize, usize) {
+/// One seeded chaos scenario. `stripes` lock-stripes every acceptor
+/// (nemesis crashes/restarts then land on striped nodes mid-round).
+/// Returns (invoked, completed) op counts.
+fn run_chaos(shards: usize, stripes: usize, seed: u64, mix: ReadMix) -> (usize, usize) {
     let mut net = NetModel::uniform(5_000);
     net.jitter = 0.3;
     net.drop_prob = 0.01; // ambient 1% loss on top of the nemesis
@@ -55,6 +65,7 @@ fn run_chaos(shards: usize, seed: u64, mix: ReadMix) -> (usize, usize) {
         quorum_reads: mix == ReadMix::Quorum,
         lease_reads: mix == ReadMix::Lease,
         skew_clocks: mix == ReadMix::Lease,
+        stripes,
         net,
     };
     let mut w = sharded_chaos_world(&opts, seed);
@@ -155,7 +166,7 @@ fn chaos_single_shard_50_seeds() {
     let n = seeds(50);
     let mut total_completed = 0usize;
     forall_seeds(0xCA05_0001, n, |rng| {
-        let (invoked, completed) = run_chaos(1, rng.next_u64(), ReadMix::None);
+        let (invoked, completed) = run_chaos(1, 1, rng.next_u64(), ReadMix::None);
         assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
@@ -169,7 +180,7 @@ fn chaos_multi_shard_50_seeds() {
     let n = seeds(50);
     let mut total_completed = 0usize;
     forall_seeds(0xCA05_0004, n, |rng| {
-        let (invoked, completed) = run_chaos(4, rng.next_u64(), ReadMix::None);
+        let (invoked, completed) = run_chaos(4, 1, rng.next_u64(), ReadMix::None);
         assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
@@ -185,7 +196,7 @@ fn chaos_quorum_reads_single_shard_40_seeds() {
     let n = seeds(40);
     let mut total_completed = 0usize;
     forall_seeds(0xCA05_0007, n, |rng| {
-        let (invoked, completed) = run_chaos(1, rng.next_u64(), ReadMix::Quorum);
+        let (invoked, completed) = run_chaos(1, 1, rng.next_u64(), ReadMix::Quorum);
         assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
@@ -198,7 +209,7 @@ fn chaos_quorum_reads_multi_shard_40_seeds() {
     let n = seeds(40);
     let mut total_completed = 0usize;
     forall_seeds(0xCA05_0008, n, |rng| {
-        let (invoked, completed) = run_chaos(4, rng.next_u64(), ReadMix::Quorum);
+        let (invoked, completed) = run_chaos(4, 1, rng.next_u64(), ReadMix::Quorum);
         assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
@@ -218,7 +229,7 @@ fn chaos_lease_reads_single_shard_40_seeds() {
     let n = seeds(40);
     let mut total_completed = 0usize;
     forall_seeds(0xCA05_000A, n, |rng| {
-        let (invoked, completed) = run_chaos(1, rng.next_u64(), ReadMix::Lease);
+        let (invoked, completed) = run_chaos(1, 1, rng.next_u64(), ReadMix::Lease);
         assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
@@ -233,7 +244,7 @@ fn chaos_lease_reads_multi_shard_40_seeds() {
     let n = seeds(40);
     let mut total_completed = 0usize;
     forall_seeds(0xCA05_000B, n, |rng| {
-        let (invoked, completed) = run_chaos(4, rng.next_u64(), ReadMix::Lease);
+        let (invoked, completed) = run_chaos(4, 1, rng.next_u64(), ReadMix::Lease);
         assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
         total_completed += completed;
     });
@@ -242,11 +253,62 @@ fn chaos_lease_reads_multi_shard_40_seeds() {
 }
 
 #[test]
+fn chaos_striped_acceptors_40_seeds() {
+    // THE stripe-axis campaign: 4-stripe acceptors under the full
+    // nemesis — mid-round crashes and restarts land on striped nodes,
+    // and ~half the ops are quorum reads racing the striped write path.
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_000C, n, |rng| {
+        let (invoked, completed) = run_chaos(1, 4, rng.next_u64(), ReadMix::Quorum);
+        assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    let total = n as usize * 20;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
+fn chaos_striped_lease_reads_40_seeds() {
+    // Stripes × leases: per-stripe lease tables under skewed clocks,
+    // partitioned leaseholders and mid-lease restarts of striped nodes.
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_000D, n, |rng| {
+        let (invoked, completed) = run_chaos(1, 4, rng.next_u64(), ReadMix::Lease);
+        assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    let total = n as usize * 20;
+    assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
+fn chaos_striped_multi_shard_40_seeds() {
+    // Shards × stripes: disjoint acceptor groups, each node striped —
+    // both scaling planes at once under the nemesis.
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_000E, n, |rng| {
+        let (invoked, completed) = run_chaos(4, 4, rng.next_u64(), ReadMix::Quorum);
+        assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    let total = n as usize * 80;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
 fn chaos_scenarios_replay_deterministically() {
-    let run = |seed| run_chaos(2, seed, ReadMix::None);
+    let run = |seed| run_chaos(2, 1, seed, ReadMix::None);
     assert_eq!(run(0xFEED), run(0xFEED), "same seed, same counts");
-    let run_reads = |seed| run_chaos(2, seed, ReadMix::Quorum);
+    let run_reads = |seed| run_chaos(2, 1, seed, ReadMix::Quorum);
     assert_eq!(run_reads(0xFEED), run_reads(0xFEED), "read-mixed schedules replay too");
-    let run_lease = |seed| run_chaos(2, seed, ReadMix::Lease);
+    let run_lease = |seed| run_chaos(2, 1, seed, ReadMix::Lease);
     assert_eq!(run_lease(0xFEED), run_lease(0xFEED), "lease schedules replay too");
+    let run_striped = |seed| run_chaos(2, 4, seed, ReadMix::Quorum);
+    assert_eq!(run_striped(0xFEED), run_striped(0xFEED), "striped schedules replay too");
+    // Striping must not change WHAT a schedule does, only how the
+    // acceptor locks internally: same seed, same op counts either way.
+    assert_eq!(run_reads(0xFEED).0, run_striped(0xFEED).0, "stripe count changes no schedule");
 }

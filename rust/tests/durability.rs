@@ -315,6 +315,168 @@ fn torn_tail_mid_flush_loses_only_the_torn_record() {
 }
 
 #[test]
+fn interleaved_stripe_wal_with_torn_tail_replays_every_intact_record() {
+    // Writes interleaved across 4 stripes share ONE WAL; a crash leaves
+    // half a frame at the tail. Replay must keep every intact record on
+    // its owning stripe and drop only the torn one.
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    use caspaxos::testkit::striped_file_acceptor;
+    use std::io::Write as _;
+    let dir = TempDir::new("stripe-torn").unwrap();
+    let accept = |key: String, i: i64| Request::Accept {
+        key,
+        ballot: Ballot::new(i as u64 + 1, 1),
+        val: caspaxos::Val::Num { ver: 0, num: i },
+        from: ProposerId::new(1),
+        promise_next: None,
+    };
+    {
+        let a = striped_file_acceptor(&dir, 1, 4);
+        // Round-robin across keys on every stripe: records from all
+        // four stripes interleave in the shared log.
+        for i in 0..16 {
+            assert_eq!(a.handle_at(&accept(format!("k{i}"), i), 0), Response::Accepted);
+        }
+    }
+    {
+        let path = dir.path().join("acceptor-1.log");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[120, 0, 0, 0, 9, 9, 9]).unwrap(); // torn frame
+    }
+    let revived = striped_file_acceptor(&dir, 1, 4);
+    assert_eq!(revived.register_count(), 16, "an intact stripe record was dropped");
+    for i in 0..16 {
+        assert_eq!(revived.storage_value(&format!("k{i}")), Some(i), "k{i} lost in replay");
+    }
+}
+
+#[test]
+fn acked_lease_on_a_stripe_survives_striped_replay() {
+    // A lease granted on stripe k (reply sent => ticket waited) must be
+    // honored after crash+replay of the shared WAL; an unacked grant on
+    // another stripe must NOT be resurrected.
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    use caspaxos::testkit::striped_file_acceptor;
+    let dir = TempDir::new("stripe-lease").unwrap();
+    let acquire = |key: &str| Request::LeaseAcquire {
+        key: key.into(),
+        duration_us: 10_000_000,
+        from: ProposerId::new(7),
+    };
+    {
+        let a = striped_file_acceptor(&dir, 1, 4);
+        // Acked grant: handle_at waits the shared-WAL ticket.
+        assert!(matches!(
+            a.handle_at(&acquire("held"), 1_000),
+            Response::LeaseGranted { granted: true, .. }
+        ));
+        // Unacked grant: ticket dropped, reply never sent.
+        let (resp, persist) = a.handle_deferred_at(&acquire("ghost"), 1_000);
+        assert!(matches!(resp, Response::LeaseGranted { granted: true, .. }));
+        drop(persist); // crash before durability
+    }
+    let revived = striped_file_acceptor(&dir, 1, 4);
+    let foreign = |key: &str| Request::Prepare {
+        key: key.into(),
+        ballot: Ballot::new(5, 2),
+        from: ProposerId::new(2),
+    };
+    assert!(
+        matches!(revived.handle_at(&foreign("held"), 2_000), Response::Conflict { .. }),
+        "replayed stripe lease must still fence foreign ballots"
+    );
+    assert!(
+        matches!(revived.handle_at(&foreign("held"), 20_000_000), Response::Promise { .. }),
+        "the fence must lift after the window"
+    );
+    assert!(
+        matches!(revived.handle_at(&foreign("ghost"), 2_000), Response::Promise { .. }),
+        "an unacked grant must not be resurrected"
+    );
+}
+
+#[test]
+fn single_stripe_replay_is_byte_compatible_with_pre_stripe_logs() {
+    // Version gate (like the PR 3 lease format bump): stripes=1 writes
+    // the legacy record stream, so pre-stripe logs and 1-stripe logs
+    // are interchangeable in BOTH directions — and a legacy log opened
+    // at 4 stripes routes every key to the stripe that will serve it.
+    use caspaxos::msg::{ProposerId, Request, Response};
+    use caspaxos::testkit::striped_file_acceptor;
+    let dir = TempDir::new("stripe-compat").unwrap();
+    let accept = |key: String, i: i64| Request::Accept {
+        key,
+        ballot: caspaxos::Ballot::new(i as u64 + 1, 1),
+        val: caspaxos::Val::Num { ver: 0, num: i },
+        from: ProposerId::new(1),
+        promise_next: None,
+    };
+    {
+        // Written by the LEGACY path (plain Acceptor over FileStorage).
+        let mut legacy = file_acceptor(&dir, 1);
+        for i in 0..8 {
+            assert_eq!(legacy.handle(&accept(format!("k{i}"), i)), Response::Accepted);
+        }
+    }
+    // 1-stripe reopen reads it verbatim and keeps writing legacy bytes.
+    {
+        let one = striped_file_acceptor(&dir, 1, 1);
+        for i in 0..8 {
+            assert_eq!(one.storage_value(&format!("k{i}")), Some(i));
+        }
+        assert_eq!(one.handle(&accept("extra".into(), 99)), Response::Accepted);
+    }
+    // The legacy opener reads the 1-stripe log back (same byte format).
+    {
+        let legacy = file_acceptor(&dir, 1);
+        assert_eq!(legacy.storage_value("extra"), Some(99));
+        assert_eq!(legacy.register_count(), 9);
+    }
+    // And a 4-stripe open of the same legacy bytes hash-routes each key.
+    let striped = striped_file_acceptor(&dir, 1, 4);
+    assert_eq!(striped.register_count(), 9);
+    for i in 0..8 {
+        assert_eq!(striped.storage_value(&format!("k{i}")), Some(i));
+    }
+}
+
+#[test]
+fn striped_cluster_state_survives_full_restart_over_tcp() {
+    // The end-to-end striped pin: a TCP cluster of 4-stripe file-backed
+    // acceptors is killed and resurrected from its shared WALs; every
+    // accepted value survives, on whatever stripe it hashed to.
+    use caspaxos::testkit::striped_file_acceptor;
+    use caspaxos::transport::tcp::spawn_striped_acceptor;
+    let dir = TempDir::new("striped-durable").unwrap();
+    let mut addrs = HashMap::new();
+    for id in 1..=3 {
+        let acc = Arc::new(striped_file_acceptor(&dir, id, 4));
+        let addr = spawn_striped_acceptor("127.0.0.1:0", acc).unwrap();
+        addrs.insert(id, addr.to_string());
+    }
+    let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+    let p = Proposer::new(1, cfg.clone(), Arc::new(TcpTransport::new(addrs)));
+    for i in 0..20 {
+        p.set(format!("k{i}"), i).unwrap();
+    }
+    drop(p);
+    // Generation 2: fresh ports, stripes rebuilt by filtered replay.
+    let mut addrs2 = HashMap::new();
+    for id in 1..=3 {
+        let acc = Arc::new(striped_file_acceptor(&dir, id, 4));
+        let addr = spawn_striped_acceptor("127.0.0.1:0", acc).unwrap();
+        addrs2.insert(id, addr.to_string());
+    }
+    let p2 = Proposer::new(2, cfg, Arc::new(TcpTransport::new(addrs2)));
+    for i in 0..20 {
+        assert_eq!(p2.get(format!("k{i}")).unwrap().as_num(), Some(i), "k{i} lost");
+    }
+    assert_eq!(p2.add("k1", 100).unwrap().as_num(), Some(101), "restart accepts new writes");
+}
+
+#[test]
 fn storage_scan_consistency_after_mixed_workload() {
     let dir = TempDir::new("scan").unwrap();
     {

@@ -22,24 +22,33 @@
 //! independent too, and the process doesn't leak a listener per seed.
 //! `CHAOS_SEED_MULT` scales the seed count like the sim campaigns (the
 //! nightly `tcp-chaos` CI leg runs 4×).
+//!
+//! The stripe axis (PR 5): the campaigns also run against `{1,4}`-
+//! stripe acceptors (`StripedAcceptor` behind `serve_striped_acceptor`)
+//! — concurrent clients genuinely cross stripe locks on every node, so
+//! a striped-dispatch bug shows up as a linearizability violation here
+//! with real sockets in the loop.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use caspaxos::acceptor::Acceptor;
+use caspaxos::acceptor::StripedAcceptor;
 use caspaxos::change::ChangeFn;
 use caspaxos::linearizability::{check, CheckResult, History, Observed};
 use caspaxos::proposer::{LeaseOpts, Proposer, ProposerOpts, ReadMode};
 use caspaxos::quorum::ClusterConfig;
 use caspaxos::rng::Rng;
 use caspaxos::testkit::{chaos_seed_count as seeds, forall_seeds};
-use caspaxos::transport::tcp::{spawn_acceptor, TcpTransport};
+use caspaxos::transport::tcp::{spawn_striped_acceptor, TcpTransport};
 
-fn spawn_cluster(n: u64) -> HashMap<u64, String> {
+/// Spawns `n` loopback acceptors, each lock-striped `stripes` ways
+/// (1 = the classic single-lock acceptor the legacy campaigns ran).
+fn spawn_cluster(n: u64, stripes: usize) -> HashMap<u64, String> {
     let mut addrs = HashMap::new();
     for id in 1..=n {
-        let addr = spawn_acceptor("127.0.0.1:0", Acceptor::new(id)).unwrap();
+        let acc = Arc::new(StripedAcceptor::new_mem(id, stripes));
+        let addr = spawn_striped_acceptor("127.0.0.1:0", acc).unwrap();
         addrs.insert(id, addr.to_string());
     }
     addrs
@@ -167,7 +176,7 @@ fn run_tcp_chaos(
 
 #[test]
 fn tcp_chaos_cas_and_quorum_reads_40_seeds() {
-    let addrs = spawn_cluster(3);
+    let addrs = spawn_cluster(3, 1);
     let n = seeds(40);
     let mut total_completed = 0usize;
     forall_seeds(0x7C9_0001, n, |rng| {
@@ -182,7 +191,7 @@ fn tcp_chaos_cas_and_quorum_reads_40_seeds() {
 
 #[test]
 fn tcp_chaos_lease_read_mix_40_seeds() {
-    let addrs = spawn_cluster(3);
+    let addrs = spawn_cluster(3, 1);
     let n = seeds(40);
     let mut total_completed = 0usize;
     forall_seeds(0x7C9_0002, n, |rng| {
@@ -192,6 +201,41 @@ fn tcp_chaos_lease_read_mix_40_seeds() {
     });
     // Live leases block rival writers for whole windows, so completion
     // runs lower than the write-only mixes — but never collapses.
+    let total = n as usize * CLIENTS as usize * OPS_PER_CLIENT;
+    assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
+fn tcp_chaos_striped_acceptors_40_seeds() {
+    // The stripe axis over real sockets: 4-stripe acceptors serve the
+    // mixed CAS/quorum-read schedules while the nemesis severs live
+    // connections mid-round. Concurrent clients now genuinely run
+    // through DIFFERENT stripe locks on each node; any cross-stripe
+    // leak fails the linearizability check.
+    let addrs = spawn_cluster(3, 4);
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0x7C9_0003, n, |rng| {
+        let (invoked, completed, _) = run_tcp_chaos(&addrs, rng.next_u64(), false);
+        assert_eq!(invoked, CLIENTS as usize * OPS_PER_CLIENT, "every op invoked once");
+        total_completed += completed;
+    });
+    let total = n as usize * CLIENTS as usize * OPS_PER_CLIENT;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
+fn tcp_chaos_striped_lease_mix_40_seeds() {
+    // Stripes × leases over sockets: per-stripe lease tables fencing
+    // foreign ballots while connections die under the clients.
+    let addrs = spawn_cluster(3, 4);
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0x7C9_0004, n, |rng| {
+        let (invoked, completed, _) = run_tcp_chaos(&addrs, rng.next_u64(), true);
+        assert_eq!(invoked, CLIENTS as usize * OPS_PER_CLIENT, "every op invoked once");
+        total_completed += completed;
+    });
     let total = n as usize * CLIENTS as usize * OPS_PER_CLIENT;
     assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
 }
@@ -213,7 +257,11 @@ fn tcp_chaos_schedule_is_seed_replayable() {
     };
     // One FRESH cluster per run: replaying a seed reuses its keys, and
     // the checker (correctly) roots every history at the empty register.
-    let (_, _, h_a) = run_tcp_chaos(&spawn_cluster(3), 0xFEED, false);
-    let (_, _, h_b) = run_tcp_chaos(&spawn_cluster(3), 0xFEED, false);
+    let (_, _, h_a) = run_tcp_chaos(&spawn_cluster(3, 1), 0xFEED, false);
+    let (_, _, h_b) = run_tcp_chaos(&spawn_cluster(3, 1), 0xFEED, false);
     assert_eq!(signature(&h_a), signature(&h_b), "same seed, same op schedule");
+    // The stripe count is invisible to the schedule: a 4-stripe cluster
+    // invokes the identical op multiset for the same seed.
+    let (_, _, h_c) = run_tcp_chaos(&spawn_cluster(3, 4), 0xFEED, false);
+    assert_eq!(signature(&h_a), signature(&h_c), "striping changes no schedule");
 }
