@@ -53,6 +53,7 @@ fn launch() -> Vec<Node> {
                 shard_plan: None,
                 stripes: 1,
                 data_dir: None,
+                checkpoint: None,
                 lease: None,
             })
             .unwrap()

@@ -12,9 +12,16 @@
 //!   stripes' records must still coalesce under shared fsync batches:
 //!   `fsyncs << appends` even though no two clients share a lock.
 //!
+//! * **Restart replay** — a checkpointed log reopens by loading the
+//!   checkpoint and replaying only the delta; the full-replay vs
+//!   checkpoint+delta times quantify the restart-cost win.
+//!
 //! Clients drive the acceptor exactly as the TCP service does: handle
 //! under the stripe lock, wait the durability ticket OUTSIDE it.
-//! Emits `BENCH_write_path.json` (CI uploads it as an artifact).
+//! Emits `BENCH_write_path.json` (CI uploads it as an artifact) and
+//! appends one summary row per run — date, commit, CAS throughput,
+//! restart-replay ms — to the in-tree `BENCH_trajectory.json` (JSONL),
+//! so the perf history survives in the repo itself.
 //!
 //! Run: `cargo bench --bench write_path` (set `BENCH_SMOKE=1` for a
 //! seconds-long smoke run; the stripe-scaling assertion is enforced on
@@ -24,7 +31,7 @@ use std::io::Write as _;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use caspaxos::acceptor::{FileStorage, GroupCommitOpts, StripedAcceptor, WalStats};
+use caspaxos::acceptor::{FileStorage, GroupCommitOpts, Slot, Storage as _, StripedAcceptor, WalStats};
 use caspaxos::ballot::Ballot;
 use caspaxos::msg::{ProposerId, Request, Response};
 use caspaxos::state::Val;
@@ -84,6 +91,77 @@ fn cas_throughput(
     }
     let elapsed = start.elapsed().as_secs_f64();
     ((clients * ops_per_client) as f64 / elapsed, acc.wal_stats())
+}
+
+/// Builds a `records`-record log over `records/4` keys — just inside
+/// the open-time compaction threshold, so the first reopen really
+/// replays the whole log — times that full replay, then checkpoints and
+/// times the checkpoint-load + empty-delta reopen.
+fn restart_replay(dir: &TempDir, records: u64) -> (f64, f64) {
+    let path = dir.file("replay-bench.log");
+    let keys = (records / 4).max(1);
+    {
+        let mut s = FileStorage::open(&path).unwrap();
+        s.fsync = false;
+        for i in 0..records {
+            let key = format!("k{}", i % keys);
+            let slot = Slot {
+                promise: Ballot::ZERO,
+                accepted_ballot: Ballot::new(i + 1, 1),
+                value: Val::Num { ver: 0, num: i as i64 },
+                lease: None,
+            };
+            s.store_deferred(&key, &slot).unwrap().wait().unwrap();
+        }
+    }
+    let t = Instant::now();
+    let stats = FileStorage::open(&path).unwrap().ckpt_stats();
+    let full_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(stats.replay_records, records, "first reopen must replay the whole log");
+    {
+        let mut s = FileStorage::open(&path).unwrap();
+        s.fsync = false;
+        s.checkpoint().unwrap();
+    }
+    let t = Instant::now();
+    let stats = FileStorage::open(&path).unwrap().ckpt_stats();
+    let ckpt_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(stats.replay_records, 0, "checkpointed reopen must replay only the delta");
+    (full_ms, ckpt_ms)
+}
+
+/// UTC date as `YYYY-MM-DD` via civil-from-days — std has no date
+/// formatting and the offline toolchain has no chrono.
+fn utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_secs();
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Commit id for the trajectory row: `GITHUB_SHA` in CI, `git
+/// rev-parse` locally, `"unknown"` outside a checkout.
+fn commit_id() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        return sha.chars().take(12).collect();
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
 }
 
 fn main() {
@@ -170,9 +248,46 @@ fn main() {
     }
     json.push(format!("\"group_commit_striped\": [{}]", gc_rows.join(", ")));
 
+    // ---- Restart replay: full-log vs checkpoint + delta ----
+    println!("\n## Restart replay (checkpoint-load + delta vs whole-log)");
+    let replay_records: u64 = if quick { 2_000 } else { 40_000 };
+    let (full_ms, ckpt_ms) = restart_replay(&dir, replay_records);
+    println!("| records | full replay | checkpoint + delta |");
+    println!("|---|---|---|");
+    println!("| {replay_records} | {full_ms:.1}ms | {ckpt_ms:.1}ms |");
+    if !quick {
+        assert!(
+            ckpt_ms < full_ms,
+            "checkpoint-load + delta must reopen faster than whole-log replay: \
+             {ckpt_ms:.1}ms vs {full_ms:.1}ms"
+        );
+    }
+    json.push(format!(
+        "\"restart_replay\": {{\"records\": {replay_records}, \"full_ms\": {full_ms:.1}, \
+         \"ckpt_ms\": {ckpt_ms:.1}}}"
+    ));
+
     let out = format!("{{\n  {}\n}}\n", json.join(",\n  "));
     let path = "BENCH_write_path.json";
     let mut f = std::fs::File::create(path).expect("create BENCH_write_path.json");
     f.write_all(out.as_bytes()).expect("write BENCH_write_path.json");
     println!("\nwrote {path}");
+
+    // Perf trajectory: one JSONL summary row per run, appended to the
+    // in-tree file so re-anchors can read the history from the repo.
+    let row = format!(
+        "{{\"date\": \"{}\", \"commit\": \"{}\", \"smoke\": {quick}, \
+         \"cas_ops_per_sec\": {:.0}, \"replay_full_ms\": {full_ms:.1}, \
+         \"replay_ckpt_ms\": {ckpt_ms:.1}}}\n",
+        utc_date(),
+        commit_id(),
+        best[2]
+    );
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_trajectory.json")
+        .expect("open BENCH_trajectory.json");
+    f.write_all(row.as_bytes()).expect("append BENCH_trajectory.json");
+    println!("appended trajectory row to BENCH_trajectory.json");
 }

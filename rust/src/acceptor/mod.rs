@@ -45,7 +45,8 @@ use crate::msg::{Key, ProposerId, Request, Response};
 use crate::state::Val;
 
 pub use storage::{
-    stripe_of, FileStorage, GroupCommitOpts, Lease, MemStorage, Persist, Slot, Storage, WalStats,
+    stripe_of, CheckpointOpts, CkptStats, FileStorage, GroupCommitOpts, Lease, MemStorage,
+    Persist, Slot, Storage, WalStats,
 };
 
 /// Upper bound on a grantable lease (clamps the wire-supplied duration
@@ -102,6 +103,15 @@ impl<S: Storage> Acceptor<S> {
     /// Read-only access to the backing storage.
     pub fn storage(&self) -> &S {
         &self.store
+    }
+
+    /// Mutable access to the backing storage, for storage-level
+    /// administration (checkpointing a shared-WAL stripe set, test
+    /// setup). Protocol state must still change through
+    /// [`Acceptor::handle`] — this never touches the cached min-age
+    /// table, so callers must not alter the logical state behind it.
+    pub fn storage_mut(&mut self) -> &mut S {
+        &mut self.store
     }
 
     /// Number of registers currently held.
@@ -480,6 +490,40 @@ impl StripedAcceptor<FileStorage> {
     /// `appends` and `fsyncs` is the group-commit win *across* stripes.
     pub fn wal_stats(&self) -> WalStats {
         self.stripes[0].lock().unwrap().storage().wal_stats()
+    }
+
+    /// Checkpoint / replay counters of the shared log (whole-log
+    /// numbers; any stripe reports the same).
+    pub fn ckpt_stats(&self) -> CkptStats {
+        self.stripes[0].lock().unwrap().storage().ckpt_stats()
+    }
+
+    /// True when shared-WAL growth since the last checkpoint crosses
+    /// `opts` — the poll drivers pair with [`StripedAcceptor::compact`]
+    /// (the node server runs it on a background thread).
+    pub fn checkpoint_due(&self, opts: &CheckpointOpts) -> bool {
+        self.stripes[0].lock().unwrap().storage().checkpoint_due(opts)
+    }
+
+    /// Online compaction of the shared striped WAL: a coordinated
+    /// pause-write-swap. Takes EVERY stripe lock (in index order — the
+    /// only multi-lock holder in the striped acceptor, so lock order
+    /// is trivially consistent), which quiesces all writers; flushes
+    /// the group-commit [`crate::acceptor::storage`] WAL so every
+    /// acked record is folded; writes a full-state checkpoint beside
+    /// the log; atomically swaps in a fresh truncated WAL; resumes.
+    /// Concurrent clients block only for the checkpoint write itself —
+    /// no restart, no lost acks: outstanding [`Persist`] tickets
+    /// resolve against the pre-swap flush, and requests that arrive
+    /// during the swap simply wait on their stripe lock.
+    ///
+    /// At one stripe this is exactly the sole-owner
+    /// [`FileStorage::checkpoint`].
+    pub fn compact(&self) -> crate::error::CasResult<()> {
+        let mut guards: Vec<_> = self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let mut stores: Vec<&mut FileStorage> =
+            guards.iter_mut().map(|g| g.storage_mut()).collect();
+        FileStorage::checkpoint_handles(&mut stores)
     }
 }
 
@@ -1264,5 +1308,55 @@ mod tests {
         assert_eq!(striped.id, 9);
         assert_eq!(striped.stripe_count(), 1);
         assert_eq!(striped.storage_value("k"), Some(5));
+    }
+
+    #[test]
+    fn striped_compact_checkpoints_shared_wal_without_restart() {
+        use crate::testkit::{key_on_stripe, TempDir};
+        let dir = TempDir::new("striped-online").unwrap();
+        let a = crate::testkit::striped_file_acceptor(&dir, 1, 4);
+        let keys: Vec<Key> = (0..4).map(|s| key_on_stripe(s, 4, 11)).collect();
+        for round in 1..=100u64 {
+            for key in &keys {
+                assert_eq!(
+                    a.handle_at(&acc(key, round, 1, round as i64), 1_000),
+                    Response::Accepted
+                );
+            }
+        }
+        let log = dir.file("acceptor-1.log");
+        let before = std::fs::metadata(&log).unwrap().len();
+        a.compact().unwrap();
+        let after = std::fs::metadata(&log).unwrap().len();
+        assert!(after < before / 4, "online compaction shrank {before} -> {after}");
+        let stats = a.ckpt_stats();
+        assert_eq!(stats.checkpoint_records, 4, "one live slot per stripe");
+        assert_eq!(stats.checkpoints, 1);
+        // The set keeps serving after the swap, on the fresh WAL...
+        for key in &keys {
+            assert_eq!(a.handle_at(&acc(key, 200, 1, 777), 1_000), Response::Accepted);
+        }
+        drop(a);
+        // ...and a restart loads checkpoint + delta, nothing lost.
+        let a = crate::testkit::striped_file_acceptor(&dir, 1, 4);
+        for key in &keys {
+            assert_eq!(a.storage_value(key), Some(777));
+        }
+        assert_eq!(a.ckpt_stats().replay_records, 4, "restart replays only the delta");
+    }
+
+    #[test]
+    fn striped_checkpoint_due_follows_shared_wal_growth() {
+        use crate::testkit::TempDir;
+        let dir = TempDir::new("striped-due").unwrap();
+        let a = crate::testkit::striped_file_acceptor(&dir, 1, 2);
+        let opts = CheckpointOpts { interval_records: 5, interval_bytes: 0 };
+        assert!(!a.checkpoint_due(&opts), "fresh log: nothing due");
+        for i in 1..=5u64 {
+            a.handle_at(&acc("k", i, 1, i as i64), 1_000);
+        }
+        assert!(a.checkpoint_due(&opts), "5 appends at interval 5");
+        a.compact().unwrap();
+        assert!(!a.checkpoint_due(&opts), "checkpoint resets the growth counters");
     }
 }

@@ -36,6 +36,41 @@
 //! key on the stripe that will serve it. At `stripes = 1` the records
 //! are the legacy untagged kind and the log stays byte-compatible with
 //! pre-stripe builds.
+//!
+//! ## Checkpoints and online compaction
+//!
+//! A *checkpoint* is a full snapshot of the live state (every slot —
+//! including leases — plus the union min-age table, CRC-framed like the
+//! log) written to `<log>.ckpt` beside the WAL. Writing one also swaps
+//! in a fresh empty WAL, so restart cost becomes checkpoint-load +
+//! delta-replay instead of whole-log replay, and the log reclaims disk
+//! without dropping any durable state. The same machinery serves three
+//! callers: open-time compaction of an oversized log, the sole-owner
+//! [`FileStorage::checkpoint`] (auto-triggered by [`CheckpointOpts`]),
+//! and [`crate::acceptor::StripedAcceptor::compact`], which quiesces
+//! every stripe of a shared WAL and checkpoints the set *online*.
+//!
+//! Crash consistency (each step made durable before the next starts):
+//!
+//! 1. flush the WAL (all acked records on disk);
+//! 2. write the full state to `<log>.ckpt.tmp`, fsync it;
+//! 3. rename it over `<log>.ckpt`, fsync the parent directory;
+//! 4. rename an empty, fsynced file over the WAL (a *fresh inode* — an
+//!    in-place truncate could leave stale tail records behind a new
+//!    append after a crash), fsync the parent directory again.
+//!
+//! A crash between any two steps leaves either the old (ckpt, WAL) pair
+//! or the new ckpt with the old WAL — and replaying an already-folded
+//! WAL suffix over a checkpoint is idempotent (records are last-write-
+//! wins and the checkpoint holds their final fold), so every
+//! intermediate world recovers the exact acked state. The directory
+//! fsyncs matter: a rename alone may not survive power loss, and a
+//! resurrected pre-compaction log interleaved with appends to the
+//! swapped file would lose acked records. Torn or stale `*.compact` /
+//! `*.ckpt.tmp` leftovers are deleted at open and never replayed; a
+//! torn `<log>.ckpt` itself is impossible by construction (step 3), so
+//! a checkpoint that fails its own header count is reported as an open
+//! error, never silently half-loaded.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -371,6 +406,57 @@ impl Default for GroupCommitOpts {
     }
 }
 
+/// Checkpoint cadence for [`FileStorage`] (see the module docs): when
+/// either threshold of WAL growth since the last checkpoint is
+/// reached, a full-state checkpoint is written and the WAL truncated.
+/// Both `0` disables automatic checkpointing (the default — explicit
+/// [`FileStorage::checkpoint`] / [`crate::acceptor::StripedAcceptor::compact`]
+/// calls still work, and an existing `<log>.ckpt` is always loaded).
+///
+/// Sole-owner handles checkpoint inline on the append path; shared
+/// striped handles cannot (one stripe must not pause its siblings), so
+/// drivers poll [`FileStorage::checkpoint_due`] and call the striped
+/// coordination point — the node server runs that poll on a background
+/// thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CheckpointOpts {
+    /// Checkpoint after this many WAL records since the last one
+    /// (0 = no record-count trigger).
+    pub interval_records: u64,
+    /// ... or after this many WAL bytes since the last one
+    /// (0 = no byte-count trigger).
+    pub interval_bytes: u64,
+}
+
+impl CheckpointOpts {
+    /// True when WAL growth since the last checkpoint crosses either
+    /// enabled threshold.
+    pub fn due(&self, since_records: u64, since_bytes: u64) -> bool {
+        (self.interval_records > 0 && since_records >= self.interval_records)
+            || (self.interval_bytes > 0 && since_bytes >= self.interval_bytes)
+    }
+}
+
+/// Checkpoint / replay counters for one log (see
+/// [`FileStorage::ckpt_stats`]; exported through the node `Status`
+/// string). On a shared-WAL stripe set every handle reports the same
+/// (whole-log) numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CkptStats {
+    /// Records in the current checkpoint file: the count loaded at
+    /// open, updated when a checkpoint is written (0 = no checkpoint).
+    pub checkpoint_records: u64,
+    /// WAL (delta) records replayed at the last open — with
+    /// checkpointing on, this stays « the total historical appends.
+    pub replay_records: u64,
+    /// Wall-clock µs of the last checkpoint written by this process
+    /// (0 = none yet this run).
+    pub last_checkpoint_us: u64,
+    /// Checkpoints written by this process (open-time compaction
+    /// included).
+    pub checkpoints: u64,
+}
+
 /// Monotone counters for one WAL (see [`FileStorage::wal_stats`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WalStats {
@@ -408,6 +494,20 @@ struct Wal {
     appends: AtomicU64,
     flushes: AtomicU64,
     fsyncs: AtomicU64,
+    /// WAL records appended since the last checkpoint (drives
+    /// [`CheckpointOpts::due`]).
+    since_ckpt_records: AtomicU64,
+    /// WAL bytes appended since the last checkpoint.
+    since_ckpt_bytes: AtomicU64,
+    /// Records in the current checkpoint file (loaded at open, updated
+    /// on every checkpoint write).
+    ckpt_records: AtomicU64,
+    /// WAL records replayed at open (the restart delta).
+    replay_records: AtomicU64,
+    /// Wall-clock µs of the last checkpoint written by this process.
+    last_ckpt_us: AtomicU64,
+    /// Checkpoints written by this process.
+    ckpts: AtomicU64,
 }
 
 impl Wal {
@@ -427,6 +527,12 @@ impl Wal {
             appends: AtomicU64::new(0),
             flushes: AtomicU64::new(0),
             fsyncs: AtomicU64::new(0),
+            since_ckpt_records: AtomicU64::new(0),
+            since_ckpt_bytes: AtomicU64::new(0),
+            ckpt_records: AtomicU64::new(0),
+            replay_records: AtomicU64::new(0),
+            last_ckpt_us: AtomicU64::new(0),
+            ckpts: AtomicU64::new(0),
         }
     }
 
@@ -440,6 +546,8 @@ impl Wal {
         g.next_seq += 1;
         g.sync_pending |= sync;
         self.appends.fetch_add(1, Ordering::Relaxed);
+        self.since_ckpt_records.fetch_add(1, Ordering::Relaxed);
+        self.since_ckpt_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
         Ok(g.next_seq)
     }
 
@@ -518,6 +626,25 @@ impl Wal {
             fsyncs: self.fsyncs.load(Ordering::Relaxed),
         }
     }
+
+    fn ckpt_stats(&self) -> CkptStats {
+        CkptStats {
+            checkpoint_records: self.ckpt_records.load(Ordering::Relaxed),
+            replay_records: self.replay_records.load(Ordering::Relaxed),
+            last_checkpoint_us: self.last_ckpt_us.load(Ordering::Relaxed),
+            checkpoints: self.ckpts.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Records a finished checkpoint: resets the since-checkpoint
+    /// growth counters and stamps the stats.
+    fn note_checkpoint(&self, records: u64) {
+        self.ckpt_records.store(records, Ordering::Relaxed);
+        self.since_ckpt_records.store(0, Ordering::Relaxed);
+        self.since_ckpt_bytes.store(0, Ordering::Relaxed);
+        self.last_ckpt_us.store(crate::acceptor::wall_clock_us(), Ordering::Relaxed);
+        self.ckpts.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Crash-durable storage: CRC-framed binary append log + in-memory index,
@@ -525,8 +652,9 @@ impl Wal {
 ///
 /// Record framing: `u32 len (LE) | u32 crc32(body) (LE) | body`. On open
 /// the log is replayed (last record per key wins); replay stops at the
-/// first torn/corrupt record, which a crash mid-append produces. The log
-/// is rewritten compacted when it exceeds 4× the live set.
+/// first torn/corrupt record, which a crash mid-append produces. An
+/// oversized log (records exceeding 4× the live set) is checkpointed at
+/// open, shrinking it to the live fold.
 ///
 /// Format note: slot records gained a trailing `Option<Lease>` when
 /// read leases landed, so logs written by earlier builds stop replaying
@@ -543,6 +671,13 @@ pub struct FileStorage {
     records: usize,
     /// fsync every write (safe default). Disable for throughput benches.
     pub fsync: bool,
+    /// Automatic checkpoint cadence (disabled by default). Honored
+    /// inline on the append path by sole-owner handles; shared striped
+    /// handles ignore it — their drivers poll
+    /// [`FileStorage::checkpoint_due`] and call
+    /// [`crate::acceptor::StripedAcceptor::compact`] instead (one
+    /// stripe must never pause its siblings from under them).
+    pub checkpoint: CheckpointOpts,
     /// `Some(i)` when this handle is stripe `i` of a shared-WAL set
     /// ([`FileStorage::open_striped`]): appended records are tagged
     /// with the stripe id, and runtime compaction is refused (one
@@ -560,6 +695,14 @@ pub struct FileStorage {
 /// and the number of intact records replayed.
 fn replay_log(buf: &[u8], stripes: usize) -> (Vec<MemStorage>, usize) {
     let mut mems: Vec<MemStorage> = (0..stripes.max(1)).map(|_| MemStorage::new()).collect();
+    let records = replay_into(buf, &mut mems);
+    (mems, records)
+}
+
+/// [`replay_log`]'s core, replaying ON TOP of existing indexes — the
+/// checkpoint-then-delta restart path folds the WAL over the
+/// checkpoint-loaded state with exactly the log's replay rules.
+fn replay_into(buf: &[u8], mems: &mut [MemStorage]) -> usize {
     let n = mems.len();
     let mut records = 0;
     let mut input = buf;
@@ -591,7 +734,134 @@ fn replay_log(buf: &[u8], stripes: usize) -> (Vec<MemStorage>, usize) {
         records += 1;
         input = &input[8 + len..];
     }
-    (mems, records)
+    records
+}
+
+/// Checkpoint file path beside the log (`<log>.ckpt`).
+fn ckpt_path(path: &std::path::Path) -> PathBuf {
+    path.with_extension("ckpt")
+}
+
+/// Magic prefix of a checkpoint file: 8 magic bytes, then the record
+/// count as `u64` LE, then CRC-framed [`LogRec`]s (the log's framing).
+const CKPT_MAGIC: &[u8; 8] = b"CASPCKP1";
+
+/// Fsyncs `path`'s parent directory. A rename is only crash-durable
+/// once the *directory entry* is on disk: without this, power loss can
+/// resurrect the pre-rename file — and a resurrected pre-compaction
+/// log interleaved with appends to the swapped file loses acked
+/// records. Called after every rename in the checkpoint/compaction
+/// path.
+fn sync_parent_dir(path: &std::path::Path) -> CasResult<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => std::path::Path::new("."),
+    };
+    std::fs::File::open(parent)
+        .and_then(|d| d.sync_all())
+        .map_err(|e| CasError::Transport(format!("fsync dir {parent:?}: {e}")))
+}
+
+/// Deletes stale checkpoint/compaction temp files beside `path`. A
+/// crash between `File::create(&tmp)` and the rename strands the tmp
+/// forever (it is never replayed — only the renamed file is); without
+/// cleanup it leaks disk on every crashed compaction.
+fn remove_stale_tmps(path: &std::path::Path) {
+    for tmp in [path.with_extension("compact"), path.with_extension("ckpt.tmp")] {
+        if tmp.exists() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+}
+
+/// Loads the checkpoint beside `path` into `stripes` fresh indexes
+/// (None = no checkpoint). Routing is by [`stripe_of`] over the
+/// CURRENT stripe count — checkpoints restripe exactly like logs. A
+/// checkpoint whose body replays fewer records than its header count
+/// is corrupt and reported as an error: the WAL only holds the delta
+/// since it was written, so silently half-loading would serve a state
+/// that loses acked writes.
+fn load_checkpoint(
+    path: &std::path::Path,
+    stripes: usize,
+) -> CasResult<Option<(Vec<MemStorage>, u64)>> {
+    let cp = ckpt_path(path);
+    if !cp.exists() {
+        return Ok(None);
+    }
+    let mut buf = Vec::new();
+    std::fs::File::open(&cp)
+        .and_then(|mut f| f.read_to_end(&mut buf))
+        .map_err(|e| CasError::Transport(format!("open {cp:?}: {e}")))?;
+    if buf.len() < 16 || &buf[0..8] != CKPT_MAGIC {
+        return Err(CasError::Transport(format!("checkpoint {cp:?}: bad magic")));
+    }
+    let expected = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let mut mems: Vec<MemStorage> = (0..stripes.max(1)).map(|_| MemStorage::new()).collect();
+    let replayed = replay_into(&buf[16..], &mut mems) as u64;
+    if replayed != expected {
+        return Err(CasError::Transport(format!(
+            "checkpoint {cp:?}: {replayed} of {expected} records intact"
+        )));
+    }
+    Ok(Some((mems, expected)))
+}
+
+/// Writes a full-state checkpoint of `mems` beside `path` (tmp-write →
+/// fsync → rename → dir fsync; see the module docs). Slots are tagged
+/// with their stripe id when the set is striped; the union min-age
+/// table is written ONCE (every stripe holds the same table, and
+/// replay re-fences all stripes from any min-age record). Returns the
+/// record count written.
+fn write_checkpoint_file(path: &std::path::Path, mems: &[&MemStorage]) -> CasResult<u64> {
+    let striped = mems.len() > 1;
+    let records: u64 = mems.iter().map(|m| m.len() as u64).sum::<u64>()
+        + mems[0].min_ages.len() as u64;
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut f =
+            std::fs::File::create(&tmp).map_err(|e| CasError::Transport(e.to_string()))?;
+        f.write_all(CKPT_MAGIC).map_err(|e| CasError::Transport(e.to_string()))?;
+        f.write_all(&records.to_le_bytes()).map_err(|e| CasError::Transport(e.to_string()))?;
+        let mut frame = Vec::new();
+        for (i, mem) in mems.iter().enumerate() {
+            for (key, slot) in mem.scan(None, usize::MAX) {
+                let slot = (*slot).clone();
+                frame.clear();
+                let rec = if striped {
+                    LogRec::StripedSlot { stripe: i as u32, key, slot }
+                } else {
+                    LogRec::Slot { key, slot }
+                };
+                frame_record(&rec, &mut frame);
+                f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+            }
+        }
+        for (proposer_id, min_age) in mems[0].load_min_ages() {
+            frame.clear();
+            frame_record(&LogRec::MinAge { proposer_id, min_age }, &mut frame);
+            f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+        }
+        f.sync_all().map_err(|e| CasError::Transport(e.to_string()))?;
+    }
+    std::fs::rename(&tmp, ckpt_path(path)).map_err(|e| CasError::Transport(e.to_string()))?;
+    sync_parent_dir(path)?;
+    Ok(records)
+}
+
+/// Renames a fresh, fsynced, EMPTY file over the WAL at `path` (tmp →
+/// rename → dir fsync). A fresh inode, not an in-place truncate: after
+/// a crash, a non-durable truncate could leave the old tail bytes
+/// visible past a new append — stale records replayed over newer
+/// state. Only called once the checkpoint holding the log's fold is
+/// durable.
+fn swap_in_empty_wal(path: &std::path::Path) -> CasResult<()> {
+    let tmp = path.with_extension("compact");
+    std::fs::File::create(&tmp)
+        .and_then(|f| f.sync_all())
+        .map_err(|e| CasError::Transport(e.to_string()))?;
+    std::fs::rename(&tmp, path).map_err(|e| CasError::Transport(e.to_string()))?;
+    sync_parent_dir(path)
 }
 
 impl FileStorage {
@@ -604,19 +874,23 @@ impl FileStorage {
     /// Opens (or creates) a log with explicit group-commit options.
     pub fn open_with(path: impl Into<PathBuf>, opts: GroupCommitOpts) -> CasResult<Self> {
         let path = path.into();
-        let (mut mems, records) = Self::replay_path(&path, 1)?;
+        let (mut mems, records, ckpt_records) = Self::replay_path(&path, 1)?;
         let mem = mems.pop().expect("replay_log yields at least one stripe");
         let file = Self::open_append(&path)?;
+        let wal = Arc::new(Wal::new(file, opts));
+        wal.replay_records.store(records as u64, Ordering::Relaxed);
+        wal.ckpt_records.store(ckpt_records, Ordering::Relaxed);
         let mut s = FileStorage {
             path,
-            wal: Arc::new(Wal::new(file, opts)),
+            wal,
             mem,
             records,
             fsync: true,
+            checkpoint: CheckpointOpts::default(),
             stripe: None,
         };
         if s.records > 64 && s.records > 4 * (s.mem.len() + s.mem.min_ages.len()) {
-            s.compact()?;
+            s.checkpoint()?;
         }
         Ok(s)
     }
@@ -632,8 +906,10 @@ impl FileStorage {
     /// byte-compatible with pre-stripe logs; striped handles tag their
     /// records, and replay's hash routing keeps the log readable across
     /// stripe-count changes in either direction. An oversized log is
-    /// compacted here, before the handles are built — the runtime
-    /// [`FileStorage::compact`] is refused on shared handles.
+    /// checkpointed here, before the handles are built — the runtime
+    /// coordination point for a LIVE shared set is
+    /// [`crate::acceptor::StripedAcceptor::compact`] (per-handle
+    /// [`FileStorage::checkpoint`] is refused on shared handles).
     pub fn open_striped(
         path: impl Into<PathBuf>,
         opts: GroupCommitOpts,
@@ -644,13 +920,23 @@ impl FileStorage {
         if stripes == 1 {
             return Ok(vec![Self::open_with(path, opts)?]);
         }
-        let (mems, mut records) = Self::replay_path(&path, stripes)?;
-        let live: usize = mems.iter().map(|m| m.len() + m.min_ages.len()).sum();
+        let (mems, mut records, mut ckpt_records) = Self::replay_path(&path, stripes)?;
+        // Live set: slots across stripes, plus the min-age table ONCE —
+        // every stripe holds the same union table, so summing it per
+        // stripe would inflate the estimate by (stripes−1)×min_ages and
+        // let oversized many-proposer logs dodge compaction.
+        let live: usize =
+            mems.iter().map(|m| m.len()).sum::<usize>() + mems[0].min_ages.len();
         if records > 64 && records > 4 * live {
-            records = Self::rewrite_compacted(&path, &mems)?;
+            let mem_refs: Vec<&MemStorage> = mems.iter().collect();
+            ckpt_records = write_checkpoint_file(&path, &mem_refs)?;
+            swap_in_empty_wal(&path)?;
+            records = 0;
         }
         let file = Self::open_append(&path)?;
         let wal = Arc::new(Wal::new(file, opts));
+        wal.replay_records.store(records as u64, Ordering::Relaxed);
+        wal.ckpt_records.store(ckpt_records, Ordering::Relaxed);
         Ok(mems
             .into_iter()
             .enumerate()
@@ -659,25 +945,39 @@ impl FileStorage {
                 wal: Arc::clone(&wal),
                 // Whole-log record count mirrored on every handle; only
                 // informational for shared handles (compaction happens
-                // at open).
+                // at open or via the striped coordination point).
                 records,
                 mem,
                 fsync: true,
+                checkpoint: CheckpointOpts::default(),
                 stripe: Some(i as u32),
             })
             .collect())
     }
 
-    /// Reads and replays the log at `path` (absent = empty stripes).
-    fn replay_path(path: &std::path::Path, stripes: usize) -> CasResult<(Vec<MemStorage>, usize)> {
+    /// Reads and replays the log at `path` (absent = empty stripes):
+    /// stale compaction/checkpoint temp files are deleted, the
+    /// checkpoint (if any) is loaded, and the WAL delta is replayed on
+    /// top. Returns the indexes, the WAL record count, and the
+    /// checkpoint record count.
+    fn replay_path(
+        path: &std::path::Path,
+        stripes: usize,
+    ) -> CasResult<(Vec<MemStorage>, usize, u64)> {
+        remove_stale_tmps(path);
+        let (mut mems, ckpt_records) = match load_checkpoint(path, stripes)? {
+            Some((mems, n)) => (mems, n),
+            None => ((0..stripes.max(1)).map(|_| MemStorage::new()).collect(), 0),
+        };
         if !path.exists() {
-            return Ok(((0..stripes.max(1)).map(|_| MemStorage::new()).collect(), 0));
+            return Ok((mems, 0, ckpt_records));
         }
         let mut buf = Vec::new();
         std::fs::File::open(path)
             .and_then(|mut f| f.read_to_end(&mut buf))
             .map_err(|e| CasError::Transport(format!("open {path:?}: {e}")))?;
-        Ok(replay_log(&buf, stripes))
+        let records = replay_into(&buf, &mut mems);
+        Ok((mems, records, ckpt_records))
     }
 
     /// Opens (creating if needed) the log file for appending.
@@ -689,42 +989,6 @@ impl FileStorage {
             .map_err(|e| CasError::Transport(format!("append {path:?}: {e}")))
     }
 
-    /// Rewrites an oversized shared log with exactly the live records
-    /// (open-time compaction for striped sets). Returns the new record
-    /// count.
-    fn rewrite_compacted(path: &std::path::Path, mems: &[MemStorage]) -> CasResult<usize> {
-        let tmp = path.with_extension("compact");
-        let mut records = 0;
-        {
-            let mut f =
-                std::fs::File::create(&tmp).map_err(|e| CasError::Transport(e.to_string()))?;
-            let mut frame = Vec::new();
-            for (i, mem) in mems.iter().enumerate() {
-                for (key, slot) in mem.scan(None, usize::MAX) {
-                    frame.clear();
-                    frame_record(
-                        &LogRec::StripedSlot { stripe: i as u32, key, slot: (*slot).clone() },
-                        &mut frame,
-                    );
-                    f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
-                    records += 1;
-                }
-            }
-            // Every stripe holds the same (union) min-age table, and a
-            // legacy record re-fences ALL stripes on replay: one record
-            // per proposer suffices.
-            for (proposer_id, min_age) in mems[0].load_min_ages() {
-                frame.clear();
-                frame_record(&LogRec::MinAge { proposer_id, min_age }, &mut frame);
-                f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
-                records += 1;
-            }
-            f.sync_data().map_err(|e| CasError::Transport(e.to_string()))?;
-        }
-        std::fs::rename(&tmp, path).map_err(|e| CasError::Transport(e.to_string()))?;
-        Ok(records)
-    }
-
     /// This handle's stripe id within a shared-WAL set (`None` for a
     /// classic sole-owner log).
     pub fn stripe(&self) -> Option<u32> {
@@ -734,6 +998,21 @@ impl FileStorage {
     /// Enqueues one record; the returned ticket must be waited on.
     /// Shared-WAL handles tag the record with their stripe id first.
     fn append_deferred(&mut self, rec: LogRec) -> CasResult<Persist> {
+        // Sole-owner auto-checkpoint, BEFORE the new record is framed:
+        // the checkpoint folds exactly the records already applied to
+        // `mem`, and the new record lands in the fresh WAL. (Running it
+        // after the append would checkpoint a `mem` that misses the
+        // just-appended record, then truncate the WAL holding it —
+        // losing an acked write.)
+        if self.stripe.is_none() {
+            let due = self.checkpoint.due(
+                self.wal.since_ckpt_records.load(Ordering::Relaxed),
+                self.wal.since_ckpt_bytes.load(Ordering::Relaxed),
+            );
+            if due {
+                self.checkpoint()?;
+            }
+        }
         let rec = match self.stripe {
             None => rec,
             Some(stripe) => match rec {
@@ -764,40 +1043,79 @@ impl FileStorage {
         self.wal.stats()
     }
 
-    /// Rewrites the log with exactly the live records.
-    pub fn compact(&mut self) -> CasResult<()> {
+    /// Checkpoint / replay counters (shared-WAL stripe sets report the
+    /// same whole-log numbers on every handle).
+    pub fn ckpt_stats(&self) -> CkptStats {
+        self.wal.ckpt_stats()
+    }
+
+    /// True when WAL growth since the last checkpoint crosses `opts`
+    /// (the striped coordination point's poll; see [`CheckpointOpts`]).
+    pub fn checkpoint_due(&self, opts: &CheckpointOpts) -> bool {
+        opts.due(
+            self.wal.since_ckpt_records.load(Ordering::Relaxed),
+            self.wal.since_ckpt_bytes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Writes a full-state checkpoint and swaps in a fresh empty WAL
+    /// (see the module docs for the crash-consistency steps). Restart
+    /// then costs checkpoint-load + delta-replay; the log shrinks to
+    /// the delta. Sole-owner handles only — a shared striped handle
+    /// must go through
+    /// [`crate::acceptor::StripedAcceptor::compact`], which quiesces
+    /// every sibling first (one stripe rewriting the shared file would
+    /// drop the others' buffered records).
+    pub fn checkpoint(&mut self) -> CasResult<()> {
         if self.stripe.is_some() {
             return Err(CasError::Transport(
-                "striped shared-WAL logs compact on open, not per handle".into(),
+                "striped shared-WAL handles checkpoint via StripedAcceptor::compact".into(),
             ));
         }
-        // Drain pending appends first: `&mut self` keeps new appends
-        // out, and outstanding tickets resolve without flushing.
-        self.wal.flush_all()?;
-        let tmp = self.path.with_extension("compact");
-        {
-            let mut f = std::fs::File::create(&tmp)
-                .map_err(|e| CasError::Transport(e.to_string()))?;
-            let mut frame = Vec::new();
-            for (key, slot) in self.mem.scan(None, usize::MAX) {
-                frame.clear();
-                frame_record(&LogRec::Slot { key, slot: (*slot).clone() }, &mut frame);
-                f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
-            }
-            for (proposer_id, min_age) in self.mem.load_min_ages() {
-                frame.clear();
-                frame_record(&LogRec::MinAge { proposer_id, min_age }, &mut frame);
-                f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
-            }
-            f.sync_data().map_err(|e| CasError::Transport(e.to_string()))?;
+        Self::checkpoint_handles(&mut [self])
+    }
+
+    /// Rewrites the log with exactly the live records. Kept as the
+    /// historical name for the sole-owner path; today it IS
+    /// [`FileStorage::checkpoint`] (full state to `<log>.ckpt`, WAL
+    /// truncated) — strictly stronger: the log shrinks to zero and
+    /// replay becomes checkpoint-load + delta.
+    pub fn compact(&mut self) -> CasResult<()> {
+        self.checkpoint()
+    }
+
+    /// The checkpoint core, shared by the sole-owner path (`handles` =
+    /// one unshared handle) and the striped coordination point
+    /// (`handles` = every stripe of one shared-WAL set, all locks
+    /// held). The caller guarantees exclusive access to every handle,
+    /// so no new appends can race the swap; outstanding [`Persist`]
+    /// tickets resolve via `flush_all` below (their records are then
+    /// folded into the checkpoint — nothing acked is lost).
+    pub(crate) fn checkpoint_handles(handles: &mut [&mut FileStorage]) -> CasResult<()> {
+        assert!(!handles.is_empty(), "checkpoint needs at least one handle");
+        let wal = Arc::clone(&handles[0].wal);
+        debug_assert!(
+            handles.iter().all(|h| Arc::ptr_eq(&h.wal, &wal)),
+            "checkpoint_handles must cover exactly one shared-WAL set"
+        );
+        // 1. Drain pending appends: every acked record reaches the old
+        //    file (and `mem`), so the snapshot below folds all of them.
+        wal.flush_all()?;
+        // 2–3. Full state → tmp → fsync → rename → dir fsync.
+        let path = handles[0].path.clone();
+        let mems: Vec<&MemStorage> = handles.iter().map(|h| &h.mem).collect();
+        let records = write_checkpoint_file(&path, &mems)?;
+        // 4. Fresh empty WAL inode over the log path, then point the
+        //    shared handle at it. Pending-seq bookkeeping is untouched:
+        //    sequence numbers keep counting across the swap, so tickets
+        //    issued before the checkpoint stay valid.
+        swap_in_empty_wal(&path)?;
+        let file = Self::open_append(&path)?;
+        *wal.file.lock().unwrap() = file;
+        for h in handles.iter_mut() {
+            h.records = 0;
         }
-        std::fs::rename(&tmp, &self.path).map_err(|e| CasError::Transport(e.to_string()))?;
-        let file = std::fs::OpenOptions::new()
-            .append(true)
-            .open(&self.path)
-            .map_err(|e| CasError::Transport(e.to_string()))?;
-        *self.wal.file.lock().unwrap() = file;
-        self.records = self.mem.len() + self.mem.min_ages.len();
+        wal.note_checkpoint(records);
         Ok(())
     }
 }
@@ -1297,5 +1615,215 @@ mod tests {
         assert_eq!(stripes[1].load(&hot1), Some(slot(199)));
         let after = std::fs::metadata(&path).unwrap().len();
         assert!(after < before / 10, "striped open compaction shrank {before} -> {after}");
+    }
+
+    #[test]
+    fn checkpoint_truncates_wal_and_restart_replays_only_the_delta() {
+        let dir = TempDir::new("ckpt").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.fsync = false;
+            for i in 0..50u64 {
+                s.store(&format!("k{}", i % 5), &slot(i)).unwrap();
+            }
+            s.store_min_age(7, 3).unwrap();
+            s.checkpoint().unwrap();
+            assert_eq!(std::fs::metadata(&path).unwrap().len(), 0, "WAL truncated");
+            assert!(ckpt_path(&path).exists(), "checkpoint written beside the WAL");
+            let stats = s.ckpt_stats();
+            assert_eq!(stats.checkpoint_records, 6, "5 live slots + 1 min-age fence");
+            assert_eq!(stats.checkpoints, 1);
+            assert!(stats.last_checkpoint_us > 0);
+            // Delta appends land in the fresh WAL.
+            s.store(&"post".to_string(), &slot(99)).unwrap();
+            s.erase(&"k0".to_string()).unwrap();
+        }
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.load(&"post".to_string()), Some(slot(99)));
+        assert!(s.load(&"k0".to_string()).is_none(), "post-checkpoint erase replayed");
+        assert_eq!(s.load(&"k4".to_string()), Some(slot(49)), "checkpointed slot loaded");
+        assert_eq!(s.load_min_ages().get(&7), Some(&3), "fence survives the checkpoint");
+        let stats = s.ckpt_stats();
+        assert_eq!(stats.checkpoint_records, 6);
+        assert_eq!(stats.replay_records, 2, "restart replays ONLY the delta, not 51 records");
+    }
+
+    #[test]
+    fn auto_checkpoint_fires_on_record_interval() {
+        let dir = TempDir::new("ckpt-auto").unwrap();
+        let path = dir.file("acceptor.log");
+        let mut s = FileStorage::open(&path).unwrap();
+        s.fsync = false;
+        s.checkpoint = CheckpointOpts { interval_records: 10, interval_bytes: 0 };
+        for i in 0..35u64 {
+            s.store(&"hot".to_string(), &slot(i)).unwrap();
+        }
+        let stats = s.ckpt_stats();
+        assert!(stats.checkpoints >= 3, "35 appends at interval 10: got {}", stats.checkpoints);
+        assert_eq!(s.load(&"hot".to_string()), Some(slot(34)));
+        drop(s);
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.load(&"hot".to_string()), Some(slot(34)), "no acked write lost");
+        assert!(
+            s.ckpt_stats().replay_records < 35,
+            "restart must not replay the whole history"
+        );
+    }
+
+    #[test]
+    fn stale_tmp_files_are_removed_and_never_replayed() {
+        let dir = TempDir::new("ckpt-tmp").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"k".to_string(), &slot(1)).unwrap();
+        }
+        // A crash between File::create(&tmp) and the rename strands
+        // both kinds of tmp file; half-written garbage must be ignored
+        // by replay and deleted, not adopted or leaked forever.
+        let compact_tmp = path.with_extension("compact");
+        let ckpt_tmp = path.with_extension("ckpt.tmp");
+        std::fs::write(&compact_tmp, b"torn half-written compaction").unwrap();
+        std::fs::write(&ckpt_tmp, b"torn half-written checkpoint").unwrap();
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.load(&"k".to_string()), Some(slot(1)), "state comes from the real log");
+        assert!(!compact_tmp.exists(), "stale .compact tmp removed at open");
+        assert!(!ckpt_tmp.exists(), "stale .ckpt.tmp removed at open");
+    }
+
+    #[test]
+    fn complete_but_unrenamed_ckpt_tmp_is_not_adopted() {
+        // Crash after the tmp was fully written+fsynced but BEFORE the
+        // rename: the checkpoint "exists" only as a tmp. Open must
+        // ignore it (the rename is the commit point) and serve the
+        // pre-checkpoint log state.
+        let dir = TempDir::new("ckpt-unrenamed").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"k".to_string(), &slot(1)).unwrap();
+            s.checkpoint().unwrap();
+            s.store(&"k".to_string(), &slot(2)).unwrap();
+        }
+        // Rebuild the crash world: demote the committed ckpt to a tmp.
+        std::fs::rename(ckpt_path(&path), path.with_extension("ckpt.tmp")).unwrap();
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(
+            s.load(&"k".to_string()),
+            Some(slot(2)),
+            "delta WAL still replays over the (now missing) checkpoint"
+        );
+        assert!(!path.with_extension("ckpt.tmp").exists(), "unrenamed tmp cleaned up");
+        // But slot(1) is gone with the checkpoint — exactly why the
+        // WAL is only truncated AFTER the ckpt rename + dir fsync.
+    }
+
+    #[test]
+    fn corrupt_checkpoint_fails_loudly_not_partially() {
+        let dir = TempDir::new("ckpt-corrupt").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            for i in 0..10u64 {
+                s.store(&format!("k{i}"), &slot(i)).unwrap();
+            }
+            s.checkpoint().unwrap();
+        }
+        // Truncate the checkpoint body: fewer records than the header
+        // count. The WAL holds only the delta, so half-loading would
+        // silently lose acked writes — open must error instead.
+        let cp = ckpt_path(&path);
+        let bytes = std::fs::read(&cp).unwrap();
+        std::fs::write(&cp, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(FileStorage::open(&path).is_err(), "torn checkpoint must not half-load");
+        // Bad magic likewise.
+        std::fs::write(&cp, b"NOTCKPT!ratherlongbody").unwrap();
+        assert!(FileStorage::open(&path).is_err(), "foreign bytes must not parse");
+    }
+
+    #[test]
+    fn open_time_compaction_counts_min_age_union_once() {
+        // 30 proposers' min-age fences + one hot key over 4 stripes,
+        // 200 records total. Correct live set = 1 slot + 30 fences →
+        // 200 > 4×31 compacts. The old per-stripe sum inflated live to
+        // 1 + 4×30 = 121 (the union table counted once per stripe), so
+        // 200 < 484 dodged compaction forever.
+        let dir = TempDir::new("minage-live").unwrap();
+        let path = dir.file("acceptor.log");
+        let hot = key_on_stripe(0, 4, 5);
+        {
+            let mut stripes =
+                FileStorage::open_striped(&path, GroupCommitOpts::default(), 4).unwrap();
+            for s in &mut stripes {
+                s.fsync = false;
+            }
+            for p in 0..30u64 {
+                stripes[0].store_min_age(p, 2).unwrap();
+            }
+            for i in 0..170u64 {
+                stripes[0].store(&hot, &slot(i)).unwrap();
+            }
+        }
+        let before = std::fs::metadata(&path).unwrap().len();
+        let stripes = FileStorage::open_striped(&path, GroupCommitOpts::default(), 4).unwrap();
+        let after = std::fs::metadata(&path).unwrap().len();
+        assert!(
+            after < before / 4,
+            "union-once live count must trigger compaction ({before} -> {after})"
+        );
+        assert_eq!(stripes[0].load(&hot), Some(slot(169)));
+        for s in &stripes {
+            assert_eq!(s.load_min_ages().len(), 30, "every fence survives compaction");
+        }
+        assert_eq!(stripes[0].ckpt_stats().checkpoint_records, 31, "1 slot + 30 fences");
+    }
+
+    #[test]
+    fn checkpointed_striped_log_restripes_by_hash() {
+        // A checkpoint written under 4 stripes reopens under 2 (and 1):
+        // checkpoint records hash-route over the CURRENT count exactly
+        // like log records.
+        let dir = TempDir::new("ckpt-restripe").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let stores = FileStorage::open_striped(&path, GroupCommitOpts::default(), 4).unwrap();
+            let acc = crate::acceptor::StripedAcceptor::from_storages(7, stores);
+            for i in 0..8u64 {
+                let key = format!("k{i}");
+                acc.with_stripe(stripe_of(&key, 4), |a| {
+                    a.storage_mut().store(&key, &slot(i)).unwrap();
+                });
+            }
+            acc.compact().unwrap();
+        }
+        let stripes = FileStorage::open_striped(&path, GroupCommitOpts::default(), 2).unwrap();
+        for i in 0..8u64 {
+            let key = format!("k{i}");
+            assert_eq!(stripes[stripe_of(&key, 2)].load(&key), Some(slot(i)), "k{i} lost");
+        }
+        drop(stripes);
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.len(), 8, "single-stripe reopen reads the striped checkpoint too");
+    }
+
+    #[test]
+    fn torn_wal_tail_after_checkpoint_keeps_checkpointed_state() {
+        let dir = TempDir::new("ckpt-torn").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"base".to_string(), &slot(7)).unwrap();
+            s.checkpoint().unwrap();
+            s.store(&"delta".to_string(), &slot(8)).unwrap();
+        }
+        // Crash mid-append on the delta WAL: half a frame.
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[200, 0, 0, 0, 9, 9]).unwrap();
+        }
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.load(&"base".to_string()), Some(slot(7)), "checkpointed state intact");
+        assert_eq!(s.load(&"delta".to_string()), Some(slot(8)), "intact delta replayed");
     }
 }

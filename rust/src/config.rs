@@ -11,6 +11,8 @@
 //! shards 2            # optional: acceptor shard count (default: 1)
 //! shard_quorum 2 2    # optional: per-shard prepare accept
 //! stripes 4           # optional: per-node acceptor lock stripes (default: 1)
+//! checkpoint_records 100000   # optional: auto-checkpoint after N WAL records
+//! checkpoint_bytes 67108864   # optional: auto-checkpoint after N WAL bytes
 //! ```
 //!
 //! The same `id=addr` pairs are accepted from the command line:
@@ -27,6 +29,14 @@
 //! group-commit WAL, see [`crate::acceptor::StripedAcceptor`]). The
 //! on-disk log stays compatible across stripe-count changes in either
 //! direction (replay routes by key hash).
+//!
+//! `checkpoint_records` / `checkpoint_bytes` set the automatic online
+//! checkpoint cadence for file-backed nodes (see
+//! [`crate::acceptor::CheckpointOpts`]): when the shared WAL grows past
+//! either threshold since the last checkpoint, the node writes a
+//! full-state checkpoint beside the log and swaps in a truncated WAL —
+//! restart then replays only the delta. Both default to 0 (no automatic
+//! checkpoints). Ignored by in-memory nodes.
 
 use std::collections::HashMap;
 
@@ -48,6 +58,14 @@ pub struct Deployment {
     /// Per-node acceptor lock-stripe count (1 = classic single-lock
     /// acceptor). See `crate::server::NodeOpts::stripes`.
     pub stripes: usize,
+    /// Auto-checkpoint after this many WAL records since the last
+    /// checkpoint (0 = records never trigger one). See
+    /// `crate::acceptor::CheckpointOpts::interval_records`.
+    pub checkpoint_records: u64,
+    /// Auto-checkpoint after this many WAL bytes since the last
+    /// checkpoint (0 = bytes never trigger one). See
+    /// `crate::acceptor::CheckpointOpts::interval_bytes`.
+    pub checkpoint_bytes: u64,
 }
 
 impl Deployment {
@@ -58,6 +76,8 @@ impl Deployment {
         let mut shards: Option<usize> = None;
         let mut shard_quorum: Option<(usize, usize)> = None;
         let mut stripes: Option<usize> = None;
+        let mut checkpoint_records: Option<u64> = None;
+        let mut checkpoint_bytes: Option<u64> = None;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
@@ -97,11 +117,22 @@ impl Deployment {
                     }
                     stripes = Some(n);
                 }
+                ["checkpoint_records", n] => {
+                    let n: u64 =
+                        n.parse().map_err(|_| bad(lineno, "bad checkpoint record count"))?;
+                    checkpoint_records = Some(n);
+                }
+                ["checkpoint_bytes", n] => {
+                    let n: u64 =
+                        n.parse().map_err(|_| bad(lineno, "bad checkpoint byte count"))?;
+                    checkpoint_bytes = Some(n);
+                }
                 _ => {
                     return Err(bad(
                         lineno,
                         "expected `node <id> <addr>`, `quorum <p> <a>`, `shards <n>`, \
-                         `shard_quorum <p> <a>` or `stripes <n>`",
+                         `shard_quorum <p> <a>`, `stripes <n>`, `checkpoint_records <n>` \
+                         or `checkpoint_bytes <n>`",
                     ))
                 }
             }
@@ -131,7 +162,15 @@ impl Deployment {
             None => QuorumSpec::majority(n),
         };
         let stripes = stripes.unwrap_or(1);
-        let deployment = Deployment { peers, quorum, shards, shard_quorum, stripes };
+        let deployment = Deployment {
+            peers,
+            quorum,
+            shards,
+            shard_quorum,
+            stripes,
+            checkpoint_records: checkpoint_records.unwrap_or(0),
+            checkpoint_bytes: checkpoint_bytes.unwrap_or(0),
+        };
         // Fail at parse time, not at node start: a bad shard carve
         // (uneven groups with an explicit shard_quorum, non-intersecting
         // per-shard quorums) is a config error.
@@ -176,6 +215,18 @@ impl Deployment {
         let mut acceptors: Vec<u64> = self.peers.keys().copied().collect();
         acceptors.sort_unstable();
         ClusterConfig { epoch: 1, acceptors, quorum: self.quorum }
+    }
+
+    /// The automatic checkpoint cadence this deployment describes
+    /// (`None` when both thresholds are 0: no automatic checkpoints).
+    pub fn checkpoint_opts(&self) -> Option<crate::acceptor::CheckpointOpts> {
+        if self.checkpoint_records == 0 && self.checkpoint_bytes == 0 {
+            return None;
+        }
+        Some(crate::acceptor::CheckpointOpts {
+            interval_records: self.checkpoint_records,
+            interval_bytes: self.checkpoint_bytes,
+        })
     }
 
     /// The [`ShardPlan`] this deployment describes: `shards` contiguous
@@ -286,6 +337,37 @@ mod tests {
         assert_eq!(d.stripes, 64);
         assert!(Deployment::parse(&format!("{base}stripes 0\n")).is_err(), "zero stripes");
         assert!(Deployment::parse(&format!("{base}stripes x\n")).is_err(), "bad stripe count");
+    }
+
+    #[test]
+    fn parse_checkpoint_config() {
+        use crate::acceptor::CheckpointOpts;
+        let base = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\n";
+        let d = Deployment::parse(base).unwrap();
+        assert_eq!((d.checkpoint_records, d.checkpoint_bytes), (0, 0));
+        assert_eq!(d.checkpoint_opts(), None, "default is no automatic checkpoints");
+        let d = Deployment::parse(&format!("{base}checkpoint_records 5000\n")).unwrap();
+        assert_eq!(
+            d.checkpoint_opts(),
+            Some(CheckpointOpts { interval_records: 5000, interval_bytes: 0 })
+        );
+        // Both thresholds may coexist (whichever trips first fires).
+        let d = Deployment::parse(&format!(
+            "{base}checkpoint_records 5000\ncheckpoint_bytes 1048576\n"
+        ))
+        .unwrap();
+        assert_eq!(
+            d.checkpoint_opts(),
+            Some(CheckpointOpts { interval_records: 5000, interval_bytes: 1048576 })
+        );
+        assert!(
+            Deployment::parse(&format!("{base}checkpoint_records x\n")).is_err(),
+            "bad record count"
+        );
+        assert!(
+            Deployment::parse(&format!("{base}checkpoint_bytes -1\n")).is_err(),
+            "bad byte count"
+        );
     }
 
     #[test]

@@ -28,6 +28,20 @@
 //! fenced proposer's keys hash), and step 2d's `Erase` routes to the
 //! key's owning stripe — collect walks all stripes without knowing
 //! they exist.
+//!
+//! Checkpoints (`acceptor::FileStorage` checkpoint files, see the
+//! storage module docs) are equally transparent, because every
+//! compaction path goes through the checkpoint machinery: a register
+//! erased in step 2d before a checkpoint is simply absent from the
+//! checkpointed live set (the checkpoint is written from the in-memory
+//! fold, which no longer holds it), and an `Erase` appended after a
+//! checkpoint replays on top of the checkpoint-loaded state at restart
+//! and removes the slot again. The min-age fences from step 2c are
+//! part of the checkpointed state too, so a fenced proposer stays
+//! fenced across checkpoint + crash + replay. There is no rewrite-style
+//! compaction that could drop an `Erase` record while an older
+//! checkpoint still holds the slot — that would resurrect deleted
+//! registers, the exact §3.1 anomaly this module exists to prevent.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};

@@ -98,6 +98,20 @@
 //! / `server::NodeOpts::stripes`; `benches/write_path.rs` measures the
 //! scaling.
 //!
+//! ## Checkpoints and online compaction
+//!
+//! The WAL records transitions; a **checkpoint** (`<log>.ckpt`) records
+//! the folded state they produce — the disk-side expression of the
+//! paper's no-log thesis. Restart loads the checkpoint and replays only
+//! the WAL delta, and [`acceptor::StripedAcceptor::compact`] quiesces
+//! all stripes to checkpoint-and-truncate a LIVE shared WAL online.
+//! Automatic cadence via [`acceptor::CheckpointOpts`] (config
+//! directives `checkpoint_records` / `checkpoint_bytes`); progress is
+//! exported through `Status` (`checkpoint_records=` / `replay_records=`
+//! / `last_checkpoint_us=`). The crash-consistency dance (tmp → fsync →
+//! rename → dir-fsync → fresh-inode WAL swap) is documented and pinned
+//! in [`acceptor::storage`]'s docs and `tests/durability.rs`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

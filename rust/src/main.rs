@@ -27,6 +27,7 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  caspaxos node --id <n> (--config <file> | --peers <1=a,2=b,...>)\n\
          \x20                [--listen-client <addr>] [--data <dir>] [--stripes <n>]\n\
+         \x20                [--checkpoint-records <n>] [--checkpoint-bytes <n>]\n\
          \x20 caspaxos client --connect <addr> \
          <get|getcas|getmany|set|add|cas|del|collect|status> [args...]\n\
          \x20 caspaxos rtt-table"
@@ -62,27 +63,32 @@ fn run_node(mut args: Vec<String>) {
         .unwrap_or_else(|| usage())
         .parse()
         .unwrap_or_else(|_| usage());
-    let (peers, quorum, shard_plan, cfg_stripes): (HashMap<u64, String>, _, _, usize) =
-        if let Some(path) = take_flag(&mut args, "--config") {
-            let d = Deployment::load(&path).unwrap_or_else(|e| {
-                eprintln!("config: {e}");
-                exit(1)
-            });
-            let plan = d.shard_plan().unwrap_or_else(|e| {
-                eprintln!("shard plan: {e}");
-                exit(1)
-            });
-            let plan = if d.shards > 1 { Some(plan) } else { None };
-            (d.peers.clone(), Some(d.quorum), plan, d.stripes)
-        } else if let Some(spec) = take_flag(&mut args, "--peers") {
-            let peers = Deployment::parse_peers(&spec).unwrap_or_else(|e| {
-                eprintln!("peers: {e}");
-                exit(1)
-            });
-            (peers, None, None, 1)
-        } else {
-            usage()
-        };
+    let (peers, quorum, shard_plan, cfg_stripes, cfg_checkpoint): (
+        HashMap<u64, String>,
+        _,
+        _,
+        usize,
+        Option<caspaxos::acceptor::CheckpointOpts>,
+    ) = if let Some(path) = take_flag(&mut args, "--config") {
+        let d = Deployment::load(&path).unwrap_or_else(|e| {
+            eprintln!("config: {e}");
+            exit(1)
+        });
+        let plan = d.shard_plan().unwrap_or_else(|e| {
+            eprintln!("shard plan: {e}");
+            exit(1)
+        });
+        let plan = if d.shards > 1 { Some(plan) } else { None };
+        (d.peers.clone(), Some(d.quorum), plan, d.stripes, d.checkpoint_opts())
+    } else if let Some(spec) = take_flag(&mut args, "--peers") {
+        let peers = Deployment::parse_peers(&spec).unwrap_or_else(|e| {
+            eprintln!("peers: {e}");
+            exit(1)
+        });
+        (peers, None, None, 1, None)
+    } else {
+        usage()
+    };
     // `--stripes` overrides the config's `stripes` directive.
     let stripes: usize = match take_flag(&mut args, "--stripes") {
         Some(n) => {
@@ -110,6 +116,23 @@ fn run_node(mut args: Vec<String>) {
         None => HashMap::new(),
     };
     let data_dir = take_flag(&mut args, "--data");
+    // `--checkpoint-records` / `--checkpoint-bytes` override the
+    // config's directives (either nonzero threshold enables the
+    // online auto-checkpoint poller; only meaningful with --data).
+    let ckpt_flag = |args: &mut Vec<String>, name: &str| -> Option<u64> {
+        take_flag(args, name).map(|n| n.parse().unwrap_or_else(|_| usage()))
+    };
+    let ckpt_records = ckpt_flag(&mut args, "--checkpoint-records");
+    let ckpt_bytes = ckpt_flag(&mut args, "--checkpoint-bytes");
+    let checkpoint = if ckpt_records.is_some() || ckpt_bytes.is_some() {
+        let base = cfg_checkpoint.unwrap_or_default();
+        Some(caspaxos::acceptor::CheckpointOpts {
+            interval_records: ckpt_records.unwrap_or(base.interval_records),
+            interval_bytes: ckpt_bytes.unwrap_or(base.interval_bytes),
+        })
+    } else {
+        cfg_checkpoint
+    };
 
     let mut acceptors: Vec<u64> = peers.keys().copied().collect();
     acceptors.sort_unstable();
@@ -133,6 +156,7 @@ fn run_node(mut args: Vec<String>) {
         shard_plan,
         stripes,
         data_dir,
+        checkpoint,
         lease: None,
     })
     .unwrap_or_else(|e| {

@@ -41,7 +41,7 @@ use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use crate::acceptor::{GroupCommitOpts, StripedAcceptor, WalStats};
+use crate::acceptor::{CheckpointOpts, CkptStats, GroupCommitOpts, StripedAcceptor, WalStats};
 use crate::batch::BatchProposer;
 use crate::change::ChangeFn;
 use crate::codec::{decode_seq, encode_seq, Codec, CodecError, Envelope};
@@ -296,6 +296,16 @@ pub struct NodeOpts {
     pub stripes: usize,
     /// Durable storage directory (`None` = in-memory).
     pub data_dir: Option<String>,
+    /// Automatic checkpoint cadence for the file-backed log (`None` =
+    /// no automatic checkpoints; ignored without `data_dir`). When the
+    /// WAL has grown past either threshold since the last checkpoint, a
+    /// background thread runs the online coordination point
+    /// ([`StripedAcceptor::compact`]): quiesce every stripe, write a
+    /// full-state checkpoint beside the WAL, swap in a truncated WAL —
+    /// so restart replays only the delta and the log reclaims disk
+    /// without a restart. `Status` exports `checkpoint_records=` /
+    /// `replay_records=` / `last_checkpoint_us=`.
+    pub checkpoint: Option<CheckpointOpts>,
     /// Enable 0-RTT read leases on every shard proposer (each becomes
     /// the per-shard lease manager for the keys it owns). `None` =
     /// 1-RTT quorum reads (the default).
@@ -316,6 +326,20 @@ pub struct Node {
     pub gc: Arc<GcProcess>,
     /// Acceptor lock-stripe count this node runs with.
     pub stripes: usize,
+    /// Checkpoint-poller shutdown: flag + join handle, stopped on drop
+    /// so a dropped node's poller can never truncate a log that a
+    /// restarted node (same data dir, same process — tests do this)
+    /// now owns.
+    ckpt_stop: Option<(Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>)>,
+}
+
+impl Drop for Node {
+    fn drop(&mut self) {
+        if let Some((stop, handle)) = self.ckpt_stop.take() {
+            stop.store(true, std::sync::atomic::Ordering::Release);
+            let _ = handle.join();
+        }
+    }
 }
 
 /// Everything the client service needs to route a request: the key→shard
@@ -328,10 +352,10 @@ struct NodeCtx {
     gc: Arc<GcProcess>,
     /// Acceptor lock-stripe count (exported through `Status`).
     stripes: usize,
-    /// Shared-WAL counter snapshot for `Status` (file-backed acceptors
-    /// only; every stripe appends to the one WAL, so this IS the
-    /// aggregate across stripes).
-    wal_stats: Option<Arc<dyn Fn() -> WalStats + Send + Sync>>,
+    /// Shared-WAL + checkpoint counter snapshot for `Status`
+    /// (file-backed acceptors only; every stripe appends to the one
+    /// WAL, so this IS the aggregate across stripes).
+    wal_stats: Option<Arc<dyn Fn() -> (WalStats, CkptStats) + Send + Sync>>,
 }
 
 impl NodeCtx {
@@ -348,7 +372,11 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     let acceptor_addr =
         acceptor_listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
     let stripes = opts.stripes.max(1);
-    let wal_stats: Option<Arc<dyn Fn() -> WalStats + Send + Sync>> = match &opts.data_dir {
+    let mut ckpt_stop: Option<(Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>)> =
+        None;
+    let wal_stats: Option<Arc<dyn Fn() -> (WalStats, CkptStats) + Send + Sync>> = match &opts
+        .data_dir
+    {
         Some(dir) => {
             std::fs::create_dir_all(dir)
                 .map_err(|e| CasError::Transport(format!("mkdir {dir}: {e}")))?;
@@ -362,7 +390,35 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
             std::thread::spawn(move || {
                 let _ = serve_striped_acceptor(acceptor_listener, serve);
             });
-            Some(Arc::new(move || acc.wal_stats()))
+            // Checkpoint poller: the striped coordination point must
+            // run OUTSIDE the request path (it takes every stripe
+            // lock), so a thread polls WAL growth and fires the online
+            // pause-write-swap when a threshold is crossed. It stops
+            // when the `Node` drops — a poller outliving its node
+            // would keep truncating a log another (restarted) node now
+            // owns.
+            if let Some(copts) = opts.checkpoint {
+                if copts.interval_records > 0 || copts.interval_bytes > 0 {
+                    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+                    let flag = Arc::clone(&stop);
+                    let ckpt = Arc::clone(&acc);
+                    let handle = std::thread::spawn(move || {
+                        while !flag.load(std::sync::atomic::Ordering::Acquire) {
+                            std::thread::sleep(std::time::Duration::from_millis(50));
+                            if flag.load(std::sync::atomic::Ordering::Acquire) {
+                                break;
+                            }
+                            if ckpt.checkpoint_due(&copts) {
+                                if let Err(e) = ckpt.compact() {
+                                    eprintln!("checkpoint: {e}");
+                                }
+                            }
+                        }
+                    });
+                    ckpt_stop = Some((stop, handle));
+                }
+            }
+            Some(Arc::new(move || (acc.wal_stats(), acc.ckpt_stats())))
         }
         None => {
             let acc = Arc::new(StripedAcceptor::new_mem(opts.id, stripes));
@@ -454,6 +510,7 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         shard_proposers,
         gc,
         stripes,
+        ckpt_stop,
     })
 }
 
@@ -536,20 +593,26 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 snap[6] += b.metrics.read_fast.load(std::sync::atomic::Ordering::Relaxed);
                 snap[7] += b.metrics.read_fallback.load(std::sync::atomic::Ordering::Relaxed);
             }
-            // Shared-WAL counters (file-backed nodes; one WAL serves
-            // every stripe, so this IS the per-stripe aggregate) and
-            // the proposer-side in-flight depth (backpressure gauge).
-            let wal = ctx.wal_stats.as_ref().map(|f| f()).unwrap_or(WalStats {
-                appends: 0,
-                flushes: 0,
-                fsyncs: 0,
-            });
+            // Shared-WAL + checkpoint counters (file-backed nodes; one
+            // WAL serves every stripe, so this IS the per-stripe
+            // aggregate) and the proposer-side in-flight depth
+            // (backpressure gauge).
+            let (wal, ckpt) = ctx.wal_stats.as_ref().map(|f| f()).unwrap_or((
+                WalStats { appends: 0, flushes: 0, fsyncs: 0 },
+                CkptStats {
+                    checkpoint_records: 0,
+                    replay_records: 0,
+                    last_checkpoint_us: 0,
+                    checkpoints: 0,
+                },
+            ));
             let inflight = ctx.proposers[0].transport_inflight().unwrap_or(0);
             ClientResp::Status(format!(
                 "id={} shards={} rounds={} commits={} conflicts={} retries={} \
                  cache_hits={} failures={} read_fast={} read_fallback={} \
                  read_lease={} lease_renew={} lease_break={} gc_pending={} \
-                 stripes={} wal_appends={} wal_flushes={} wal_fsyncs={} inflight={}",
+                 stripes={} wal_appends={} wal_flushes={} wal_fsyncs={} \
+                 checkpoint_records={} replay_records={} last_checkpoint_us={} inflight={}",
                 ctx.proposers[0].id(),
                 ctx.shards.len(),
                 snap[0],
@@ -568,6 +631,9 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 wal.appends,
                 wal.flushes,
                 wal.fsyncs,
+                ckpt.checkpoint_records,
+                ckpt.replay_records,
+                ckpt.last_checkpoint_us,
                 inflight
             ))
         }
@@ -764,6 +830,7 @@ mod tests {
                     shard_plan: shard_plan.clone(),
                     stripes,
                     data_dir: data.map(|d| d.path().to_str().unwrap().to_string()),
+                    checkpoint: None,
                     lease: lease.clone(),
                 })
                 .unwrap()
@@ -956,6 +1023,91 @@ mod tests {
                 assert!(
                     field("wal_fsyncs=") <= field("wal_appends="),
                     "fsyncs can never outrun appends: {s}"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn checkpoint_poller_truncates_wal_and_status_exports_progress() {
+        // A single striped node with an automatic checkpoint cadence:
+        // once the WAL outgrows `interval_records`, the background
+        // poller runs the online pause-write-swap and `Status` starts
+        // exporting checkpoint progress. Restarting the node then
+        // replays only the delta (`replay_records` « total appends).
+        let dir = TempDir::new("ckpt-node").unwrap();
+        let reserve = || {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mk_opts = |acceptor_addr: String, client_addr: String| NodeOpts {
+            id: 1,
+            acceptor_addr,
+            client_addr,
+            peers: HashMap::new(),
+            client_peers: HashMap::new(),
+            cluster: ClusterConfig::majority(1, vec![1]),
+            shard_plan: None,
+            stripes: 4,
+            data_dir: Some(dir.path().to_str().unwrap().to_string()),
+            checkpoint: Some(crate::acceptor::CheckpointOpts {
+                interval_records: 20,
+                interval_bytes: 0,
+            }),
+            lease: None,
+        };
+        let node = start_node(mk_opts(reserve(), reserve())).unwrap();
+        let mut c = Client::connect(&node.client_addr.to_string()).unwrap();
+        for i in 0..60i64 {
+            c.change(&format!("k{}", i % 8), ChangeFn::Set(i)).unwrap();
+        }
+        let field = |s: &str, name: &str| -> u64 {
+            s.split_whitespace()
+                .find_map(|kv| kv.strip_prefix(name))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| panic!("missing {name} in {s}"))
+        };
+        // The poller ticks every 50ms; give it a generous deadline.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let snapshot = loop {
+            match c.call(&ClientReq::Status).unwrap() {
+                ClientResp::Status(s) => {
+                    if field(&s, "checkpoint_records=") > 0 {
+                        break s;
+                    }
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "checkpoint poller never fired: {s}"
+                    );
+                }
+                other => panic!("{other:?}"),
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        };
+        assert!(field(&snapshot, "last_checkpoint_us=") > 0, "{snapshot}");
+        // 8 distinct keys live: the checkpoint holds the folded state,
+        // not the append history.
+        assert!(field(&snapshot, "checkpoint_records=") <= 9, "{snapshot}");
+        // Data survives the swap, still served after the truncation.
+        for i in 52..60i64 {
+            assert_eq!(c.get(&format!("k{}", i % 8)).unwrap().as_num(), Some(i));
+        }
+        drop(c);
+        drop(node);
+        // Restart over the same dir: replay is checkpoint + delta only.
+        let node2 = start_node(mk_opts(reserve(), reserve())).unwrap();
+        let mut c2 = Client::connect(&node2.client_addr.to_string()).unwrap();
+        for i in 52..60i64 {
+            assert_eq!(c2.get(&format!("k{}", i % 8)).unwrap().as_num(), Some(i));
+        }
+        match c2.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => {
+                assert!(field(&s, "checkpoint_records=") > 0, "{s}");
+                assert!(
+                    field(&s, "replay_records=") < 30,
+                    "restart must replay only the post-checkpoint delta \
+                     (60 historical appends): {s}"
                 );
             }
             other => panic!("{other:?}"),

@@ -477,6 +477,361 @@ fn striped_cluster_state_survives_full_restart_over_tcp() {
 }
 
 #[test]
+fn online_compaction_under_concurrent_writers_loses_no_acked_write() {
+    // The tentpole acceptance pin: `StripedAcceptor::compact()` on a
+    // shared striped WAL shrinks the log to under a quarter of its
+    // pre-compaction size WHILE writer threads keep acking writes, and
+    // a post-compaction crash-restart loses none of them.
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    use caspaxos::testkit::striped_file_acceptor;
+    let dir = TempDir::new("online-compact").unwrap();
+    let path = dir.path().join("acceptor-1.log");
+    let acc = Arc::new(striped_file_acceptor(&dir, 1, 4));
+    // 4 writer threads × 4 keys × 150 rounds; every accept is acked
+    // (handle_at waits its shared-WAL ticket before returning).
+    let writers: Vec<_> = (0..4u64)
+        .map(|t| {
+            let a = Arc::clone(&acc);
+            std::thread::spawn(move || {
+                for i in 0..150i64 {
+                    for k in 0..4 {
+                        let req = Request::Accept {
+                            key: format!("t{t}k{k}"),
+                            ballot: Ballot::new(i as u64 + 1, t + 1),
+                            val: caspaxos::Val::Num { ver: 0, num: i },
+                            from: ProposerId::new(t + 1),
+                            promise_next: None,
+                        };
+                        assert_eq!(a.handle_at(&req, 0), Response::Accepted);
+                    }
+                }
+            })
+        })
+        .collect();
+    let size = |p: &std::path::Path| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+    // Wait until the shared log has real bulk, then compact ONLINE —
+    // the writers never stop.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while size(&path) < 64 * 1024 {
+        assert!(std::time::Instant::now() < deadline, "writers never grew the WAL");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let before = size(&path);
+    acc.compact().unwrap();
+    let after = size(&path);
+    assert!(
+        after < before / 4,
+        "online compaction must shrink the log: {before} -> {after}"
+    );
+    for w in writers {
+        w.join().unwrap();
+    }
+    // Quiesced final compaction, then crash (drop) + restart: the
+    // 16 live registers — every one acked — must all be there, and
+    // replay must touch only the (empty) post-checkpoint delta.
+    acc.compact().unwrap();
+    let expected: Vec<(String, i64)> =
+        (0..4).flat_map(|t| (0..4).map(move |k| (format!("t{t}k{k}"), 149))).collect();
+    for (key, want) in &expected {
+        assert_eq!(acc.storage_value(key), Some(*want), "{key} wrong before crash");
+    }
+    drop(acc);
+    let revived = striped_file_acceptor(&dir, 1, 4);
+    for (key, want) in &expected {
+        assert_eq!(revived.storage_value(key), Some(*want), "{key} lost across restart");
+    }
+    let stats = revived.ckpt_stats();
+    assert_eq!(stats.checkpoint_records, 16, "checkpoint holds the folded live set");
+    assert_eq!(stats.replay_records, 0, "nothing was appended after the last checkpoint");
+}
+
+#[test]
+fn checkpoint_crash_worlds_never_lose_acked_state() {
+    // Crash-injection around the checkpoint dance (tmp-write → sync →
+    // rename → dir-sync → WAL swap): each on-disk world a kill at one
+    // of those points can leave behind must recover EVERY acked write,
+    // and the replay counters exported through `Status` must match
+    // what was actually replayed.
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    use caspaxos::testkit::striped_file_acceptor;
+    let dir = TempDir::new("ckpt-worlds").unwrap();
+    let log = dir.path().join("acceptor-1.log");
+    let ckpt = dir.path().join("acceptor-1.ckpt");
+    let accept = |key: String, ballot: Ballot, num: i64| Request::Accept {
+        key,
+        ballot,
+        val: caspaxos::Val::Num { ver: 0, num },
+        from: ProposerId::new(1),
+        promise_next: None,
+    };
+    // Phase 1: 40 acked records (10 keys × 4 rounds), then checkpoint,
+    // then 5 acked delta records. Snapshot the pre-compaction WAL and
+    // the checkpoint bytes to craft the crash worlds from.
+    let full_wal;
+    let ckpt_bytes;
+    let delta_wal;
+    {
+        let a = striped_file_acceptor(&dir, 1, 4);
+        for r in 0..4u64 {
+            for i in 0..10 {
+                let req = accept(format!("k{i}"), Ballot::new(r + 1, 1), (r * 10) as i64 + i);
+                assert_eq!(a.handle_at(&req, 0), Response::Accepted);
+            }
+        }
+        full_wal = std::fs::read(&log).unwrap();
+        a.compact().unwrap();
+        ckpt_bytes = std::fs::read(&ckpt).unwrap();
+        for i in 0..5 {
+            let req = accept(format!("k{i}"), Ballot::new(9, 1), 100 + i);
+            assert_eq!(a.handle_at(&req, 0), Response::Accepted);
+        }
+        delta_wal = std::fs::read(&log).unwrap();
+    }
+    // Phase-1 fold: k{i} = 30+i; after the delta, k0..k4 = 100+i.
+    let phase1 = |i: i64| 30 + i;
+    let with_delta = |i: i64| if i < 5 { 100 + i } else { 30 + i };
+
+    struct World<'a> {
+        name: &'a str,
+        log: &'a [u8],
+        ckpt: Option<&'a [u8]>,
+        tmp: Option<Vec<u8>>,
+        expect: &'a dyn Fn(i64) -> i64,
+        checkpoint_records: u64,
+        replay_records: u64,
+    }
+    let worlds = [
+        // Killed between tmp-write and sync: torn half-written tmp,
+        // full WAL still in place. The tmp must be ignored AND removed.
+        World {
+            name: "torn-tmp",
+            log: &full_wal,
+            ckpt: None,
+            tmp: Some(ckpt_bytes[..10].to_vec()),
+            expect: &phase1,
+            checkpoint_records: 0,
+            replay_records: 40,
+        },
+        // Killed between sync and rename: COMPLETE tmp never renamed.
+        // It must not be adopted — replay still walks the full WAL.
+        World {
+            name: "unrenamed-tmp",
+            log: &full_wal,
+            ckpt: None,
+            tmp: Some(ckpt_bytes.clone()),
+            expect: &phase1,
+            checkpoint_records: 0,
+            replay_records: 40,
+        },
+        // Killed between the ckpt rename and the WAL swap (or the
+        // swap's dir-sync was lost): checkpoint + FULL old WAL.
+        // Replaying already-folded records over the checkpoint is
+        // idempotent — same fold, nothing duplicated or lost.
+        World {
+            name: "ckpt-plus-old-wal",
+            log: &full_wal,
+            ckpt: Some(&ckpt_bytes),
+            tmp: None,
+            expect: &phase1,
+            checkpoint_records: 10,
+            replay_records: 40,
+        },
+        // Clean world: checkpoint + delta-only WAL. Restart replays
+        // just the 5 delta records out of 45 historical appends.
+        World {
+            name: "ckpt-plus-delta",
+            log: &delta_wal,
+            ckpt: Some(&ckpt_bytes),
+            tmp: None,
+            expect: &with_delta,
+            checkpoint_records: 10,
+            replay_records: 5,
+        },
+    ];
+    for w in &worlds {
+        let wdir = TempDir::new(&format!("ckpt-world-{}", w.name)).unwrap();
+        let wlog = wdir.path().join("acceptor-1.log");
+        std::fs::write(&wlog, w.log).unwrap();
+        if let Some(bytes) = w.ckpt {
+            std::fs::write(wlog.with_extension("ckpt"), bytes).unwrap();
+        }
+        if let Some(tmp) = &w.tmp {
+            std::fs::write(wlog.with_extension("ckpt.tmp"), tmp).unwrap();
+        }
+        let revived = striped_file_acceptor(&wdir, 1, 4);
+        for i in 0..10 {
+            assert_eq!(
+                revived.storage_value(&format!("k{i}")),
+                Some((w.expect)(i)),
+                "[{}] k{i} lost",
+                w.name
+            );
+        }
+        let stats = revived.ckpt_stats();
+        assert_eq!(
+            (stats.checkpoint_records, stats.replay_records),
+            (w.checkpoint_records, w.replay_records),
+            "[{}] replay counters must match what was actually replayed",
+            w.name
+        );
+        assert!(
+            !wlog.with_extension("ckpt.tmp").exists(),
+            "[{}] stale tmp must be cleaned up at open",
+            w.name
+        );
+        // Every crash world keeps accepting writes above anything
+        // persisted (promises replayed correctly).
+        assert_eq!(
+            revived.handle_at(&accept("k9".into(), Ballot::new(50, 2), 777), 0),
+            Response::Accepted,
+            "[{}]",
+            w.name
+        );
+    }
+}
+
+#[test]
+fn checkpointed_backend_passes_torn_tail_lease_and_erase_pins() {
+    // The existing durability pins — torn WAL tail, acked lease
+    // fencing, GC erase, min-age fence — hold unchanged when the log
+    // has a checkpoint underneath: the delta WAL replays ON TOP of the
+    // checkpointed state.
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    use caspaxos::testkit::striped_file_acceptor;
+    use std::io::Write as _;
+    let dir = TempDir::new("ckpt-pins").unwrap();
+    let accept = |key: &str, ballot: Ballot, val: caspaxos::Val| Request::Accept {
+        key: key.into(),
+        ballot,
+        val,
+        from: ProposerId::new(1),
+        promise_next: None,
+    };
+    {
+        let a = striped_file_acceptor(&dir, 1, 4);
+        for i in 0..5i64 {
+            let req = accept(
+                &format!("k{i}"),
+                Ballot::new(1, 1),
+                caspaxos::Val::Num { ver: 0, num: i },
+            );
+            assert_eq!(a.handle_at(&req, 0), Response::Accepted);
+        }
+        // Erased BEFORE the checkpoint: must not be in the checkpoint.
+        a.handle_at(&accept("k0", Ballot::new(2, 1), caspaxos::Val::Tombstone), 0);
+        a.handle_at(&Request::Erase { key: "k0".into(), tombstone_ballot: Ballot::new(2, 1) }, 0);
+        // Acked lease and min-age fence: both live in the checkpoint.
+        assert!(matches!(
+            a.handle_at(
+                &Request::LeaseAcquire {
+                    key: "k2".into(),
+                    duration_us: 10_000_000,
+                    from: ProposerId::new(7),
+                },
+                1_000,
+            ),
+            Response::LeaseGranted { granted: true, .. }
+        ));
+        assert_eq!(
+            a.handle_at(&Request::SetMinAge { proposer_id: 9, min_age: 3 }, 0),
+            Response::Ok
+        );
+        a.compact().unwrap();
+        // Erased AFTER the checkpoint: the Erase record sits in the
+        // delta WAL and must erase the checkpointed slot at replay.
+        a.handle_at(&accept("k1", Ballot::new(3, 1), caspaxos::Val::Tombstone), 0);
+        a.handle_at(&Request::Erase { key: "k1".into(), tombstone_ballot: Ballot::new(3, 1) }, 0);
+    }
+    // Torn tail on the DELTA WAL: replay keeps everything intact
+    // before it and drops only the torn frame.
+    {
+        let path = dir.path().join("acceptor-1.log");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[90, 0, 0, 0, 5, 5, 5]).unwrap();
+    }
+    let revived = striped_file_acceptor(&dir, 1, 4);
+    // Erased keys stay erased — neither the checkpoint nor the delta
+    // resurrects them (the gc interaction pin).
+    assert_eq!(revived.register_count(), 3, "k0 and k1 must stay erased");
+    for i in 2..5i64 {
+        assert_eq!(revived.storage_value(&format!("k{i}")), Some(i), "k{i} lost");
+    }
+    // The acked lease still fences foreign ballots inside its window…
+    let foreign = Request::Prepare {
+        key: "k2".into(),
+        ballot: Ballot::new(5, 2),
+        from: ProposerId::new(2),
+    };
+    assert!(
+        matches!(revived.handle_at(&foreign, 2_000), Response::Conflict { .. }),
+        "checkpointed lease must still fence foreign ballots"
+    );
+    assert!(
+        matches!(revived.handle_at(&foreign, 20_000_000), Response::Promise { .. }),
+        "the fence must lift after the lease window"
+    );
+    // …and the min-age fence survives the checkpoint.
+    assert_eq!(
+        revived.handle_at(
+            &Request::Prepare {
+                key: "k3".into(),
+                ballot: Ballot::new(7, 9),
+                from: ProposerId { id: 9, age: 2 },
+            },
+            0,
+        ),
+        Response::StaleAge { required: 3 }
+    );
+}
+
+#[test]
+fn classic_log_auto_checkpoint_replays_only_the_delta() {
+    // The classic (unstriped, sole-owner) backend honors
+    // `CheckpointOpts` inline on the append path: the log checkpoints
+    // itself mid-workload, and a restart replays only the tail.
+    use caspaxos::acceptor::CheckpointOpts;
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    let dir = TempDir::new("classic-ckpt").unwrap();
+    let path = dir.file("acceptor.log");
+    {
+        let mut s = FileStorage::open(&path).unwrap();
+        s.fsync = false;
+        s.checkpoint = CheckpointOpts { interval_records: 10, interval_bytes: 0 };
+        let mut a = Acceptor::with_storage(1, s);
+        for i in 0..33i64 {
+            let req = Request::Accept {
+                key: format!("k{}", i % 4),
+                ballot: Ballot::new(i as u64 + 1, 1),
+                val: caspaxos::Val::Num { ver: 0, num: i },
+                from: ProposerId::new(1),
+                promise_next: None,
+            };
+            assert_eq!(a.handle(&req), Response::Accepted);
+        }
+    }
+    let s = FileStorage::open(&path).unwrap();
+    for (k, want) in [("k0", 32), ("k1", 29), ("k2", 30), ("k3", 31)] {
+        assert_eq!(
+            s.load(&k.to_string()).and_then(|slot| slot.value.as_num()),
+            Some(want),
+            "{k} lost"
+        );
+    }
+    let stats = s.ckpt_stats();
+    assert!(stats.checkpoint_records > 0, "auto checkpoint never fired");
+    assert!(
+        stats.replay_records < 10,
+        "restart must replay only the post-checkpoint delta of 33 appends, \
+         got {}",
+        stats.replay_records
+    );
+}
+
+#[test]
 fn storage_scan_consistency_after_mixed_workload() {
     let dir = TempDir::new("scan").unwrap();
     {
