@@ -52,6 +52,8 @@ fn launch() -> Vec<Node> {
                 cluster: cluster.clone(),
                 shard_plan: None,
                 stripes: 1,
+                io_threads: 0,
+                max_deferred: 0,
                 data_dir: None,
                 checkpoint: None,
                 lease: None,

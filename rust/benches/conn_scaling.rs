@@ -1,0 +1,303 @@
+//! Bench: connection scaling on the event-driven server core.
+//!
+//! The tentpole claim of the epoll readiness loop is a **fixed thread
+//! budget**: N idle connections cost the process nothing but file
+//! descriptors and per-connection buffers, while the old
+//! thread-per-connection core pays a parked reader thread for each.
+//! Two quantities matter:
+//!
+//! * **Thread flatness** — with the event core serving, process thread
+//!   count must stay fixed as idle connections grow across tiers
+//!   (100 → 5000 on full runs; a shorter sweep under `BENCH_SMOKE=1`).
+//! * **Active throughput** — M pipelined CAS clients driving the event
+//!   core with the full idle tier still attached must commit at least
+//!   as fast as the same clients against the threaded core (a small
+//!   guard band absorbs scheduler noise).
+//!
+//! Emits `BENCH_conn_scaling.json` (CI uploads it as an artifact) and
+//! appends one summary row to the in-tree `BENCH_trajectory.json`
+//! (JSONL), so the perf history survives in the repo itself.
+//!
+//! Run: `cargo bench --bench conn_scaling` (set `BENCH_SMOKE=1` for a
+//! seconds-long smoke run; the throughput comparison is enforced on
+//! full runs only — smoke iterations are too short to time reliably).
+//! Thread-count numbers come from `/proc/self/status`; on non-Linux
+//! (where the threaded fallback serves anyway) the sweep only reports.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use caspaxos::acceptor::StripedAcceptor;
+use caspaxos::proposer::Proposer;
+use caspaxos::quorum::ClusterConfig;
+use caspaxos::transport::tcp::{
+    spawn_striped_acceptor_opts, spawn_striped_acceptor_threaded, LoopStats, ServeOpts,
+    TcpTransport,
+};
+
+const ACTIVE_CLIENTS: u64 = 4;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok()
+}
+
+/// Raises `RLIMIT_NOFILE` toward `target` (capped by the hard limit)
+/// and returns the effective soft limit — both halves of every idle
+/// connection live in this process, so the fd budget is the real cap
+/// on how far the idle tiers can climb.
+#[cfg(target_os = "linux")]
+fn raise_nofile(target: u64) -> u64 {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut rl = Rlimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut rl) != 0 {
+            return 1024;
+        }
+        let want = target.min(rl.max);
+        if want > rl.cur {
+            let new = Rlimit { cur: want, max: rl.max };
+            if setrlimit(RLIMIT_NOFILE, &new) == 0 {
+                return want;
+            }
+        }
+        rl.cur
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn raise_nofile(_target: u64) -> u64 {
+    1024
+}
+
+/// Process thread count from `/proc/self/status` (0 where that proc
+/// file doesn't exist — the flatness assertion is skipped there).
+fn thread_count() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find_map(|l| l.strip_prefix("Threads:").and_then(|v| v.trim().parse().ok()))
+        })
+        .unwrap_or(0)
+}
+
+/// `clients` threads, each with its own connection and proposer,
+/// driving sequential CAS rounds against the single-acceptor server at
+/// `addr`. Returns ops/sec.
+fn cas_throughput(addr: &str, clients: u64, ops: u64) -> f64 {
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut addrs = HashMap::new();
+            addrs.insert(1, addr);
+            let t = Arc::new(TcpTransport::new(addrs));
+            let p = Proposer::new(c + 1, ClusterConfig::majority(1, vec![1]), t);
+            for i in 0..ops {
+                p.set(format!("c{c}"), i as i64).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    (clients * ops) as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Grows `idle` with fresh connections to `addr` until it holds `n`,
+/// then (when `stats` watches the serving core) waits for the server's
+/// open-connection gauge to catch up with the accepts.
+fn grow_idle(idle: &mut Vec<TcpStream>, addr: &str, n: usize, stats: Option<&LoopStats>) {
+    while idle.len() < n {
+        idle.push(TcpStream::connect(addr).expect("idle connect"));
+    }
+    if let Some(stats) = stats {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while (stats.snapshot().0 as usize) < n {
+            assert!(
+                Instant::now() < deadline,
+                "server accepted only {} of {n} idle conns",
+                stats.snapshot().0
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+fn main() {
+    let quick = smoke();
+    let nofile = raise_nofile(32_768);
+    // Two fds per idle connection (both halves are ours) plus headroom
+    // for the active clients, servers, and std handles.
+    let fd_cap = ((nofile.saturating_sub(256)) / 2) as usize;
+    let tiers: Vec<usize> = if quick { vec![50, 150, 300] } else { vec![100, 1000, 5000] };
+    let tiers: Vec<usize> = tiers.into_iter().map(|t| t.min(fd_cap)).collect();
+    let ops: u64 = if quick { 150 } else { 1500 };
+    let mut json: Vec<String> = Vec::new();
+
+    println!("# Connection scaling — event core (fixed thread budget) vs threaded core\n");
+    println!("fd limit: {nofile} (idle tiers capped at {fd_cap})");
+
+    // ---- Thread flatness: idle tiers against the event core ----
+    // Measured BEFORE any throughput traffic so transport worker
+    // threads can't pollute the count. On non-Linux `serve_service`
+    // falls back to the threaded core and `thread_count()` returns 0,
+    // so the sweep reports without asserting.
+    let stats = Arc::new(LoopStats::default());
+    let event_addr = spawn_striped_acceptor_opts(
+        "127.0.0.1:0",
+        Arc::new(StripedAcceptor::new_mem(1, 4)),
+        None,
+        ServeOpts { io_threads: ACTIVE_CLIENTS as usize, ..ServeOpts::default() },
+        Arc::clone(&stats),
+    )
+    .unwrap()
+    .to_string();
+    let event_stats = if cfg!(target_os = "linux") { Some(&*stats) } else { None };
+    println!("\n## Idle-connection scaling (event core)");
+    println!("| idle conns | process threads |");
+    println!("|---|---|");
+    let mut idle = Vec::new();
+    let mut sweep = Vec::new();
+    for &tier in &tiers {
+        grow_idle(&mut idle, &event_addr, tier, event_stats);
+        let threads = thread_count();
+        println!("| {tier} | {threads} |");
+        sweep.push((tier, threads));
+    }
+    json.push(format!(
+        "\"idle_scaling\": [{}]",
+        sweep
+            .iter()
+            .map(|(t, th)| format!("{{\"idle_conns\": {t}, \"threads\": {th}}}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    ));
+    let (first, last) = (sweep[0].1, sweep[sweep.len() - 1].1);
+    if cfg!(target_os = "linux") && first > 0 {
+        // THE tentpole assertion: a 50x idle-connection fan-in costs
+        // zero threads (+2 of slack for unrelated runtime threads).
+        assert!(
+            last <= first + 2,
+            "thread count must stay fixed as idle conns grow: {first} threads at \
+             {} conns, {last} at {}",
+            sweep[0].0,
+            sweep[sweep.len() - 1].0
+        );
+    }
+
+    // ---- Active throughput with the full idle tier attached ----
+    println!("\n## Active CAS throughput ({ACTIVE_CLIENTS} clients, best of 3)");
+    println!("| core | idle conns | ops/sec |");
+    println!("|---|---|---|");
+    let mut event_best = 0f64;
+    for _ in 0..3 {
+        event_best = event_best.max(cas_throughput(&event_addr, ACTIVE_CLIENTS, ops));
+    }
+    let max_tier = *tiers.last().unwrap();
+    println!("| event | {max_tier} | {event_best:.0} |");
+
+    // The threaded baseline carries the same idle load — which is
+    // exactly where thread-per-connection hurts.
+    let threaded_addr = spawn_striped_acceptor_threaded(
+        "127.0.0.1:0",
+        Arc::new(StripedAcceptor::new_mem(1, 4)),
+        None,
+    )
+    .unwrap()
+    .to_string();
+    let mut threaded_idle = Vec::new();
+    grow_idle(&mut threaded_idle, &threaded_addr, max_tier, None);
+    let threaded_threads = thread_count();
+    let mut threaded_best = 0f64;
+    for _ in 0..3 {
+        threaded_best = threaded_best.max(cas_throughput(&threaded_addr, ACTIVE_CLIENTS, ops));
+    }
+    println!("| threaded | {max_tier} | {threaded_best:.0} |");
+    println!("\nthreaded core under {max_tier} idle conns: {threaded_threads} process threads");
+    json.push(format!(
+        "\"throughput\": {{\"active_clients\": {ACTIVE_CLIENTS}, \"idle_conns\": {max_tier}, \
+         \"event_ops_per_sec\": {event_best:.0}, \"threaded_ops_per_sec\": {threaded_best:.0}, \
+         \"threaded_threads\": {threaded_threads}}}"
+    ));
+    if !quick && cfg!(target_os = "linux") {
+        // Parity assertion with a 10% guard band for scheduler noise:
+        // the fixed thread budget must not cost active throughput.
+        assert!(
+            event_best >= threaded_best * 0.9,
+            "event-core CAS throughput must match the threaded core: \
+             {event_best:.0} vs {threaded_best:.0} ops/sec"
+        );
+    }
+
+    let out = format!("{{\n  {}\n}}\n", json.join(",\n  "));
+    let path = "BENCH_conn_scaling.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_conn_scaling.json");
+    f.write_all(out.as_bytes()).expect("write BENCH_conn_scaling.json");
+    println!("\nwrote {path}");
+
+    // Perf trajectory: one JSONL summary row per run, appended to the
+    // in-tree file so re-anchors can read the history from the repo.
+    let row = format!(
+        "{{\"date\": \"{}\", \"commit\": \"{}\", \"smoke\": {quick}, \
+         \"conn_scaling_idle\": {max_tier}, \"event_threads\": {last}, \
+         \"event_ops_per_sec\": {event_best:.0}, \
+         \"threaded_ops_per_sec\": {threaded_best:.0}}}\n",
+        utc_date(),
+        commit_id()
+    );
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_trajectory.json")
+        .expect("open BENCH_trajectory.json");
+    f.write_all(row.as_bytes()).expect("append BENCH_trajectory.json");
+    println!("appended trajectory row to BENCH_trajectory.json");
+}
+
+/// UTC date as `YYYY-MM-DD` via civil-from-days — std has no date
+/// formatting and the offline toolchain has no chrono.
+fn utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_secs();
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Commit id for the trajectory row: `GITHUB_SHA` in CI, `git
+/// rev-parse` locally, `"unknown"` outside a checkout.
+fn commit_id() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        return sha.chars().take(12).collect();
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}

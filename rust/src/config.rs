@@ -11,6 +11,8 @@
 //! shards 2            # optional: acceptor shard count (default: 1)
 //! shard_quorum 2 2    # optional: per-shard prepare accept
 //! stripes 4           # optional: per-node acceptor lock stripes (default: 1)
+//! io_threads 2        # optional: event-loop threads per service (default: 1)
+//! max_deferred 256    # optional: per-connection deferred-reply cap (default: 256)
 //! checkpoint_records 100000   # optional: auto-checkpoint after N WAL records
 //! checkpoint_bytes 67108864   # optional: auto-checkpoint after N WAL bytes
 //! ```
@@ -29,6 +31,13 @@
 //! group-commit WAL, see [`crate::acceptor::StripedAcceptor`]). The
 //! on-disk log stays compatible across stripe-count changes in either
 //! direction (replay routes by key hash).
+//!
+//! `io_threads` sizes the event-driven server core's fixed thread
+//! budget per served listener (Linux epoll core only; the threaded
+//! fallback ignores it — see `crate::server::NodeOpts::io_threads`).
+//! `max_deferred` caps in-flight deferred replies per connection on
+//! both server cores; past it the connection stops reading until a
+//! reply completes (`crate::server::NodeOpts::max_deferred`).
 //!
 //! `checkpoint_records` / `checkpoint_bytes` set the automatic online
 //! checkpoint cadence for file-backed nodes (see
@@ -58,6 +67,12 @@ pub struct Deployment {
     /// Per-node acceptor lock-stripe count (1 = classic single-lock
     /// acceptor). See `crate::server::NodeOpts::stripes`.
     pub stripes: usize,
+    /// Event-loop threads per served listener (Linux epoll core only).
+    /// See `crate::server::NodeOpts::io_threads`.
+    pub io_threads: usize,
+    /// Per-connection deferred-reply cap (both server cores). See
+    /// `crate::server::NodeOpts::max_deferred`.
+    pub max_deferred: usize,
     /// Auto-checkpoint after this many WAL records since the last
     /// checkpoint (0 = records never trigger one). See
     /// `crate::acceptor::CheckpointOpts::interval_records`.
@@ -76,6 +91,8 @@ impl Deployment {
         let mut shards: Option<usize> = None;
         let mut shard_quorum: Option<(usize, usize)> = None;
         let mut stripes: Option<usize> = None;
+        let mut io_threads: Option<usize> = None;
+        let mut max_deferred: Option<usize> = None;
         let mut checkpoint_records: Option<u64> = None;
         let mut checkpoint_bytes: Option<u64> = None;
         for (lineno, raw) in text.lines().enumerate() {
@@ -117,6 +134,20 @@ impl Deployment {
                     }
                     stripes = Some(n);
                 }
+                ["io_threads", n] => {
+                    let n: usize = n.parse().map_err(|_| bad(lineno, "bad io thread count"))?;
+                    if n == 0 {
+                        return Err(bad(lineno, "io thread count must be at least 1"));
+                    }
+                    io_threads = Some(n);
+                }
+                ["max_deferred", n] => {
+                    let n: usize = n.parse().map_err(|_| bad(lineno, "bad deferred cap"))?;
+                    if n == 0 {
+                        return Err(bad(lineno, "deferred cap must be at least 1"));
+                    }
+                    max_deferred = Some(n);
+                }
                 ["checkpoint_records", n] => {
                     let n: u64 =
                         n.parse().map_err(|_| bad(lineno, "bad checkpoint record count"))?;
@@ -131,7 +162,8 @@ impl Deployment {
                     return Err(bad(
                         lineno,
                         "expected `node <id> <addr>`, `quorum <p> <a>`, `shards <n>`, \
-                         `shard_quorum <p> <a>`, `stripes <n>`, `checkpoint_records <n>` \
+                         `shard_quorum <p> <a>`, `stripes <n>`, `io_threads <n>`, \
+                         `max_deferred <n>`, `checkpoint_records <n>` \
                          or `checkpoint_bytes <n>`",
                     ))
                 }
@@ -168,6 +200,8 @@ impl Deployment {
             shards,
             shard_quorum,
             stripes,
+            io_threads: io_threads.unwrap_or(1),
+            max_deferred: max_deferred.unwrap_or(256),
             checkpoint_records: checkpoint_records.unwrap_or(0),
             checkpoint_bytes: checkpoint_bytes.unwrap_or(0),
         };
@@ -337,6 +371,19 @@ mod tests {
         assert_eq!(d.stripes, 64);
         assert!(Deployment::parse(&format!("{base}stripes 0\n")).is_err(), "zero stripes");
         assert!(Deployment::parse(&format!("{base}stripes x\n")).is_err(), "bad stripe count");
+    }
+
+    #[test]
+    fn parse_server_core_config() {
+        let base = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\n";
+        let d = Deployment::parse(base).unwrap();
+        assert_eq!((d.io_threads, d.max_deferred), (1, 256), "server-core defaults");
+        let d = Deployment::parse(&format!("{base}io_threads 4\nmax_deferred 64\n")).unwrap();
+        assert_eq!((d.io_threads, d.max_deferred), (4, 64));
+        assert!(Deployment::parse(&format!("{base}io_threads 0\n")).is_err(), "zero io threads");
+        assert!(Deployment::parse(&format!("{base}io_threads x\n")).is_err(), "bad io threads");
+        assert!(Deployment::parse(&format!("{base}max_deferred 0\n")).is_err(), "zero cap");
+        assert!(Deployment::parse(&format!("{base}max_deferred x\n")).is_err(), "bad cap");
     }
 
     #[test]

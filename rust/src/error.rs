@@ -22,6 +22,11 @@ pub enum CasError {
     /// The acceptor refused the message because the proposer's age is
     /// stale (set by the deletion GC, §3.1).
     StaleAge { required: u64, got: u64 },
+    /// The proposer shed the request before fan-out because the
+    /// transport already had `max` (≥ `ProposerOpts::max_inflight`)
+    /// requests awaiting replies. Back off and retry; the timeout
+    /// sweeper drains the backlog even if the peers never answer.
+    Overloaded { inflight: usize, max: usize },
     /// Transport-level failure (connection refused, node crashed, ...).
     Transport(String),
     /// Runtime (PJRT / artifact) failure.
@@ -43,6 +48,9 @@ impl std::fmt::Display for CasError {
             }
             CasError::StaleAge { required, got } => {
                 write!(f, "stale proposer age: required >= {required}, got {got}")
+            }
+            CasError::Overloaded { inflight, max } => {
+                write!(f, "overloaded: {inflight} requests in flight (max {max})")
             }
             CasError::Transport(e) => write!(f, "transport: {e}"),
             CasError::Runtime(e) => write!(f, "runtime: {e}"),

@@ -16,7 +16,9 @@
 //!   [`acceptor`], [`proposer`].
 //! * Substrates: [`transport`] (in-memory, and multiplexed *pipelined*
 //!   TCP — correlation-id envelopes, out-of-order replies, so a slow
-//!   write round never head-of-line blocks the reads beside it), [`sim`]
+//!   write round never head-of-line blocks the reads beside it; served
+//!   by an epoll readiness loop with a fixed `io_threads` budget on
+//!   Linux, thread-per-connection elsewhere), [`sim`]
 //!   (deterministic discrete-event network with fault injection),
 //!   [`wan`] (the paper's Azure RTT matrix), [`codec`] (binary wire
 //!   format + the [`codec::Envelope`] frame), [`rng`] (deterministic

@@ -27,6 +27,7 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  caspaxos node --id <n> (--config <file> | --peers <1=a,2=b,...>)\n\
          \x20                [--listen-client <addr>] [--data <dir>] [--stripes <n>]\n\
+         \x20                [--io-threads <n>] [--max-deferred <n>]\n\
          \x20                [--checkpoint-records <n>] [--checkpoint-bytes <n>]\n\
          \x20 caspaxos client --connect <addr> \
          <get|getcas|getmany|set|add|cas|del|collect|status> [args...]\n\
@@ -63,13 +64,18 @@ fn run_node(mut args: Vec<String>) {
         .unwrap_or_else(|| usage())
         .parse()
         .unwrap_or_else(|_| usage());
-    let (peers, quorum, shard_plan, cfg_stripes, cfg_checkpoint): (
-        HashMap<u64, String>,
-        _,
-        _,
-        usize,
-        Option<caspaxos::acceptor::CheckpointOpts>,
-    ) = if let Some(path) = take_flag(&mut args, "--config") {
+    // What the config file (or bare peer list) contributes before
+    // command-line flags override it.
+    struct Parsed {
+        peers: HashMap<u64, String>,
+        quorum: Option<caspaxos::quorum::QuorumSpec>,
+        shard_plan: Option<caspaxos::shard::ShardPlan>,
+        stripes: usize,
+        io_threads: usize,
+        max_deferred: usize,
+        checkpoint: Option<caspaxos::acceptor::CheckpointOpts>,
+    }
+    let cfg = if let Some(path) = take_flag(&mut args, "--config") {
         let d = Deployment::load(&path).unwrap_or_else(|e| {
             eprintln!("config: {e}");
             exit(1)
@@ -78,17 +84,41 @@ fn run_node(mut args: Vec<String>) {
             eprintln!("shard plan: {e}");
             exit(1)
         });
-        let plan = if d.shards > 1 { Some(plan) } else { None };
-        (d.peers.clone(), Some(d.quorum), plan, d.stripes, d.checkpoint_opts())
+        Parsed {
+            peers: d.peers.clone(),
+            quorum: Some(d.quorum),
+            shard_plan: if d.shards > 1 { Some(plan) } else { None },
+            stripes: d.stripes,
+            io_threads: d.io_threads,
+            max_deferred: d.max_deferred,
+            checkpoint: d.checkpoint_opts(),
+        }
     } else if let Some(spec) = take_flag(&mut args, "--peers") {
         let peers = Deployment::parse_peers(&spec).unwrap_or_else(|e| {
             eprintln!("peers: {e}");
             exit(1)
         });
-        (peers, None, None, 1, None)
+        Parsed {
+            peers,
+            quorum: None,
+            shard_plan: None,
+            stripes: 1,
+            io_threads: 1,
+            max_deferred: 256,
+            checkpoint: None,
+        }
     } else {
         usage()
     };
+    let Parsed {
+        peers,
+        quorum,
+        shard_plan,
+        stripes: cfg_stripes,
+        io_threads: cfg_io_threads,
+        max_deferred: cfg_max_deferred,
+        checkpoint: cfg_checkpoint,
+    } = cfg;
     // `--stripes` overrides the config's `stripes` directive.
     let stripes: usize = match take_flag(&mut args, "--stripes") {
         Some(n) => {
@@ -101,6 +131,24 @@ fn run_node(mut args: Vec<String>) {
         }
         None => cfg_stripes,
     };
+    // `--io-threads` / `--max-deferred` override the config's
+    // directives (event-loop thread budget per served listener and the
+    // per-connection deferred-reply cap — see server::NodeOpts).
+    let core_flag = |args: &mut Vec<String>, name: &str, cfg: usize| -> usize {
+        match take_flag(args, name) {
+            Some(n) => {
+                let n = n.parse().unwrap_or_else(|_| usage());
+                if n == 0 {
+                    eprintln!("{name} must be at least 1");
+                    exit(1)
+                }
+                n
+            }
+            None => cfg,
+        }
+    };
+    let io_threads = core_flag(&mut args, "--io-threads", cfg_io_threads);
+    let max_deferred = core_flag(&mut args, "--max-deferred", cfg_max_deferred);
     let Some(acceptor_addr) = peers.get(&id).cloned() else {
         eprintln!("node id {id} not in peer map");
         exit(1)
@@ -155,6 +203,8 @@ fn run_node(mut args: Vec<String>) {
         cluster,
         shard_plan,
         stripes,
+        io_threads,
+        max_deferred,
         data_dir,
         checkpoint,
         lease: None,

@@ -100,6 +100,13 @@ pub struct ProposerOpts {
     pub cache_capacity: usize,
     /// Read-lease tunables (used only in [`ReadMode::Lease`]).
     pub lease: LeaseOpts,
+    /// Proposer-side backpressure: when the transport reports at least
+    /// this many requests already in flight ([`Transport::inflight`]),
+    /// new operations are shed with [`CasError::Overloaded`] before
+    /// any fan-out instead of queueing unboundedly behind a struggling
+    /// connection. `0` disables the check (the default); transports
+    /// that don't track in-flight depth are never shed.
+    pub max_inflight: usize,
 }
 
 impl Default for ProposerOpts {
@@ -112,6 +119,7 @@ impl Default for ProposerOpts {
             read_mode: ReadMode::Quorum,
             cache_capacity: DEFAULT_CACHE_CAPACITY,
             lease: LeaseOpts::default(),
+            max_inflight: 0,
         }
     }
 }
@@ -280,6 +288,7 @@ impl Proposer {
         key: impl Into<Key>,
         change: ChangeFn,
     ) -> CasResult<RoundOutcome> {
+        self.shed_if_overloaded()?;
         let key: Key = key.into();
         if self.opts.read_mode != ReadMode::Lease {
             return self.change_rounds(&key, change);
@@ -429,6 +438,7 @@ impl Proposer {
     /// [`Counters::read_fast`](crate::metrics::Counters) /
     /// `read_fallback`.
     pub fn get(&self, key: impl Into<Key>) -> CasResult<Val> {
+        self.shed_if_overloaded()?;
         let key: Key = key.into();
         match self.opts.read_mode {
             ReadMode::Cas => return self.get_via_cas(key),
@@ -650,6 +660,25 @@ impl Proposer {
     /// more requests onto a struggling connection.
     pub fn transport_inflight(&self) -> Option<usize> {
         self.transport.inflight()
+    }
+
+    /// Backpressure gate consulted before any fan-out: sheds with
+    /// [`CasError::Overloaded`] when [`ProposerOpts::max_inflight`] is
+    /// set and the transport already reports that many requests
+    /// awaiting replies. The condition is self-clearing — the TCP
+    /// timeout sweeper fails stuck requests and empties the pending
+    /// maps even if the acceptors never answer.
+    fn shed_if_overloaded(&self) -> CasResult<()> {
+        let max = self.opts.max_inflight;
+        if max == 0 {
+            return Ok(());
+        }
+        if let Some(inflight) = self.transport.inflight() {
+            if inflight >= max {
+                return Err(CasError::Overloaded { inflight, max });
+            }
+        }
+        Ok(())
     }
 }
 

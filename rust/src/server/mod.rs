@@ -54,7 +54,8 @@ use crate::runtime::auto_engine;
 use crate::shard::{ShardPlan, ShardRouter};
 use crate::state::Val;
 use crate::transport::tcp::{
-    read_frame, serve_pipelined, serve_striped_acceptor, write_envelope, Handled, TcpTransport,
+    read_frame, serve_service, serve_striped_acceptor_opts, write_envelope, Handled, LoopStats,
+    ServeOpts, ServiceHandler, TcpTransport,
 };
 
 /// Client-facing request.
@@ -310,6 +311,16 @@ pub struct NodeOpts {
     /// the per-shard lease manager for the keys it owns). `None` =
     /// 1-RTT quorum reads (the default).
     pub lease: Option<crate::proposer::LeaseOpts>,
+    /// Event-loop threads per served listener (acceptor service and
+    /// client service each get their own loops). `0` is treated as 1.
+    /// Only the Linux epoll core consults this; the threaded fallback
+    /// spawns per connection. Raise it when one loop thread saturates
+    /// a core under many active connections.
+    pub io_threads: usize,
+    /// Per-connection cap on in-flight deferred replies (both server
+    /// cores): past it the connection stops reading until a reply
+    /// completes. `0` is treated as the default 256.
+    pub max_deferred: usize,
 }
 
 /// A running node (handles held for inspection; threads detached).
@@ -356,6 +367,10 @@ struct NodeCtx {
     /// (file-backed acceptors only; every stripe appends to the one
     /// WAL, so this IS the aggregate across stripes).
     wal_stats: Option<Arc<dyn Fn() -> (WalStats, CkptStats) + Send + Sync>>,
+    /// Server-core counters shared by this node's acceptor and client
+    /// services (exported through `Status` as `open_conns=` /
+    /// `loop_wakeups=` / `io_threads=`).
+    loop_stats: Arc<LoopStats>,
 }
 
 impl NodeCtx {
@@ -372,6 +387,19 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     let acceptor_addr =
         acceptor_listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
     let stripes = opts.stripes.max(1);
+    // One LoopStats for the whole node: the acceptor and client
+    // services aggregate their connection/wakeup counters here, and
+    // `Status` reads them back.
+    let loop_stats = Arc::new(LoopStats::default());
+    let serve_opts = ServeOpts {
+        io_threads: opts.io_threads.max(1),
+        max_deferred: if opts.max_deferred == 0 {
+            ServeOpts::default().max_deferred
+        } else {
+            opts.max_deferred
+        },
+        ..ServeOpts::default()
+    };
     let mut ckpt_stop: Option<(Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>)> =
         None;
     let wal_stats: Option<Arc<dyn Fn() -> (WalStats, CkptStats) + Send + Sync>> = match &opts
@@ -387,8 +415,10 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
                 stripes,
             )?);
             let serve = Arc::clone(&acc);
+            let sopts = serve_opts.clone();
+            let stats = Arc::clone(&loop_stats);
             std::thread::spawn(move || {
-                let _ = serve_striped_acceptor(acceptor_listener, serve);
+                let _ = serve_striped_acceptor_opts(acceptor_listener, serve, None, sopts, stats);
             });
             // Checkpoint poller: the striped coordination point must
             // run OUTSIDE the request path (it takes every stripe
@@ -422,8 +452,10 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         }
         None => {
             let acc = Arc::new(StripedAcceptor::new_mem(opts.id, stripes));
+            let sopts = serve_opts.clone();
+            let stats = Arc::clone(&loop_stats);
             std::thread::spawn(move || {
-                let _ = serve_striped_acceptor(acceptor_listener, acc);
+                let _ = serve_striped_acceptor_opts(acceptor_listener, acc, None, sopts, stats);
             });
             None
         }
@@ -488,6 +520,7 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         gc: Arc::clone(&gc),
         stripes,
         wal_stats,
+        loop_stats: Arc::clone(&loop_stats),
     });
 
     // ---- client service ----
@@ -496,11 +529,11 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     let client_addr =
         client_listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
     {
-        let ctx = Arc::clone(&ctx);
-        std::thread::spawn(move || loop {
-            let Ok((stream, _)) = client_listener.accept() else { break };
-            let ctx = Arc::clone(&ctx);
-            std::thread::spawn(move || serve_client(stream, ctx));
+        let handler = client_handler(Arc::clone(&ctx));
+        let sopts = serve_opts;
+        let stats = loop_stats;
+        std::thread::spawn(move || {
+            let _ = serve_service(client_listener, handler, sopts, stats);
         });
     }
     Ok(Node {
@@ -514,20 +547,20 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     })
 }
 
-/// One client-service connection, on the same pipelined shell as the
-/// acceptor service ([`serve_pipelined`]): `Status` (which never runs a
+/// The client-service handler, served on the same server core as the
+/// acceptor service ([`serve_service`]): `Status` (which never runs a
 /// proposer round) is answered inline; every other request runs off the
-/// read loop — client ops run whole proposer rounds, seconds in the
+/// read path — client ops run whole proposer rounds, seconds in the
 /// worst case, and a slow `Change` must never head-of-line block a
 /// `Read` multiplexed on the same connection.
-fn serve_client(stream: TcpStream, ctx: Arc<NodeCtx>) {
-    serve_pipelined(stream, move |req: ClientReq| {
+fn client_handler(ctx: Arc<NodeCtx>) -> ServiceHandler<ClientReq, ClientResp> {
+    Arc::new(move |req: ClientReq| {
         if matches!(req, ClientReq::Status) {
             return Handled::Inline(handle_client(&req, &ctx));
         }
         let ctx = Arc::clone(&ctx);
         Handled::Deferred(Box::new(move || {
-            // The read loop and socket outlive the reply thread, so a
+            // The connection and socket outlive the reply worker, so a
             // handler panic must still produce a reply — the blocking
             // Client would otherwise wait forever for this corr id.
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle_client(&req, &ctx)))
@@ -607,12 +640,14 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 },
             ));
             let inflight = ctx.proposers[0].transport_inflight().unwrap_or(0);
+            let (open_conns, loop_wakeups, io_threads) = ctx.loop_stats.snapshot();
             ClientResp::Status(format!(
                 "id={} shards={} rounds={} commits={} conflicts={} retries={} \
                  cache_hits={} failures={} read_fast={} read_fallback={} \
                  read_lease={} lease_renew={} lease_break={} gc_pending={} \
                  stripes={} wal_appends={} wal_flushes={} wal_fsyncs={} \
-                 checkpoint_records={} replay_records={} last_checkpoint_us={} inflight={}",
+                 checkpoint_records={} replay_records={} last_checkpoint_us={} inflight={} \
+                 open_conns={} loop_wakeups={} io_threads={}",
                 ctx.proposers[0].id(),
                 ctx.shards.len(),
                 snap[0],
@@ -634,7 +669,10 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 ckpt.checkpoint_records,
                 ckpt.replay_records,
                 ckpt.last_checkpoint_us,
-                inflight
+                inflight,
+                open_conns,
+                loop_wakeups,
+                io_threads
             ))
         }
     }
@@ -829,6 +867,8 @@ mod tests {
                     cluster: cluster.clone(),
                     shard_plan: shard_plan.clone(),
                     stripes,
+                    io_threads: 0,
+                    max_deferred: 0,
                     data_dir: data.map(|d| d.path().to_str().unwrap().to_string()),
                     checkpoint: None,
                     lease: lease.clone(),
@@ -1013,6 +1053,7 @@ mod tests {
             ClientResp::Status(s) => {
                 assert!(s.contains("stripes=4"), "{s}");
                 assert!(s.contains("inflight="), "{s}");
+                assert!(s.contains("loop_wakeups="), "{s}");
                 let field = |name: &str| -> u64 {
                     s.split_whitespace()
                         .find_map(|kv| kv.strip_prefix(name))
@@ -1050,6 +1091,8 @@ mod tests {
             cluster: ClusterConfig::majority(1, vec![1]),
             shard_plan: None,
             stripes: 4,
+            io_threads: 0,
+            max_deferred: 0,
             data_dir: Some(dir.path().to_str().unwrap().to_string()),
             checkpoint: Some(crate::acceptor::CheckpointOpts {
                 interval_records: 20,
@@ -1189,6 +1232,52 @@ mod tests {
             other => panic!("corr 5: {other:?}"),
         }
         assert!(matches!(seen.remove(&6), Some(ClientResp::Status(_))));
+    }
+
+    /// Partial-frame pin, client service: a request envelope dribbled
+    /// one byte at a time across many readiness rounds must still be
+    /// reassembled and answered with the right correlation id.
+    #[test]
+    fn client_envelope_dribbled_bytewise_gets_reply() {
+        use std::io::Write;
+        let nodes = launch_cluster(1, None);
+        let mut s = TcpStream::connect(nodes[0].client_addr.to_string()).unwrap();
+        s.set_nodelay(true).unwrap();
+        let mut env = Vec::new();
+        crate::codec::encode_envelope(9, &ClientReq::Status, &mut env);
+        let mut frame = (env.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&env);
+        for byte in frame {
+            s.write_all(&[byte]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let env: Envelope<ClientResp> = read_frame(&mut s).unwrap().expect("reply");
+        assert_eq!(env.corr, 9);
+        assert!(matches!(env.body, ClientResp::Status(_)));
+    }
+
+    /// Length-bomb pin, client service: a header declaring a frame past
+    /// the limit kills only its own connection; clients already
+    /// connected (and new ones) keep working.
+    #[test]
+    fn client_length_bomb_fails_only_its_connection() {
+        use std::io::{Read, Write};
+        let nodes = launch_cluster(1, None);
+        let addr = nodes[0].client_addr.to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        c.change("k", ChangeFn::Set(5)).unwrap();
+        let mut bomb = TcpStream::connect(&addr).unwrap();
+        bomb.write_all(&(crate::transport::tcp::MAX_FRAME + 1).to_le_bytes()).unwrap();
+        bomb.flush().unwrap();
+        bomb.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 1];
+        match bomb.read(&mut buf) {
+            Ok(0) | Err(_) => {}
+            Ok(_) => panic!("length-bomb connection must be closed, got bytes back"),
+        }
+        // The pre-existing client connection is untouched.
+        assert_eq!(c.get("k").unwrap().as_num(), Some(5));
     }
 
     #[test]

@@ -1,0 +1,685 @@
+//! Event-driven server core: a fixed-thread epoll readiness loop.
+//!
+//! This replaces the thread-per-connection server shell (see
+//! [`crate::transport::tcp::serve_service_threaded`], kept as the
+//! non-Linux fallback and as the bench baseline) with `--io-threads N`
+//! event-loop threads that together hold every accepted connection:
+//!
+//! ```text
+//!              accept (loop 0 owns the listener)
+//!                │  round-robin handoff via inbox + eventfd wake
+//!                ▼
+//!   epoll_wait ──► readable ──► read to buffer ──► parse frames
+//!        ▲                                            │
+//!        │                             Inline reply   │   Deferred
+//!        │                           (encode+flush)   │ (durability /
+//!        │                                            ▼  slow handler)
+//!        │                                      shared worker pool
+//!        │                                            │ finish(), encode
+//!        └──── eventfd wake ◄── completion inbox ◄────┘
+//!                  (loop appends frame to conn write buffer, flushes)
+//! ```
+//!
+//! Invariants the loop maintains per connection:
+//!
+//! * **Partial frames** accumulate in a read buffer; a frame is only
+//!   decoded once its 4-byte LE length prefix and full body are
+//!   present. A length prefix over `MAX_FRAME` closes that connection
+//!   only (length-bomb containment, same policy as the threaded core).
+//! * **Backpressure**: at `max_deferred` in-flight deferred replies the
+//!   loop drops the connection's read interest AND stops parsing bytes
+//!   it already buffered — the kernel socket buffer then pushes back on
+//!   the client, exactly like the threaded core blocking its reader.
+//! * **Writes** go through a per-connection write buffer; `EPOLLOUT`
+//!   interest is registered only while it is non-empty, so idle
+//!   connections cost zero wakeups.
+//! * **Stall sweeping** is folded into the loop's coarse timer wheel:
+//!   a connection sitting mid-frame with no forward progress for
+//!   `stall_timeout` is closed. Idle connections (no partial frame) are
+//!   never armed, so N idle connections add no timer load.
+//!
+//! Handlers run on the loop thread (they are cheap protocol
+//! dispatches); `Handled::Deferred` closures run on a shared
+//! lazy-spawned worker pool capped at `ServeOpts::workers` threads, so
+//! the whole process keeps a fixed thread budget regardless of
+//! connection count.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::poll::{Event, Poller, Waker};
+use super::tcp::{Handled, LoopStats, ServeOpts, ServiceHandler, MAX_FRAME};
+use crate::codec::{encode_envelope, Codec, Envelope};
+use crate::error::{CasError, CasResult};
+
+/// Token of the accept listener (loop 0 only).
+const TOK_LISTENER: u64 = 0;
+/// Token of each loop's inbox waker.
+const TOK_WAKER: u64 = 1;
+/// First connection token.
+const TOK_FIRST_CONN: u64 = 2;
+
+/// Timer-wheel granularity. Stall deadlines are coarse (seconds), so a
+/// half-second tick is plenty and keeps idle wakeups near zero.
+const WHEEL_TICK: Duration = Duration::from_millis(500);
+/// Wheel horizon = `WHEEL_SLOTS * WHEEL_TICK`; deadlines beyond it park
+/// in the last slot and re-arm when it fires.
+const WHEEL_SLOTS: usize = 64;
+
+/// Reply-worker idle retirement, mirroring the threaded `ReplyPool`.
+const WORKER_IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// A deferred reply ready to be written: the connection token and the
+/// fully framed bytes (`None` when the handler panicked — the slot is
+/// still released so the connection unpauses).
+type Completion = (u64, Option<Vec<u8>>);
+
+/// Per-loop mailbox: connections handed off by the accept loop and
+/// deferred-reply completions from the worker pool. Producers push
+/// under the mutex and ring [`LoopHandle::waker`].
+#[derive(Default)]
+struct Inbox {
+    conns: Vec<TcpStream>,
+    completions: Vec<Completion>,
+}
+
+/// The cross-thread face of one event loop.
+struct LoopHandle {
+    inbox: Mutex<Inbox>,
+    waker: Waker,
+}
+
+/// A deferred-reply job: runs the handler's `finish` closure, encodes
+/// the framed reply, and posts the completion back to the owning loop.
+type Job = Box<dyn FnOnce() + Send>;
+
+struct PoolQueue {
+    jobs: Vec<Job>,
+    /// Workers parked in `wait_timeout` with no reserved job.
+    idle: usize,
+    /// Live worker threads (idle + busy).
+    workers: usize,
+}
+
+/// Shared lazy-spawn worker pool for deferred replies. Mirrors the
+/// threaded core's `ReplyPool` discipline — reserve an idle worker or
+/// spawn (up to `cap`), retire after [`WORKER_IDLE_TIMEOUT`] — but is
+/// shared across every connection of the service, which is what makes
+/// the process thread budget independent of connection count.
+struct WorkPool {
+    queue: Mutex<PoolQueue>,
+    available: Condvar,
+    cap: usize,
+}
+
+impl WorkPool {
+    fn new(cap: usize) -> Arc<WorkPool> {
+        Arc::new(WorkPool {
+            queue: Mutex::new(PoolQueue { jobs: Vec::new(), idle: 0, workers: 0 }),
+            available: Condvar::new(),
+            cap: cap.max(1),
+        })
+    }
+
+    /// Queues `job`, reserving an idle worker or spawning one if the
+    /// pool is below cap. At cap with every worker busy the job waits
+    /// in the queue — the per-connection `max_deferred` cap bounds how
+    /// much can pile up here.
+    fn submit(pool: &Arc<WorkPool>, job: Job) {
+        let spawn = {
+            let mut q = pool.queue.lock().unwrap();
+            q.jobs.push(job);
+            if q.idle > 0 {
+                q.idle -= 1;
+                false
+            } else if q.workers < pool.cap {
+                q.workers += 1;
+                true
+            } else {
+                false
+            }
+        };
+        if spawn {
+            let pool = Arc::clone(pool);
+            std::thread::spawn(move || WorkPool::worker_loop(&pool));
+        } else {
+            pool.available.notify_one();
+        }
+    }
+
+    fn worker_loop(pool: &WorkPool) {
+        loop {
+            let job = {
+                let mut q = pool.queue.lock().unwrap();
+                loop {
+                    if let Some(job) = q.jobs.pop() {
+                        break Some(job);
+                    }
+                    let (guard, timeout) =
+                        pool.available.wait_timeout(q, WORKER_IDLE_TIMEOUT).unwrap();
+                    q = guard;
+                    if timeout.timed_out() && q.jobs.is_empty() && q.idle > 0 {
+                        // Retire: consume our own idle reservation.
+                        q.idle -= 1;
+                        q.workers -= 1;
+                        break None;
+                    }
+                }
+            };
+            let Some(job) = job else { return };
+            let _ = catch_unwind(AssertUnwindSafe(job));
+            pool.queue.lock().unwrap().idle += 1;
+        }
+    }
+}
+
+/// Everything the loops share for one served listener.
+struct LoopCtx<Req, Resp> {
+    handler: ServiceHandler<Req, Resp>,
+    pool: Arc<WorkPool>,
+    handles: Vec<Arc<LoopHandle>>,
+    stats: Arc<LoopStats>,
+    max_deferred: usize,
+    stall_timeout: Duration,
+}
+
+/// Per-connection state owned by exactly one loop thread.
+struct Conn {
+    stream: TcpStream,
+    /// Read accumulator; complete frames are consumed from the front.
+    rbuf: Vec<u8>,
+    /// Bytes of `rbuf` already consumed (compacted lazily).
+    rpos: usize,
+    /// Pending outbound bytes; flushed on writability.
+    wbuf: Vec<u8>,
+    /// Bytes of `wbuf` already written.
+    wpos: usize,
+    /// Deferred replies in flight (queued or running on the pool).
+    deferred: usize,
+    /// Read interest dropped because `deferred` hit the cap.
+    paused: bool,
+    /// `EPOLLOUT` currently registered (wbuf non-empty).
+    want_write: bool,
+    /// Stall deadline while a partial frame is pending; re-armed on
+    /// forward progress, cleared at frame boundaries.
+    stall_deadline: Option<Instant>,
+}
+
+/// Coarse hashed timer wheel. Entries are lazy: firing checks the
+/// connection's current deadline and re-arms if it moved forward, so
+/// read progress never has to cancel anything.
+struct TimerWheel {
+    buckets: Vec<Vec<u64>>,
+    cursor: usize,
+    last_tick: Instant,
+    armed: usize,
+}
+
+impl TimerWheel {
+    fn new() -> TimerWheel {
+        TimerWheel {
+            buckets: vec![Vec::new(); WHEEL_SLOTS],
+            cursor: 0,
+            last_tick: Instant::now(),
+            armed: 0,
+        }
+    }
+
+    fn arm(&mut self, token: u64, deadline: Instant) {
+        let now = Instant::now();
+        if self.armed == 0 {
+            // Nothing advanced the wheel while it was empty; resync so
+            // the new entry isn't swept through a stale backlog.
+            self.last_tick = now;
+        }
+        let ticks = (deadline.saturating_duration_since(now).as_millis()
+            / WHEEL_TICK.as_millis()) as usize
+            + 1;
+        let slot = (self.cursor + ticks.min(WHEEL_SLOTS - 1)) % WHEEL_SLOTS;
+        self.buckets[slot].push(token);
+        self.armed += 1;
+    }
+
+    /// epoll timeout: block forever when nothing is armed.
+    fn poll_timeout_ms(&self) -> i32 {
+        if self.armed == 0 {
+            -1
+        } else {
+            WHEEL_TICK.as_millis() as i32
+        }
+    }
+
+    /// Advances up to now, returning tokens whose slots came due.
+    fn expired(&mut self) -> Vec<u64> {
+        let mut due = Vec::new();
+        let now = Instant::now();
+        while now.duration_since(self.last_tick) >= WHEEL_TICK {
+            self.last_tick += WHEEL_TICK;
+            self.cursor = (self.cursor + 1) % WHEEL_SLOTS;
+            let fired = std::mem::take(&mut self.buckets[self.cursor]);
+            self.armed -= fired.len();
+            due.extend(fired);
+        }
+        due
+    }
+}
+
+/// Mutable state private to one loop thread.
+struct LoopState {
+    poller: Poller,
+    conns: HashMap<u64, Conn>,
+    wheel: TimerWheel,
+    next_token: u64,
+    /// Read scratch, reused across connections.
+    scratch: Vec<u8>,
+}
+
+/// Serves `listener` on `opts.io_threads` event loops until the
+/// process exits or the poller fails. Loop 0 runs on the calling
+/// thread and owns the listener; accepted connections are dealt
+/// round-robin to all loops.
+pub(crate) fn serve_event<Req, Resp>(
+    listener: TcpListener,
+    handler: ServiceHandler<Req, Resp>,
+    opts: ServeOpts,
+    stats: Arc<LoopStats>,
+) -> CasResult<()>
+where
+    Req: Codec + 'static,
+    Resp: Codec + Send + 'static,
+{
+    let io_threads = opts.io_threads.max(1);
+    stats.io_threads.store(io_threads as u64, Ordering::Relaxed);
+    let mut handles = Vec::with_capacity(io_threads);
+    for _ in 0..io_threads {
+        let waker = Waker::new().map_err(|e| CasError::Transport(format!("eventfd: {e}")))?;
+        handles.push(Arc::new(LoopHandle { inbox: Mutex::new(Inbox::default()), waker }));
+    }
+    let ctx = Arc::new(LoopCtx {
+        handler,
+        pool: WorkPool::new(opts.workers),
+        handles,
+        stats,
+        max_deferred: opts.max_deferred.max(1),
+        stall_timeout: opts.stall_timeout,
+    });
+    for index in 1..io_threads {
+        let ctx = Arc::clone(&ctx);
+        std::thread::spawn(move || {
+            if let Err(e) = run_loop(&ctx, index, None) {
+                eprintln!("event loop {index} exited: {e}");
+            }
+        });
+    }
+    run_loop(&ctx, 0, Some(listener))
+}
+
+fn run_loop<Req, Resp>(
+    ctx: &Arc<LoopCtx<Req, Resp>>,
+    index: usize,
+    listener: Option<TcpListener>,
+) -> CasResult<()>
+where
+    Req: Codec + 'static,
+    Resp: Codec + Send + 'static,
+{
+    let io_err = |e: std::io::Error| CasError::Transport(format!("epoll: {e}"));
+    let mut state = LoopState {
+        poller: Poller::new().map_err(io_err)?,
+        conns: HashMap::new(),
+        wheel: TimerWheel::new(),
+        next_token: TOK_FIRST_CONN,
+        scratch: vec![0u8; 64 * 1024],
+    };
+    let me = &ctx.handles[index];
+    state.poller.add(me.waker.fd(), TOK_WAKER, true, false).map_err(io_err)?;
+    if let Some(l) = &listener {
+        l.set_nonblocking(true).map_err(io_err)?;
+        state.poller.add(l.as_raw_fd(), TOK_LISTENER, true, false).map_err(io_err)?;
+    }
+    let mut events: Vec<Event> = Vec::new();
+    let mut rr = 0usize;
+    loop {
+        let timeout = state.wheel.poll_timeout_ms();
+        state.poller.wait(&mut events, timeout).map_err(io_err)?;
+        ctx.stats.loop_wakeups.fetch_add(1, Ordering::Relaxed);
+        for ev in events.drain(..) {
+            match ev.token {
+                TOK_LISTENER => accept_ready(&mut state, ctx, index, &mut rr, listener.as_ref()),
+                TOK_WAKER => me.waker.drain(),
+                token => {
+                    if ev.readable {
+                        conn_readable(&mut state, ctx, index, token);
+                    }
+                    if ev.writable && !flush_conn(&mut state, token) {
+                        close_conn(&mut state, ctx, token);
+                    }
+                }
+            }
+        }
+        drain_inbox(&mut state, ctx, index);
+        sweep_stalled(&mut state, ctx);
+    }
+}
+
+/// Accepts until `EAGAIN`, dealing connections round-robin across all
+/// loops (including this one).
+fn accept_ready<Req, Resp>(
+    state: &mut LoopState,
+    ctx: &Arc<LoopCtx<Req, Resp>>,
+    index: usize,
+    rr: &mut usize,
+    listener: Option<&TcpListener>,
+) {
+    let Some(listener) = listener else { return };
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let target = *rr % ctx.handles.len();
+                *rr += 1;
+                if target == index {
+                    register_conn(state, ctx, stream);
+                } else {
+                    let handle = &ctx.handles[target];
+                    handle.inbox.lock().unwrap().conns.push(stream);
+                    handle.waker.wake();
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => {
+                // Transient accept failure (e.g. fd exhaustion): back
+                // off briefly; level-triggered epoll will re-report.
+                std::thread::sleep(Duration::from_millis(10));
+                return;
+            }
+        }
+    }
+}
+
+fn register_conn<Req, Resp>(
+    state: &mut LoopState,
+    ctx: &Arc<LoopCtx<Req, Resp>>,
+    stream: TcpStream,
+) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    stream.set_nodelay(true).ok();
+    let token = state.next_token;
+    state.next_token += 1;
+    if state.poller.add(stream.as_raw_fd(), token, true, false).is_err() {
+        return;
+    }
+    state.conns.insert(
+        token,
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            deferred: 0,
+            paused: false,
+            want_write: false,
+            stall_deadline: None,
+        },
+    );
+    ctx.stats.open_conns.fetch_add(1, Ordering::Relaxed);
+}
+
+fn close_conn<Req, Resp>(state: &mut LoopState, ctx: &Arc<LoopCtx<Req, Resp>>, token: u64) {
+    if let Some(conn) = state.conns.remove(&token) {
+        state.poller.delete(conn.stream.as_raw_fd()).ok();
+        ctx.stats.open_conns.fetch_sub(1, Ordering::Relaxed);
+        // In-flight deferred replies for this token will post
+        // completions that drain_inbox ignores (unknown token).
+    }
+}
+
+/// Pulls available bytes into the read buffer, then parses frames.
+fn conn_readable<Req, Resp>(
+    state: &mut LoopState,
+    ctx: &Arc<LoopCtx<Req, Resp>>,
+    index: usize,
+    token: u64,
+) where
+    Req: Codec + 'static,
+    Resp: Codec + Send + 'static,
+{
+    let mut broken = false;
+    let mut progressed = false;
+    {
+        let Some(conn) = state.conns.get_mut(&token) else { return };
+        loop {
+            match conn.stream.read(&mut state.scratch) {
+                Ok(0) => {
+                    broken = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&state.scratch[..n]);
+                    progressed = true;
+                    if n < state.scratch.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    broken = true;
+                    break;
+                }
+            }
+        }
+    }
+    if broken || !drain_frames(state, ctx, index, token) {
+        close_conn(state, ctx, token);
+        return;
+    }
+    if progressed {
+        track_stall(state, ctx, token);
+    }
+}
+
+/// Updates the stall deadline after read-side progress: armed while a
+/// partial frame is buffered, cleared at a frame boundary.
+fn track_stall<Req, Resp>(state: &mut LoopState, ctx: &Arc<LoopCtx<Req, Resp>>, token: u64) {
+    let Some(conn) = state.conns.get_mut(&token) else { return };
+    if conn.rbuf.len() > conn.rpos {
+        let deadline = Instant::now() + ctx.stall_timeout;
+        let was_armed = conn.stall_deadline.is_some();
+        conn.stall_deadline = Some(deadline);
+        if !was_armed {
+            state.wheel.arm(token, deadline);
+        }
+    } else {
+        conn.stall_deadline = None;
+    }
+}
+
+/// Parses and dispatches every complete frame in the read buffer,
+/// respecting the deferred cap, then flushes. Returns `false` to close
+/// the connection (length bomb, decode error, handler panic, oversized
+/// reply, write failure).
+fn drain_frames<Req, Resp>(
+    state: &mut LoopState,
+    ctx: &Arc<LoopCtx<Req, Resp>>,
+    index: usize,
+    token: u64,
+) -> bool
+where
+    Req: Codec + 'static,
+    Resp: Codec + Send + 'static,
+{
+    loop {
+        let Some(conn) = state.conns.get_mut(&token) else { return true };
+        if conn.deferred >= ctx.max_deferred {
+            if !conn.paused {
+                conn.paused = true;
+                let fd = conn.stream.as_raw_fd();
+                let want_write = conn.want_write;
+                state.poller.modify(fd, token, false, want_write).ok();
+            }
+            break;
+        }
+        let avail = conn.rbuf.len() - conn.rpos;
+        if avail < 4 {
+            break;
+        }
+        let len_bytes: [u8; 4] = conn.rbuf[conn.rpos..conn.rpos + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(len_bytes);
+        if len > MAX_FRAME {
+            return false;
+        }
+        let len = len as usize;
+        if avail < 4 + len {
+            break;
+        }
+        let body = &conn.rbuf[conn.rpos + 4..conn.rpos + 4 + len];
+        let Ok(env) = Envelope::<Req>::from_bytes(body) else { return false };
+        conn.rpos += 4 + len;
+        // Compact once the parse point passes the buffer midpoint so a
+        // long pipelined burst doesn't re-copy per frame.
+        if conn.rpos == conn.rbuf.len() {
+            conn.rbuf.clear();
+            conn.rpos = 0;
+        } else if conn.rpos >= 4096 && conn.rpos * 2 >= conn.rbuf.len() {
+            conn.rbuf.drain(..conn.rpos);
+            conn.rpos = 0;
+        }
+        match catch_unwind(AssertUnwindSafe(|| (ctx.handler)(env.body))) {
+            Ok(Handled::Inline(resp)) => {
+                let Some(frame) = frame_bytes(env.corr, &resp) else { return false };
+                conn.wbuf.extend_from_slice(&frame);
+            }
+            Ok(Handled::Deferred(finish)) => {
+                conn.deferred += 1;
+                let corr = env.corr;
+                let handle = Arc::clone(&ctx.handles[index]);
+                WorkPool::submit(
+                    &ctx.pool,
+                    Box::new(move || {
+                        let frame = catch_unwind(AssertUnwindSafe(finish))
+                            .ok()
+                            .and_then(|resp| frame_bytes(corr, &resp));
+                        handle.inbox.lock().unwrap().completions.push((token, frame));
+                        handle.waker.wake();
+                    }),
+                );
+            }
+            Err(_) => return false,
+        }
+    }
+    flush_conn(state, token)
+}
+
+/// Frames one reply envelope; `None` if it exceeds [`MAX_FRAME`].
+fn frame_bytes<T: Codec>(corr: u64, body: &T) -> Option<Vec<u8>> {
+    let mut env = Vec::with_capacity(64);
+    encode_envelope(corr, body, &mut env);
+    if env.len() as u64 > MAX_FRAME as u64 {
+        return None;
+    }
+    let mut buf = Vec::with_capacity(4 + env.len());
+    buf.extend_from_slice(&(env.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&env);
+    Some(buf)
+}
+
+/// Writes as much of the write buffer as the socket accepts, keeping
+/// `EPOLLOUT` interest in sync. Returns `false` on write failure.
+fn flush_conn(state: &mut LoopState, token: u64) -> bool {
+    let Some(conn) = state.conns.get_mut(&token) else { return true };
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return false,
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    }
+    let need = !conn.wbuf.is_empty();
+    if need != conn.want_write {
+        conn.want_write = need;
+        let fd = conn.stream.as_raw_fd();
+        let readable = !conn.paused;
+        state.poller.modify(fd, token, readable, need).ok();
+    }
+    true
+}
+
+/// Applies inbox items: registers handed-off connections and completes
+/// deferred replies (append frame, flush, unpause, resume parsing).
+fn drain_inbox<Req, Resp>(state: &mut LoopState, ctx: &Arc<LoopCtx<Req, Resp>>, index: usize)
+where
+    Req: Codec + 'static,
+    Resp: Codec + Send + 'static,
+{
+    let (new_conns, completions) = {
+        let mut inbox = ctx.handles[index].inbox.lock().unwrap();
+        (std::mem::take(&mut inbox.conns), std::mem::take(&mut inbox.completions))
+    };
+    for stream in new_conns {
+        register_conn(state, ctx, stream);
+    }
+    for (token, frame) in completions {
+        let resumed = {
+            let Some(conn) = state.conns.get_mut(&token) else { continue };
+            conn.deferred = conn.deferred.saturating_sub(1);
+            if let Some(frame) = frame {
+                conn.wbuf.extend_from_slice(&frame);
+            }
+            if conn.paused && conn.deferred < ctx.max_deferred {
+                conn.paused = false;
+                let fd = conn.stream.as_raw_fd();
+                let want_write = conn.want_write;
+                state.poller.modify(fd, token, true, want_write).ok();
+                true
+            } else {
+                false
+            }
+        };
+        let ok = if resumed {
+            // Frames may already be buffered past the old cap point.
+            drain_frames(state, ctx, index, token)
+        } else {
+            flush_conn(state, token)
+        };
+        if !ok {
+            close_conn(state, ctx, token);
+        }
+    }
+}
+
+/// Closes connections that sat mid-frame past their stall deadline;
+/// re-arms entries whose deadline moved forward since they were armed.
+fn sweep_stalled<Req, Resp>(state: &mut LoopState, ctx: &Arc<LoopCtx<Req, Resp>>) {
+    let due = state.wheel.expired();
+    if due.is_empty() {
+        return;
+    }
+    let now = Instant::now();
+    for token in due {
+        let deadline = match state.conns.get(&token) {
+            Some(conn) => conn.stall_deadline,
+            None => continue,
+        };
+        match deadline {
+            Some(deadline) if deadline <= now => close_conn(state, ctx, token),
+            Some(deadline) => state.wheel.arm(token, deadline),
+            None => {}
+        }
+    }
+}

@@ -20,12 +20,24 @@
 //! * the discrete-event simulator ([`crate::sim`]) bypasses this trait
 //!   and drives [`crate::proposer::RoundCore`] under virtual time.
 //!
+//! The **server** side of the TCP protocol has two cores: the
+//! event-driven epoll readiness loop ([`event`], Linux — a fixed
+//! `--io-threads` budget holds every connection) and the
+//! thread-per-connection fallback kept in [`tcp`] for other platforms
+//! and as a bench baseline. [`poll`] is the raw epoll/eventfd wrapper
+//! under the event core.
+//!
 //! Replies carry **no ordering guarantee** in any implementation — a
 //! fan-out's replies may land in any order, and protocol cores must
 //! not care (the proposer's reordered-replies tests pin this).
 
 pub mod mem;
 pub mod tcp;
+
+#[cfg(target_os = "linux")]
+pub mod event;
+#[cfg(target_os = "linux")]
+pub mod poll;
 
 use std::sync::mpsc;
 

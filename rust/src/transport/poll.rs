@@ -1,0 +1,284 @@
+//! Minimal epoll + eventfd readiness primitives (Linux only).
+//!
+//! The offline toolchain carries no external crates (no mio, no libc
+//! crate), so the event-driven server core declares the four syscalls
+//! it needs — `epoll_create1` / `epoll_ctl` / `epoll_wait` / `eventfd`
+//! — directly via `extern "C"` (libc itself is always linked). This
+//! module is the ONLY place those declarations live; everything above
+//! it ([`crate::transport::event`]) speaks [`Poller`] / [`Waker`].
+//!
+//! Non-Linux builds compile neither this module nor the event loop:
+//! the server falls back to the threaded core at compile time (see
+//! [`crate::transport::tcp::serve_service`]).
+//!
+//! Design notes:
+//!
+//! * **Level-triggered** events only. Edge-triggered saves wakeups but
+//!   demands drain-to-`EAGAIN` discipline on every path; level keeps
+//!   the loop's state machine simple and is fast enough here (the loop
+//!   drains opportunistically anyway).
+//! * [`Waker`] is an `eventfd` registered in the same epoll set: any
+//!   thread can [`Waker::wake`] the loop out of `epoll_wait` to make it
+//!   look at its inbox (deferred-reply completions, handed-off accepted
+//!   connections). One 8-byte read resets the counter, so N wakes
+//!   coalesce into one loop iteration.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+/// One `struct epoll_event`. The kernel ABI packs it on x86_64 only
+/// (`__EPOLL_PACKED`); other architectures use natural alignment.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+}
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+
+const EFD_NONBLOCK: i32 = 0o4000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+
+/// Max events decoded per [`Poller::wait`] call. Level-triggered epoll
+/// re-reports anything still ready, so a burst larger than this just
+/// takes extra loop iterations — nothing is lost.
+const MAX_EVENTS: usize = 256;
+
+/// One decoded readiness event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// The token the fd was registered with (`epoll_data.u64`).
+    pub token: u64,
+    /// Readable — or hung up / errored, which a read will surface.
+    pub readable: bool,
+    /// Writable — or errored, which a write will surface.
+    pub writable: bool,
+}
+
+/// A thin safe wrapper over one epoll instance.
+pub struct Poller {
+    epfd: RawFd,
+    /// Reused raw-event buffer for [`Poller::wait`].
+    buf: Vec<EpollEvent>,
+}
+
+impl Poller {
+    /// Creates an epoll instance (`EPOLL_CLOEXEC`).
+    pub fn new() -> io::Result<Poller> {
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; MAX_EVENTS] })
+    }
+
+    fn ctl(
+        &self,
+        op: i32,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    ) -> io::Result<()> {
+        let mut bits = EPOLLRDHUP;
+        if readable {
+            bits |= EPOLLIN;
+        }
+        if writable {
+            bits |= EPOLLOUT;
+        }
+        let mut ev = EpollEvent { events: bits, data: token };
+        let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Registers `fd` under `token` with the given interest set.
+    pub fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, token, readable, writable)
+    }
+
+    /// Re-arms `fd`'s interest set (pause/resume reading, write-ready
+    /// subscription while the write buffer is non-empty).
+    pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, token, readable, writable)
+    }
+
+    /// Removes `fd` from the set (connection close).
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        // The event argument is ignored for DEL but must be non-null on
+        // pre-2.6.9 kernels; pass a dummy unconditionally.
+        let mut ev = EpollEvent { events: 0, data: 0 };
+        let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Waits for readiness, decoding into `events` (cleared first).
+    /// `timeout_ms < 0` blocks indefinitely. A signal interruption
+    /// returns an empty event set, not an error.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        events.clear();
+        let rc = unsafe {
+            epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms)
+        };
+        if rc < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(err);
+        }
+        for raw in self.buf.iter().take(rc as usize) {
+            // Copy out of the (possibly packed) struct before use.
+            let bits = raw.events;
+            let token = raw.data;
+            events.push(Event {
+                token,
+                // Hangup/error surface as readable so the read path
+                // observes EOF / the error and closes the connection.
+                readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                writable: bits & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+/// An `eventfd`-backed loop waker: register [`Waker::fd`] in the loop's
+/// [`Poller`], then any thread calls [`Waker::wake`] to pop the loop
+/// out of `epoll_wait`.
+pub struct Waker {
+    fd: RawFd,
+}
+
+impl Waker {
+    /// Creates a nonblocking eventfd.
+    pub fn new() -> io::Result<Waker> {
+        let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { fd })
+    }
+
+    /// The fd to register for readability.
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Wakes the loop. Async-signal-safe, callable from any thread;
+    /// failures are ignored (the eventfd counter saturating still
+    /// leaves it readable, which is all the loop needs).
+    pub fn wake(&self) {
+        let one: [u8; 8] = 1u64.to_ne_bytes();
+        unsafe {
+            write(self.fd, one.as_ptr(), one.len());
+        }
+    }
+
+    /// Drains the eventfd so the level-triggered registration goes
+    /// quiet until the next [`Waker::wake`].
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        unsafe {
+            // One read returns the counter and resets it to zero.
+            read(self.fd, buf.as_mut_ptr(), buf.len());
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let mut poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        poller.add(waker.fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        // Nothing pending: a zero-timeout wait reports no events.
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty());
+        waker.wake();
+        waker.wake(); // coalesces with the first
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        waker.drain();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "drained waker must go quiet");
+    }
+
+    #[test]
+    fn socket_readiness_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut poller = Poller::new().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        poller.add(listener.as_raw_fd(), 1, true, false).unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, 2000).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable), "accept readiness");
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        poller.add(server.as_raw_fd(), 2, true, false).unwrap();
+        client.write_all(b"hi").unwrap();
+        poller.wait(&mut events, 2000).unwrap();
+        assert!(events.iter().any(|e| e.token == 2 && e.readable), "data readiness");
+        // Re-arm for writability: an idle socket is instantly writable.
+        poller.modify(server.as_raw_fd(), 2, false, true).unwrap();
+        poller.wait(&mut events, 2000).unwrap();
+        assert!(events.iter().any(|e| e.token == 2 && e.writable));
+        poller.delete(server.as_raw_fd()).unwrap();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(!events.iter().any(|e| e.token == 2), "deleted fd reports nothing");
+    }
+}

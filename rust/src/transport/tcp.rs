@@ -24,17 +24,32 @@
 //! [`serve_acceptor`] (and its lock-striped twin
 //! [`serve_striped_acceptor`]) handles each request under the key's
 //! stripe lock (fast, in-memory), then resolves the durability ticket
-//! and writes the reply **off the read loop**: a quorum read or lease
+//! and writes the reply **off the read path**: a quorum read or lease
 //! grant pipelined behind a write is dispatched while that write still
-//! waits on its group-commit fsync, and replies go out out-of-order
-//! under a shared per-connection frame lock. This is what gives `Read`
-//! / `LeaseAcquire` over TCP the same latency profile the in-memory
+//! waits on its group-commit fsync, and replies go out out-of-order,
+//! matched by correlation id. This is what gives `Read` /
+//! `LeaseAcquire` over TCP the same latency profile the in-memory
 //! transport shows — a stalled identity-CAS round no longer
-//! head-of-line blocks the fast paths behind it. Deferred replies run
-//! on a per-connection **reply-worker pool** (reused threads, grown
-//! only when every worker is busy, bounded by the 256-in-flight cap):
-//! the spawn cost is amortized under pipelined load without giving up
-//! the no-head-of-line guarantee.
+//! head-of-line blocks the fast paths behind it.
+//!
+//! Two server cores implement that contract, selected at compile time
+//! by [`serve_service`]:
+//!
+//! * **Event core** (Linux, the default): `ServeOpts::io_threads`
+//!   epoll readiness loops hold every connection with nonblocking
+//!   sockets, partial-frame buffers, and an eventfd completion path
+//!   for deferred replies — a fixed thread budget no matter how many
+//!   connections are open. See [`crate::transport::event`].
+//! * **Threaded fallback** ([`serve_service_threaded`], all
+//!   platforms): one reader thread per connection; deferred replies
+//!   run on a per-connection **reply-worker pool** (reused threads,
+//!   grown only when every worker is busy, bounded by the in-flight
+//!   cap).
+//!
+//! Both cores apply the same per-connection backpressure: at
+//! `ServeOpts::max_deferred` (default 256) in-flight deferred replies
+//! the connection stops reading new frames until one completes, so one
+//! unauthenticated connection can never exhaust the process.
 //!
 //! ## Ordering guarantees
 //!
@@ -47,7 +62,7 @@
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -60,7 +75,7 @@ use crate::msg::{Request, Response};
 use super::{Reply, Transport};
 
 /// Maximum accepted frame size (16 MiB) — guards against corrupt peers.
-const MAX_FRAME: u32 = 1 << 24;
+pub(crate) const MAX_FRAME: u32 = 1 << 24;
 
 /// Writes one length-prefixed frame from pre-encoded bytes.
 fn write_frame_bytes(stream: &mut TcpStream, body: &[u8]) -> CasResult<()> {
@@ -112,9 +127,72 @@ pub fn read_frame<T: Codec>(stream: &mut TcpStream) -> CasResult<Option<T>> {
 /// reply out of order (the head-of-line regression tests pin this).
 pub type ReplyHook = Arc<dyn Fn(&Request, &Response) + Send + Sync>;
 
-/// Serves one acceptor over TCP: accepts connections forever, one
-/// reader thread per connection, requests handled concurrently (see the
-/// module docs). Call from a dedicated thread.
+/// A shared request handler for one served listener: dispatches one
+/// decoded request to an [`Handled`] disposition. Shared (`Arc` +
+/// `Fn`) because the event-driven core runs it from whichever loop
+/// thread owns the connection, and the threaded fallback from each
+/// connection's reader thread.
+pub(crate) type ServiceHandler<Req, Resp> = Arc<dyn Fn(Req) -> Handled<Resp> + Send + Sync>;
+
+/// Tuning for a served listener (both cores read what applies to them).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Event-loop threads for the epoll core (Linux). `0` means 1. The
+    /// threaded fallback ignores this (its thread count is driven by
+    /// connection count — the difference the conn-scaling bench pins).
+    pub io_threads: usize,
+    /// Per-connection cap on in-flight deferred replies; past it the
+    /// connection stops reading until a reply completes. `0` means the
+    /// default (256).
+    pub max_deferred: usize,
+    /// Deferred-reply worker-pool cap for the event core (the threaded
+    /// core's per-connection pools are bounded by `max_deferred`).
+    pub workers: usize,
+    /// Event core only: a connection stuck mid-frame (a partial frame
+    /// buffered, no forward progress) longer than this is closed by the
+    /// loop's timer wheel.
+    pub stall_timeout: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            io_threads: 1,
+            max_deferred: MAX_DEFERRED_PER_CONN,
+            workers: 16,
+            stall_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Live counters for one served listener, exported via `Status`:
+/// currently open connections, event-loop `epoll_wait` returns, and
+/// the configured io-thread count (0 when the threaded fallback is
+/// serving — its thread count is per-connection, not a fixed budget).
+#[derive(Debug, Default)]
+pub struct LoopStats {
+    /// Connections currently registered with the server core.
+    pub open_conns: AtomicU64,
+    /// Total `epoll_wait` returns across all loops (event core only).
+    pub loop_wakeups: AtomicU64,
+    /// Configured event-loop thread count (0 = threaded fallback).
+    pub io_threads: AtomicU64,
+}
+
+impl LoopStats {
+    /// (open_conns, loop_wakeups, io_threads) snapshot.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.open_conns.load(Ordering::Relaxed),
+            self.loop_wakeups.load(Ordering::Relaxed),
+            self.io_threads.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Serves one acceptor over TCP: accepts connections forever, requests
+/// handled concurrently on the platform's server core (see the module
+/// docs). Call from a dedicated thread.
 pub fn serve_acceptor<S: Storage + 'static>(
     listener: TcpListener,
     acceptor: Acceptor<S>,
@@ -151,16 +229,131 @@ pub fn serve_striped_acceptor_with<S: Storage + 'static>(
     acceptor: Arc<StripedAcceptor<S>>,
     hook: Option<ReplyHook>,
 ) -> CasResult<()> {
-    loop {
-        let (stream, _) = listener.accept().map_err(|e| CasError::Transport(e.to_string()))?;
-        let acceptor = Arc::clone(&acceptor);
+    serve_striped_acceptor_opts(
+        listener,
+        acceptor,
+        hook,
+        ServeOpts::default(),
+        Arc::new(LoopStats::default()),
+    )
+}
+
+/// [`serve_striped_acceptor_with`] with explicit [`ServeOpts`] and a
+/// caller-held [`LoopStats`] (the node wires these into `Status`).
+/// Selects the platform server core: the epoll readiness loop on
+/// Linux, the threaded shell elsewhere.
+pub fn serve_striped_acceptor_opts<S: Storage + 'static>(
+    listener: TcpListener,
+    acceptor: Arc<StripedAcceptor<S>>,
+    hook: Option<ReplyHook>,
+    opts: ServeOpts,
+    stats: Arc<LoopStats>,
+) -> CasResult<()> {
+    serve_service(listener, acceptor_handler(acceptor, hook), opts, stats)
+}
+
+/// [`serve_striped_acceptor_with`] pinned to the thread-per-connection
+/// core on every platform. Kept callable (not just as the non-Linux
+/// fallback) so `benches/conn_scaling.rs` can compare the two cores
+/// head to head.
+pub fn serve_striped_acceptor_threaded<S: Storage + 'static>(
+    listener: TcpListener,
+    acceptor: Arc<StripedAcceptor<S>>,
+    hook: Option<ReplyHook>,
+) -> CasResult<()> {
+    serve_service_threaded(
+        listener,
+        acceptor_handler(acceptor, hook),
+        ServeOpts::default(),
+        Arc::new(LoopStats::default()),
+    )
+}
+
+/// The acceptor request handler shared by both cores: handle under the
+/// key's STRIPE lock (fast, in-memory — independent keys never
+/// contend), but resolve durability OFF the read path — a read or
+/// lease grant pipelined behind a write round is dispatched while that
+/// write still waits for its group-commit ticket.
+fn acceptor_handler<S: Storage + 'static>(
+    acceptor: Arc<StripedAcceptor<S>>,
+    hook: Option<ReplyHook>,
+) -> ServiceHandler<Request, Response> {
+    Arc::new(move |req: Request| {
+        let (resp, persist) = acceptor.handle_deferred(&req);
+        if persist.is_done() && hook.is_none() {
+            // Already durable, nothing to stall on.
+            return Handled::Inline(resp);
+        }
         let hook = hook.clone();
-        std::thread::spawn(move || serve_conn(stream, acceptor, hook));
+        Handled::Deferred(Box::new(move || {
+            let resp = match persist.wait() {
+                Ok(()) => resp,
+                Err(e) => Response::Error(e.to_string()),
+            };
+            if let Some(hook) = &hook {
+                hook(&req, &resp);
+            }
+            resp
+        }))
+    })
+}
+
+/// Serves one listener on the platform server core: the epoll
+/// readiness loop ([`crate::transport::event`]) on Linux, the
+/// thread-per-connection shell elsewhere. Runs forever on the calling
+/// thread (event core loop 0 / accept loop).
+pub(crate) fn serve_service<Req, Resp>(
+    listener: TcpListener,
+    handler: ServiceHandler<Req, Resp>,
+    opts: ServeOpts,
+    stats: Arc<LoopStats>,
+) -> CasResult<()>
+where
+    Req: Codec + Send + 'static,
+    Resp: Codec + Send + 'static,
+{
+    #[cfg(target_os = "linux")]
+    {
+        super::event::serve_event(listener, handler, opts, stats)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        serve_service_threaded(listener, handler, opts, stats)
     }
 }
 
-/// How [`serve_pipelined`]'s handler disposed of one request: answer
-/// now on the read loop, or finish on a spawned reply thread.
+/// The thread-per-connection server shell: accept forever, one reader
+/// thread per connection running [`serve_pipelined_capped`]. The non-Linux
+/// fallback, and the baseline the conn-scaling bench measures the
+/// event core against.
+pub(crate) fn serve_service_threaded<Req, Resp>(
+    listener: TcpListener,
+    handler: ServiceHandler<Req, Resp>,
+    opts: ServeOpts,
+    stats: Arc<LoopStats>,
+) -> CasResult<()>
+where
+    Req: Codec + Send + 'static,
+    Resp: Codec + Send + 'static,
+{
+    // 0 = no fixed io-thread budget: this core's thread count tracks
+    // connection count, which is exactly what Status should show.
+    stats.io_threads.store(0, Ordering::Relaxed);
+    let cap = if opts.max_deferred == 0 { MAX_DEFERRED_PER_CONN } else { opts.max_deferred };
+    loop {
+        let (stream, _) = listener.accept().map_err(|e| CasError::Transport(e.to_string()))?;
+        let handler = Arc::clone(&handler);
+        let stats = Arc::clone(&stats);
+        std::thread::spawn(move || {
+            stats.open_conns.fetch_add(1, Ordering::Relaxed);
+            serve_pipelined_capped(stream, move |req| handler(req), cap);
+            stats.open_conns.fetch_sub(1, Ordering::Relaxed);
+        });
+    }
+}
+
+/// How a service handler disposed of one request: answer now on the
+/// read loop, or finish off it when the blocking work completes.
 pub(crate) enum Handled<Resp> {
     /// The reply is ready and the handler cannot have blocked: write it
     /// inline, skipping the thread spawn (the hot path for reads).
@@ -325,17 +518,21 @@ impl<Resp> Drop for ReplyPool<Resp> {
     }
 }
 
-/// The pipelined connection shell shared by the acceptor service and
-/// the KV server's client service: read request envelopes in a loop,
-/// dispatch each through `handle`, and write replies — inline or from
-/// the connection's [`ReplyPool`], in completion order — under a shared
-/// frame lock, matched to requests by correlation id.
-pub(crate) fn serve_pipelined<Req, Resp, F>(mut stream: TcpStream, mut handle: F)
+/// The pipelined connection shell shared by the threaded fallbacks of
+/// the acceptor service and the KV server's client service: read
+/// request envelopes in a loop, dispatch each through `handle`, and
+/// write replies — inline or from the connection's [`ReplyPool`], in
+/// completion order — under a shared frame lock, matched to requests
+/// by correlation id. `cap` is the in-flight deferred limit (the
+/// `max_deferred` tunable; [`MAX_DEFERRED_PER_CONN`] is the historical
+/// default).
+pub(crate) fn serve_pipelined_capped<Req, Resp, F>(mut stream: TcpStream, mut handle: F, cap: usize)
 where
     Req: Codec,
     Resp: Codec + Send + 'static,
     F: FnMut(Req) -> Handled<Resp>,
 {
+    let cap = cap.max(1);
     stream.set_nodelay(true).ok();
     let Ok(write_half) = stream.try_clone() else { return };
     let write_half = Arc::new(Mutex::new(write_half));
@@ -358,7 +555,7 @@ where
                 {
                     let (count, cond) = &*gate;
                     let mut inflight = count.lock().unwrap_or_else(|e| e.into_inner());
-                    while *inflight >= MAX_DEFERRED_PER_CONN {
+                    while *inflight >= cap {
                         inflight = cond.wait(inflight).unwrap_or_else(|e| e.into_inner());
                     }
                     *inflight += 1;
@@ -370,36 +567,6 @@ where
     // Dropping `pool` closes the job queue: workers retire, and
     // queued-but-unstarted jobs drop (their slots release; the peer is
     // gone anyway).
-}
-
-/// One acceptor-service connection: handle under the key's STRIPE lock
-/// (fast, in-memory — independent keys never contend), but resolve
-/// durability OFF the read loop — a read or lease grant pipelined
-/// behind a write round is dispatched while that write still waits for
-/// its group-commit ticket.
-fn serve_conn<S: Storage + 'static>(
-    stream: TcpStream,
-    acceptor: Arc<StripedAcceptor<S>>,
-    hook: Option<ReplyHook>,
-) {
-    serve_pipelined(stream, move |req: Request| {
-        let (resp, persist) = acceptor.handle_deferred(&req);
-        if persist.is_done() && hook.is_none() {
-            // Already durable, nothing to stall on.
-            return Handled::Inline(resp);
-        }
-        let hook = hook.clone();
-        Handled::Deferred(Box::new(move || {
-            let resp = match persist.wait() {
-                Ok(()) => resp,
-                Err(e) => Response::Error(e.to_string()),
-            };
-            if let Some(hook) = &hook {
-                hook(&req, &resp);
-            }
-            resp
-        }))
-    })
 }
 
 /// Spawns an acceptor server on `addr` (use port 0 for an ephemeral
@@ -435,10 +602,43 @@ pub fn spawn_striped_acceptor_with<S: Storage + 'static>(
     acceptor: Arc<StripedAcceptor<S>>,
     hook: Option<ReplyHook>,
 ) -> CasResult<std::net::SocketAddr> {
+    spawn_striped_acceptor_opts(
+        addr,
+        acceptor,
+        hook,
+        ServeOpts::default(),
+        Arc::new(LoopStats::default()),
+    )
+}
+
+/// [`spawn_striped_acceptor_with`] with explicit [`ServeOpts`] and a
+/// caller-held [`LoopStats`].
+pub fn spawn_striped_acceptor_opts<S: Storage + 'static>(
+    addr: &str,
+    acceptor: Arc<StripedAcceptor<S>>,
+    hook: Option<ReplyHook>,
+    opts: ServeOpts,
+    stats: Arc<LoopStats>,
+) -> CasResult<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr).map_err(|e| CasError::Transport(e.to_string()))?;
     let local = listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
     std::thread::spawn(move || {
-        let _ = serve_striped_acceptor_with(listener, acceptor, hook);
+        let _ = serve_striped_acceptor_opts(listener, acceptor, hook, opts, stats);
+    });
+    Ok(local)
+}
+
+/// [`spawn_striped_acceptor_with`] pinned to the thread-per-connection
+/// core (the conn-scaling bench baseline).
+pub fn spawn_striped_acceptor_threaded<S: Storage + 'static>(
+    addr: &str,
+    acceptor: Arc<StripedAcceptor<S>>,
+    hook: Option<ReplyHook>,
+) -> CasResult<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr).map_err(|e| CasError::Transport(e.to_string()))?;
+    let local = listener.local_addr().map_err(|e| CasError::Transport(e.to_string()))?;
+    std::thread::spawn(move || {
+        let _ = serve_striped_acceptor_threaded(listener, acceptor, hook);
     });
     Ok(local)
 }
@@ -965,6 +1165,159 @@ mod tests {
             assert!(reply.resp.is_none(), "stalled request must fail, not hang");
         }
         assert_eq!(t.inflight(), 0, "swept requests must leave the pending maps");
+    }
+
+    /// Backpressure satellite pin: with `max_inflight` set, a proposer
+    /// sheds new rounds with [`CasError::Overloaded`] while the
+    /// transport's pending maps sit at the cap, and admits rounds again
+    /// once the timeout sweep drains the backlog.
+    #[test]
+    fn proposer_sheds_overloaded_and_recovers_after_sweep() {
+        // A server that accepts and reads frames but never replies.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            while let Ok(Some(_)) = read_frame::<Envelope<Request>>(&mut s) {}
+        });
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = Arc::new(TcpTransport::with_timeout(addrs, Duration::from_millis(700)));
+        let opts = crate::proposer::ProposerOpts { max_inflight: 4, ..Default::default() };
+        let p = Proposer::with_opts(1, ClusterConfig::majority(1, vec![1]), t.clone(), opts);
+        // Fill the pending maps past the cap with fire-and-forget pings.
+        let (tx, rx) = mpsc::channel();
+        t.fan_out(1, (0..6).map(|_| (1u64, Request::Ping)).collect(), &tx);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while t.inflight() < 6 {
+            assert!(Instant::now() < deadline, "inflight never reached 6: {}", t.inflight());
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Over the cap: the proposer sheds BEFORE fanning out.
+        match p.set("k", 1) {
+            Err(CasError::Overloaded { inflight, max }) => {
+                assert_eq!(max, 4);
+                assert!(inflight >= max, "shed at {inflight} under cap {max}");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // The sweep fails every stalled ping and clears the gauge.
+        for _ in 0..6 {
+            let reply = rx.recv_timeout(Duration::from_secs(10)).expect("swept reply");
+            assert!(reply.resp.is_none(), "stalled request must fail, not hang");
+        }
+        assert_eq!(t.inflight(), 0, "sweep must clear the inflight gauge");
+        // Below the cap again: the round is admitted — it still fails
+        // (the acceptor never answers) but NOT by shedding.
+        match p.set("k", 2) {
+            Err(CasError::Overloaded { .. }) => panic!("drained transport must not shed"),
+            Err(_) => {}
+            Ok(v) => panic!("unreachable acceptor cannot commit, got {v:?}"),
+        }
+    }
+
+    /// The deferred-reply cap is a tunable: the flood pin holds at a
+    /// non-default `max_deferred` too (32 instead of 256).
+    #[test]
+    fn deferred_flood_survives_nondefault_cap() {
+        let hook: ReplyHook = Arc::new(|_req, _resp| {});
+        let cap = 32;
+        let addr = spawn_striped_acceptor_opts(
+            "127.0.0.1:0",
+            Arc::new(StripedAcceptor::new_mem(1, 1)),
+            Some(hook),
+            ServeOpts { max_deferred: cap, ..ServeOpts::default() },
+            Arc::new(LoopStats::default()),
+        )
+        .unwrap();
+        let mut addrs = HashMap::new();
+        addrs.insert(1, addr.to_string());
+        let t = TcpTransport::new(addrs);
+        let n = 2 * cap as u32 + 50;
+        let (tx, rx) = mpsc::channel();
+        t.fan_out(1, (0..n).map(|_| (1u64, Request::Ping)).collect(), &tx);
+        for _ in 0..n {
+            let reply = rx.recv_timeout(Duration::from_secs(10)).expect("flood reply");
+            assert_eq!(reply.resp, Some(Response::Ok));
+        }
+    }
+
+    /// Partial-frame pin: an envelope dribbled one byte at a time
+    /// across many readiness rounds must still get a correct reply —
+    /// the server's per-connection buffer reassembles it.
+    #[test]
+    fn dribbled_envelope_gets_a_reply() {
+        let addrs = spawn_cluster(1);
+        let mut s = TcpStream::connect(&addrs[&1]).unwrap();
+        s.set_nodelay(true).unwrap();
+        let mut env = Vec::new();
+        encode_envelope(7, &Request::Ping, &mut env);
+        let mut frame = (env.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&env);
+        for byte in frame {
+            s.write_all(&[byte]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let reply = read_frame::<Envelope<Response>>(&mut s).unwrap().expect("reply");
+        assert_eq!(reply.corr, 7);
+        assert_eq!(reply.body, Response::Ok);
+    }
+
+    /// A length-bomb header (declared length past `MAX_FRAME`) must
+    /// kill only its own connection; a healthy connection to the same
+    /// server keeps serving.
+    #[test]
+    fn length_bomb_fails_only_its_connection() {
+        let addrs = spawn_cluster(1);
+        let mut bomb = TcpStream::connect(&addrs[&1]).unwrap();
+        bomb.write_all(&(MAX_FRAME + 1).to_le_bytes()).unwrap();
+        bomb.flush().unwrap();
+        // The server drops the connection: the reply read sees EOF or a
+        // reset, never a frame.
+        bomb.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 1];
+        match bomb.read(&mut buf) {
+            Ok(0) | Err(_) => {}
+            Ok(_) => panic!("length-bomb connection must be closed, got bytes back"),
+        }
+        // A well-behaved connection to the same server is unaffected.
+        let mut good = TcpStream::connect(&addrs[&1]).unwrap();
+        write_envelope(&mut good, 1, &Request::Ping).unwrap();
+        let reply = read_frame::<Envelope<Response>>(&mut good).unwrap().expect("reply");
+        assert_eq!(reply.body, Response::Ok);
+    }
+
+    /// The event core exports its counters through a caller-held
+    /// [`LoopStats`]: a fixed io-thread budget, open connections while
+    /// they are open, and a nonzero wakeup count once traffic flowed.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn event_core_exports_loop_stats() {
+        let stats = Arc::new(LoopStats::default());
+        let addr = spawn_striped_acceptor_opts(
+            "127.0.0.1:0",
+            Arc::new(StripedAcceptor::new_mem(1, 1)),
+            None,
+            ServeOpts { io_threads: 2, ..ServeOpts::default() },
+            Arc::clone(&stats),
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_envelope(&mut s, 1, &Request::Ping).unwrap();
+        let reply = read_frame::<Envelope<Response>>(&mut s).unwrap().expect("reply");
+        assert_eq!(reply.body, Response::Ok);
+        let (open, wakeups, io_threads) = stats.snapshot();
+        assert_eq!(io_threads, 2, "event core must report its fixed budget");
+        assert!(open >= 1, "the live connection must be counted, got {open}");
+        assert!(wakeups > 0, "serving a request implies loop wakeups");
+        drop(s);
+        // The loop notices the close and decrements the gauge.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while stats.snapshot().0 != 0 {
+            assert!(Instant::now() < deadline, "open_conns never drained");
+            std::thread::sleep(Duration::from_millis(10));
+        }
     }
 
     #[test]
