@@ -57,6 +57,8 @@ fn launch() -> Vec<Node> {
                 data_dir: None,
                 checkpoint: None,
                 lease: None,
+                proposers_per_shard: 0,
+                router: caspaxos::router::RouterOpts::default(),
             })
             .unwrap()
         })

@@ -1,23 +1,108 @@
 //! Bench E2: regenerates the §3.2 WAN latency table.
 //!
-//! Run: `cargo bench --bench wan_latency`
+//! Emits `BENCH_wan_latency.json` (per-seed, per-region measured ms —
+//! CI uploads it as an artifact) and appends one summary row to the
+//! in-tree `BENCH_trajectory.json` (JSONL), so the geo numbers join the
+//! perf trajectory like every other bench.
+//!
+//! Run: `cargo bench --bench wan_latency` (set `BENCH_SMOKE=1` for a
+//! shorter run; the network is simulated in virtual time, so measured
+//! latencies are iteration-count-stable either way).
+
+use std::io::Write as _;
 
 use caspaxos::experiments::wan_latency_table;
 
 fn main() {
+    let quick = std::env::var("BENCH_SMOKE").is_ok();
+    let iterations: u64 = if quick { 10 } else { 50 };
     println!("# E2 — §3.2 read-modify-write latency over the Azure WAN profile");
     println!("# (simulated network, paper RTT matrix; leader in Southeast Asia)\n");
+    let mut seed_rows: Vec<String> = Vec::new();
+    let mut gryadka_ms = 0f64;
+    let mut gryadka_n = 0u64;
     // Several seeds to show run-to-run stability.
     for seed in [42u64, 7, 2026] {
         println!("## seed {seed}");
         println!("| system | region | paper | measured |");
         println!("|---|---|---|---|");
-        for r in wan_latency_table(50, seed) {
+        let mut rows = Vec::new();
+        for r in wan_latency_table(iterations, seed) {
             println!(
                 "| {} | {} | {:.0} ms | {:.1} ms |",
                 r.system, r.region, r.paper_ms, r.measured_ms
             );
+            if r.system == "Gryadka" {
+                gryadka_ms += r.measured_ms;
+                gryadka_n += 1;
+            }
+            rows.push(format!(
+                "{{\"system\": \"{}\", \"region\": \"{}\", \"paper_ms\": {:.1}, \
+                 \"measured_ms\": {:.2}}}",
+                r.system, r.region, r.paper_ms, r.measured_ms
+            ));
         }
         println!();
+        seed_rows.push(format!("{{\"seed\": {seed}, \"rows\": [{}]}}", rows.join(", ")));
     }
+    let gryadka_mean = gryadka_ms / gryadka_n.max(1) as f64;
+
+    let out = format!(
+        "{{\n  \"iterations\": {iterations},\n  \"seeds\": [{}]\n}}\n",
+        seed_rows.join(", ")
+    );
+    let path = "BENCH_wan_latency.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_wan_latency.json");
+    f.write_all(out.as_bytes()).expect("write BENCH_wan_latency.json");
+    println!("wrote {path}");
+
+    // Perf trajectory: one JSONL summary row per run, appended to the
+    // in-tree file so re-anchors can read the history from the repo.
+    let row = format!(
+        "{{\"date\": \"{}\", \"commit\": \"{}\", \"smoke\": {quick}, \
+         \"wan_gryadka_mean_ms\": {gryadka_mean:.2}}}\n",
+        utc_date(),
+        commit_id()
+    );
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_trajectory.json")
+        .expect("open BENCH_trajectory.json");
+    f.write_all(row.as_bytes()).expect("append BENCH_trajectory.json");
+    println!("appended trajectory row to BENCH_trajectory.json");
+}
+
+/// UTC date as `YYYY-MM-DD` via civil-from-days — std has no date
+/// formatting and the offline toolchain has no chrono.
+fn utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_secs();
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Commit id for the trajectory row: `GITHUB_SHA` in CI, `git
+/// rev-parse` locally, `"unknown"` outside a checkout.
+fn commit_id() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        return sha.chars().take(12).collect();
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
 }

@@ -304,11 +304,15 @@ impl<S: Storage> Acceptor<S> {
             // A rival wants this lease: contest it so the holder's next
             // renewal is denied and the key changes hands fairly.
             self.contested.insert(key.clone());
+            // Name the current holder so a router can redirect the read
+            // to its 0-RTT path instead of fencing for a lease window.
+            let holder = slot.lease.as_ref().map(|l| l.holder);
             let resp = Response::LeaseGranted {
                 granted: false,
                 promise: slot.promise,
                 accepted_ballot: slot.accepted_ballot,
                 accepted_val: slot.value,
+                holder,
             };
             // A denial still fences on pending appends: the snapshot it
             // carries may feed the proposer's read decision.
@@ -325,6 +329,9 @@ impl<S: Storage> Acceptor<S> {
                 promise: slot.promise,
                 accepted_ballot: slot.accepted_ballot,
                 accepted_val: slot.value,
+                // The sitting holder being denied IS the holder; a
+                // redirect-aware caller must not bounce to itself.
+                holder: Some(from.id),
             };
             return (resp, self.store.read_fence());
         }
@@ -337,6 +344,7 @@ impl<S: Storage> Acceptor<S> {
             promise: slot.promise,
             accepted_ballot: slot.accepted_ballot,
             accepted_val: slot.value.clone(),
+            holder: Some(from.id),
         };
         match self.store.store_deferred(key, &slot) {
             Ok(persist) => (resp, persist),
@@ -1007,6 +1015,30 @@ mod tests {
             a.handle_at(&renew, 3_000),
             Response::LeaseGranted { granted: true, .. }
         ));
+    }
+
+    #[test]
+    fn lease_denial_names_the_current_holder() {
+        let mut a = Acceptor::new(1);
+        a.handle_at(&acquire("k", 7, 10_000), 0);
+        // A rival's denial names proposer 7 — the redirect target.
+        match a.handle_at(&acquire("k", 8, 10_000), 1_000) {
+            Response::LeaseGranted { granted: false, holder: Some(7), .. } => {}
+            r => panic!("{r:?}"),
+        }
+        // The contested denial to the sitting holder names the holder
+        // itself, so a redirect-aware caller never bounces elsewhere.
+        let renew =
+            Request::LeaseRenew { key: "k".into(), duration_us: 10_000, from: ProposerId::new(7) };
+        match a.handle_at(&renew, 2_000) {
+            Response::LeaseGranted { granted: false, holder: Some(7), .. } => {}
+            r => panic!("{r:?}"),
+        }
+        // A grant echoes the requester.
+        match a.handle_at(&renew, 3_000) {
+            Response::LeaseGranted { granted: true, holder: Some(7), .. } => {}
+            r => panic!("{r:?}"),
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! shards 2            # optional: acceptor shard count (default: 1)
 //! shard_quorum 2 2    # optional: per-shard prepare accept
 //! stripes 4           # optional: per-node acceptor lock stripes (default: 1)
+//! proposers 4         # optional: proposer-pool size per shard (default: 1, max 5)
 //! io_threads 2        # optional: event-loop threads per service (default: 1)
 //! max_deferred 256    # optional: per-connection deferred-reply cap (default: 256)
 //! checkpoint_records 100000   # optional: auto-checkpoint after N WAL records
@@ -31,6 +32,14 @@
 //! group-commit WAL, see [`crate::acceptor::StripedAcceptor`]). The
 //! on-disk log stays compatible across stripe-count changes in either
 //! direction (replay routes by key hash).
+//!
+//! `proposers` sizes the per-shard proposer POOL behind the node's
+//! stateless request router ([`crate::router::Router`]): any member
+//! serves any key of its shard, so proposer capacity scales
+//! independently of the acceptor count (compartmentalization). Capped
+//! at 5 — pool members live in per-member 100k id blocks below the
+//! batch proposers' 500k block
+//! (`crate::server::NodeOpts::proposers_per_shard`).
 //!
 //! `io_threads` sizes the event-driven server core's fixed thread
 //! budget per served listener (Linux epoll core only; the threaded
@@ -67,6 +76,9 @@ pub struct Deployment {
     /// Per-node acceptor lock-stripe count (1 = classic single-lock
     /// acceptor). See `crate::server::NodeOpts::stripes`.
     pub stripes: usize,
+    /// Proposer-pool size per shard (1 = classic single proposer). See
+    /// `crate::server::NodeOpts::proposers_per_shard`.
+    pub proposers: usize,
     /// Event-loop threads per served listener (Linux epoll core only).
     /// See `crate::server::NodeOpts::io_threads`.
     pub io_threads: usize,
@@ -91,6 +103,7 @@ impl Deployment {
         let mut shards: Option<usize> = None;
         let mut shard_quorum: Option<(usize, usize)> = None;
         let mut stripes: Option<usize> = None;
+        let mut proposers: Option<usize> = None;
         let mut io_threads: Option<usize> = None;
         let mut max_deferred: Option<usize> = None;
         let mut checkpoint_records: Option<u64> = None;
@@ -134,6 +147,16 @@ impl Deployment {
                     }
                     stripes = Some(n);
                 }
+                ["proposers", n] => {
+                    let n: usize = n.parse().map_err(|_| bad(lineno, "bad proposer count"))?;
+                    if n == 0 {
+                        return Err(bad(lineno, "proposer count must be at least 1"));
+                    }
+                    if n > 5 {
+                        return Err(bad(lineno, "proposer count is capped at 5"));
+                    }
+                    proposers = Some(n);
+                }
                 ["io_threads", n] => {
                     let n: usize = n.parse().map_err(|_| bad(lineno, "bad io thread count"))?;
                     if n == 0 {
@@ -162,9 +185,9 @@ impl Deployment {
                     return Err(bad(
                         lineno,
                         "expected `node <id> <addr>`, `quorum <p> <a>`, `shards <n>`, \
-                         `shard_quorum <p> <a>`, `stripes <n>`, `io_threads <n>`, \
-                         `max_deferred <n>`, `checkpoint_records <n>` \
-                         or `checkpoint_bytes <n>`",
+                         `shard_quorum <p> <a>`, `stripes <n>`, `proposers <n>`, \
+                         `io_threads <n>`, `max_deferred <n>`, \
+                         `checkpoint_records <n>` or `checkpoint_bytes <n>`",
                     ))
                 }
             }
@@ -200,6 +223,7 @@ impl Deployment {
             shards,
             shard_quorum,
             stripes,
+            proposers: proposers.unwrap_or(1),
             io_threads: io_threads.unwrap_or(1),
             max_deferred: max_deferred.unwrap_or(256),
             checkpoint_records: checkpoint_records.unwrap_or(0),
@@ -371,6 +395,23 @@ mod tests {
         assert_eq!(d.stripes, 64);
         assert!(Deployment::parse(&format!("{base}stripes 0\n")).is_err(), "zero stripes");
         assert!(Deployment::parse(&format!("{base}stripes x\n")).is_err(), "bad stripe count");
+    }
+
+    #[test]
+    fn parse_proposer_pool_config() {
+        let base = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\n";
+        let d = Deployment::parse(base).unwrap();
+        assert_eq!(d.proposers, 1, "default is the classic single proposer");
+        let d = Deployment::parse(&format!("{base}proposers 4\n")).unwrap();
+        assert_eq!(d.proposers, 4);
+        // Orthogonal to shards: the pool size applies per shard.
+        let sharded = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\nnode 4 a:4\n\
+                       node 5 a:5\nnode 6 a:6\nshards 2\nproposers 3\n";
+        let d = Deployment::parse(sharded).unwrap();
+        assert_eq!((d.shards, d.proposers), (2, 3));
+        assert!(Deployment::parse(&format!("{base}proposers 0\n")).is_err(), "zero proposers");
+        assert!(Deployment::parse(&format!("{base}proposers 6\n")).is_err(), "over the id cap");
+        assert!(Deployment::parse(&format!("{base}proposers x\n")).is_err(), "bad count");
     }
 
     #[test]

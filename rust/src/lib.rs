@@ -24,9 +24,11 @@
 //!   format + the [`codec::Envelope`] frame), [`rng`] (deterministic
 //!   PRNG).
 //! * Systems built on the core: [`shard`] (rendezvous-routed disjoint
-//!   acceptor groups — the horizontal-scaling plane), [`kv`] (hashtable
-//!   of per-key RSMs, §3, routed over the shards), [`membership`]
-//!   (§2.3), [`gc`] (deletion, §3.1), [`server`].
+//!   acceptor groups — the horizontal-scaling plane), [`router`] (the
+//!   compartmentalized request tier: stateless routers over per-shard
+//!   proposer pools, with lease-holder-aware redirects), [`kv`]
+//!   (hashtable of per-key RSMs, §3, routed over the shards),
+//!   [`membership`] (§2.3), [`gc`] (deletion, §3.1), [`server`].
 //! * Evaluation substrates: [`baselines`] (Multi-Paxos, Raft-like,
 //!   primary-forwarding), [`linearizability`] (Jepsen-style checker),
 //!   [`sim::worlds`] (pre-wired single-/multi-shard simulation worlds
@@ -149,6 +151,7 @@ pub mod msg;
 pub mod proposer;
 pub mod quorum;
 pub mod rng;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod shard;

@@ -27,7 +27,7 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  caspaxos node --id <n> (--config <file> | --peers <1=a,2=b,...>)\n\
          \x20                [--listen-client <addr>] [--data <dir>] [--stripes <n>]\n\
-         \x20                [--io-threads <n>] [--max-deferred <n>]\n\
+         \x20                [--proposers <n>] [--io-threads <n>] [--max-deferred <n>]\n\
          \x20                [--checkpoint-records <n>] [--checkpoint-bytes <n>]\n\
          \x20 caspaxos client --connect <addr> \
          <get|getcas|getmany|set|add|cas|del|collect|status> [args...]\n\
@@ -71,6 +71,7 @@ fn run_node(mut args: Vec<String>) {
         quorum: Option<caspaxos::quorum::QuorumSpec>,
         shard_plan: Option<caspaxos::shard::ShardPlan>,
         stripes: usize,
+        proposers: usize,
         io_threads: usize,
         max_deferred: usize,
         checkpoint: Option<caspaxos::acceptor::CheckpointOpts>,
@@ -89,6 +90,7 @@ fn run_node(mut args: Vec<String>) {
             quorum: Some(d.quorum),
             shard_plan: if d.shards > 1 { Some(plan) } else { None },
             stripes: d.stripes,
+            proposers: d.proposers,
             io_threads: d.io_threads,
             max_deferred: d.max_deferred,
             checkpoint: d.checkpoint_opts(),
@@ -103,6 +105,7 @@ fn run_node(mut args: Vec<String>) {
             quorum: None,
             shard_plan: None,
             stripes: 1,
+            proposers: 1,
             io_threads: 1,
             max_deferred: 256,
             checkpoint: None,
@@ -115,6 +118,7 @@ fn run_node(mut args: Vec<String>) {
         quorum,
         shard_plan,
         stripes: cfg_stripes,
+        proposers: cfg_proposers,
         io_threads: cfg_io_threads,
         max_deferred: cfg_max_deferred,
         checkpoint: cfg_checkpoint,
@@ -149,6 +153,10 @@ fn run_node(mut args: Vec<String>) {
     };
     let io_threads = core_flag(&mut args, "--io-threads", cfg_io_threads);
     let max_deferred = core_flag(&mut args, "--max-deferred", cfg_max_deferred);
+    // `--proposers` overrides the config's `proposers` directive (the
+    // per-shard proposer-pool size behind the request router; capped
+    // at 5 by start_node).
+    let proposers = core_flag(&mut args, "--proposers", cfg_proposers);
     let Some(acceptor_addr) = peers.get(&id).cloned() else {
         eprintln!("node id {id} not in peer map");
         exit(1)
@@ -208,6 +216,8 @@ fn run_node(mut args: Vec<String>) {
         data_dir,
         checkpoint,
         lease: None,
+        proposers_per_shard: proposers,
+        router: caspaxos::router::RouterOpts::default(),
     })
     .unwrap_or_else(|e| {
         eprintln!("start_node: {e}");
@@ -215,7 +225,7 @@ fn run_node(mut args: Vec<String>) {
     });
     println!(
         "caspaxos node {id}: acceptor on {}, clients on {} \
-         ({shards} shard(s), {stripes} stripe(s))",
+         ({shards} shard(s), {stripes} stripe(s), {proposers} proposer(s)/shard)",
         node.acceptor_addr, node.client_addr
     );
     // Serve until killed.

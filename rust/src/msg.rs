@@ -345,6 +345,11 @@ pub enum Response {
         accepted_ballot: Ballot,
         /// The accepted value (Empty if none).
         accepted_val: Val,
+        /// The proposer currently holding the lease, when the acceptor
+        /// knows one: on a denial this names who to redirect the read
+        /// to (the router's 0-RTT handoff), on a grant it echoes the
+        /// requester. `None` when no live lease exists.
+        holder: Option<u64>,
     },
 }
 
@@ -381,12 +386,13 @@ impl Codec for Response {
                 accepted_ballot.encode(out);
                 accepted_val.encode(out);
             }
-            Response::LeaseGranted { granted, promise, accepted_ballot, accepted_val } => {
+            Response::LeaseGranted { granted, promise, accepted_ballot, accepted_val, holder } => {
                 out.push(8);
                 granted.encode(out);
                 promise.encode(out);
                 accepted_ballot.encode(out);
                 accepted_val.encode(out);
+                holder.encode(out);
             }
         }
     }
@@ -412,6 +418,7 @@ impl Codec for Response {
                 promise: Ballot::decode(input)?,
                 accepted_ballot: Ballot::decode(input)?,
                 accepted_val: Val::decode(input)?,
+                holder: Option::<u64>::decode(input)?,
             },
             _ => return Err(CodecError::Invalid("Response tag")),
         })
@@ -498,12 +505,14 @@ mod tests {
                 promise: Ballot::new(4, 2),
                 accepted_ballot: Ballot::new(3, 1),
                 accepted_val: Val::Num { ver: 1, num: 9 },
+                holder: Some(7),
             },
             Response::LeaseGranted {
                 granted: false,
                 promise: Ballot::ZERO,
                 accepted_ballot: Ballot::ZERO,
                 accepted_val: Val::Empty,
+                holder: None,
             },
         ];
         for r in resps {
@@ -587,6 +596,7 @@ mod tests {
             promise: Ballot::new(9, 3),
             accepted_ballot: Ballot::new(8, 1),
             accepted_val: Val::Bytes { ver: 0, data: vec![1, 2, 3] },
+            holder: Some(7),
         };
         let bytes = resp.to_bytes();
         for cut in 0..bytes.len() {
@@ -621,6 +631,7 @@ mod tests {
             promise: Ballot::ZERO,
             accepted_ballot: Ballot::ZERO,
             accepted_val: Val::Empty,
+            holder: None,
         }
         .to_bytes();
         bytes.push(1);
@@ -661,6 +672,7 @@ mod tests {
                         data: (0..rng.gen_range(16)).map(|_| rng.next_u64() as u8).collect(),
                     },
                 },
+                holder: if rng.gen_range(2) == 0 { Some(rng.next_u64()) } else { None },
             };
             let bytes = resp.to_bytes();
             assert_eq!(Response::from_bytes(&bytes).unwrap(), resp);

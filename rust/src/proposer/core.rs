@@ -200,18 +200,28 @@ impl RoundCore {
         Step::Done(result)
     }
 
-    fn fail(&mut self) -> Step {
-        let res = if let Some(required) = self.stale_age {
-            Err(CasError::StaleAge { required, got: self.from.age })
+    /// The error the round would fail with given the replies seen so
+    /// far. Drivers report this on timeout so the same precedence as an
+    /// in-round failure applies — age fence, then conflict (carrying
+    /// the fast-forward ballot), then the per-phase quorum shortfall
+    /// with the REAL ok-count: `got` distinguishes a dead cluster
+    /// (`got: 0`) from a slow straggler (`got: quorum - 1`).
+    pub fn timeout_error(&self) -> CasError {
+        if let Some(required) = self.stale_age {
+            CasError::StaleAge { required, got: self.from.age }
         } else if self.conflicts > 0 {
-            Err(CasError::Conflict(self.max_conflict))
+            CasError::Conflict(self.max_conflict)
         } else {
             let (needed, got) = match self.phase {
                 Phase::Prepare => (self.cfg.quorum.prepare, self.prepare_oks),
                 _ => (self.cfg.quorum.accept, self.accept_oks),
             };
-            Err(CasError::NoQuorum { needed, got })
-        };
+            CasError::NoQuorum { needed, got }
+        }
+    }
+
+    fn fail(&mut self) -> Step {
+        let res = Err(self.timeout_error());
         self.finish(res)
     }
 
@@ -456,6 +466,11 @@ pub struct LeaseOutcome {
     /// End of the holder's conservative serving window, on the
     /// *holder's* clock: `t_send + duration - skew_bound`.
     pub valid_until: u64,
+    /// On a denied round, the proposer a denying acceptor named as the
+    /// current leaseholder — the redirect target for a router that
+    /// would rather hand the read to the 0-RTT holder than wait out
+    /// the skew-bounded window. `None` when granted or unreported.
+    pub holder: Option<u64>,
 }
 
 /// What a lease acquire/renew round wants the driver to do next.
@@ -492,6 +507,9 @@ pub struct LeaseRound {
     replies: usize,
     grants: usize,
     denied: bool,
+    /// Leaseholder named by a denying acceptor (`holder` above is the
+    /// proposer RUNNING this round; this is who beat it to the lease).
+    reported_holder: Option<u64>,
     /// (accepted_ballot, value, promise) per grant snapshot.
     states: Vec<(Ballot, Val, Ballot)>,
     finished: bool,
@@ -515,6 +533,7 @@ impl LeaseRound {
             replies: 0,
             grants: 0,
             denied: false,
+            reported_holder: None,
             states: Vec::new(),
             finished: false,
         }
@@ -527,11 +546,14 @@ impl LeaseRound {
         }
         self.replies += 1;
         match resp {
-            Some(Response::LeaseGranted { granted, promise, accepted_ballot, accepted_val }) => {
+            Some(Response::LeaseGranted { granted, promise, accepted_ballot, accepted_val, holder }) => {
                 if granted {
                     self.grants += 1;
                 } else {
                     self.denied = true;
+                    if let Some(h) = holder {
+                        self.reported_holder = Some(h);
+                    }
                 }
                 self.states.push((accepted_ballot, accepted_val, promise));
             }
@@ -556,6 +578,7 @@ impl LeaseRound {
             t_send: self.t_send,
             write_mark: self.write_mark,
             valid_until: self.valid_until,
+            holder: self.reported_holder,
         }
     }
 
@@ -848,6 +871,21 @@ impl LeaseCore {
         self.entries.keys().cloned().collect()
     }
 
+    /// Keys whose serving window ends within `horizon_us` of `now_us`
+    /// (windows that already ended included): the set a background
+    /// renewal timer refreshes each tick so hot keys stay 0-RTT-covered
+    /// across read gaps instead of breaking on the first read after a
+    /// lull. Callers pass their tick interval (plus slack) as the
+    /// horizon so every window is renewed before it can lapse.
+    pub fn keys_expiring_within(&self, now_us: u64, horizon_us: u64) -> Vec<Key> {
+        let cutoff = now_us.saturating_add(horizon_us);
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.valid_until <= cutoff)
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
     /// Drops everything (configuration change).
     pub fn clear(&mut self) {
         self.entries.clear();
@@ -979,6 +1017,40 @@ mod tests {
             Step::Done(Err(CasError::NoQuorum { needed: 2, got: 0 })) => {}
             s => panic!("{s:?}"),
         }
+    }
+
+    #[test]
+    fn timeout_error_reports_real_reply_counts() {
+        // One promise arrived, then the round stalls: the timeout error
+        // must say got=1, not got=0 — a slow straggler is not a dead
+        // cluster.
+        let (mut core, _) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Set(1),
+            Ballot::new(1, 1),
+            ProposerId::new(1),
+            cfg3(),
+            false,
+        );
+        assert!(matches!(
+            core.timeout_error(),
+            CasError::NoQuorum { needed: 2, got: 0 }
+        ));
+        core.on_reply(core.token(), 1, Some(promise_empty()));
+        assert!(matches!(
+            core.timeout_error(),
+            CasError::NoQuorum { needed: 2, got: 1 }
+        ));
+        // In the accept phase the count tracks accept oks.
+        core.on_reply(core.token(), 2, Some(promise_empty()));
+        core.on_reply(core.token(), 1, Some(Response::Accepted));
+        assert!(matches!(
+            core.timeout_error(),
+            CasError::NoQuorum { needed: 2, got: 1 }
+        ));
+        // A conflict seen before the stall still wins the precedence.
+        core.on_reply(core.token(), 2, Some(Response::Conflict { seen: Ballot::new(9, 2) }));
+        assert!(matches!(core.timeout_error(), CasError::Conflict(b) if b == Ballot::new(9, 2)));
     }
 
     #[test]
@@ -1216,6 +1288,7 @@ mod tests {
             promise,
             accepted_ballot: Ballot::new(c, p),
             accepted_val: Val::Num { ver: 0, num },
+            holder: None,
         }
     }
 
@@ -1272,11 +1345,13 @@ mod tests {
             promise: Ballot::ZERO,
             accepted_ballot: Ballot::new(4, 1),
             accepted_val: Val::Num { ver: 0, num: 42 },
+            holder: Some(2),
         };
         match round.on_reply(3, Some(denial)) {
             LeaseStep::Done(out) => {
                 assert!(!out.complete, "a foreign leaseholder denies the window");
                 assert_eq!(out.value.as_ref().and_then(|v| v.as_num()), Some(42));
+                assert_eq!(out.holder, Some(2), "the denial names the redirect target");
             }
             s => panic!("{s:?}"),
         }
@@ -1320,6 +1395,7 @@ mod tests {
             t_send: 0,
             write_mark: 0,
             valid_until: 900_000,
+            holder: None,
         };
         assert!(core.install(&key, &out));
         match core.local_read(&key, 100_000) {
@@ -1346,6 +1422,7 @@ mod tests {
                 t_send: 0,
                 write_mark: 0,
                 valid_until: 900_000,
+                holder: None,
             },
         );
         // Window armed, value unknown: Miss (rivals blocked, nothing
@@ -1374,6 +1451,7 @@ mod tests {
                 t_send: 0,
                 write_mark: 0,
                 valid_until: 900_000,
+                holder: None,
             },
         );
         // Held entry: the next round is a renew.
@@ -1389,6 +1467,7 @@ mod tests {
                 t_send: 0,
                 write_mark: 0,
                 valid_until: 0,
+                holder: None,
             }
         ));
         assert!(core.is_empty());
@@ -1487,6 +1566,7 @@ mod tests {
                     t_send: 0,
                     write_mark: 0,
                     valid_until: 1_000,
+                    holder: None,
                 },
             );
         }
@@ -1498,6 +1578,35 @@ mod tests {
         assert_eq!(held, vec!["b".to_string()]);
         core.clear();
         assert!(core.is_empty());
+    }
+
+    #[test]
+    fn keys_expiring_within_scans_the_renewal_set() {
+        let mut core = lease_core();
+        let arm = |core: &mut LeaseCore, k: &str, until: u64| {
+            core.install(
+                &k.to_string(),
+                &LeaseOutcome {
+                    complete: true,
+                    grants: 3,
+                    value: Some(Val::Num { ver: 0, num: 1 }),
+                    t_send: 0,
+                    write_mark: 0,
+                    valid_until: until,
+                    holder: None,
+                },
+            );
+        };
+        arm(&mut core, "soon", 100_000);
+        arm(&mut core, "later", 900_000);
+        arm(&mut core, "lapsed", 10_000); // window already ended
+        // At t=50ms with a 100ms horizon: "soon" (ends in 50ms) and
+        // "lapsed" (already ended — renew to re-arm) are due; "later"
+        // (850ms away) is not.
+        let mut due = core.keys_expiring_within(50_000, 100_000);
+        due.sort();
+        assert_eq!(due, vec!["lapsed".to_string(), "soon".to_string()]);
+        assert!(core.keys_expiring_within(0, 0).iter().all(|k| k == "lapsed"));
     }
 
     #[test]

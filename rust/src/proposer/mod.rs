@@ -55,6 +55,29 @@ pub enum ReadMode {
     Lease,
 }
 
+/// Outcome of [`Proposer::get_or_redirect`]: a served value, or the
+/// identity of the proposer whose live lease fenced the read — the
+/// routing tier re-issues the read on that holder's 0-RTT path instead
+/// of waiting out the skew-bounded lease window here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RoutedRead {
+    /// The read completed on this proposer.
+    Val(Val),
+    /// A lease denial named a foreign holder: route the read there.
+    Redirect {
+        /// Proposer id of the current leaseholder.
+        holder: u64,
+    },
+}
+
+/// What one [`Proposer::lease_round`] fan-out produced for its caller.
+struct LeaseAttempt {
+    /// The 1-RTT read value (grant snapshots agreed), if any.
+    value: Option<Val>,
+    /// The leaseholder a denying acceptor named, if any.
+    holder: Option<u64>,
+}
+
 /// Tunables for [`ReadMode::Lease`].
 #[derive(Debug, Clone)]
 pub struct LeaseOpts {
@@ -397,10 +420,10 @@ impl Proposer {
         loop {
             let now = Instant::now();
             if now >= deadline {
-                return Err(CasError::NoQuorum {
-                    needed: self.cfg.read().unwrap().quorum.prepare,
-                    got: 0,
-                });
+                // Ask the core, which knows the phase and the real
+                // ok-count — a hardcoded `got: 0` here made a slow
+                // straggler indistinguishable from a dead cluster.
+                return Err(core.timeout_error());
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(reply) => match core.on_reply(reply.token, reply.from, reply.resp) {
@@ -408,12 +431,7 @@ impl Proposer {
                     Step::Send(more) => self.transport.fan_out(core.token(), more, &tx),
                     Step::Done(res) => return res,
                 },
-                Err(_) => {
-                    return Err(CasError::NoQuorum {
-                        needed: self.cfg.read().unwrap().quorum.prepare,
-                        got: 0,
-                    })
-                }
+                Err(_) => return Err(core.timeout_error()),
             }
         }
     }
@@ -438,13 +456,17 @@ impl Proposer {
     /// [`Counters::read_fast`](crate::metrics::Counters) /
     /// `read_fallback`.
     pub fn get(&self, key: impl Into<Key>) -> CasResult<Val> {
-        self.shed_if_overloaded()?;
         let key: Key = key.into();
         match self.opts.read_mode {
             ReadMode::Cas => return self.get_via_cas(key),
             ReadMode::Lease => return self.get_via_lease(key),
             ReadMode::Quorum => {}
         }
+        // The backpressure gate sits just before actual fan-out — NOT
+        // at the top of `get`, where it would also shed lease-covered
+        // 0-RTT reads that send nothing (the Cas/Lease arms gate their
+        // own fan-outs).
+        self.shed_if_overloaded()?;
         match self.quorum_read(&key) {
             Ok(Some(v)) => {
                 self.metrics.read_fast.fetch_add(1, Ordering::Relaxed);
@@ -470,7 +492,9 @@ impl Proposer {
         let now = self.lease_now_us();
         match self.lease.lock().unwrap().local_read(&key, now) {
             LeaseRead::Hit(v) => {
-                // ZERO transport sends: the whole read is this lookup.
+                // ZERO transport sends: the whole read is this lookup —
+                // it keeps serving even when the transport is saturated
+                // (there is no fan-out to shed).
                 self.metrics.read_lease.fetch_add(1, Ordering::Relaxed);
                 return Ok(v);
             }
@@ -482,18 +506,87 @@ impl Proposer {
                 self.metrics.lease_break.fetch_add(1, Ordering::Relaxed);
             }
         }
-        if let Some(v) = self.lease_round(&key) {
+        // Everything below fans out: the backpressure gate applies from
+        // here (the CAS fallback re-gates itself in change_detailed).
+        self.shed_if_overloaded()?;
+        if let Some(v) = self.lease_round(&key).value {
             return Ok(v);
         }
         self.metrics.read_fallback.fetch_add(1, Ordering::Relaxed);
         self.get_via_cas(key)
     }
 
-    /// One lease acquire/renew fan-out. Returns the read value when the
+    /// Redirect-aware read for a routing tier ([`crate::router`]). In
+    /// [`ReadMode::Lease`], when the grant round is denied and the
+    /// denial names a FOREIGN leaseholder, this returns
+    /// [`RoutedRead::Redirect`] instead of grinding through the fenced
+    /// identity-CAS path (which conflicts until the holder's
+    /// skew-bounded window lapses): the router re-issues the read on
+    /// the holder, which serves it 0-RTT from local state. Non-lease
+    /// modes never redirect, and neither does a denial naming this
+    /// proposer itself (the contested-renewal case).
+    pub fn get_or_redirect(&self, key: impl Into<Key>) -> CasResult<RoutedRead> {
+        let key: Key = key.into();
+        if self.opts.read_mode != ReadMode::Lease {
+            return self.get(key).map(RoutedRead::Val);
+        }
+        let now = self.lease_now_us();
+        match self.lease.lock().unwrap().local_read(&key, now) {
+            LeaseRead::Hit(v) => {
+                self.metrics.read_lease.fetch_add(1, Ordering::Relaxed);
+                return Ok(RoutedRead::Val(v));
+            }
+            LeaseRead::NeedsRenew | LeaseRead::Miss => {}
+            LeaseRead::Expired => {
+                self.metrics.lease_break.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.shed_if_overloaded()?;
+        let attempt = self.lease_round(&key);
+        if let Some(v) = attempt.value {
+            return Ok(RoutedRead::Val(v));
+        }
+        match attempt.holder {
+            // A foreign holder was named: hand the read over rather
+            // than waiting out the lease window on the fenced path.
+            Some(h) if h != self.id => Ok(RoutedRead::Redirect { holder: h }),
+            _ => {
+                self.metrics.read_fallback.fetch_add(1, Ordering::Relaxed);
+                self.get_via_cas(key).map(RoutedRead::Val)
+            }
+        }
+    }
+
+    /// Background renewal tick: re-runs the grant round for every held
+    /// lease whose serving window ends within `horizon` of now (see
+    /// [`LeaseCore::keys_expiring_within`]), so hot keys stay
+    /// 0-RTT-covered across read gaps instead of breaking on the first
+    /// read after a lull. Returns the number of keys renewed. Skips
+    /// the whole tick when the transport is saturated — renewal is an
+    /// optimization and must not pile onto a struggling connection.
+    pub fn renew_due_leases(&self, horizon: Duration) -> usize {
+        if self.opts.read_mode != ReadMode::Lease || self.shed_if_overloaded().is_err() {
+            return 0;
+        }
+        let now = self.lease_now_us();
+        let due = self
+            .lease
+            .lock()
+            .unwrap()
+            .keys_expiring_within(now, horizon.as_micros() as u64);
+        for key in &due {
+            self.lease_round(key);
+        }
+        due.len()
+    }
+
+    /// One lease acquire/renew fan-out. Yields the read value when the
     /// grant snapshots agree (1 RTT); arms the 0-RTT window when every
     /// acceptor granted; revokes partial grant sets so a half-acquired
-    /// lease never blocks rival writers for the full duration.
-    fn lease_round(&self, key: &Key) -> Option<Val> {
+    /// lease never blocks rival writers for the full duration. On a
+    /// denial the attempt carries the leaseholder the denying acceptor
+    /// named — the redirect target for [`Proposer::get_or_redirect`].
+    fn lease_round(&self, key: &Key) -> LeaseAttempt {
         let now_us = self.lease_now_us();
         // Capture config + generation and begin the round atomically
         // w.r.t. update_config (which mutates both under the lease
@@ -549,9 +642,10 @@ impl Proposer {
             self.revoke_leases(std::slice::from_ref(key), &cfg);
         }
         if cfg_unchanged {
-            outcome.value
+            LeaseAttempt { value: outcome.value, holder: outcome.holder }
         } else {
-            None // re-read under the new config
+            // Re-read (and re-resolve any holder) under the new config.
+            LeaseAttempt { value: None, holder: None }
         }
     }
 
@@ -775,6 +869,115 @@ mod tests {
         t.set_down(2, true);
         t.set_down(3, true);
         assert!(p.set("k", 1).is_err());
+    }
+
+    /// Delegates to a [`MemTransport`] but swallows fan-out replies to
+    /// the listed acceptors entirely — a stalled connection (no reply
+    /// at all), unlike `set_down` (which fails fast with a `None`
+    /// reply and lets the round decide quorum-impossible in-round).
+    struct StallTransport {
+        inner: Arc<MemTransport>,
+        stalled: Vec<u64>,
+    }
+
+    impl Transport for StallTransport {
+        fn send(&self, to: u64, req: &Request) -> CasResult<crate::msg::Response> {
+            self.inner.send(to, req)
+        }
+        fn fan_out(
+            &self,
+            token: u32,
+            msgs: Vec<(u64, Request)>,
+            tx: &mpsc::Sender<crate::transport::Reply>,
+        ) {
+            let kept: Vec<(u64, Request)> =
+                msgs.into_iter().filter(|(to, _)| !self.stalled.contains(to)).collect();
+            self.inner.fan_out(token, kept, tx);
+        }
+    }
+
+    #[test]
+    fn timeout_after_one_reply_reports_the_real_count() {
+        // One promise lands, the other two connections stall (no reply,
+        // not even a failure): the timeout error must carry got=1 so
+        // operators can tell a slow straggler from a dead cluster.
+        let (t, cfg) = cluster(3);
+        let stalled = Arc::new(StallTransport { inner: t, stalled: vec![2, 3] });
+        let opts =
+            ProposerOpts { round_timeout: Duration::from_millis(50), ..Default::default() };
+        let p = Proposer::with_opts(1, cfg.clone(), stalled, opts);
+        let (core, msgs) = RoundCore::new(
+            "k".into(),
+            ChangeFn::Set(1),
+            Ballot::new(1, 1),
+            p.proposer_id(),
+            cfg,
+            false,
+        );
+        match p.run_round(core, msgs) {
+            Err(CasError::NoQuorum { needed: 2, got: 1 }) => {}
+            r => panic!("timeout must report the real promise count, got {r:?}"),
+        }
+    }
+
+    /// Wraps a [`MemTransport`] but reports a saturated in-flight depth
+    /// once armed, as a TCP transport with a stuck connection would.
+    struct SaturatedTransport {
+        inner: Arc<MemTransport>,
+        saturated: std::sync::atomic::AtomicBool,
+    }
+
+    impl Transport for SaturatedTransport {
+        fn send(&self, to: u64, req: &Request) -> CasResult<crate::msg::Response> {
+            self.inner.send(to, req)
+        }
+        fn fan_out(
+            &self,
+            token: u32,
+            msgs: Vec<(u64, Request)>,
+            tx: &mpsc::Sender<crate::transport::Reply>,
+        ) {
+            self.inner.fan_out(token, msgs, tx);
+        }
+        fn inflight(&self) -> Option<usize> {
+            if self.saturated.load(Ordering::SeqCst) {
+                Some(1 << 20)
+            } else {
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_transport_still_serves_lease_covered_reads() {
+        let (t, cfg) = cluster(3);
+        let sat = Arc::new(SaturatedTransport {
+            inner: t,
+            saturated: std::sync::atomic::AtomicBool::new(false),
+        });
+        let opts = ProposerOpts { max_inflight: 64, ..lease_opts(60_000, 100) };
+        let p = Proposer::with_opts(1, cfg, Arc::clone(&sat) as Arc<dyn Transport>, opts);
+        p.set("k", 42).unwrap();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(42)); // arms the lease
+        // Saturate the transport: the lease-covered read performs ZERO
+        // fan-outs and must keep serving...
+        sat.saturated.store(true, Ordering::SeqCst);
+        assert_eq!(p.get("k").unwrap().as_num(), Some(42), "0-RTT read must not be shed");
+        // ...while anything that WOULD fan out is shed.
+        assert!(matches!(p.get("other"), Err(CasError::Overloaded { .. })));
+        assert!(matches!(p.set("k", 43), Err(CasError::Overloaded { .. })));
+    }
+
+    #[test]
+    fn quorum_read_is_shed_when_saturated() {
+        let (t, cfg) = cluster(3);
+        let sat = Arc::new(SaturatedTransport {
+            inner: t,
+            saturated: std::sync::atomic::AtomicBool::new(true),
+        });
+        let opts = ProposerOpts { max_inflight: 1, ..Default::default() };
+        let p = Proposer::with_opts(1, cfg, sat, opts);
+        assert!(matches!(p.get("k"), Err(CasError::Overloaded { .. })));
     }
 
     #[test]
@@ -1071,5 +1274,94 @@ mod tests {
         assert_eq!(age, 1);
         assert_eq!(p.proposer_id().age, 1);
         assert!(p.gen.lock().unwrap().current().counter >= 100);
+    }
+
+    #[test]
+    fn denied_read_redirects_to_the_leaseholder() {
+        let (t, cfg) = cluster(3);
+        let holder = Proposer::with_opts(7, cfg.clone(), t.clone(), lease_opts(60_000, 100));
+        holder.set("k", 9).unwrap();
+        assert_eq!(holder.get("k").unwrap().as_num(), Some(9)); // holder armed
+        assert_eq!(holder.leased_keys(), 1);
+        // A denied reader whose round still agrees on a value serves it
+        // in that same RTT — cheaper than any redirect.
+        let other = Proposer::with_opts(2, cfg, t.clone(), lease_opts(60_000, 100));
+        match other.get_or_redirect("k").unwrap() {
+            RoutedRead::Val(v) => assert_eq!(v.as_num(), Some(9)),
+            r => panic!("an agreed denial round must serve directly, got {r:?}"),
+        }
+        // A write the holder prepared but never completed leaves a
+        // foreign-to-the-rival promise above the accepted ballot: now
+        // the denial round is blocked, and instead of grinding through
+        // the fenced CAS fallback (which waits out the window) the
+        // rival learns WHO holds the lease and hands the read over.
+        for a in t.acceptor_ids() {
+            t.send(
+                a,
+                &Request::Prepare {
+                    key: "k".into(),
+                    ballot: Ballot::new(1_000, 7),
+                    from: ProposerId::new(7),
+                },
+            )
+            .unwrap();
+        }
+        match other.get_or_redirect("k").unwrap() {
+            RoutedRead::Redirect { holder: h } => assert_eq!(h, 7),
+            r => panic!("expected a redirect to the holder, got {r:?}"),
+        }
+        assert_eq!(other.leased_keys(), 0, "denied acquisition must not arm a window");
+        // The holder itself keeps serving 0-RTT — never a self-redirect.
+        match holder.get_or_redirect("k").unwrap() {
+            RoutedRead::Val(v) => assert_eq!(v.as_num(), Some(9)),
+            r => panic!("the holder must serve locally, got {r:?}"),
+        }
+    }
+
+    #[test]
+    fn get_or_redirect_serves_values_in_quorum_mode() {
+        let (t, cfg) = cluster(3);
+        let p = Proposer::new(1, cfg, t);
+        p.set("k", 3).unwrap();
+        match p.get_or_redirect("k").unwrap() {
+            RoutedRead::Val(v) => assert_eq!(v.as_num(), Some(3)),
+            r => panic!("quorum mode must never redirect, got {r:?}"),
+        }
+    }
+
+    #[test]
+    fn background_renewal_keeps_lease_covered_across_read_gaps() {
+        let (t, cfg) = cluster(3);
+        // 200ms window, 20ms skew: without renewal, a 240ms read gap
+        // would expire the lease and force a break + re-acquire.
+        let p = Proposer::with_opts(1, cfg, t.clone(), lease_opts(200, 20));
+        p.set("k", 5).unwrap();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(5)); // arm
+        // Simulated per-shard timer: tick well inside the window with a
+        // horizon wide enough to catch the key before it lapses.
+        for _ in 0..8 {
+            std::thread::sleep(Duration::from_millis(30));
+            p.renew_due_leases(Duration::from_millis(120));
+        }
+        // The gap outlived the original window, but the timer kept the
+        // key covered: this read is still 0-RTT and nothing broke.
+        let before = t.request_count();
+        assert_eq!(p.get("k").unwrap().as_num(), Some(5));
+        assert_eq!(t.request_count(), before, "read after the gap must stay 0-RTT");
+        let (_, _, breaks) = p.lease_stats();
+        assert_eq!(breaks, 0, "no lease break across the read gap");
+    }
+
+    #[test]
+    fn renew_due_leases_skips_quorum_mode_and_covered_keys() {
+        let (t, cfg) = cluster(3);
+        let quorum = Proposer::new(1, cfg.clone(), t.clone());
+        quorum.set("k", 1).unwrap();
+        assert_eq!(quorum.renew_due_leases(Duration::from_millis(100)), 0);
+        let leased = Proposer::with_opts(2, cfg, t, lease_opts(60_000, 100));
+        leased.set("j", 2).unwrap();
+        assert_eq!(leased.get("j").unwrap().as_num(), Some(2));
+        // A 60s window with a 1ms horizon: nothing is due.
+        assert_eq!(leased.renew_due_leases(Duration::from_millis(1)), 0);
     }
 }

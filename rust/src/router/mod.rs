@@ -1,0 +1,487 @@
+//! The compartmentalized request tier: stateless routers in front of
+//! per-shard proposer pools.
+//!
+//! Whittaker et al. (*Scaling Replicated State Machines with
+//! Compartmentalization*, PAPERS.md) decouple every RSM role so each
+//! scales independently. The acceptor plane here already does (shards ×
+//! stripes, [`crate::shard`]), but every request still funneled through
+//! ONE proposer per shard — its ballot generator and 1-RTT cache locks
+//! are the next wall. This module splits the request path in two:
+//!
+//! * a **proposer pool** per shard — `proposers_per_shard` interchangeable
+//!   [`Proposer`]s bound to the same acceptor group, any of which serves
+//!   any key of the shard;
+//! * a stateless **[`Router`]** that picks the shard by the classic
+//!   rendezvous hash and a pool member by a second, independently-salted
+//!   rendezvous hash ([`ShardRouter::new_salted`]), so same-key traffic
+//!   sticks to one member (keeping the §2.2.1 one-round-trip cache and
+//!   the lease fast path hot) while distinct keys spread across the
+//!   pool.
+//!
+//! ## Lease-holder-aware redirects
+//!
+//! Under [`crate::proposer::ReadMode::Lease`], a key's 0-RTT state lives
+//! on whichever proposer holds its lease. A read landing elsewhere is
+//! denied — and the denial now names the holder
+//! ([`crate::msg::Response::LeaseGranted`]). Instead of grinding through
+//! the identity-CAS path (fenced until the holder's skew-bounded window
+//! lapses), the router resolves the named holder to a pool member and
+//! re-issues the read there, where it completes 0-RTT from local state
+//! ([`Proposer::get_or_redirect`]). Hops are bounded by
+//! [`RouterOpts::redirect_budget`]; an unknown or out-of-shard holder —
+//! or an exhausted budget — drops to the classic fenced read, so a dead
+//! holder can delay a read by at most one lease window and a redirect
+//! cycle can never ping-pong unboundedly.
+//!
+//! A per-shard background renewal timer ([`Router::spawn_renewal`])
+//! re-runs grant rounds for leases nearing expiry, keeping hot keys
+//! 0-RTT-covered across read gaps instead of breaking on the first read
+//! after a lull.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::change::ChangeFn;
+use crate::error::CasResult;
+use crate::proposer::{Proposer, RoundOutcome, RoutedRead};
+use crate::shard::ShardRouter;
+use crate::state::Val;
+
+/// Rendezvous salt for the pool-member pick. Deliberately different
+/// from the shard salt (`0x5EED`): with the same salt, member choice
+/// would correlate with shard choice and skew pool load.
+const MEMBER_SALT: u64 = 0x9001;
+
+/// Tunables for the routing tier.
+#[derive(Debug, Clone)]
+pub struct RouterOpts {
+    /// Maximum lease redirects followed per read before dropping to
+    /// the classic fenced path. `0` disables redirection entirely.
+    pub redirect_budget: usize,
+    /// Cadence of the per-shard background lease-renewal timer
+    /// ([`Router::spawn_renewal`]); `None` = no timer.
+    pub renew_interval: Option<Duration>,
+}
+
+impl Default for RouterOpts {
+    fn default() -> Self {
+        RouterOpts { redirect_budget: 2, renew_interval: None }
+    }
+}
+
+/// Stateless request router over per-shard proposer pools.
+///
+/// Stateless means: nothing here is load-bearing for safety. Every
+/// member is a full CASPaxos proposer; any number of routers may front
+/// the same pools (each node runs one), and a router crashing mid-round
+/// abandons at most the rounds it was driving — the next request takes
+/// a fresh ballot on whatever member it lands on (`tests/chaos.rs`
+/// kills routers between prepare and accept to pin exactly this).
+pub struct Router {
+    shard_router: ShardRouter,
+    /// One member-pick router per shard (pools may differ in size).
+    member_routers: Vec<ShardRouter>,
+    /// `pools[shard][member]`.
+    pools: Vec<Vec<Arc<Proposer>>>,
+    /// Proposer id → (shard, member): how a lease denial's named holder
+    /// resolves to a redirect target.
+    by_id: HashMap<u64, (usize, usize)>,
+    opts: RouterOpts,
+    /// Requests routed (every op entering through this router).
+    routed: AtomicU64,
+    /// Lease redirects followed (hops, not requests).
+    redirected: AtomicU64,
+}
+
+impl Router {
+    /// Builds a router over `pools[shard][member]`. Every shard needs
+    /// at least one member; proposer ids must be unique across pools.
+    pub fn new(pools: Vec<Vec<Arc<Proposer>>>, opts: RouterOpts) -> Self {
+        assert!(!pools.is_empty(), "need at least one shard pool");
+        let mut by_id = HashMap::new();
+        let mut member_routers = Vec::with_capacity(pools.len());
+        for (s, pool) in pools.iter().enumerate() {
+            assert!(!pool.is_empty(), "shard {s} has an empty proposer pool");
+            member_routers.push(ShardRouter::new_salted(pool.len(), MEMBER_SALT));
+            for (m, p) in pool.iter().enumerate() {
+                let prev = by_id.insert(p.id(), (s, m));
+                assert!(prev.is_none(), "duplicate proposer id {} in pools", p.id());
+            }
+        }
+        Router {
+            shard_router: ShardRouter::new(pools.len()),
+            member_routers,
+            pools,
+            by_id,
+            opts,
+            routed: AtomicU64::new(0),
+            redirected: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of shards routed over.
+    pub fn shard_count(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Largest pool size across shards (`pool_size=` in `Status`).
+    pub fn pool_size(&self) -> usize {
+        self.pools.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// `(routed, redirected)` counter snapshot.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.routed.load(Ordering::Relaxed), self.redirected.load(Ordering::Relaxed))
+    }
+
+    /// Every proposer across every pool (admin: GC sync and membership
+    /// changes must reach each one — a skipped member's 1-RTT cache
+    /// could resurrect a deleted register).
+    pub fn all_proposers(&self) -> Vec<Arc<Proposer>> {
+        self.pools.iter().flatten().cloned().collect()
+    }
+
+    /// The pool member that owns `key`: shard by the classic rendezvous
+    /// hash, member by the independently-salted one.
+    pub fn proposer_for(&self, key: &str) -> &Arc<Proposer> {
+        let s = self.shard_router.route(key);
+        &self.pools[s][self.member_routers[s].route(key)]
+    }
+
+    /// Redirect-aware linearizable read. Follows lease denials to the
+    /// named holder's 0-RTT path for up to
+    /// [`RouterOpts::redirect_budget`] hops, then pays the classic
+    /// fenced read on whatever member it last reached.
+    pub fn get(&self, key: &str) -> CasResult<Val> {
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        let shard = self.shard_router.route(key);
+        let mut member = &self.pools[shard][self.member_routers[shard].route(key)];
+        let mut hops = 0usize;
+        loop {
+            match member.get_or_redirect(key)? {
+                RoutedRead::Val(v) => return Ok(v),
+                RoutedRead::Redirect { holder } => {
+                    match self.by_id.get(&holder) {
+                        // Hand the read to the holder: its local lease
+                        // state serves 0-RTT, no fencing wait.
+                        Some(&(s, m)) if s == shard && hops < self.opts.redirect_budget => {
+                            hops += 1;
+                            self.redirected.fetch_add(1, Ordering::Relaxed);
+                            member = &self.pools[s][m];
+                        }
+                        // Unknown / out-of-shard holder (a proposer this
+                        // router doesn't front) or budget exhausted: the
+                        // classic path waits out at most one lease
+                        // window. Terminal — no ping-pong possible.
+                        _ => return member.get(key),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Routed change: writes always run on the key's pool member (any
+    /// member may serve them; sticking to one keeps its ballot cache
+    /// on the 1-RTT path).
+    pub fn change(&self, key: &str, f: ChangeFn) -> CasResult<Val> {
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        self.proposer_for(key).change(key, f)
+    }
+
+    /// Routed change with the detailed round outcome (accepted flag +
+    /// resulting state) — the server's change path.
+    pub fn change_detailed(&self, key: &str, f: ChangeFn) -> CasResult<RoundOutcome> {
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        self.proposer_for(key).change_detailed(key, f)
+    }
+
+    /// Routed unconditional write.
+    pub fn set(&self, key: &str, val: i64) -> CasResult<Val> {
+        self.change(key, ChangeFn::Set(val))
+    }
+
+    /// Routed compare-and-swap by version.
+    pub fn cas(&self, key: &str, expect: i64, val: i64) -> CasResult<Val> {
+        self.change(key, ChangeFn::Cas { expect, val })
+    }
+
+    /// Routed atomic increment.
+    pub fn add(&self, key: &str, delta: i64) -> CasResult<Val> {
+        self.change(key, ChangeFn::Add(delta))
+    }
+
+    /// Routed deletion step 1 (§3.1): tombstone on the owning member.
+    pub fn delete(&self, key: &str) -> CasResult<Val> {
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        self.proposer_for(key).delete(key)
+    }
+
+    /// Starts one background renewal thread per shard (none when
+    /// [`RouterOpts::renew_interval`] is unset). Each tick re-runs the
+    /// grant round for every pool member's leases ending within four
+    /// tick intervals ([`Proposer::renew_due_leases`]), so hot keys
+    /// stay 0-RTT-covered across read gaps. Threads exit promptly once
+    /// `stop` is set (join the handles after setting it).
+    pub fn spawn_renewal(self: &Arc<Self>, stop: Arc<AtomicBool>) -> Vec<JoinHandle<()>> {
+        let Some(interval) = self.opts.renew_interval else {
+            return Vec::new();
+        };
+        let interval = interval.max(Duration::from_millis(1));
+        // Horizon of several ticks: a key must get a few renewal
+        // chances before its window lapses, or one delayed tick would
+        // cost a lease break.
+        let horizon = interval * 4;
+        (0..self.pools.len())
+            .map(|s| {
+                let router = Arc::clone(self);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let step = interval.min(Duration::from_millis(5));
+                    let mut since_tick = Duration::ZERO;
+                    while !stop.load(Ordering::Acquire) {
+                        // Sleep in short steps so a node shutting down
+                        // never waits a full interval on this thread.
+                        std::thread::sleep(step);
+                        since_tick += step;
+                        if since_tick < interval {
+                            continue;
+                        }
+                        since_tick = Duration::ZERO;
+                        for p in &router.pools[s] {
+                            p.renew_due_leases(horizon);
+                        }
+                    }
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ballot::Ballot;
+    use crate::msg::{ProposerId, Request};
+    use crate::proposer::{LeaseOpts, ProposerOpts, ReadMode};
+    use crate::quorum::ClusterConfig;
+    use crate::transport::mem::MemTransport;
+    use crate::transport::Transport;
+
+    fn lease_proposer_opts(duration_ms: u64, skew_ms: u64) -> ProposerOpts {
+        ProposerOpts {
+            read_mode: ReadMode::Lease,
+            lease: LeaseOpts {
+                duration: Duration::from_millis(duration_ms),
+                skew_bound: Duration::from_millis(skew_ms),
+                renew_margin: Duration::ZERO,
+            },
+            ..Default::default()
+        }
+    }
+
+    /// One 3-acceptor cluster with a lease-mode proposer per id.
+    fn lease_pool(
+        ids: &[u64],
+        duration_ms: u64,
+        skew_ms: u64,
+    ) -> (Arc<MemTransport>, Vec<Arc<Proposer>>) {
+        let t = Arc::new(MemTransport::new(3));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        let pool = ids
+            .iter()
+            .map(|&id| {
+                Arc::new(Proposer::with_opts(
+                    id,
+                    cfg.clone(),
+                    t.clone() as Arc<dyn Transport>,
+                    lease_proposer_opts(duration_ms, skew_ms),
+                ))
+            })
+            .collect();
+        (t, pool)
+    }
+
+    /// A key the member-pick rendezvous lands on proposer `want`.
+    fn key_on_member(router: &Router, want: u64) -> String {
+        (0..1000)
+            .map(|i| format!("k{i}"))
+            .find(|k| router.proposer_for(k).id() == want)
+            .expect("no key routed to the wanted member in 1000 tries")
+    }
+
+    /// Stalls a holder's write after prepare: every acceptor now holds
+    /// a promise above the accepted ballot, so a rival's denial round
+    /// cannot agree on a value and must redirect instead.
+    fn stall_holder_prepare(t: &Arc<MemTransport>, key: &str, holder: u64) {
+        for a in t.acceptor_ids() {
+            t.send(
+                a,
+                &Request::Prepare {
+                    key: key.to_string(),
+                    ballot: Ballot::new(1_000, holder),
+                    from: ProposerId::new(holder),
+                },
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn member_pick_is_stable_and_spread() {
+        let (_t, pool) = lease_pool(&[1, 2, 3, 4], 60_000, 100);
+        let router = Router::new(vec![pool], RouterOpts::default());
+        assert_eq!(router.shard_count(), 1);
+        assert_eq!(router.pool_size(), 4);
+        let mut counts = HashMap::new();
+        for i in 0..400 {
+            let k = format!("spread/{i}");
+            let id = router.proposer_for(&k).id();
+            assert_eq!(router.proposer_for(&k).id(), id, "pick must be stable");
+            *counts.entry(id).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts.len(), 4, "every member must get traffic: {counts:?}");
+        for (&id, &c) in &counts {
+            assert!(c > 40 && c < 180, "member {id} load {c} of 400: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn any_member_serves_any_key() {
+        let (_t, pool) = lease_pool(&[1, 2, 3, 4], 60_000, 100);
+        let router = Router::new(vec![pool.clone()], RouterOpts::default());
+        for i in 0..20 {
+            router.set(&format!("k{i}"), i).unwrap();
+        }
+        for i in 0..20 {
+            let k = format!("k{i}");
+            // Members OTHER than the routed one serve the key too —
+            // the pool shares the shard, not the keyspace.
+            for p in &pool {
+                assert_eq!(p.get(k.as_str()).unwrap().as_num(), Some(i), "member {}", p.id());
+            }
+        }
+        let (routed, redirected) = router.stats();
+        assert_eq!(routed, 20);
+        assert_eq!(redirected, 0);
+    }
+
+    #[test]
+    fn denied_read_redirects_to_holder_without_waiting_out_the_window() {
+        // A 60-SECOND window: if the redirect were not taken, the
+        // fenced CAS fallback would conflict until the window lapsed
+        // and this test would hang, not pass.
+        let (t, pool) = lease_pool(&[7, 2], 60_000, 100);
+        let router = Router::new(vec![pool.clone()], RouterOpts::default());
+        let key = key_on_member(&router, 2);
+        let holder = pool.iter().find(|p| p.id() == 7).unwrap();
+        holder.set(key.as_str(), 9).unwrap();
+        assert_eq!(holder.get(key.as_str()).unwrap().as_num(), Some(9)); // arm
+        stall_holder_prepare(&t, &key, 7);
+        let before = t.request_count();
+        assert_eq!(router.get(&key).unwrap().as_num(), Some(9));
+        // Exactly one denial fan-out (3 acceptors) and a 0-RTT serve on
+        // the holder — the redirect added ZERO transport requests.
+        assert_eq!(t.request_count() - before, 3, "redirected read must be denial + local");
+        let (routed, redirected) = router.stats();
+        assert_eq!(routed, 1);
+        assert_eq!(redirected, 1);
+    }
+
+    #[test]
+    fn redirect_to_unknown_holder_falls_back_without_ping_pong() {
+        // The lease is held by a proposer this router does NOT front:
+        // the named holder can't be resolved, so the read terminates on
+        // the classic fenced path (bounded by one short window) with
+        // zero redirect hops.
+        let (t, pool) = lease_pool(&[2, 3], 40, 5);
+        let outsider = Arc::new(Proposer::with_opts(
+            99,
+            pool[0].config(),
+            t.clone() as Arc<dyn Transport>,
+            lease_proposer_opts(40, 5),
+        ));
+        let router = Router::new(vec![pool], RouterOpts::default());
+        outsider.set("k", 6).unwrap();
+        assert_eq!(outsider.get("k").unwrap().as_num(), Some(6)); // outsider holds
+        stall_holder_prepare(&t, "k", 99);
+        assert_eq!(router.get("k").unwrap().as_num(), Some(6));
+        let (_, redirected) = router.stats();
+        assert_eq!(redirected, 0, "an unresolvable holder must not count as a hop");
+    }
+
+    #[test]
+    fn holder_amnesia_terminates_redirect_in_one_hop() {
+        // The holder "dies" (loses its lease memory) while a redirect
+        // is in flight: the hop lands on a member with no local window,
+        // which re-runs the grant round under its own id and serves —
+        // bounded, no ping-pong back to the denied member.
+        let (t, pool) = lease_pool(&[7, 2], 60_000, 100);
+        let router = Router::new(vec![pool.clone()], RouterOpts::default());
+        let key = key_on_member(&router, 2);
+        let holder = pool.iter().find(|p| p.id() == 7).unwrap();
+        holder.set(key.as_str(), 9).unwrap();
+        assert_eq!(holder.get(key.as_str()).unwrap().as_num(), Some(9));
+        stall_holder_prepare(&t, &key, 7);
+        // Amnesia: local lease state gone, acceptor-side lease (held
+        // by id 7) still live.
+        holder.gc_sync(&key, 1);
+        assert_eq!(holder.leased_keys(), 0);
+        assert_eq!(router.get(&key).unwrap().as_num(), Some(9));
+        let (_, redirected) = router.stats();
+        assert_eq!(redirected, 1, "exactly one hop, then the ex-holder serves");
+    }
+
+    #[test]
+    fn redirect_budget_zero_disables_hops() {
+        let (t, pool) = lease_pool(&[7, 2], 40, 5);
+        let opts = RouterOpts { redirect_budget: 0, ..RouterOpts::default() };
+        let router = Router::new(vec![pool.clone()], opts);
+        let key = key_on_member(&router, 2);
+        let holder = pool.iter().find(|p| p.id() == 7).unwrap();
+        holder.set(key.as_str(), 4).unwrap();
+        assert_eq!(holder.get(key.as_str()).unwrap().as_num(), Some(4));
+        stall_holder_prepare(&t, &key, 7);
+        // Short window: the classic fallback waits it out and serves.
+        assert_eq!(router.get(&key).unwrap().as_num(), Some(4));
+        let (_, redirected) = router.stats();
+        assert_eq!(redirected, 0);
+    }
+
+    #[test]
+    fn renewal_timer_keeps_keys_covered_per_shard() {
+        let (t, pool) = lease_pool(&[7], 200, 20);
+        let opts = RouterOpts {
+            renew_interval: Some(Duration::from_millis(30)),
+            ..RouterOpts::default()
+        };
+        let router = Arc::new(Router::new(vec![pool.clone()], opts));
+        router.set("k", 5).unwrap();
+        assert_eq!(router.get("k").unwrap().as_num(), Some(5)); // arm
+        let stop = Arc::new(AtomicBool::new(false));
+        let handles = router.spawn_renewal(Arc::clone(&stop));
+        assert_eq!(handles.len(), 1, "one timer per shard");
+        // A read gap longer than the 200ms window: the timer must keep
+        // the lease alive across it.
+        std::thread::sleep(Duration::from_millis(300));
+        let before = t.request_count();
+        assert_eq!(router.get("k").unwrap().as_num(), Some(5));
+        assert_eq!(t.request_count(), before, "read after the gap must stay 0-RTT");
+        let (_, _, breaks) = pool[0].lease_stats();
+        assert_eq!(breaks, 0, "no lease break across the gap");
+        stop.store(true, Ordering::Release);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn no_timer_without_interval() {
+        let (_t, pool) = lease_pool(&[7], 200, 20);
+        let router = Arc::new(Router::new(vec![pool], RouterOpts::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        assert!(router.spawn_renewal(stop).is_empty());
+    }
+}

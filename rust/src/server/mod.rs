@@ -50,6 +50,7 @@ use crate::gc::GcProcess;
 use crate::msg::Key;
 use crate::proposer::Proposer;
 use crate::quorum::ClusterConfig;
+use crate::router::{Router, RouterOpts};
 use crate::runtime::auto_engine;
 use crate::shard::{ShardPlan, ShardRouter};
 use crate::state::Val;
@@ -321,6 +322,16 @@ pub struct NodeOpts {
     /// cores): past it the connection stops reading until a reply
     /// completes. `0` is treated as the default 256.
     pub max_deferred: usize,
+    /// Proposers per shard in this node's request tier
+    /// ([`crate::router`]): each shard runs a pool of interchangeable
+    /// proposers and the router spreads distinct keys across them, so
+    /// request throughput scales independently of the acceptor count.
+    /// `0` is treated as 1 (the classic fused path); capped at 5 by the
+    /// proposer-id block layout.
+    pub proposers_per_shard: usize,
+    /// Routing-tier tunables: lease-redirect budget and the background
+    /// renewal cadence ([`RouterOpts`]).
+    pub router: RouterOpts,
 }
 
 /// A running node (handles held for inspection; threads detached).
@@ -329,10 +340,14 @@ pub struct Node {
     pub acceptor_addr: std::net::SocketAddr,
     /// Bound client address.
     pub client_addr: std::net::SocketAddr,
-    /// The shard-0 proposer (the only one in unsharded deployments).
+    /// The shard-0 pool-0 proposer (the only one in unsharded,
+    /// unpooled deployments).
     pub proposer: Arc<Proposer>,
-    /// One proposer per shard, indexed by shard id.
+    /// The first pool member per shard, indexed by shard id.
     pub shard_proposers: Vec<Arc<Proposer>>,
+    /// The request tier: per-shard proposer pools behind the stateless
+    /// router ([`crate::router`]).
+    pub router: Arc<Router>,
     /// The node's GC process.
     pub gc: Arc<GcProcess>,
     /// Acceptor lock-stripe count this node runs with.
@@ -342,6 +357,10 @@ pub struct Node {
     /// restarted node (same data dir, same process — tests do this)
     /// now owns.
     ckpt_stop: Option<(Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>)>,
+    /// Per-shard lease-renewal timers, stopped and joined on drop (a
+    /// dropped node's timers must not keep renewing leases its
+    /// restarted successor now manages).
+    renew_stop: Option<(Arc<std::sync::atomic::AtomicBool>, Vec<std::thread::JoinHandle<()>>)>,
 }
 
 impl Drop for Node {
@@ -349,6 +368,12 @@ impl Drop for Node {
         if let Some((stop, handle)) = self.ckpt_stop.take() {
             stop.store(true, std::sync::atomic::Ordering::Release);
             let _ = handle.join();
+        }
+        if let Some((stop, handles)) = self.renew_stop.take() {
+            stop.store(true, std::sync::atomic::Ordering::Release);
+            for handle in handles {
+                let _ = handle.join();
+            }
         }
     }
 }
@@ -358,7 +383,10 @@ impl Drop for Node {
 struct NodeCtx {
     router: ShardRouter,
     shards: Vec<ClusterConfig>,
+    /// First pool member per shard (the batch/inflight anchors).
     proposers: Vec<Arc<Proposer>>,
+    /// The request tier: every client key routes through here.
+    request_router: Arc<Router>,
     batches: Vec<Arc<BatchProposer>>,
     gc: Arc<GcProcess>,
     /// Acceptor lock-stripe count (exported through `Status`).
@@ -371,12 +399,6 @@ struct NodeCtx {
     /// services (exported through `Status` as `open_conns=` /
     /// `loop_wakeups=` / `io_threads=`).
     loop_stats: Arc<LoopStats>,
-}
-
-impl NodeCtx {
-    fn proposer_for(&self, key: &str) -> &Arc<Proposer> {
-        &self.proposers[self.router.route(key)]
-    }
 }
 
 /// Starts acceptor + client services; returns the bound addresses.
@@ -481,18 +503,35 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         },
         None => crate::proposer::ProposerOpts::default(),
     };
-    for (s, cfg) in plan.shards.iter().enumerate() {
-        // Proposer ids must be globally unique per (node, shard). Shard 0
-        // keeps the historical `id == node id`, so unsharded deployments
-        // are identical to the pre-shard ones; batch proposers live in
-        // their own 500k block (assumes node ids < 1000, shards < ~100).
-        let pid = opts.id + (s as u64) * 1000;
-        shard_proposers.push(Arc::new(Proposer::with_opts(
-            pid,
-            cfg.clone(),
-            transport.clone(),
-            proposer_opts.clone(),
+    let pool_size = opts.proposers_per_shard.max(1);
+    if pool_size > 5 {
+        // Pool members live in per-member 100k id blocks; member 5
+        // would collide with the batch proposers' 500k block.
+        return Err(CasError::Config(format!(
+            "proposers_per_shard is capped at 5, got {pool_size}"
         )));
+    }
+    let mut pools: Vec<Vec<Arc<Proposer>>> = Vec::new();
+    for (s, cfg) in plan.shards.iter().enumerate() {
+        // Proposer ids must be globally unique per (node, shard, pool
+        // member). Shard 0 member 0 keeps the historical `id == node
+        // id`, so unsharded single-proposer deployments are identical
+        // to the pre-shard ones; extra pool members get per-member
+        // 100k blocks and batch proposers live in their own 500k block
+        // (assumes node ids < 1000, shards < ~100).
+        let pid = opts.id + (s as u64) * 1000;
+        let pool: Vec<Arc<Proposer>> = (0..pool_size)
+            .map(|m| {
+                Arc::new(Proposer::with_opts(
+                    pid + (m as u64) * 100_000,
+                    cfg.clone(),
+                    transport.clone(),
+                    proposer_opts.clone(),
+                ))
+            })
+            .collect();
+        shard_proposers.push(pool[0].clone());
+        pools.push(pool);
         batches.push(Arc::new(BatchProposer::new(
             500_000 + pid,
             cfg.clone(),
@@ -500,11 +539,13 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
             Arc::clone(&engine),
         )));
     }
+    let request_router = Arc::new(Router::new(pools, opts.router.clone()));
     // Distinct GC-proposer id per node (two GCs must never share
-    // ballot identity).
+    // ballot identity). The GC must sync EVERY pool member — a skipped
+    // member's 1-RTT cache could resurrect a deleted register.
     let gc = Arc::new(GcProcess::with_id(
         transport,
-        shard_proposers.clone(),
+        request_router.all_proposers(),
         900_000 + opts.id,
     ));
     for (&peer_id, addr) in &opts.client_peers {
@@ -512,10 +553,18 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
             gc.add_admin(Box::new(RemoteProposer { proposer_id: peer_id, addr: addr.clone() }));
         }
     }
+    // Per-shard background lease renewal (no-op unless the router opts
+    // set a cadence): stopped and joined when the Node drops.
+    let renew_stop = {
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let handles = request_router.spawn_renewal(Arc::clone(&stop));
+        if handles.is_empty() { None } else { Some((stop, handles)) }
+    };
     let ctx = Arc::new(NodeCtx {
         router: ShardRouter::new(plan.shard_count()),
         shards: plan.shards.clone(),
         proposers: shard_proposers.clone(),
+        request_router: Arc::clone(&request_router),
         batches,
         gc: Arc::clone(&gc),
         stripes,
@@ -541,9 +590,11 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         client_addr,
         proposer: shard_proposers[0].clone(),
         shard_proposers,
+        router: request_router,
         gc,
         stripes,
         ckpt_stop,
+        renew_stop,
     })
 }
 
@@ -572,19 +623,21 @@ fn client_handler(ctx: Arc<NodeCtx>) -> ServiceHandler<ClientReq, ClientResp> {
 fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
     match req {
         ClientReq::Change { key, change } => {
-            match ctx.proposer_for(key).change_detailed(key.clone(), change.clone()) {
+            match ctx.request_router.change_detailed(key, change.clone()) {
                 Ok(out) if out.accepted => ClientResp::Val(out.state),
                 Ok(out) => ClientResp::Err(format!("rejected; current state is {}", out.state)),
                 Err(e) => ClientResp::Err(e.to_string()),
             }
         }
         ClientReq::Batch { ops } => handle_batch(ops, ctx),
-        ClientReq::Read { key } => match ctx.proposer_for(key).get(key.clone()) {
+        // Redirect-aware: a lease-denied read re-routes to the named
+        // holder's 0-RTT path instead of fencing for a lease window.
+        ClientReq::Read { key } => match ctx.request_router.get(key) {
             Ok(v) => ClientResp::Val(v),
             Err(e) => ClientResp::Err(e.to_string()),
         },
         ClientReq::ReadBatch { keys } => handle_read_batch(keys, ctx),
-        ClientReq::Delete { key } => match ctx.proposer_for(key).delete(key.clone()) {
+        ClientReq::Delete { key } => match ctx.request_router.delete(key) {
             Ok(_) => {
                 ctx.gc.schedule(key.clone());
                 ClientResp::Val(Val::Tombstone)
@@ -600,23 +653,23 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
             ClientResp::Status(format!("collected={ok} superseded={superseded} failed={failed}"))
         }
         ClientReq::GcSync { key, min_counter } => {
-            // Sync EVERY shard proposer on this node (caches and ballot
-            // counters are per-proposer state), but report the one that
-            // owns the key: its age is what the collector fences on the
-            // key's acceptor group.
-            let own = ctx.router.route(key);
-            let mut synced = (ctx.proposers[own].id(), 0);
-            for (s, p) in ctx.proposers.iter().enumerate() {
+            // Sync EVERY pool member of every shard on this node (caches
+            // and ballot counters are per-proposer state), but report the
+            // member the router would pick for the key: its age is what
+            // the collector fences on the key's acceptor group.
+            let own = ctx.request_router.proposer_for(key).id();
+            let mut synced = (own, 0);
+            for p in ctx.request_router.all_proposers() {
                 let age = p.gc_sync(key, *min_counter);
-                if s == own {
-                    synced = (p.id(), age);
+                if p.id() == own {
+                    synced = (own, age);
                 }
             }
             ClientResp::Synced { proposer_id: synced.0, age: synced.1 }
         }
         ClientReq::Status => {
             let mut snap = [0u64; 11];
-            for p in &ctx.proposers {
+            for p in ctx.request_router.all_proposers() {
                 for (acc, v) in snap.iter_mut().zip(p.metrics.snapshot()) {
                     *acc += v;
                 }
@@ -641,13 +694,15 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
             ));
             let inflight = ctx.proposers[0].transport_inflight().unwrap_or(0);
             let (open_conns, loop_wakeups, io_threads) = ctx.loop_stats.snapshot();
+            let (routed, redirected) = ctx.request_router.stats();
             ClientResp::Status(format!(
                 "id={} shards={} rounds={} commits={} conflicts={} retries={} \
                  cache_hits={} failures={} read_fast={} read_fallback={} \
                  read_lease={} lease_renew={} lease_break={} gc_pending={} \
                  stripes={} wal_appends={} wal_flushes={} wal_fsyncs={} \
                  checkpoint_records={} replay_records={} last_checkpoint_us={} inflight={} \
-                 open_conns={} loop_wakeups={} io_threads={}",
+                 open_conns={} loop_wakeups={} io_threads={} \
+                 routed={} redirected={} pool_size={}",
                 ctx.proposers[0].id(),
                 ctx.shards.len(),
                 snap[0],
@@ -672,7 +727,10 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 inflight,
                 open_conns,
                 loop_wakeups,
-                io_threads
+                io_threads,
+                routed,
+                redirected,
+                ctx.request_router.pool_size()
             ))
         }
     }
@@ -840,6 +898,17 @@ mod tests {
         data: Option<&TempDir>,
         lease: Option<crate::proposer::LeaseOpts>,
     ) -> Vec<Node> {
+        launch_cluster_pooled(n, shards, stripes, data, lease, 0)
+    }
+
+    fn launch_cluster_pooled(
+        n: u64,
+        shards: usize,
+        stripes: usize,
+        data: Option<&TempDir>,
+        lease: Option<crate::proposer::LeaseOpts>,
+        proposers_per_shard: usize,
+    ) -> Vec<Node> {
         // Two-phase bind: reserve acceptor AND client ports first so
         // every node knows every peer address before starting (a bind
         // learns a free port, releases it, the node re-binds — benign
@@ -872,6 +941,8 @@ mod tests {
                     data_dir: data.map(|d| d.path().to_str().unwrap().to_string()),
                     checkpoint: None,
                     lease: lease.clone(),
+                    proposers_per_shard,
+                    router: RouterOpts::default(),
                 })
                 .unwrap()
             })
@@ -1099,6 +1170,8 @@ mod tests {
                 interval_bytes: 0,
             }),
             lease: None,
+            proposers_per_shard: 0,
+            router: RouterOpts::default(),
         };
         let node = start_node(mk_opts(reserve(), reserve())).unwrap();
         let mut c = Client::connect(&node.client_addr.to_string()).unwrap();
@@ -1190,6 +1263,66 @@ mod tests {
         // fall back) — any node serves any client, leases or not.
         let mut c2 = Client::connect(&nodes[2].client_addr.to_string()).unwrap();
         assert_eq!(c2.get("k").unwrap().as_num(), Some(7));
+    }
+
+    #[test]
+    fn proposer_pool_node_serves_and_exports_router_stats() {
+        // A pool of 2 proposers per shard behind the stateless router:
+        // any member serves any key of its shard, writes and reads from
+        // different clients agree, GC still fences the right member, and
+        // `Status` exports the routing-tier counters.
+        let nodes = launch_cluster_pooled(3, 1, 1, None, None, 2);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        for i in 0..16i64 {
+            assert_eq!(c.change(&format!("p{i}"), ChangeFn::Set(i)).unwrap().as_num(), Some(i));
+        }
+        let mut c2 = Client::connect(&nodes[2].client_addr.to_string()).unwrap();
+        for i in 0..16i64 {
+            assert_eq!(c2.get(&format!("p{i}")).unwrap().as_num(), Some(i), "key p{i}");
+        }
+        // Delete + collect exercises GcSync across every pool member.
+        c.call(&ClientReq::Delete { key: "p0".into() }).unwrap();
+        match c.call(&ClientReq::Collect).unwrap() {
+            ClientResp::Status(s) => assert!(s.contains("collected=1"), "{s}"),
+            other => panic!("{other:?}"),
+        }
+        match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => {
+                assert!(s.contains("pool_size=2"), "{s}");
+                assert!(s.contains("routed="), "{s}");
+                assert!(s.contains("redirected="), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_proposer_pool_is_rejected() {
+        // Member pids live in 100k blocks; block 5 would collide with
+        // the batch proposers' 500k block, so the knob is capped.
+        let reserve = || {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = start_node(NodeOpts {
+            id: 1,
+            acceptor_addr: reserve(),
+            client_addr: reserve(),
+            peers: HashMap::new(),
+            client_peers: HashMap::new(),
+            cluster: ClusterConfig::majority(1, vec![1]),
+            shard_plan: None,
+            stripes: 1,
+            io_threads: 0,
+            max_deferred: 0,
+            data_dir: None,
+            checkpoint: None,
+            lease: None,
+            proposers_per_shard: 6,
+            router: RouterOpts::default(),
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("capped at 5"), "{err}");
     }
 
     #[test]

@@ -83,8 +83,18 @@ pub struct ShardRouter {
 impl ShardRouter {
     /// Router over `n_shards` shards (indices `0..n_shards`).
     pub fn new(n_shards: usize) -> Self {
+        Self::new_salted(n_shards, 0x5EED)
+    }
+
+    /// Router over `n_shards` buckets with an explicit rendezvous salt.
+    ///
+    /// Two routers over the same key space must use *different* salts
+    /// when their placements should be independent — e.g. the request
+    /// tier picks a pool member with its own salt so member choice does
+    /// not correlate with the key's shard choice.
+    pub fn new_salted(n_shards: usize, salt: u64) -> Self {
         assert!(n_shards > 0, "need at least one shard");
-        ShardRouter { seeds: (0..n_shards as u64).map(|i| mix(0x5EED ^ i)).collect() }
+        ShardRouter { seeds: (0..n_shards as u64).map(|i| mix(salt ^ i)).collect() }
     }
 
     /// Number of shards routed over.
@@ -459,6 +469,31 @@ mod tests {
         }
         // ≈ n/5 keys move; allow a generous band.
         assert!(moved > n / 10 && moved < n / 3, "moved {moved} of {n}");
+    }
+
+    #[test]
+    fn salted_routers_place_independently() {
+        // Same size, different salts: placements must not correlate (a
+        // member router reusing the shard salt would pin pool member i
+        // to shard i and defeat pool spreading).
+        let a = ShardRouter::new_salted(4, 0x5EED);
+        let b = ShardRouter::new_salted(4, 0x9001);
+        let n = 2_000usize;
+        let mut agree = 0usize;
+        for i in 0..n {
+            let k = format!("k{i}");
+            if a.route(&k) == b.route(&k) {
+                agree += 1;
+            }
+        }
+        // Independent placement agrees ~1/4 of the time; a correlated
+        // pair would agree on all (or none) of it.
+        assert!(agree > n / 8 && agree < n / 2, "agreement {agree} of {n}");
+        // The default constructor is the classic shard salt.
+        for i in 0..50 {
+            let k = format!("k{i}");
+            assert_eq!(ShardRouter::new(4).route(&k), a.route(&k));
+        }
     }
 
     #[test]

@@ -29,6 +29,12 @@
 //! mid-round crashes and restarts on striped nodes, where a routing
 //! bug (two stripes answering for one register, a min-age fence
 //! missing a stripe) surfaces as a linearizability violation.
+//!
+//! The **router-failover campaigns** (PR 8): the stateless request tier
+//! must survive a router dying mid-round — between a round's prepare
+//! and its accept included — leaving a dangling promise behind. 2×40
+//! seeds of client-heavy cut schedules against single- and multi-shard
+//! worlds, same linearizability oracle.
 
 use caspaxos::linearizability::{check, CheckResult};
 use caspaxos::rng::Rng;
@@ -298,6 +304,132 @@ fn chaos_striped_multi_shard_40_seeds() {
     assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
 }
 
+/// One seeded router-failover scenario (the PR-8 request-tier
+/// campaign). The routing tier is stateless, so "killing a router" is
+/// cutting a CLIENT node (the proposer its rounds run on) — the cut
+/// timing is uniform over round phases, so across a seed set it lands
+/// between a round's prepare and its accept, abandoning the round with
+/// a dangling promise on the acceptors. Rivals must fast-forward past
+/// the orphaned promise and no half-driven round may surface as a
+/// committed-then-lost write. Returns (invoked, completed).
+fn run_router_failover(shards: usize, stripes: usize, seed: u64) -> (usize, usize) {
+    let mut net = NetModel::uniform(5_000);
+    net.jitter = 0.3;
+    net.drop_prob = 0.01;
+    let opts = ShardedWorldOpts {
+        shards,
+        acceptors_per_shard: 3,
+        clients_per_shard: 2,
+        ops_per_client: 10,
+        keys_per_shard: 2,
+        quorum_reads: true,
+        lease_reads: false,
+        skew_clocks: false,
+        stripes,
+        net,
+    };
+    let mut w = sharded_chaos_world(&opts, seed);
+    let acceptors = w.plan.all_acceptors();
+    let clients = opts.client_ids();
+    w.world.start();
+
+    // Client-heavy nemesis: EVERY phase cuts a router, against a
+    // backdrop of occasional acceptor faults. Short 50–200ms phases —
+    // rounds span several phases of thinking and RTTs, so cuts land at
+    // every point inside a round, not just between rounds.
+    let mut nemesis = Rng::new(seed ^ 0x0F_F1CE);
+    let mut cut_clients: Vec<u64> = Vec::new();
+    let mut cut_acceptors: Vec<u64> = Vec::new();
+    let mut t = 0u64;
+    for _phase in 0..16 {
+        t += 50_000 + nemesis.gen_range(150_000);
+        w.world.run_until(t);
+        let victim = *nemesis.choose(&clients);
+        w.world.isolate(victim);
+        cut_clients.push(victim);
+        match nemesis.gen_range(4) {
+            0 => {
+                let a = *nemesis.choose(&acceptors);
+                w.world.isolate(a);
+                cut_acceptors.push(a);
+            }
+            1 => {
+                if let Some(back) = cut_acceptors.pop() {
+                    w.world.reconnect(back);
+                }
+            }
+            _ => {}
+        }
+        // Routers come back (a restarted router holds NO round state —
+        // its next request takes a fresh ballot), but never all at
+        // once: keep at least one cut so some round is always orphaned.
+        while cut_clients.len() > 1 {
+            w.world.reconnect(cut_clients.remove(0));
+        }
+    }
+
+    for &id in &acceptors {
+        w.world.reconnect(id);
+    }
+    for &id in &clients {
+        w.world.reconnect(id);
+    }
+    w.world.run_until(t + 60_000_000);
+    w.world.run_to_quiescence();
+
+    let mut invoked = 0;
+    let mut completed = 0;
+    for shard_handles in &w.handles {
+        let history = shard_handles[0].as_ref();
+        invoked += history.len();
+        completed += history.snapshot().iter().filter(|o| o.complete.is_some()).count();
+        match check(history) {
+            CheckResult::Linearizable => {}
+            CheckResult::Violation(why) => {
+                panic!("router-failover violation (shards={shards}, seed={seed:#x}): {why}")
+            }
+            CheckResult::Exhausted => {
+                panic!("checker exhausted (shards={shards}, seed={seed:#x}): shrink the workload")
+            }
+        }
+    }
+    (invoked, completed)
+}
+
+#[test]
+fn chaos_router_failover_40_seeds() {
+    // THE request-tier campaign (PR 8): routers die mid-round — between
+    // prepare and accept included — every phase, on single- and (below)
+    // multi-shard worlds, and every shard history must stay
+    // linearizable through the Wing&Gong check.
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_000F, n, |rng| {
+        let (invoked, completed) = run_router_failover(1, 1, rng.next_u64());
+        assert_eq!(invoked, 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    // A cut router abandons its in-flight ops, so completion runs low —
+    // but the campaign as a whole must still make progress.
+    let total = n as usize * 20;
+    assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
+fn chaos_router_failover_multi_shard_40_seeds() {
+    // Shards × router failover: a cut router orphans rounds on EVERY
+    // shard it was driving at once.
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_0010, n, |rng| {
+        let (invoked, completed) = run_router_failover(4, 1, rng.next_u64());
+        assert_eq!(invoked, 4 * 2 * 10, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    let total = n as usize * 80;
+    assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
+}
+
 #[test]
 fn chaos_scenarios_replay_deterministically() {
     let run = |seed| run_chaos(2, 1, seed, ReadMix::None);
@@ -308,6 +440,8 @@ fn chaos_scenarios_replay_deterministically() {
     assert_eq!(run_lease(0xFEED), run_lease(0xFEED), "lease schedules replay too");
     let run_striped = |seed| run_chaos(2, 4, seed, ReadMix::Quorum);
     assert_eq!(run_striped(0xFEED), run_striped(0xFEED), "striped schedules replay too");
+    let run_failover = |seed| run_router_failover(2, 1, seed);
+    assert_eq!(run_failover(0xFEED), run_failover(0xFEED), "failover schedules replay too");
     // Striping must not change WHAT a schedule does, only how the
     // acceptor locks internally: same seed, same op counts either way.
     assert_eq!(run_reads(0xFEED).0, run_striped(0xFEED).0, "stripe count changes no schedule");
