@@ -16,12 +16,19 @@
 //!   checkpoint and replaying only the delta; the full-replay vs
 //!   checkpoint+delta times quantify the restart-cost win.
 //!
+//! * **The storage backend axis** — the same CAS workload and restart
+//!   against `DiskStorage` (keyed segments behind a bounded cache)
+//!   next to the RAM-resident `FileStorage` maps: what switching
+//!   `backend disk` costs in throughput and buys (or costs) at
+//!   restart. Emitted separately as `BENCH_storage.json`.
+//!
 //! Clients drive the acceptor exactly as the TCP service does: handle
 //! under the stripe lock, wait the durability ticket OUTSIDE it.
-//! Emits `BENCH_write_path.json` (CI uploads it as an artifact) and
-//! appends one summary row per run — date, commit, CAS throughput,
-//! restart-replay ms — to the in-tree `BENCH_trajectory.json` (JSONL),
-//! so the perf history survives in the repo itself.
+//! Emits `BENCH_write_path.json` and `BENCH_storage.json` (CI uploads
+//! both as artifacts) and appends one summary row per run — date,
+//! commit, CAS throughput, restart-replay ms, disk-vs-mem numbers —
+//! to the in-tree `BENCH_trajectory.json` (JSONL), so the perf history
+//! survives in the repo itself.
 //!
 //! Run: `cargo bench --bench write_path` (set `BENCH_SMOKE=1` for a
 //! seconds-long smoke run; the stripe-scaling assertion is enforced on
@@ -31,7 +38,9 @@ use std::io::Write as _;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use caspaxos::acceptor::{FileStorage, GroupCommitOpts, Slot, Storage as _, StripedAcceptor, WalStats};
+use caspaxos::acceptor::{
+    DiskStorage, FileStorage, GroupCommitOpts, Slot, Storage, StripedAcceptor, WalStats,
+};
 use caspaxos::ballot::Ballot;
 use caspaxos::msg::{ProposerId, Request, Response};
 use caspaxos::state::Val;
@@ -62,13 +71,54 @@ fn cas_throughput(
         s.fsync = fsync;
     }
     let acc = Arc::new(StripedAcceptor::from_storages(1, stores));
+    let ops_sec = drive_cas(&acc, stripes, clients, ops_per_client);
+    (ops_sec, acc.wal_stats())
+}
+
+/// Disk-backend twin of [`cas_throughput`]: identical workload, but the
+/// stripes' slots live in keyed segment files behind a bounded cache
+/// (`DiskStorage`) instead of RAM-resident maps.
+fn cas_throughput_disk(
+    dir: &TempDir,
+    label: &str,
+    stripes: usize,
+    clients: u64,
+    ops_per_client: u64,
+    fsync: bool,
+    window: Duration,
+) -> (f64, WalStats) {
+    let opts = GroupCommitOpts { flush_window: window, ..GroupCommitOpts::default() };
+    let mut stores = DiskStorage::open_striped(
+        dir.file(&format!("wal-{label}.log")),
+        opts,
+        stripes,
+        4096,
+    )
+    .unwrap();
+    for s in &mut stores {
+        s.fsync = fsync;
+    }
+    let acc = Arc::new(StripedAcceptor::from_storages(1, stores));
+    let ops_sec = drive_cas(&acc, stripes, clients, ops_per_client);
+    (ops_sec, acc.wal_stats())
+}
+
+/// The shared client loop: `clients` threads accept-round their pinned
+/// keys against `acc` (handle under the stripe lock, wait the ticket
+/// outside it) and return aggregate ops/sec.
+fn drive_cas<S: Storage + 'static>(
+    acc: &Arc<StripedAcceptor<S>>,
+    stripes: usize,
+    clients: u64,
+    ops_per_client: u64,
+) -> f64 {
     // A value large enough that the under-lock work (clone + encode +
     // CRC) is the measurable cost when fsync is off.
     let payload = vec![7u8; 2048];
     let start = Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let acc = Arc::clone(&acc);
+        let acc = Arc::clone(acc);
         let key = key_on_stripe((c as usize) % stripes, stripes, c);
         let payload = payload.clone();
         handles.push(std::thread::spawn(move || {
@@ -90,7 +140,7 @@ fn cas_throughput(
         h.join().unwrap();
     }
     let elapsed = start.elapsed().as_secs_f64();
-    ((clients * ops_per_client) as f64 / elapsed, acc.wal_stats())
+    (clients * ops_per_client) as f64 / elapsed
 }
 
 /// Builds a `records`-record log over `records/4` keys — just inside
@@ -128,6 +178,44 @@ fn restart_replay(dir: &TempDir, records: u64) -> (f64, f64) {
     let ckpt_ms = t.elapsed().as_secs_f64() * 1e3;
     assert_eq!(stats.replay_records, 0, "checkpointed reopen must replay only the delta");
     (full_ms, ckpt_ms)
+}
+
+/// Builds one `records`-record WAL over `records/4` keys with the mem
+/// backend, then times a cold reopen of the SAME bytes by each backend:
+/// `FileStorage::open` rebuilds the RAM-resident maps, and
+/// `DiskStorage::open` rebuilds the keyed segment + ordered index
+/// behind a cache smaller than the keyspace. Returns (mem_ms, disk_ms).
+fn backend_restart(dir: &TempDir, records: u64) -> (f64, f64) {
+    let path = dir.file("backend-restart.log");
+    let keys = (records / 4).max(1);
+    {
+        let mut s = FileStorage::open(&path).unwrap();
+        s.fsync = false;
+        for i in 0..records {
+            let key = format!("k{}", i % keys);
+            let slot = Slot {
+                promise: Ballot::ZERO,
+                accepted_ballot: Ballot::new(i + 1, 1),
+                value: Val::Num { ver: 0, num: i as i64 },
+                lease: None,
+            };
+            s.store_deferred(&key, &slot).unwrap().wait().unwrap();
+        }
+    }
+    let t = Instant::now();
+    let stats = FileStorage::open(&path).unwrap().ckpt_stats();
+    let mem_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(stats.replay_records, records, "mem reopen must replay the whole log");
+    let t = Instant::now();
+    let disk = DiskStorage::open(&path, 4096).unwrap();
+    let disk_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(
+        disk.ckpt_stats().replay_records,
+        records,
+        "disk reopen must replay the whole log"
+    );
+    assert_eq!(disk.len(), keys as usize, "disk index must hold every live key");
+    (mem_ms, disk_ms)
 }
 
 /// UTC date as `YYYY-MM-DD` via civil-from-days — std has no date
@@ -267,18 +355,62 @@ fn main() {
          \"ckpt_ms\": {ckpt_ms:.1}}}"
     ));
 
+    // ---- Storage backend axis: disk vs mem ----
+    // Same workload, same WAL bytes — only slot residency changes.
+    println!("\n## Storage backend axis (8 clients × 4 stripes, fsync off)");
+    println!("| backend | ops/sec (best of 3) | restart ({replay_records} records) |");
+    println!("|---|---|---|");
+    let mut mem_best = 0f64;
+    let mut disk_best = 0f64;
+    for trial in 0..3 {
+        let (m, _) = cas_throughput(
+            &dir,
+            &format!("backend-mem-t{trial}"),
+            4,
+            8,
+            ops,
+            false,
+            Duration::ZERO,
+        );
+        mem_best = mem_best.max(m);
+        let (d, _) = cas_throughput_disk(
+            &dir,
+            &format!("backend-disk-t{trial}"),
+            4,
+            8,
+            ops,
+            false,
+            Duration::ZERO,
+        );
+        disk_best = disk_best.max(d);
+    }
+    let (mem_restart_ms, disk_restart_ms) = backend_restart(&dir, replay_records);
+    println!("| mem | {mem_best:.0} | {mem_restart_ms:.1}ms |");
+    println!("| disk | {disk_best:.0} | {disk_restart_ms:.1}ms |");
+    let storage_out = format!(
+        "{{\n  \"cas\": {{\"clients\": 8, \"stripes\": 4, \
+         \"mem_ops_per_sec\": {mem_best:.0}, \"disk_ops_per_sec\": {disk_best:.0}}},\n  \
+         \"restart\": {{\"records\": {replay_records}, \"mem_ms\": {mem_restart_ms:.1}, \
+         \"disk_ms\": {disk_restart_ms:.1}}}\n}}\n"
+    );
+    let mut f = std::fs::File::create("BENCH_storage.json").expect("create BENCH_storage.json");
+    f.write_all(storage_out.as_bytes()).expect("write BENCH_storage.json");
+    println!("\nwrote BENCH_storage.json");
+
     let out = format!("{{\n  {}\n}}\n", json.join(",\n  "));
     let path = "BENCH_write_path.json";
     let mut f = std::fs::File::create(path).expect("create BENCH_write_path.json");
     f.write_all(out.as_bytes()).expect("write BENCH_write_path.json");
-    println!("\nwrote {path}");
+    println!("wrote {path}");
 
     // Perf trajectory: one JSONL summary row per run, appended to the
     // in-tree file so re-anchors can read the history from the repo.
     let row = format!(
         "{{\"date\": \"{}\", \"commit\": \"{}\", \"smoke\": {quick}, \
          \"cas_ops_per_sec\": {:.0}, \"replay_full_ms\": {full_ms:.1}, \
-         \"replay_ckpt_ms\": {ckpt_ms:.1}}}\n",
+         \"replay_ckpt_ms\": {ckpt_ms:.1}, \"disk_cas_ops_per_sec\": {disk_best:.0}, \
+         \"mem_restart_ms\": {mem_restart_ms:.1}, \
+         \"disk_restart_ms\": {disk_restart_ms:.1}}}\n",
         utc_date(),
         commit_id(),
         best[2]

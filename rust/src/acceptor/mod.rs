@@ -45,8 +45,8 @@ use crate::msg::{Key, ProposerId, Request, Response};
 use crate::state::Val;
 
 pub use storage::{
-    stripe_of, CheckpointOpts, CkptStats, FileStorage, GroupCommitOpts, Lease, MemStorage,
-    Persist, Slot, Storage, WalStats,
+    stripe_of, Backend, CheckpointOpts, CkptStats, DiskStorage, FileStorage, GroupCommitOpts,
+    Lease, MemStorage, Persist, Slot, Storage, WalStats, DISK_CACHE_SLOTS,
 };
 
 /// Upper bound on a grantable lease (clamps the wire-supplied duration
@@ -409,9 +409,18 @@ impl<S: Storage> Acceptor<S> {
     }
 
     fn on_dump(&self, after: Option<&Key>, limit: usize) -> Response {
-        let page = self.store.scan(after, limit.min(MAX_DUMP_PAGE));
+        // Fallible scan: a disk-backed index that cannot read a page
+        // must surface the error — a silently short page would end
+        // catch-up pagination early and under-replicate the learner.
+        let page = match self.store.try_scan(after, limit.min(MAX_DUMP_PAGE)) {
+            Ok(page) => page,
+            Err(e) => return Response::Error(format!("dump scan: {e}")),
+        };
         let more = match page.last() {
-            Some((last, _)) => !self.store.scan(Some(last), 1).is_empty(),
+            Some((last, _)) => match self.store.try_scan(Some(last), 1) {
+                Ok(probe) => !probe.is_empty(),
+                Err(e) => return Response::Error(format!("dump scan: {e}")),
+            },
             None => false,
         };
         let entries =
@@ -535,6 +544,66 @@ impl StripedAcceptor<FileStorage> {
     }
 }
 
+impl StripedAcceptor<DiskStorage> {
+    /// Opens a disk-backed striped acceptor: same shared group-commit
+    /// WAL and same on-disk log/checkpoint format as the mem-backed
+    /// [`StripedAcceptor::open`], but slots live in per-stripe segment
+    /// files behind a bounded cache instead of resident maps
+    /// ([`DiskStorage::open_striped`]) — the two variants are
+    /// interchangeable on the same data dir.
+    pub fn open_disk(
+        id: u64,
+        path: impl Into<std::path::PathBuf>,
+        opts: GroupCommitOpts,
+        stripes: usize,
+        cache_slots: usize,
+    ) -> crate::error::CasResult<Self> {
+        Ok(Self::from_storages(id, DiskStorage::open_striped(path, opts, stripes, cache_slots)?))
+    }
+
+    /// Counters of the shared WAL (see [`StripedAcceptor::wal_stats`]).
+    pub fn wal_stats(&self) -> WalStats {
+        self.stripes[0].lock().unwrap().storage().wal_stats()
+    }
+
+    /// Checkpoint / replay counters of the shared log.
+    pub fn ckpt_stats(&self) -> CkptStats {
+        self.stripes[0].lock().unwrap().storage().ckpt_stats()
+    }
+
+    /// True when shared-WAL growth since the last checkpoint crosses
+    /// `opts` (see [`StripedAcceptor::checkpoint_due`]).
+    pub fn checkpoint_due(&self, opts: &CheckpointOpts) -> bool {
+        self.stripes[0].lock().unwrap().storage().checkpoint_due(opts)
+    }
+
+    /// Slots currently resident in the bounded caches, summed across
+    /// stripes — bounded by `stripes * cache_slots` however large the
+    /// keyspace grows.
+    pub fn resident_keys(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().storage().resident_keys()).sum()
+    }
+
+    /// 4 KiB pages across all stripes' segment files (coarse on-disk
+    /// footprint of the keyed index).
+    pub fn index_pages(&self) -> u64 {
+        self.stripes.iter().map(|s| s.lock().unwrap().storage().index_pages()).sum()
+    }
+
+    /// Online compaction of the shared striped WAL — identical
+    /// pause-write-swap protocol to the mem-backed
+    /// [`StripedAcceptor::compact`], paging the checkpoint out of the
+    /// ordered indexes instead of cloning resident maps; oversized
+    /// segments are rewritten to live records while the stripes are
+    /// already quiesced.
+    pub fn compact(&self) -> crate::error::CasResult<()> {
+        let mut guards: Vec<_> = self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let mut stores: Vec<&mut DiskStorage> =
+            guards.iter_mut().map(|g| g.storage_mut()).collect();
+        DiskStorage::checkpoint_handles(&mut stores)
+    }
+}
+
 impl<S: Storage> StripedAcceptor<S> {
     /// Builds the striped acceptor over pre-opened per-stripe storages
     /// (one per stripe, index = stripe id).
@@ -619,7 +688,7 @@ impl<S: Storage> StripedAcceptor<S> {
                 // a file-backed node — acceptable because SetMinAge
                 // only runs during GC collections (replay would accept
                 // a single record: it re-fences all stripes from any
-                // min-age record; see `replay_log`).
+                // min-age record; see `replay_into`).
                 let mut last = Response::Ok;
                 for stripe in &self.stripes {
                     let (resp, _persist) = stripe.lock().unwrap().handle_deferred_at(req, now_us);
@@ -656,9 +725,22 @@ impl<S: Storage> StripedAcceptor<S> {
         for stripe in &self.stripes {
             let (resp, persist) = stripe.lock().unwrap().handle_deferred_at(&req, now_us);
             fences.push(persist);
-            if let Response::DumpPage { entries: page, more } = resp {
-                entries.extend(page);
-                stripe_more |= more;
+            match resp {
+                Response::DumpPage { entries: page, more } => {
+                    entries.extend(page);
+                    stripe_more |= more;
+                }
+                // A stripe that cannot produce its page poisons the
+                // whole merge: swallowing it would report a successful
+                // (short) page with `more=false`, silently
+                // under-replicating the learner. Drain the fences we
+                // already collected, then hand the stripe's reply back.
+                other => {
+                    for fence in fences {
+                        let _ = fence.wait();
+                    }
+                    return (other, Persist::done());
+                }
             }
         }
         let last_fence = fences.pop().unwrap_or_else(Persist::done);
@@ -1284,6 +1366,75 @@ mod tests {
         }
     }
 
+    /// [`MemStorage`] wrapper whose scans can be rigged to fail —
+    /// stands in for a disk backend that cannot read an index page.
+    struct FailingScan {
+        inner: MemStorage,
+        fail: bool,
+    }
+
+    impl Storage for FailingScan {
+        fn load(&self, key: &Key) -> Option<Slot> {
+            self.inner.load(key)
+        }
+        fn store(&mut self, key: &Key, slot: &Slot) -> crate::error::CasResult<()> {
+            self.inner.store(key, slot)
+        }
+        fn erase(&mut self, key: &Key) -> crate::error::CasResult<()> {
+            self.inner.erase(key)
+        }
+        fn scan(&self, after: Option<&Key>, limit: usize) -> Vec<(Key, std::sync::Arc<Slot>)> {
+            self.inner.scan(after, limit)
+        }
+        fn try_scan(
+            &self,
+            after: Option<&Key>,
+            limit: usize,
+        ) -> crate::error::CasResult<Vec<(Key, std::sync::Arc<Slot>)>> {
+            if self.fail {
+                return Err(crate::error::CasError::Transport(
+                    "injected index read failure".into(),
+                ));
+            }
+            self.inner.try_scan(after, limit)
+        }
+        fn load_min_ages(&self) -> BTreeMap<u64, u64> {
+            self.inner.load_min_ages()
+        }
+        fn store_min_age(&mut self, proposer_id: u64, min_age: u64) -> crate::error::CasResult<()> {
+            self.inner.store_min_age(proposer_id, min_age)
+        }
+        fn len(&self) -> usize {
+            self.inner.len()
+        }
+    }
+
+    #[test]
+    fn striped_dump_propagates_a_failing_stripes_error() {
+        // Stripe 2's storage cannot read its index: the merged dump
+        // must report the error. Pre-fix, the `if let DumpPage` merge
+        // dropped the errored stripe and replied with a successful
+        // short page + more=false — catch-up (`Install` via `Dump`)
+        // would stop there and silently under-replicate the learner.
+        let stores: Vec<FailingScan> =
+            (0..4).map(|i| FailingScan { inner: MemStorage::new(), fail: i == 2 }).collect();
+        let a = StripedAcceptor::from_storages(1, stores);
+        for i in 0..8i64 {
+            let key = format!("k{i}");
+            assert_eq!(a.handle(&acc(&key, 1, 1, i)), Response::Accepted);
+        }
+        match a.handle(&Request::Dump { after: None, limit: 100 }) {
+            Response::Error(e) => assert!(e.contains("injected index read failure"), "{e}"),
+            r => panic!("a failing stripe must poison the merged dump, got {r:?}"),
+        }
+        // The single-stripe fast path reports it too (on_dump itself).
+        let a = StripedAcceptor::from_storages(
+            1,
+            vec![FailingScan { inner: MemStorage::new(), fail: true }],
+        );
+        assert!(matches!(a.handle(&Request::Dump { after: None, limit: 100 }), Response::Error(_)));
+    }
+
     #[test]
     fn striped_lease_and_erase_stay_per_stripe() {
         let a = StripedAcceptor::new_mem(1, 4);
@@ -1390,5 +1541,45 @@ mod tests {
         assert!(a.checkpoint_due(&opts), "5 appends at interval 5");
         a.compact().unwrap();
         assert!(!a.checkpoint_due(&opts), "checkpoint resets the growth counters");
+    }
+
+    #[test]
+    fn disk_backed_striped_acceptor_compacts_and_restarts() {
+        use crate::testkit::{key_on_stripe, TempDir};
+        let dir = TempDir::new("striped-disk").unwrap();
+        let a = crate::testkit::striped_disk_acceptor(&dir, 1, 4, 128);
+        let keys: Vec<Key> = (0..4).map(|s| key_on_stripe(s, 4, 11)).collect();
+        for round in 1..=50u64 {
+            for key in &keys {
+                assert_eq!(
+                    a.handle_at(&acc(key, round, 1, round as i64), 1_000),
+                    Response::Accepted
+                );
+            }
+        }
+        a.compact().unwrap();
+        let stats = a.ckpt_stats();
+        assert_eq!(stats.checkpoint_records, 4, "one live slot per stripe");
+        assert_eq!(stats.checkpoints, 1);
+        // Keeps serving on the fresh WAL, and a merged dump pages the
+        // on-disk indexes.
+        for key in &keys {
+            assert_eq!(a.handle_at(&acc(key, 100, 1, 777), 1_000), Response::Accepted);
+        }
+        match a.handle_at(&Request::Dump { after: None, limit: 2 }, 1_000) {
+            Response::DumpPage { entries, more } => {
+                assert_eq!(entries.len(), 2);
+                assert!(more);
+            }
+            r => panic!("{r:?}"),
+        }
+        drop(a);
+        // Restart loads checkpoint + delta into fresh segments.
+        let a = crate::testkit::striped_disk_acceptor(&dir, 1, 4, 128);
+        for key in &keys {
+            assert_eq!(a.storage_value(key), Some(777));
+        }
+        assert_eq!(a.ckpt_stats().replay_records, 4, "restart replays only the delta");
+        assert!(a.index_pages() > 0);
     }
 }

@@ -71,9 +71,42 @@
 //! torn `<log>.ckpt` itself is impossible by construction (step 3), so
 //! a checkpoint that fails its own header count is reported as an open
 //! error, never silently half-loaded.
+//!
+//! ## Replay truncation: torn tails vs mid-log corruption
+//!
+//! WAL replay distinguishes two ways a log can end badly. A *torn
+//! tail* — a partial frame at EOF, exactly what a crash mid-append
+//! produces — is a clean stop: the tail bytes are dropped (they were
+//! never acked) and counted in
+//! [`CkptStats::replay_truncated_bytes`]. *Mid-log corruption* — a
+//! CRC/decode failure with at least one intact frame after it — means
+//! acked records sit beyond the damage; silently stopping there would
+//! serve a state that loses them, so open reports an error instead of
+//! truncating.
+//!
+//! ## Disk-backed keyed storage
+//!
+//! [`DiskStorage`] ([`Backend::Disk`]) keeps slots on disk instead of
+//! in RAM, so an acceptor's keyspace can exceed memory. Layout per
+//! stripe: an append-only *segment* file (`<stem>.seg<i>`, CRC-framed
+//! slot records — the slot keyspace) plus an in-memory **ordered key
+//! index** mapping each key to its latest frame (keys and offsets are
+//! resident; slot bodies are not). The tiny per-proposer min-age table
+//! (the meta keyspace, O(proposers) not O(keys)) stays fully resident.
+//! Reads go through a bounded FIFO slot cache; `scan` pages straight
+//! from the ordered index and deliberately bypasses the cache, so
+//! `Dump` pagination and GC walks never materialize the full map or
+//! evict the hot set. Durability is unchanged: every mutation rides
+//! the same group-commit WAL (`store_deferred` returns the same
+//! [`Persist`] tickets) and the same checkpoint lifecycle. The
+//! segment is *derived* state: at open it is rebuilt by streaming the
+//! checkpoint — the snapshot-install payload — straight into a fresh
+//! segment (tmp → fsync → rename → dir-fsync, the checkpoint's own
+//! dance) and replaying the WAL delta on top, never holding the slot
+//! map in memory.
 
-use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -225,6 +258,14 @@ pub trait Storage: Send {
     /// `after` (None = from the beginning), up to `limit` entries.
     /// Slots are shared, not deep-copied (GC/dump scans are clone-free).
     fn scan(&self, after: Option<&Key>, limit: usize) -> Vec<(Key, Arc<Slot>)>;
+    /// Fallible [`Storage::scan`]: backends that read slots from disk
+    /// surface I/O errors here, so a `Dump` page reports the failure
+    /// instead of silently serving a truncated page (which would
+    /// under-replicate a catching-up acceptor). Default: infallible,
+    /// delegates to `scan`.
+    fn try_scan(&self, after: Option<&Key>, limit: usize) -> CasResult<Vec<(Key, Arc<Slot>)>> {
+        Ok(self.scan(after, limit))
+    }
     /// Loads the per-proposer minimum-age table (§3.1).
     fn load_min_ages(&self) -> BTreeMap<u64, u64>;
     /// Persists one min-age entry.
@@ -378,10 +419,35 @@ impl Codec for LogRec {
 /// CRC-frames one record body: `u32 len (LE) | u32 crc32(body) | body`.
 fn frame_record(rec: &LogRec, out: &mut Vec<u8>) {
     let body = rec.to_bytes();
+    frame_body(&body, out);
+}
+
+/// Frames an already-encoded record body (see [`frame_record`]).
+fn frame_body(body: &[u8], out: &mut Vec<u8>) {
     out.reserve(8 + body.len());
     out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    out.extend_from_slice(&crc32fast::hash(&body).to_le_bytes());
-    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc32fast::hash(body).to_le_bytes());
+    out.extend_from_slice(body);
+}
+
+/// CRC-frames one slot record from a BORROWED slot, byte-identical to
+/// [`frame_record`] on the equivalent owning [`LogRec`] (`Slot` when
+/// `stripe` is None, `StripedSlot` otherwise) without cloning the slot
+/// into it. The checkpoint writer runs with every stripe quiesced;
+/// deep-cloning each slot inside that pause was O(state) allocations
+/// for nothing.
+fn frame_slot_record(stripe: Option<u32>, key: &Key, slot: &Slot, out: &mut Vec<u8>) {
+    let mut body = Vec::new();
+    match stripe {
+        None => body.push(0),
+        Some(s) => {
+            body.push(3);
+            s.encode(&mut body);
+        }
+    }
+    key.encode(&mut body);
+    slot.encode(&mut body);
+    frame_body(&body, out);
 }
 
 /// Group-commit tunables for [`FileStorage`].
@@ -455,6 +521,11 @@ pub struct CkptStats {
     /// Checkpoints written by this process (open-time compaction
     /// included).
     pub checkpoints: u64,
+    /// Bytes dropped from the WAL tail at the last open: a torn frame
+    /// from a crash mid-append (never-acked bytes — a clean stop).
+    /// Mid-log corruption is an open *error*, not a count; see the
+    /// module docs.
+    pub replay_truncated_bytes: u64,
 }
 
 /// Monotone counters for one WAL (see [`FileStorage::wal_stats`]).
@@ -504,6 +575,9 @@ struct Wal {
     ckpt_records: AtomicU64,
     /// WAL records replayed at open (the restart delta).
     replay_records: AtomicU64,
+    /// Torn-tail bytes dropped at open (see
+    /// [`CkptStats::replay_truncated_bytes`]).
+    replay_truncated: AtomicU64,
     /// Wall-clock µs of the last checkpoint written by this process.
     last_ckpt_us: AtomicU64,
     /// Checkpoints written by this process.
@@ -531,6 +605,7 @@ impl Wal {
             since_ckpt_bytes: AtomicU64::new(0),
             ckpt_records: AtomicU64::new(0),
             replay_records: AtomicU64::new(0),
+            replay_truncated: AtomicU64::new(0),
             last_ckpt_us: AtomicU64::new(0),
             ckpts: AtomicU64::new(0),
         }
@@ -633,6 +708,7 @@ impl Wal {
             replay_records: self.replay_records.load(Ordering::Relaxed),
             last_checkpoint_us: self.last_ckpt_us.load(Ordering::Relaxed),
             checkpoints: self.ckpts.load(Ordering::Relaxed),
+            replay_truncated_bytes: self.replay_truncated.load(Ordering::Relaxed),
         }
     }
 
@@ -685,56 +761,135 @@ pub struct FileStorage {
     stripe: Option<u32>,
 }
 
-/// Replays a log's bytes into `stripes` in-memory indexes. Slot and
-/// erase records route by [`stripe_of`] over the CURRENT stripe count —
-/// legacy untagged and striped records alike, so a log written under a
-/// different stripe count still lands every key on the stripe that
-/// will serve it. Min-age fences apply to EVERY stripe (the table is
-/// monotone-max, so over-application is always safe). Replay stops at
-/// the first torn or corrupt record. Returns the per-stripe indexes
-/// and the number of intact records replayed.
-fn replay_log(buf: &[u8], stripes: usize) -> (Vec<MemStorage>, usize) {
-    let mut mems: Vec<MemStorage> = (0..stripes.max(1)).map(|_| MemStorage::new()).collect();
-    let records = replay_into(buf, &mut mems);
-    (mems, records)
+/// Outcome of walking one CRC-framed record stream (WAL or checkpoint
+/// body): how many intact records were applied, and how the stream
+/// ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ReplayOutcome {
+    /// Intact records decoded and applied.
+    records: usize,
+    /// Bytes dropped after the last applied record (0 = the stream
+    /// ended exactly on a frame boundary).
+    truncated_bytes: u64,
+    /// `Some(offset)` when the drop is *mid-log corruption*: the frame
+    /// at `offset` is torn/corrupt/undecodable, yet at least one
+    /// intact frame follows it — acked records sit beyond the damage.
+    /// A torn tail at EOF (crash mid-append, nothing intact after)
+    /// leaves this `None`.
+    corruption_at: Option<u64>,
 }
 
-/// [`replay_log`]'s core, replaying ON TOP of existing indexes — the
+/// Walks `buf` frame by frame (`u32 len | u32 crc | body`), decoding
+/// each record and handing it to `apply`. Stops at the first frame
+/// that cannot be consumed intact and classifies the stop via
+/// [`has_intact_frame_after`] (see [`ReplayOutcome::corruption_at`]).
+/// An `apply` error aborts immediately (disk-backed rebuild I/O).
+fn replay_frames(
+    buf: &[u8],
+    mut apply: impl FnMut(LogRec) -> CasResult<()>,
+) -> CasResult<ReplayOutcome> {
+    let mut records = 0;
+    let mut pos = 0;
+    while buf.len() - pos >= 8 {
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        // A frame is intact when it fits, its CRC matches, and its
+        // body decodes. A bogus length (possibly itself a flipped
+        // bit) overruns the buffer and is classified exactly like a
+        // CRC failure: by whether intact frames follow.
+        let intact = buf.len() - pos >= 8 + len && {
+            let body = &buf[pos + 8..pos + 8 + len];
+            crc32fast::hash(body) == crc && LogRec::from_bytes(body).is_ok()
+        };
+        if !intact {
+            return Ok(ReplayOutcome {
+                records,
+                truncated_bytes: (buf.len() - pos) as u64,
+                corruption_at: has_intact_frame_after(buf, pos + 1).then_some(pos as u64),
+            });
+        }
+        let body = &buf[pos + 8..pos + 8 + len];
+        apply(LogRec::from_bytes(body).expect("checked intact above"))?;
+        records += 1;
+        pos += 8 + len;
+    }
+    Ok(ReplayOutcome {
+        records,
+        truncated_bytes: (buf.len() - pos) as u64,
+        corruption_at: None,
+    })
+}
+
+/// True if any byte offset `>= from` starts an intact frame — the
+/// resync scan that tells mid-log corruption (intact records beyond
+/// the damage) from a torn tail (the damage IS the end). Requires the
+/// candidate body to both CRC-match and decode: a run of zero bytes
+/// would otherwise read as an "intact" empty frame (crc32 of `[]` is
+/// 0), and zero-filled regions are exactly what torn writes produce.
+fn has_intact_frame_after(buf: &[u8], from: usize) -> bool {
+    if buf.len() < from + 8 {
+        return false;
+    }
+    for start in from..=buf.len() - 8 {
+        let len = u32::from_le_bytes(buf[start..start + 4].try_into().unwrap()) as usize;
+        if len == 0 || len > buf.len() - start - 8 {
+            continue;
+        }
+        let crc = u32::from_le_bytes(buf[start + 4..start + 8].try_into().unwrap());
+        let body = &buf[start + 8..start + 8 + len];
+        if crc32fast::hash(body) == crc && LogRec::from_bytes(body).is_ok() {
+            return true;
+        }
+    }
+    false
+}
+
+/// Routes one replayed record into per-stripe in-memory indexes. Slot
+/// and erase records route by [`stripe_of`] over the CURRENT stripe
+/// count — legacy untagged and striped records alike, so a log written
+/// under a different stripe count still lands every key on the stripe
+/// that will serve it. Min-age fences apply to EVERY stripe (the table
+/// is monotone-max, so over-application is always safe).
+fn apply_rec_to_mems(rec: LogRec, mems: &mut [MemStorage]) {
+    let n = mems.len();
+    match rec {
+        LogRec::Slot { key, slot } | LogRec::StripedSlot { key, slot, .. } => {
+            mems[stripe_of(&key, n)].store(&key, &slot).ok();
+        }
+        LogRec::Erase { key } | LogRec::StripedErase { key, .. } => {
+            mems[stripe_of(&key, n)].erase(&key).ok();
+        }
+        LogRec::MinAge { proposer_id, min_age }
+        | LogRec::StripedMinAge { proposer_id, min_age, .. } => {
+            for mem in mems.iter_mut() {
+                mem.store_min_age(proposer_id, min_age).ok();
+            }
+        }
+    }
+}
+
+/// Replays a byte stream ON TOP of existing indexes — the
 /// checkpoint-then-delta restart path folds the WAL over the
 /// checkpoint-loaded state with exactly the log's replay rules.
-fn replay_into(buf: &[u8], mems: &mut [MemStorage]) -> usize {
-    let n = mems.len();
-    let mut records = 0;
-    let mut input = buf;
-    while input.len() >= 8 {
-        let len = u32::from_le_bytes(input[0..4].try_into().unwrap()) as usize;
-        let crc = u32::from_le_bytes(input[4..8].try_into().unwrap());
-        if input.len() < 8 + len {
-            break; // torn tail
-        }
-        let body = &input[8..8 + len];
-        if crc32fast::hash(body) != crc {
-            break; // corrupt record: stop replay
-        }
-        match LogRec::from_bytes(body) {
-            Ok(LogRec::Slot { key, slot }) | Ok(LogRec::StripedSlot { key, slot, .. }) => {
-                mems[stripe_of(&key, n)].store(&key, &slot).ok();
-            }
-            Ok(LogRec::Erase { key }) | Ok(LogRec::StripedErase { key, .. }) => {
-                mems[stripe_of(&key, n)].erase(&key).ok();
-            }
-            Ok(LogRec::MinAge { proposer_id, min_age })
-            | Ok(LogRec::StripedMinAge { proposer_id, min_age, .. }) => {
-                for mem in &mut mems {
-                    mem.store_min_age(proposer_id, min_age).ok();
-                }
-            }
-            Err(_) => break,
-        }
-        records += 1;
-        input = &input[8 + len..];
+fn replay_into(buf: &[u8], mems: &mut [MemStorage]) -> ReplayOutcome {
+    replay_frames(buf, |rec| {
+        apply_rec_to_mems(rec, mems);
+        Ok(())
+    })
+    .expect("in-memory replay apply is infallible")
+}
+
+/// The open-error a mid-log corruption produces: silently truncating
+/// there would drop acked records that sit intact beyond the damage.
+fn check_mid_log_corruption(path: &std::path::Path, outcome: &ReplayOutcome) -> CasResult<()> {
+    match outcome.corruption_at {
+        Some(off) => Err(CasError::Transport(format!(
+            "log {path:?}: corrupt record at byte {off} with intact records after it \
+             ({} trailing bytes affected); refusing to silently truncate acked state",
+            outcome.truncated_bytes
+        ))),
+        None => Ok(()),
     }
-    records
 }
 
 /// Checkpoint file path beside the log (`<log>.ckpt`).
@@ -774,49 +929,97 @@ fn remove_stale_tmps(path: &std::path::Path) {
     }
 }
 
-/// Loads the checkpoint beside `path` into `stripes` fresh indexes
-/// (None = no checkpoint). Routing is by [`stripe_of`] over the
-/// CURRENT stripe count — checkpoints restripe exactly like logs. A
-/// checkpoint whose body replays fewer records than its header count
-/// is corrupt and reported as an error: the WAL only holds the delta
-/// since it was written, so silently half-loading would serve a state
-/// that loses acked writes.
-fn load_checkpoint(
+/// Streams the checkpoint beside `path` record by record into `apply`
+/// (None = no checkpoint file). This is the **snapshot-install** read
+/// path shared by every backend: [`FileStorage`] folds the records
+/// into its in-memory indexes, [`DiskStorage`] appends them straight
+/// into a fresh segment — neither ever holds the whole checkpoint
+/// state in memory beyond the reader's buffer. Any torn frame, CRC
+/// failure, or record count short of the header is an error: the WAL
+/// only holds the delta since the checkpoint was written, so silently
+/// half-loading would serve a state that loses acked writes.
+fn stream_checkpoint(
     path: &std::path::Path,
-    stripes: usize,
-) -> CasResult<Option<(Vec<MemStorage>, u64)>> {
+    mut apply: impl FnMut(LogRec) -> CasResult<()>,
+) -> CasResult<Option<u64>> {
     let cp = ckpt_path(path);
     if !cp.exists() {
         return Ok(None);
     }
-    let mut buf = Vec::new();
-    std::fs::File::open(&cp)
-        .and_then(|mut f| f.read_to_end(&mut buf))
-        .map_err(|e| CasError::Transport(format!("open {cp:?}: {e}")))?;
-    if buf.len() < 16 || &buf[0..8] != CKPT_MAGIC {
+    let file =
+        std::fs::File::open(&cp).map_err(|e| CasError::Transport(format!("open {cp:?}: {e}")))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut header = [0u8; 16];
+    r.read_exact(&mut header)
+        .map_err(|_| CasError::Transport(format!("checkpoint {cp:?}: bad magic")))?;
+    if &header[0..8] != CKPT_MAGIC {
         return Err(CasError::Transport(format!("checkpoint {cp:?}: bad magic")));
     }
-    let expected = u64::from_le_bytes(buf[8..16].try_into().unwrap());
-    let mut mems: Vec<MemStorage> = (0..stripes.max(1)).map(|_| MemStorage::new()).collect();
-    let replayed = replay_into(&buf[16..], &mut mems) as u64;
-    if replayed != expected {
-        return Err(CasError::Transport(format!(
-            "checkpoint {cp:?}: {replayed} of {expected} records intact"
-        )));
+    let expected = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let corrupt = |replayed: u64| {
+        CasError::Transport(format!("checkpoint {cp:?}: {replayed} of {expected} records intact"))
+    };
+    let mut frame_header = [0u8; 8];
+    let mut body = Vec::new();
+    let mut replayed = 0u64;
+    loop {
+        match r.read_exact(&mut frame_header) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(CasError::Transport(format!("read {cp:?}: {e}"))),
+        }
+        let len = u32::from_le_bytes(frame_header[0..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(frame_header[4..8].try_into().unwrap());
+        body.resize(len, 0);
+        r.read_exact(&mut body).map_err(|_| corrupt(replayed))?;
+        if crc32fast::hash(&body) != crc {
+            return Err(corrupt(replayed));
+        }
+        let rec = LogRec::from_bytes(&body).map_err(|_| corrupt(replayed))?;
+        apply(rec)?;
+        replayed += 1;
     }
-    Ok(Some((mems, expected)))
+    if replayed != expected {
+        return Err(corrupt(replayed));
+    }
+    Ok(Some(expected))
 }
 
-/// Writes a full-state checkpoint of `mems` beside `path` (tmp-write →
-/// fsync → rename → dir fsync; see the module docs). Slots are tagged
-/// with their stripe id when the set is striped; the union min-age
-/// table is written ONCE (every stripe holds the same table, and
-/// replay re-fences all stripes from any min-age record). Returns the
-/// record count written.
-fn write_checkpoint_file(path: &std::path::Path, mems: &[&MemStorage]) -> CasResult<u64> {
-    let striped = mems.len() > 1;
-    let records: u64 = mems.iter().map(|m| m.len() as u64).sum::<u64>()
-        + mems[0].min_ages.len() as u64;
+/// Loads the checkpoint beside `path` into `stripes` fresh in-memory
+/// indexes (None = no checkpoint). Routing is by [`stripe_of`] over
+/// the CURRENT stripe count — checkpoints restripe exactly like logs.
+fn load_checkpoint(
+    path: &std::path::Path,
+    stripes: usize,
+) -> CasResult<Option<(Vec<MemStorage>, u64)>> {
+    let mut mems: Vec<MemStorage> = (0..stripes.max(1)).map(|_| MemStorage::new()).collect();
+    match stream_checkpoint(path, |rec| {
+        apply_rec_to_mems(rec, &mut mems);
+        Ok(())
+    })? {
+        Some(expected) => Ok(Some((mems, expected))),
+        None => Ok(None),
+    }
+}
+
+/// Page size for checkpoint-writer scans over a store's ordered index.
+const CKPT_SCAN_PAGE: usize = 1024;
+
+/// Writes a full-state checkpoint of `stores` beside `path` (tmp-write
+/// → fsync → rename → dir fsync; see the module docs). Slots are
+/// tagged with their stripe id when the set is striped; the union
+/// min-age table is written ONCE (every stripe holds the same table,
+/// and replay re-fences all stripes from any min-age record). Each
+/// slot is framed from the borrowed [`Arc<Slot>`] — never cloned — and
+/// the stores are walked in [`CKPT_SCAN_PAGE`]-sized ordered pages, so
+/// a disk-backed store larger than RAM checkpoints without ever
+/// materializing its map. Returns the record count written.
+fn write_checkpoint_file<S: Storage>(path: &std::path::Path, stores: &[&S]) -> CasResult<u64> {
+    assert!(!stores.is_empty(), "checkpoint needs at least one store (min-ages ride stores[0])");
+    let striped = stores.len() > 1;
+    let min_ages = stores[0].load_min_ages();
+    let records: u64 =
+        stores.iter().map(|s| s.len() as u64).sum::<u64>() + min_ages.len() as u64;
     let tmp = path.with_extension("ckpt.tmp");
     {
         let mut f =
@@ -824,20 +1027,24 @@ fn write_checkpoint_file(path: &std::path::Path, mems: &[&MemStorage]) -> CasRes
         f.write_all(CKPT_MAGIC).map_err(|e| CasError::Transport(e.to_string()))?;
         f.write_all(&records.to_le_bytes()).map_err(|e| CasError::Transport(e.to_string()))?;
         let mut frame = Vec::new();
-        for (i, mem) in mems.iter().enumerate() {
-            for (key, slot) in mem.scan(None, usize::MAX) {
-                let slot = (*slot).clone();
-                frame.clear();
-                let rec = if striped {
-                    LogRec::StripedSlot { stripe: i as u32, key, slot }
-                } else {
-                    LogRec::Slot { key, slot }
-                };
-                frame_record(&rec, &mut frame);
-                f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+        for (i, store) in stores.iter().enumerate() {
+            let stripe = if striped { Some(i as u32) } else { None };
+            let mut after: Option<Key> = None;
+            loop {
+                let page = store.try_scan(after.as_ref(), CKPT_SCAN_PAGE)?;
+                let full = page.len() == CKPT_SCAN_PAGE;
+                for (key, slot) in &page {
+                    frame.clear();
+                    frame_slot_record(stripe, key, slot, &mut frame);
+                    f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
+                }
+                after = page.into_iter().next_back().map(|(k, _)| k);
+                if !full {
+                    break;
+                }
             }
         }
-        for (proposer_id, min_age) in mems[0].load_min_ages() {
+        for (proposer_id, min_age) in min_ages {
             frame.clear();
             frame_record(&LogRec::MinAge { proposer_id, min_age }, &mut frame);
             f.write_all(&frame).map_err(|e| CasError::Transport(e.to_string()))?;
@@ -847,6 +1054,23 @@ fn write_checkpoint_file(path: &std::path::Path, mems: &[&MemStorage]) -> CasRes
     std::fs::rename(&tmp, ckpt_path(path)).map_err(|e| CasError::Transport(e.to_string()))?;
     sync_parent_dir(path)?;
     Ok(records)
+}
+
+/// Tags a record with its shared-WAL stripe id (`None` = sole-owner
+/// handle, record stays the legacy untagged kind — byte-compatible
+/// with pre-stripe logs).
+fn tag_record(rec: LogRec, stripe: Option<u32>) -> LogRec {
+    match stripe {
+        None => rec,
+        Some(stripe) => match rec {
+            LogRec::Slot { key, slot } => LogRec::StripedSlot { stripe, key, slot },
+            LogRec::Erase { key } => LogRec::StripedErase { stripe, key },
+            LogRec::MinAge { proposer_id, min_age } => {
+                LogRec::StripedMinAge { stripe, proposer_id, min_age }
+            }
+            tagged => tagged,
+        },
+    }
 }
 
 /// Renames a fresh, fsynced, EMPTY file over the WAL at `path` (tmp →
@@ -874,12 +1098,13 @@ impl FileStorage {
     /// Opens (or creates) a log with explicit group-commit options.
     pub fn open_with(path: impl Into<PathBuf>, opts: GroupCommitOpts) -> CasResult<Self> {
         let path = path.into();
-        let (mut mems, records, ckpt_records) = Self::replay_path(&path, 1)?;
-        let mem = mems.pop().expect("replay_log yields at least one stripe");
+        let (mut mems, records, ckpt_records, truncated) = Self::replay_path(&path, 1)?;
+        let mem = mems.pop().expect("replay yields at least one stripe");
         let file = Self::open_append(&path)?;
         let wal = Arc::new(Wal::new(file, opts));
         wal.replay_records.store(records as u64, Ordering::Relaxed);
         wal.ckpt_records.store(ckpt_records, Ordering::Relaxed);
+        wal.replay_truncated.store(truncated, Ordering::Relaxed);
         let mut s = FileStorage {
             path,
             wal,
@@ -920,7 +1145,7 @@ impl FileStorage {
         if stripes == 1 {
             return Ok(vec![Self::open_with(path, opts)?]);
         }
-        let (mems, mut records, mut ckpt_records) = Self::replay_path(&path, stripes)?;
+        let (mems, mut records, mut ckpt_records, truncated) = Self::replay_path(&path, stripes)?;
         // Live set: slots across stripes, plus the min-age table ONCE —
         // every stripe holds the same union table, so summing it per
         // stripe would inflate the estimate by (stripes−1)×min_ages and
@@ -937,6 +1162,7 @@ impl FileStorage {
         let wal = Arc::new(Wal::new(file, opts));
         wal.replay_records.store(records as u64, Ordering::Relaxed);
         wal.ckpt_records.store(ckpt_records, Ordering::Relaxed);
+        wal.replay_truncated.store(truncated, Ordering::Relaxed);
         Ok(mems
             .into_iter()
             .enumerate()
@@ -958,26 +1184,29 @@ impl FileStorage {
     /// Reads and replays the log at `path` (absent = empty stripes):
     /// stale compaction/checkpoint temp files are deleted, the
     /// checkpoint (if any) is loaded, and the WAL delta is replayed on
-    /// top. Returns the indexes, the WAL record count, and the
-    /// checkpoint record count.
+    /// top. A torn tail is dropped (and counted); mid-log corruption
+    /// is an open error (see the module docs). Returns the indexes,
+    /// the WAL record count, the checkpoint record count, and the
+    /// torn-tail bytes dropped.
     fn replay_path(
         path: &std::path::Path,
         stripes: usize,
-    ) -> CasResult<(Vec<MemStorage>, usize, u64)> {
+    ) -> CasResult<(Vec<MemStorage>, usize, u64, u64)> {
         remove_stale_tmps(path);
         let (mut mems, ckpt_records) = match load_checkpoint(path, stripes)? {
             Some((mems, n)) => (mems, n),
             None => ((0..stripes.max(1)).map(|_| MemStorage::new()).collect(), 0),
         };
         if !path.exists() {
-            return Ok((mems, 0, ckpt_records));
+            return Ok((mems, 0, ckpt_records, 0));
         }
         let mut buf = Vec::new();
         std::fs::File::open(path)
             .and_then(|mut f| f.read_to_end(&mut buf))
             .map_err(|e| CasError::Transport(format!("open {path:?}: {e}")))?;
-        let records = replay_into(&buf, &mut mems);
-        Ok((mems, records, ckpt_records))
+        let outcome = replay_into(&buf, &mut mems);
+        check_mid_log_corruption(path, &outcome)?;
+        Ok((mems, outcome.records, ckpt_records, outcome.truncated_bytes))
     }
 
     /// Opens (creating if needed) the log file for appending.
@@ -1013,17 +1242,7 @@ impl FileStorage {
                 self.checkpoint()?;
             }
         }
-        let rec = match self.stripe {
-            None => rec,
-            Some(stripe) => match rec {
-                LogRec::Slot { key, slot } => LogRec::StripedSlot { stripe, key, slot },
-                LogRec::Erase { key } => LogRec::StripedErase { stripe, key },
-                LogRec::MinAge { proposer_id, min_age } => {
-                    LogRec::StripedMinAge { stripe, proposer_id, min_age }
-                }
-                tagged => tagged,
-            },
-        };
+        let rec = tag_record(rec, self.stripe);
         let mut frame = Vec::new();
         frame_record(&rec, &mut frame);
         let seq = self.wal.append(&frame, self.fsync)?;
@@ -1164,6 +1383,639 @@ impl Storage for FileStorage {
 
     fn len(&self) -> usize {
         self.mem.len()
+    }
+}
+
+/// Storage backend selector for a node (`backend mem|disk` config
+/// directive / `--backend` CLI flag). Both are durable through the
+/// same WAL + checkpoint lifecycle; they differ in where *slots* live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// [`FileStorage`]: slots in RAM-resident maps rebuilt at open.
+    /// Fastest reads; the dataset is capped by memory.
+    #[default]
+    Mem,
+    /// [`DiskStorage`]: slots in an on-disk keyed segment behind a
+    /// bounded resident cache; the keyspace can exceed RAM.
+    Disk,
+}
+
+impl Backend {
+    /// Parses the config/CLI spelling (`mem` / `disk`).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "mem" => Some(Backend::Mem),
+            "disk" => Some(Backend::Disk),
+            _ => None,
+        }
+    }
+
+    /// The config/CLI spelling (also the `Status` export value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Mem => "mem",
+            Backend::Disk => "disk",
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Default cap on slots kept resident in a [`DiskStorage`] cache (per
+/// stripe handle).
+pub const DISK_CACHE_SLOTS: usize = 65_536;
+
+/// Location of one slot frame inside a [`DiskStorage`] segment file.
+#[derive(Debug, Clone, Copy)]
+struct SegLoc {
+    /// Byte offset of the frame (`len|crc|body`) in the segment.
+    offset: u64,
+    /// Whole-frame length in bytes.
+    len: u32,
+}
+
+/// The open segment file behind one [`DiskStorage`] handle. Opened
+/// read+append: reads seek freely, writes always land at the end
+/// (`O_APPEND`), so `len` tracks the next frame's offset even after a
+/// read seeked elsewhere.
+struct SegFile {
+    file: std::fs::File,
+    /// Bytes in the segment = offset of the next appended frame.
+    len: u64,
+}
+
+/// Bounded FIFO cache of resident slots in front of a segment.
+struct SlotCache {
+    budget: usize,
+    map: HashMap<Key, Arc<Slot>>,
+    /// Insertion order for FIFO eviction. Erased keys leave stale
+    /// entries behind (popped harmlessly, compacted when they
+    /// dominate) so `remove` stays O(1).
+    order: VecDeque<Key>,
+}
+
+impl SlotCache {
+    fn new(budget: usize) -> Self {
+        SlotCache { budget, map: HashMap::new(), order: VecDeque::new() }
+    }
+
+    fn get(&self, key: &Key) -> Option<Arc<Slot>> {
+        self.map.get(key).cloned()
+    }
+
+    fn put(&mut self, key: &Key, slot: Arc<Slot>) {
+        if self.budget == 0 {
+            return;
+        }
+        if self.map.insert(key.clone(), slot).is_none() {
+            self.order.push_back(key.clone());
+        }
+        while self.map.len() > self.budget {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        if self.order.len() > self.map.len().max(self.budget) * 2 {
+            let map = &self.map;
+            self.order.retain(|k| map.contains_key(k));
+        }
+    }
+
+    fn remove(&mut self, key: &Key) {
+        self.map.remove(key);
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Segment path for stripe `i` beside the WAL: `<stem>.seg<i>`.
+fn seg_file_path(path: &std::path::Path, stripe: usize) -> PathBuf {
+    path.with_extension(format!("seg{stripe}"))
+}
+
+/// Opens a finished segment for read+append.
+fn open_segment(path: &std::path::Path) -> CasResult<std::fs::File> {
+    std::fs::OpenOptions::new()
+        .read(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| CasError::Transport(format!("segment {path:?}: {e}")))
+}
+
+/// Deletes this log's segment files (and their build tmps). Segments
+/// are DERIVED state — rebuilt from checkpoint + WAL at every open —
+/// so leftovers from a crashed install or a shrunk stripe count are
+/// never read; without cleanup they only leak disk.
+fn remove_stale_segments(path: &std::path::Path) {
+    let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { return };
+    let prefix = format!("{stem}.seg");
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => std::path::Path::new("."),
+    };
+    let Ok(entries) = std::fs::read_dir(parent) else { return };
+    for entry in entries.flatten() {
+        if entry.file_name().to_str().is_some_and(|n| n.starts_with(&prefix)) {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+/// Builds one fresh segment through the checkpoint's own crash dance:
+/// records stream into `<seg>.tmp`, then `finish` fsyncs and renames
+/// it into place (the caller dir-fsyncs once per set).
+struct SegBuilder {
+    tmp: PathBuf,
+    dst: PathBuf,
+    file: std::io::BufWriter<std::fs::File>,
+    len: u64,
+    index: BTreeMap<Key, SegLoc>,
+    live_bytes: u64,
+}
+
+/// A renamed-into-place segment, ready to open.
+struct FinishedSeg {
+    path: PathBuf,
+    index: BTreeMap<Key, SegLoc>,
+    live_bytes: u64,
+    len: u64,
+}
+
+impl SegBuilder {
+    fn create(dst: PathBuf) -> CasResult<Self> {
+        let tmp = PathBuf::from(format!("{}.tmp", dst.display()));
+        let file = std::fs::File::create(&tmp)
+            .map_err(|e| CasError::Transport(format!("segment {tmp:?}: {e}")))?;
+        Ok(SegBuilder {
+            tmp,
+            dst,
+            file: std::io::BufWriter::new(file),
+            len: 0,
+            index: BTreeMap::new(),
+            live_bytes: 0,
+        })
+    }
+
+    fn put(&mut self, key: &Key, slot: &Slot) -> CasResult<()> {
+        let mut frame = Vec::new();
+        frame_slot_record(None, key, slot, &mut frame);
+        self.file
+            .write_all(&frame)
+            .map_err(|e| CasError::Transport(format!("segment {:?}: {e}", self.tmp)))?;
+        let loc = SegLoc { offset: self.len, len: frame.len() as u32 };
+        self.len += frame.len() as u64;
+        if let Some(old) = self.index.insert(key.clone(), loc) {
+            self.live_bytes -= old.len as u64;
+        }
+        self.live_bytes += loc.len as u64;
+        Ok(())
+    }
+
+    fn erase(&mut self, key: &Key) {
+        if let Some(old) = self.index.remove(key) {
+            self.live_bytes -= old.len as u64;
+        }
+    }
+
+    fn finish(mut self) -> CasResult<FinishedSeg> {
+        let err = |e: std::io::Error| CasError::Transport(format!("segment {:?}: {e}", self.tmp));
+        self.file.flush().map_err(err)?;
+        self.file.get_ref().sync_all().map_err(err)?;
+        drop(self.file);
+        std::fs::rename(&self.tmp, &self.dst)
+            .map_err(|e| CasError::Transport(format!("segment {:?}: {e}", self.dst)))?;
+        Ok(FinishedSeg { path: self.dst, index: self.index, live_bytes: self.live_bytes, len: self.len })
+    }
+}
+
+/// Routes one replayed record into per-stripe segment builders (the
+/// disk-backed open path) — same routing rules as
+/// [`apply_rec_to_mems`], with the min-age table kept once for the
+/// whole set (it is identical on every stripe).
+fn apply_rec_to_builders(
+    rec: LogRec,
+    builders: &mut [SegBuilder],
+    min_ages: &mut BTreeMap<u64, u64>,
+) -> CasResult<()> {
+    let n = builders.len();
+    match rec {
+        LogRec::Slot { key, slot } | LogRec::StripedSlot { key, slot, .. } => {
+            builders[stripe_of(&key, n)].put(&key, &slot)
+        }
+        LogRec::Erase { key } | LogRec::StripedErase { key, .. } => {
+            builders[stripe_of(&key, n)].erase(&key);
+            Ok(())
+        }
+        LogRec::MinAge { proposer_id, min_age }
+        | LogRec::StripedMinAge { proposer_id, min_age, .. } => {
+            min_ages.insert(proposer_id, min_age);
+            Ok(())
+        }
+    }
+}
+
+/// Disk-backed keyed storage ([`Backend::Disk`]; see the module docs):
+/// slots live in an append-only per-stripe segment file behind an
+/// in-memory **ordered key index** (key → frame offset) and a bounded
+/// FIFO slot cache, so the keyspace can exceed RAM. Durability rides
+/// the same group-commit [`Wal`] and checkpoint lifecycle as
+/// [`FileStorage`]; the segment itself is derived state, rebuilt at
+/// every open by streaming the checkpoint (snapshot install) and
+/// replaying the WAL delta on top.
+pub struct DiskStorage {
+    /// WAL path (same layout as [`FileStorage`]).
+    path: PathBuf,
+    /// This handle's segment file (`<stem>.seg<i>`).
+    seg_path: PathBuf,
+    wal: Arc<Wal>,
+    /// Ordered key index: key → latest slot frame in the segment.
+    /// Keys and offsets are resident; slot bodies are not.
+    index: BTreeMap<Key, SegLoc>,
+    /// Bytes of live (indexed) frames — drives segment rewrite.
+    live_bytes: u64,
+    /// Per-proposer min-age table (the meta keyspace): O(proposers),
+    /// fully resident; durable via the WAL + checkpoint like any
+    /// record.
+    min_ages: BTreeMap<u64, u64>,
+    seg: Mutex<SegFile>,
+    cache: Mutex<SlotCache>,
+    records: usize,
+    /// fsync every WAL write (safe default; segment writes never fsync
+    /// — the segment is rebuilt from the WAL + checkpoint at open).
+    pub fsync: bool,
+    /// Automatic checkpoint cadence (see [`FileStorage::checkpoint`]'s
+    /// notes — identical semantics).
+    pub checkpoint: CheckpointOpts,
+    /// `Some(i)` when this handle is stripe `i` of a shared-WAL set.
+    stripe: Option<u32>,
+}
+
+impl DiskStorage {
+    /// Opens (or creates) a sole-owner disk-backed store at `path`
+    /// with at most `cache_slots` resident slots.
+    pub fn open(path: impl Into<PathBuf>, cache_slots: usize) -> CasResult<Self> {
+        let mut handles =
+            Self::open_striped(path, GroupCommitOpts::default(), 1, cache_slots)?;
+        Ok(handles.pop().expect("open_striped yields at least one handle"))
+    }
+
+    /// Opens ONE WAL shared by `stripes` disk-backed handles (the
+    /// [`FileStorage::open_striped`] shape: every handle appends into
+    /// a single group-commit [`Wal`], each indexes only its own keys).
+    /// Open rebuilds each stripe's segment fresh: the checkpoint (if
+    /// any) streams straight into the segments — the snapshot-install
+    /// path, tmp → fsync → rename → dir-fsync — and the WAL delta
+    /// replays on top with the log's replay rules (torn tail = clean
+    /// counted stop, mid-log corruption = open error). The slot map is
+    /// never materialized in memory.
+    pub fn open_striped(
+        path: impl Into<PathBuf>,
+        opts: GroupCommitOpts,
+        stripes: usize,
+        cache_slots: usize,
+    ) -> CasResult<Vec<DiskStorage>> {
+        assert!(stripes >= 1, "stripe count must be at least 1");
+        let path = path.into();
+        remove_stale_tmps(&path);
+        remove_stale_segments(&path);
+        let n = stripes.max(1);
+        let mut builders = (0..n)
+            .map(|i| SegBuilder::create(seg_file_path(&path, i)))
+            .collect::<CasResult<Vec<_>>>()?;
+        let mut min_ages = BTreeMap::new();
+        let ckpt_records = stream_checkpoint(&path, |rec| {
+            apply_rec_to_builders(rec, &mut builders, &mut min_ages)
+        })?
+        .unwrap_or(0);
+        let (wal_records, truncated) = if path.exists() {
+            let mut buf = Vec::new();
+            std::fs::File::open(&path)
+                .and_then(|mut f| f.read_to_end(&mut buf))
+                .map_err(|e| CasError::Transport(format!("open {path:?}: {e}")))?;
+            let outcome = replay_frames(&buf, |rec| {
+                apply_rec_to_builders(rec, &mut builders, &mut min_ages)
+            })?;
+            check_mid_log_corruption(&path, &outcome)?;
+            (outcome.records, outcome.truncated_bytes)
+        } else {
+            (0, 0)
+        };
+        let finished =
+            builders.into_iter().map(SegBuilder::finish).collect::<CasResult<Vec<_>>>()?;
+        sync_parent_dir(&path)?;
+        let file = FileStorage::open_append(&path)?;
+        let wal = Arc::new(Wal::new(file, opts));
+        wal.replay_records.store(wal_records as u64, Ordering::Relaxed);
+        wal.ckpt_records.store(ckpt_records, Ordering::Relaxed);
+        wal.replay_truncated.store(truncated, Ordering::Relaxed);
+        finished
+            .into_iter()
+            .enumerate()
+            .map(|(i, fin)| {
+                let file = open_segment(&fin.path)?;
+                Ok(DiskStorage {
+                    path: path.clone(),
+                    seg_path: fin.path,
+                    wal: Arc::clone(&wal),
+                    index: fin.index,
+                    live_bytes: fin.live_bytes,
+                    min_ages: min_ages.clone(),
+                    seg: Mutex::new(SegFile { file, len: fin.len }),
+                    cache: Mutex::new(SlotCache::new(cache_slots)),
+                    records: wal_records,
+                    fsync: true,
+                    checkpoint: CheckpointOpts::default(),
+                    stripe: (n > 1).then_some(i as u32),
+                })
+            })
+            .collect()
+    }
+
+    /// This handle's stripe id within a shared-WAL set (`None` for a
+    /// sole-owner store).
+    pub fn stripe(&self) -> Option<u32> {
+        self.stripe
+    }
+
+    /// Slots currently resident in the cache (`Status` export
+    /// `resident_keys=`).
+    pub fn resident_keys(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// 4 KiB pages in the segment file (`Status` export
+    /// `index_pages=`).
+    pub fn index_pages(&self) -> u64 {
+        self.seg.lock().unwrap().len.div_ceil(4096)
+    }
+
+    /// WAL counters (see [`FileStorage::wal_stats`]).
+    pub fn wal_stats(&self) -> WalStats {
+        self.wal.stats()
+    }
+
+    /// Checkpoint / replay counters (see [`FileStorage::ckpt_stats`]).
+    pub fn ckpt_stats(&self) -> CkptStats {
+        self.wal.ckpt_stats()
+    }
+
+    /// True when WAL growth since the last checkpoint crosses `opts`.
+    pub fn checkpoint_due(&self, opts: &CheckpointOpts) -> bool {
+        opts.due(
+            self.wal.since_ckpt_records.load(Ordering::Relaxed),
+            self.wal.since_ckpt_bytes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Enqueues one WAL record (stripe-tagged for shared sets); the
+    /// returned ticket must be waited on. Mirrors
+    /// [`FileStorage`]'s append path, auto-checkpoint included.
+    fn append_wal_deferred(&mut self, rec: LogRec) -> CasResult<Persist> {
+        // Sole-owner auto-checkpoint BEFORE framing the new record —
+        // same ordering argument as FileStorage::append_deferred.
+        if self.stripe.is_none() {
+            let due = self.checkpoint.due(
+                self.wal.since_ckpt_records.load(Ordering::Relaxed),
+                self.wal.since_ckpt_bytes.load(Ordering::Relaxed),
+            );
+            if due {
+                self.checkpoint()?;
+            }
+        }
+        let rec = tag_record(rec, self.stripe);
+        let mut frame = Vec::new();
+        frame_record(&rec, &mut frame);
+        let seq = self.wal.append(&frame, self.fsync)?;
+        self.records += 1;
+        Ok(Persist::pending(Arc::clone(&self.wal), seq))
+    }
+
+    /// Appends one WAL record durably (enqueue + wait).
+    fn append_wal(&mut self, rec: LogRec) -> CasResult<()> {
+        self.append_wal_deferred(rec)?.wait()
+    }
+
+    /// Appends one slot frame to the segment and points the index at
+    /// it. No fsync: the WAL carries durability, the segment is
+    /// rebuilt at open.
+    fn seg_put(&mut self, key: &Key, slot: &Slot) -> CasResult<()> {
+        let mut frame = Vec::new();
+        frame_slot_record(None, key, slot, &mut frame);
+        let loc = {
+            let mut seg = self.seg.lock().unwrap();
+            seg.file
+                .write_all(&frame)
+                .map_err(|e| CasError::Transport(format!("segment {:?}: {e}", self.seg_path)))?;
+            let loc = SegLoc { offset: seg.len, len: frame.len() as u32 };
+            seg.len += frame.len() as u64;
+            loc
+        };
+        if let Some(old) = self.index.insert(key.clone(), loc) {
+            self.live_bytes -= old.len as u64;
+        }
+        self.live_bytes += loc.len as u64;
+        Ok(())
+    }
+
+    /// Reads and decodes one slot frame from the segment, verifying
+    /// its CRC.
+    fn read_slot(&self, loc: SegLoc) -> CasResult<Slot> {
+        let mut frame = vec![0u8; loc.len as usize];
+        {
+            let mut seg = self.seg.lock().unwrap();
+            seg.file
+                .seek(SeekFrom::Start(loc.offset))
+                .and_then(|_| seg.file.read_exact(&mut frame))
+                .map_err(|e| {
+                    CasError::Transport(format!(
+                        "segment {:?} read at {}: {e}",
+                        self.seg_path, loc.offset
+                    ))
+                })?;
+        }
+        let corrupt = || {
+            CasError::Transport(format!(
+                "segment {:?}: corrupt frame at {}",
+                self.seg_path, loc.offset
+            ))
+        };
+        if frame.len() < 8 {
+            return Err(corrupt());
+        }
+        let crc = u32::from_le_bytes(frame[4..8].try_into().unwrap());
+        let body = &frame[8..];
+        if crc32fast::hash(body) != crc {
+            return Err(corrupt());
+        }
+        match LogRec::from_bytes(body) {
+            Ok(LogRec::Slot { slot, .. }) | Ok(LogRec::StripedSlot { slot, .. }) => Ok(slot),
+            _ => Err(corrupt()),
+        }
+    }
+
+    /// Writes a full-state checkpoint and swaps in a fresh empty WAL —
+    /// sole-owner handles only, exactly like
+    /// [`FileStorage::checkpoint`]; shared striped handles go through
+    /// `StripedAcceptor::compact`.
+    pub fn checkpoint(&mut self) -> CasResult<()> {
+        if self.stripe.is_some() {
+            return Err(CasError::Transport(
+                "striped shared-WAL handles checkpoint via StripedAcceptor::compact".into(),
+            ));
+        }
+        Self::checkpoint_handles(&mut [self])
+    }
+
+    /// The checkpoint core for a disk-backed set (the caller holds
+    /// every handle exclusively — see
+    /// [`FileStorage::checkpoint_handles`], same contract and steps).
+    /// The checkpoint writer pages through each handle's ordered index
+    /// (never materializing the map); afterwards, any segment whose
+    /// dead bytes dominate is rewritten to its live fold while still
+    /// quiesced.
+    pub(crate) fn checkpoint_handles(handles: &mut [&mut DiskStorage]) -> CasResult<()> {
+        assert!(!handles.is_empty(), "checkpoint needs at least one handle");
+        let wal = Arc::clone(&handles[0].wal);
+        debug_assert!(
+            handles.iter().all(|h| Arc::ptr_eq(&h.wal, &wal)),
+            "checkpoint_handles must cover exactly one shared-WAL set"
+        );
+        wal.flush_all()?;
+        let path = handles[0].path.clone();
+        let records = {
+            let stores: Vec<&DiskStorage> = handles.iter().map(|h| &**h).collect();
+            write_checkpoint_file(&path, &stores)?
+        };
+        swap_in_empty_wal(&path)?;
+        *wal.file.lock().unwrap() = FileStorage::open_append(&path)?;
+        for h in handles.iter_mut() {
+            h.records = 0;
+        }
+        wal.note_checkpoint(records);
+        for h in handles.iter_mut() {
+            let seg_len = h.seg.lock().unwrap().len;
+            if seg_len > (64 << 10) && seg_len > 4 * h.live_bytes.max(1) {
+                h.rewrite_segment()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Rewrites the segment to exactly its live frames (dead versions
+    /// and erased keys dropped), through the same tmp → fsync → rename
+    /// → dir-fsync dance as a build.
+    fn rewrite_segment(&mut self) -> CasResult<()> {
+        let mut builder = SegBuilder::create(self.seg_path.clone())?;
+        let mut after: Option<Key> = None;
+        loop {
+            let page = self.try_scan(after.as_ref(), CKPT_SCAN_PAGE)?;
+            let full = page.len() == CKPT_SCAN_PAGE;
+            for (key, slot) in &page {
+                builder.put(key, slot)?;
+            }
+            after = page.into_iter().next_back().map(|(k, _)| k);
+            if !full {
+                break;
+            }
+        }
+        let fin = builder.finish()?;
+        sync_parent_dir(&self.seg_path)?;
+        let file = open_segment(&fin.path)?;
+        self.index = fin.index;
+        self.live_bytes = fin.live_bytes;
+        *self.seg.lock().unwrap() = SegFile { file, len: fin.len };
+        Ok(())
+    }
+}
+
+impl Storage for DiskStorage {
+    /// Loads through the bounded cache, falling back to a segment
+    /// read. A segment read failure is unrecoverable local corruption
+    /// and panics: returning `None` would report the register as
+    /// never-promised — a safety violation — while a crashed acceptor
+    /// is a failure mode the protocol already tolerates.
+    fn load(&self, key: &Key) -> Option<Slot> {
+        let loc = *self.index.get(key)?;
+        if let Some(cached) = self.cache.lock().unwrap().get(key) {
+            return Some((*cached).clone());
+        }
+        let slot = self.read_slot(loc).unwrap_or_else(|e| panic!("disk backend load: {e}"));
+        self.cache.lock().unwrap().put(key, Arc::new(slot.clone()));
+        Some(slot)
+    }
+
+    fn store(&mut self, key: &Key, slot: &Slot) -> CasResult<()> {
+        self.store_deferred(key, slot)?.wait()
+    }
+
+    fn store_deferred(&mut self, key: &Key, slot: &Slot) -> CasResult<Persist> {
+        let ticket =
+            self.append_wal_deferred(LogRec::Slot { key: key.clone(), slot: slot.clone() })?;
+        self.seg_put(key, slot)?;
+        self.cache.lock().unwrap().put(key, Arc::new(slot.clone()));
+        Ok(ticket)
+    }
+
+    fn read_fence(&self) -> Persist {
+        match self.wal.tail_pending() {
+            Some(seq) => Persist::pending(Arc::clone(&self.wal), seq),
+            None => Persist::done(),
+        }
+    }
+
+    fn erase(&mut self, key: &Key) -> CasResult<()> {
+        self.append_wal(LogRec::Erase { key: key.clone() })?;
+        if let Some(old) = self.index.remove(key) {
+            self.live_bytes -= old.len as u64;
+        }
+        self.cache.lock().unwrap().remove(key);
+        Ok(())
+    }
+
+    /// See [`DiskStorage::load`] for why a read failure panics here.
+    fn scan(&self, after: Option<&Key>, limit: usize) -> Vec<(Key, Arc<Slot>)> {
+        self.try_scan(after, limit).unwrap_or_else(|e| panic!("disk backend scan: {e}"))
+    }
+
+    /// Pages straight off the ordered key index, reading each slot
+    /// from the segment and deliberately bypassing the cache: a
+    /// `Dump`/GC walk over a huge keyspace must not evict the hot set
+    /// (and never materializes more than `limit` slots).
+    fn try_scan(&self, after: Option<&Key>, limit: usize) -> CasResult<Vec<(Key, Arc<Slot>)>> {
+        let range = match after {
+            Some(k) => self
+                .index
+                .range::<Key, _>((std::ops::Bound::Excluded(k), std::ops::Bound::Unbounded)),
+            None => self.index.range::<Key, _>(..),
+        };
+        let mut out = Vec::new();
+        for (key, loc) in range.take(limit) {
+            out.push((key.clone(), Arc::new(self.read_slot(*loc)?)));
+        }
+        Ok(out)
+    }
+
+    fn load_min_ages(&self) -> BTreeMap<u64, u64> {
+        self.min_ages.clone()
+    }
+
+    fn store_min_age(&mut self, proposer_id: u64, min_age: u64) -> CasResult<()> {
+        self.append_wal(LogRec::MinAge { proposer_id, min_age })?;
+        self.min_ages.insert(proposer_id, min_age);
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
     }
 }
 
@@ -1315,7 +2167,36 @@ mod tests {
     }
 
     #[test]
-    fn file_storage_detects_corruption() {
+    fn mid_log_corruption_with_intact_records_after_is_an_open_error() {
+        // The bit flip lands in the FIRST record's body while two
+        // intact records follow: acked state sits beyond the damage.
+        // Pre-fix, replay stopped silently at the flip and served a
+        // state missing "b" and "c"; now open must refuse.
+        let dir = TempDir::new("fs").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"a".to_string(), &slot(1)).unwrap();
+            s.store(&"b".to_string(), &slot(2)).unwrap();
+            s.store(&"c".to_string(), &slot(3)).unwrap();
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8 + 2] ^= 0x01; // inside record 1's body
+        std::fs::write(&path, &bytes).unwrap();
+        let err = FileStorage::open(&path).expect_err("mid-log corruption must not half-load");
+        assert!(
+            err.to_string().contains("intact records after it"),
+            "error should name the failure mode, got: {err}"
+        );
+        // The disk backend applies the same replay rules.
+        assert!(DiskStorage::open(&path, DISK_CACHE_SLOTS).is_err());
+    }
+
+    #[test]
+    fn corrupt_final_record_is_a_torn_tail_counted_not_fatal() {
+        // The SAME flip in the last record's body — nothing intact
+        // after it — is indistinguishable from a crash mid-append:
+        // a clean stop, with the dropped bytes counted.
         let dir = TempDir::new("fs").unwrap();
         let path = dir.file("acceptor.log");
         {
@@ -1323,14 +2204,178 @@ mod tests {
             s.store(&"a".to_string(), &slot(1)).unwrap();
             s.store(&"b".to_string(), &slot(2)).unwrap();
         }
-        // Flip a byte in the middle of the file (inside record bodies).
-        let mut bytes = std::fs::read(&path).unwrap();
-        let mid = bytes.len() / 2;
-        bytes[mid] ^= 0xff;
+        let bytes = std::fs::read(&path).unwrap();
+        let len1 = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let tail = bytes.len() - (8 + len1);
+        let mut bytes = bytes;
+        bytes[8 + len1 + 8 + 2] ^= 0x01; // inside the LAST record's body
         std::fs::write(&path, &bytes).unwrap();
-        // Replay must stop at the corrupt record, not crash.
         let s = FileStorage::open(&path).unwrap();
-        assert!(s.len() <= 2);
+        assert_eq!(s.load(&"a".to_string()), Some(slot(1)), "intact prefix replays");
+        assert!(s.load(&"b".to_string()).is_none(), "corrupt tail record dropped");
+        assert_eq!(
+            s.ckpt_stats().replay_truncated_bytes,
+            tail as u64,
+            "dropped tail bytes must be counted"
+        );
+    }
+
+    #[test]
+    fn torn_tail_bytes_are_counted() {
+        let dir = TempDir::new("fs").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.store(&"k".to_string(), &slot(5)).unwrap();
+            assert_eq!(s.ckpt_stats().replay_truncated_bytes, 0, "clean log counts zero");
+        }
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[200, 0, 0, 0, 1, 2, 3]).unwrap();
+        }
+        let s = FileStorage::open(&path).unwrap();
+        assert_eq!(s.load(&"k".to_string()), Some(slot(5)));
+        assert_eq!(s.ckpt_stats().replay_truncated_bytes, 7);
+    }
+
+    #[test]
+    fn frame_slot_record_matches_owned_record_bytes() {
+        // The checkpoint writer frames from the borrowed slot; the
+        // bytes must be identical to framing the owning LogRec (replay
+        // treats both the same).
+        for (stripe, rec) in [
+            (None, LogRec::Slot { key: "k".into(), slot: leased_slot(3, 9, 5_000_000) }),
+            (Some(7), LogRec::StripedSlot { stripe: 7, key: "k".into(), slot: slot(4) }),
+        ] {
+            let mut owned = Vec::new();
+            frame_record(&rec, &mut owned);
+            let (key, slot) = match &rec {
+                LogRec::Slot { key, slot } | LogRec::StripedSlot { key, slot, .. } => (key, slot),
+                _ => unreachable!(),
+            };
+            let mut borrowed = Vec::new();
+            frame_slot_record(stripe, key, slot, &mut borrowed);
+            assert_eq!(owned, borrowed, "stripe {stripe:?}");
+        }
+    }
+
+    #[test]
+    fn disk_storage_store_load_scan_erase_survive_reopen() {
+        let dir = TempDir::new("disk").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = DiskStorage::open(&path, DISK_CACHE_SLOTS).unwrap();
+            s.fsync = false;
+            for i in 0..20u64 {
+                s.store(&format!("k{i:02}"), &slot(i)).unwrap();
+            }
+            s.store(&"k05".to_string(), &leased_slot(99, 7, 9_000_000)).unwrap();
+            s.erase(&"k19".to_string()).unwrap();
+            s.store_min_age(3, 11).unwrap();
+            assert_eq!(s.len(), 19);
+            assert_eq!(s.load(&"k05".to_string()), Some(leased_slot(99, 7, 9_000_000)));
+            let page = s.scan(Some(&"k17".to_string()), 10);
+            assert_eq!(page.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(), vec!["k18"]);
+        }
+        let s = DiskStorage::open(&path, DISK_CACHE_SLOTS).unwrap();
+        assert_eq!(s.len(), 19, "reopen rebuilds the segment from the WAL");
+        assert_eq!(s.load(&"k05".to_string()), Some(leased_slot(99, 7, 9_000_000)));
+        assert!(s.load(&"k19".to_string()).is_none(), "erase replayed");
+        assert_eq!(s.load_min_ages().get(&3), Some(&11));
+        assert_eq!(s.load(&"k00".to_string()), Some(slot(0)));
+    }
+
+    #[test]
+    fn disk_storage_installs_mem_backend_checkpoint() {
+        // Snapshot install across backends: a checkpoint written by
+        // the mem backend streams straight into a disk backend's
+        // segments (and vice-versa state flows back) — the .ckpt file
+        // IS the install payload.
+        let dir = TempDir::new("disk-install").unwrap();
+        let path = dir.file("acceptor.log");
+        {
+            let mut s = FileStorage::open(&path).unwrap();
+            s.fsync = false;
+            for i in 0..10u64 {
+                s.store(&format!("k{i}"), &slot(i)).unwrap();
+            }
+            s.store_min_age(7, 4).unwrap();
+            s.checkpoint().unwrap();
+            s.store(&"delta".to_string(), &slot(42)).unwrap(); // WAL delta on top
+        }
+        let s = DiskStorage::open(&path, DISK_CACHE_SLOTS).unwrap();
+        assert_eq!(s.len(), 11);
+        assert_eq!(s.load(&"k3".to_string()), Some(slot(3)), "checkpointed slot installed");
+        assert_eq!(s.load(&"delta".to_string()), Some(slot(42)), "delta replayed on top");
+        assert_eq!(s.load_min_ages().get(&7), Some(&4), "meta keyspace installed");
+        assert_eq!(s.ckpt_stats().checkpoint_records, 11, "10 slots + 1 fence");
+    }
+
+    #[test]
+    fn disk_striped_handles_share_one_wal_and_filter_replay() {
+        let dir = TempDir::new("disk-striped").unwrap();
+        let path = dir.file("acceptor.log");
+        let keys: Vec<Key> = (0..4).map(|s| key_on_stripe(s, 4, 1)).collect();
+        {
+            let mut stripes =
+                DiskStorage::open_striped(&path, GroupCommitOpts::default(), 4, 128).unwrap();
+            let tickets: Vec<Persist> = (0..4)
+                .map(|s| stripes[s].store_deferred(&keys[s], &slot(s as u64 + 1)).unwrap())
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
+            }
+            let stats = stripes[0].wal_stats();
+            assert_eq!(stats.appends, 4);
+            assert_eq!(stats.fsyncs, 1, "four stripes, one shared fsync");
+        }
+        let stripes =
+            DiskStorage::open_striped(&path, GroupCommitOpts::default(), 4, 128).unwrap();
+        for (s, stripe) in stripes.iter().enumerate() {
+            assert_eq!(stripe.stripe(), Some(s as u32));
+            assert_eq!(stripe.load(&keys[s]), Some(slot(s as u64 + 1)));
+            assert_eq!(stripe.len(), 1, "stripe {s} must hold ONLY its own key");
+        }
+    }
+
+    #[test]
+    fn disk_cache_budget_bounds_resident_slots() {
+        let dir = TempDir::new("disk-cache").unwrap();
+        let path = dir.file("acceptor.log");
+        let mut s = DiskStorage::open(&path, 8).unwrap();
+        s.fsync = false;
+        for i in 0..100u64 {
+            s.store(&format!("k{i:03}"), &slot(i)).unwrap();
+        }
+        assert!(s.resident_keys() <= 8, "cache exceeded budget: {}", s.resident_keys());
+        // Every key still loads (from the segment), scans never cache.
+        for i in (0..100u64).step_by(17) {
+            assert_eq!(s.load(&format!("k{i:03}")), Some(slot(i)));
+            assert!(s.resident_keys() <= 8);
+        }
+        assert_eq!(s.scan(None, 1000).len(), 100);
+        assert!(s.resident_keys() <= 8, "a full scan must not blow the cache");
+        assert!(s.index_pages() > 0);
+    }
+
+    #[test]
+    fn disk_checkpoint_rewrites_dead_segment_bytes() {
+        let dir = TempDir::new("disk-gc").unwrap();
+        let path = dir.file("acceptor.log");
+        let mut s = DiskStorage::open(&path, 64).unwrap();
+        s.fsync = false;
+        for i in 0..3000u64 {
+            s.store(&"hot".to_string(), &slot(i)).unwrap();
+        }
+        let before = std::fs::metadata(dir.file("acceptor.seg0")).unwrap().len();
+        s.checkpoint().unwrap();
+        let after = std::fs::metadata(dir.file("acceptor.seg0")).unwrap().len();
+        assert!(after < before / 10, "segment rewrite shrank {before} -> {after}");
+        assert_eq!(s.load(&"hot".to_string()), Some(slot(2999)));
+        // And the rebuilt index still reads correctly after a reopen.
+        drop(s);
+        let s = DiskStorage::open(&path, 64).unwrap();
+        assert_eq!(s.load(&"hot".to_string()), Some(slot(2999)));
     }
 
     #[test]

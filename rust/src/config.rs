@@ -16,6 +16,7 @@
 //! max_deferred 256    # optional: per-connection deferred-reply cap (default: 256)
 //! checkpoint_records 100000   # optional: auto-checkpoint after N WAL records
 //! checkpoint_bytes 67108864   # optional: auto-checkpoint after N WAL bytes
+//! backend disk        # optional: slot storage backend, mem|disk (default: mem)
 //! ```
 //!
 //! The same `id=addr` pairs are accepted from the command line:
@@ -55,9 +56,18 @@
 //! full-state checkpoint beside the log and swaps in a truncated WAL —
 //! restart then replays only the delta. Both default to 0 (no automatic
 //! checkpoints). Ignored by in-memory nodes.
+//!
+//! `backend` picks where a data-dir node keeps its slots: `mem`
+//! (default) rebuilds resident maps from checkpoint + WAL replay —
+//! fastest, but the dataset is capped by RAM; `disk` keeps slots in
+//! per-stripe segment files behind a bounded cache
+//! ([`crate::acceptor::DiskStorage`]), so the keyspace can exceed
+//! memory. Same WAL and checkpoint files either way — a node may
+//! switch backends across restarts. Ignored without `--data-dir`.
 
 use std::collections::HashMap;
 
+use crate::acceptor::Backend;
 use crate::error::{CasError, CasResult};
 use crate::quorum::{ClusterConfig, QuorumSpec};
 use crate::shard::ShardPlan;
@@ -93,6 +103,9 @@ pub struct Deployment {
     /// checkpoint (0 = bytes never trigger one). See
     /// `crate::acceptor::CheckpointOpts::interval_bytes`.
     pub checkpoint_bytes: u64,
+    /// Slot storage backend for data-dir nodes (`mem` = resident maps,
+    /// `disk` = on-disk keyed index). See `crate::server::NodeOpts::backend`.
+    pub backend: Backend,
 }
 
 impl Deployment {
@@ -108,6 +121,7 @@ impl Deployment {
         let mut max_deferred: Option<usize> = None;
         let mut checkpoint_records: Option<u64> = None;
         let mut checkpoint_bytes: Option<u64> = None;
+        let mut backend: Option<Backend> = None;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
@@ -181,13 +195,20 @@ impl Deployment {
                         n.parse().map_err(|_| bad(lineno, "bad checkpoint byte count"))?;
                     checkpoint_bytes = Some(n);
                 }
+                ["backend", b] => {
+                    backend = Some(
+                        Backend::parse(b)
+                            .ok_or_else(|| bad(lineno, "backend must be `mem` or `disk`"))?,
+                    );
+                }
                 _ => {
                     return Err(bad(
                         lineno,
                         "expected `node <id> <addr>`, `quorum <p> <a>`, `shards <n>`, \
                          `shard_quorum <p> <a>`, `stripes <n>`, `proposers <n>`, \
                          `io_threads <n>`, `max_deferred <n>`, \
-                         `checkpoint_records <n>` or `checkpoint_bytes <n>`",
+                         `checkpoint_records <n>`, `checkpoint_bytes <n>` or \
+                         `backend mem|disk`",
                     ))
                 }
             }
@@ -228,6 +249,7 @@ impl Deployment {
             max_deferred: max_deferred.unwrap_or(256),
             checkpoint_records: checkpoint_records.unwrap_or(0),
             checkpoint_bytes: checkpoint_bytes.unwrap_or(0),
+            backend: backend.unwrap_or_default(),
         };
         // Fail at parse time, not at node start: a bad shard carve
         // (uneven groups with an explicit shard_quorum, non-intersecting
@@ -456,6 +478,19 @@ mod tests {
             Deployment::parse(&format!("{base}checkpoint_bytes -1\n")).is_err(),
             "bad byte count"
         );
+    }
+
+    #[test]
+    fn parse_backend_config() {
+        let base = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\n";
+        let d = Deployment::parse(base).unwrap();
+        assert_eq!(d.backend, Backend::Mem, "default is the resident-map backend");
+        let d = Deployment::parse(&format!("{base}backend disk\n")).unwrap();
+        assert_eq!(d.backend, Backend::Disk);
+        let d = Deployment::parse(&format!("{base}backend mem\n")).unwrap();
+        assert_eq!(d.backend, Backend::Mem);
+        assert!(Deployment::parse(&format!("{base}backend rocks\n")).is_err(), "unknown backend");
+        assert!(Deployment::parse(&format!("{base}backend\n")).is_err(), "missing operand");
     }
 
     #[test]

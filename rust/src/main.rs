@@ -29,6 +29,7 @@ fn usage() -> ! {
          \x20                [--listen-client <addr>] [--data <dir>] [--stripes <n>]\n\
          \x20                [--proposers <n>] [--io-threads <n>] [--max-deferred <n>]\n\
          \x20                [--checkpoint-records <n>] [--checkpoint-bytes <n>]\n\
+         \x20                [--backend mem|disk]\n\
          \x20 caspaxos client --connect <addr> \
          <get|getcas|getmany|set|add|cas|del|collect|status> [args...]\n\
          \x20 caspaxos rtt-table"
@@ -75,6 +76,7 @@ fn run_node(mut args: Vec<String>) {
         io_threads: usize,
         max_deferred: usize,
         checkpoint: Option<caspaxos::acceptor::CheckpointOpts>,
+        backend: caspaxos::acceptor::Backend,
     }
     let cfg = if let Some(path) = take_flag(&mut args, "--config") {
         let d = Deployment::load(&path).unwrap_or_else(|e| {
@@ -94,6 +96,7 @@ fn run_node(mut args: Vec<String>) {
             io_threads: d.io_threads,
             max_deferred: d.max_deferred,
             checkpoint: d.checkpoint_opts(),
+            backend: d.backend,
         }
     } else if let Some(spec) = take_flag(&mut args, "--peers") {
         let peers = Deployment::parse_peers(&spec).unwrap_or_else(|e| {
@@ -109,6 +112,7 @@ fn run_node(mut args: Vec<String>) {
             io_threads: 1,
             max_deferred: 256,
             checkpoint: None,
+            backend: caspaxos::acceptor::Backend::default(),
         }
     } else {
         usage()
@@ -122,6 +126,7 @@ fn run_node(mut args: Vec<String>) {
         io_threads: cfg_io_threads,
         max_deferred: cfg_max_deferred,
         checkpoint: cfg_checkpoint,
+        backend: cfg_backend,
     } = cfg;
     // `--stripes` overrides the config's `stripes` directive.
     let stripes: usize = match take_flag(&mut args, "--stripes") {
@@ -189,6 +194,15 @@ fn run_node(mut args: Vec<String>) {
     } else {
         cfg_checkpoint
     };
+    // `--backend` overrides the config's `backend` directive (slot-map
+    // residency for the durable tier; only meaningful with --data).
+    let backend = match take_flag(&mut args, "--backend") {
+        Some(b) => caspaxos::acceptor::Backend::parse(&b).unwrap_or_else(|| {
+            eprintln!("--backend must be `mem` or `disk`");
+            exit(1)
+        }),
+        None => cfg_backend,
+    };
 
     let mut acceptors: Vec<u64> = peers.keys().copied().collect();
     acceptors.sort_unstable();
@@ -215,6 +229,7 @@ fn run_node(mut args: Vec<String>) {
         max_deferred,
         data_dir,
         checkpoint,
+        backend,
         lease: None,
         proposers_per_shard: proposers,
         router: caspaxos::router::RouterOpts::default(),

@@ -41,7 +41,10 @@ use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use crate::acceptor::{CheckpointOpts, CkptStats, GroupCommitOpts, StripedAcceptor, WalStats};
+use crate::acceptor::{
+    Backend, CheckpointOpts, CkptStats, GroupCommitOpts, StripedAcceptor, WalStats,
+    DISK_CACHE_SLOTS,
+};
 use crate::batch::BatchProposer;
 use crate::change::ChangeFn;
 use crate::codec::{decode_seq, encode_seq, Codec, CodecError, Envelope};
@@ -298,6 +301,15 @@ pub struct NodeOpts {
     pub stripes: usize,
     /// Durable storage directory (`None` = in-memory).
     pub data_dir: Option<String>,
+    /// Slot storage backend for data-dir nodes. [`Backend::Mem`]
+    /// (default) rebuilds resident per-stripe maps from checkpoint +
+    /// WAL replay; [`Backend::Disk`] keeps slots in per-stripe segment
+    /// files behind a bounded cache ([`crate::acceptor::DiskStorage`]),
+    /// so the keyspace can exceed RAM. Same WAL/checkpoint files either
+    /// way — a node may switch backends across restarts. Ignored
+    /// without `data_dir`. `Status` exports `backend=` plus the disk
+    /// backend's `resident_keys=`/`index_pages=` gauges.
+    pub backend: Backend,
     /// Automatic checkpoint cadence for the file-backed log (`None` =
     /// no automatic checkpoints; ignored without `data_dir`). When the
     /// WAL has grown past either threshold since the last checkpoint, a
@@ -391,14 +403,50 @@ struct NodeCtx {
     gc: Arc<GcProcess>,
     /// Acceptor lock-stripe count (exported through `Status`).
     stripes: usize,
+    /// Effective slot backend (exported through `Status`; always
+    /// [`Backend::Mem`] without a data dir).
+    backend: Backend,
     /// Shared-WAL + checkpoint counter snapshot for `Status`
     /// (file-backed acceptors only; every stripe appends to the one
     /// WAL, so this IS the aggregate across stripes).
     wal_stats: Option<Arc<dyn Fn() -> (WalStats, CkptStats) + Send + Sync>>,
+    /// Disk-backend gauges for `Status` (`resident_keys`,
+    /// `index_pages`); `None` reports zeros.
+    backend_stats: Option<Arc<dyn Fn() -> (usize, u64) + Send + Sync>>,
     /// Server-core counters shared by this node's acceptor and client
     /// services (exported through `Status` as `open_conns=` /
     /// `loop_wakeups=` / `io_threads=`).
     loop_stats: Arc<LoopStats>,
+}
+
+/// Spawns the checkpoint poller: the striped coordination point must
+/// run OUTSIDE the request path (it takes every stripe lock), so a
+/// thread polls WAL growth and fires the online pause-write-swap when
+/// a threshold is crossed. Backend-agnostic — callers pass closures
+/// over their acceptor handle. It stops when the `Node` drops — a
+/// poller outliving its node would keep truncating a log another
+/// (restarted) node now owns.
+fn spawn_checkpoint_poller(
+    copts: CheckpointOpts,
+    due: impl Fn(&CheckpointOpts) -> bool + Send + 'static,
+    compact: impl Fn() -> CasResult<()> + Send + 'static,
+) -> (Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>) {
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    let handle = std::thread::spawn(move || {
+        while !flag.load(std::sync::atomic::Ordering::Acquire) {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            if flag.load(std::sync::atomic::Ordering::Acquire) {
+                break;
+            }
+            if due(&copts) {
+                if let Err(e) = compact() {
+                    eprintln!("checkpoint: {e}");
+                }
+            }
+        }
+    });
+    (stop, handle)
 }
 
 /// Starts acceptor + client services; returns the bound addresses.
@@ -424,53 +472,87 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     };
     let mut ckpt_stop: Option<(Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>)> =
         None;
+    let mut backend_stats: Option<Arc<dyn Fn() -> (usize, u64) + Send + Sync>> = None;
+    // A poll-worthy checkpoint cadence (either threshold set).
+    let ckpt_opts = opts
+        .checkpoint
+        .filter(|c| c.interval_records > 0 || c.interval_bytes > 0);
+    // The backend only matters with a data dir (mem nodes have no
+    // slots to place); report what actually runs.
+    let backend = if opts.data_dir.is_some() { opts.backend } else { Backend::Mem };
     let wal_stats: Option<Arc<dyn Fn() -> (WalStats, CkptStats) + Send + Sync>> = match &opts
         .data_dir
     {
         Some(dir) => {
             std::fs::create_dir_all(dir)
                 .map_err(|e| CasError::Transport(format!("mkdir {dir}: {e}")))?;
-            let acc = Arc::new(StripedAcceptor::open(
-                opts.id,
-                format!("{dir}/acceptor-{}.log", opts.id),
-                GroupCommitOpts::default(),
-                stripes,
-            )?);
-            let serve = Arc::clone(&acc);
-            let sopts = serve_opts.clone();
-            let stats = Arc::clone(&loop_stats);
-            std::thread::spawn(move || {
-                let _ = serve_striped_acceptor_opts(acceptor_listener, serve, None, sopts, stats);
-            });
-            // Checkpoint poller: the striped coordination point must
-            // run OUTSIDE the request path (it takes every stripe
-            // lock), so a thread polls WAL growth and fires the online
-            // pause-write-swap when a threshold is crossed. It stops
-            // when the `Node` drops — a poller outliving its node
-            // would keep truncating a log another (restarted) node now
-            // owns.
-            if let Some(copts) = opts.checkpoint {
-                if copts.interval_records > 0 || copts.interval_bytes > 0 {
-                    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-                    let flag = Arc::clone(&stop);
-                    let ckpt = Arc::clone(&acc);
-                    let handle = std::thread::spawn(move || {
-                        while !flag.load(std::sync::atomic::Ordering::Acquire) {
-                            std::thread::sleep(std::time::Duration::from_millis(50));
-                            if flag.load(std::sync::atomic::Ordering::Acquire) {
-                                break;
-                            }
-                            if ckpt.checkpoint_due(&copts) {
-                                if let Err(e) = ckpt.compact() {
-                                    eprintln!("checkpoint: {e}");
-                                }
-                            }
-                        }
+            let log = format!("{dir}/acceptor-{}.log", opts.id);
+            match backend {
+                Backend::Mem => {
+                    let acc = Arc::new(StripedAcceptor::open(
+                        opts.id,
+                        log,
+                        GroupCommitOpts::default(),
+                        stripes,
+                    )?);
+                    let serve = Arc::clone(&acc);
+                    let sopts = serve_opts.clone();
+                    let stats = Arc::clone(&loop_stats);
+                    std::thread::spawn(move || {
+                        let _ = serve_striped_acceptor_opts(
+                            acceptor_listener,
+                            serve,
+                            None,
+                            sopts,
+                            stats,
+                        );
                     });
-                    ckpt_stop = Some((stop, handle));
+                    if let Some(copts) = ckpt_opts {
+                        let due = Arc::clone(&acc);
+                        let cmp = Arc::clone(&acc);
+                        ckpt_stop = Some(spawn_checkpoint_poller(
+                            copts,
+                            move |o| due.checkpoint_due(o),
+                            move || cmp.compact(),
+                        ));
+                    }
+                    Some(Arc::new(move || (acc.wal_stats(), acc.ckpt_stats())))
+                }
+                Backend::Disk => {
+                    let acc = Arc::new(StripedAcceptor::open_disk(
+                        opts.id,
+                        log,
+                        GroupCommitOpts::default(),
+                        stripes,
+                        DISK_CACHE_SLOTS,
+                    )?);
+                    let serve = Arc::clone(&acc);
+                    let sopts = serve_opts.clone();
+                    let stats = Arc::clone(&loop_stats);
+                    std::thread::spawn(move || {
+                        let _ = serve_striped_acceptor_opts(
+                            acceptor_listener,
+                            serve,
+                            None,
+                            sopts,
+                            stats,
+                        );
+                    });
+                    if let Some(copts) = ckpt_opts {
+                        let due = Arc::clone(&acc);
+                        let cmp = Arc::clone(&acc);
+                        ckpt_stop = Some(spawn_checkpoint_poller(
+                            copts,
+                            move |o| due.checkpoint_due(o),
+                            move || cmp.compact(),
+                        ));
+                    }
+                    let gauges = Arc::clone(&acc);
+                    backend_stats =
+                        Some(Arc::new(move || (gauges.resident_keys(), gauges.index_pages())));
+                    Some(Arc::new(move || (acc.wal_stats(), acc.ckpt_stats())))
                 }
             }
-            Some(Arc::new(move || (acc.wal_stats(), acc.ckpt_stats())))
         }
         None => {
             let acc = Arc::new(StripedAcceptor::new_mem(opts.id, stripes));
@@ -568,7 +650,9 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         batches,
         gc: Arc::clone(&gc),
         stripes,
+        backend,
         wal_stats,
+        backend_stats,
         loop_stats: Arc::clone(&loop_stats),
     });
 
@@ -688,10 +772,13 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 CkptStats {
                     checkpoint_records: 0,
                     replay_records: 0,
+                    replay_truncated_bytes: 0,
                     last_checkpoint_us: 0,
                     checkpoints: 0,
                 },
             ));
+            let (resident_keys, index_pages) =
+                ctx.backend_stats.as_ref().map(|f| f()).unwrap_or((0, 0));
             let inflight = ctx.proposers[0].transport_inflight().unwrap_or(0);
             let (open_conns, loop_wakeups, io_threads) = ctx.loop_stats.snapshot();
             let (routed, redirected) = ctx.request_router.stats();
@@ -700,7 +787,9 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                  cache_hits={} failures={} read_fast={} read_fallback={} \
                  read_lease={} lease_renew={} lease_break={} gc_pending={} \
                  stripes={} wal_appends={} wal_flushes={} wal_fsyncs={} \
-                 checkpoint_records={} replay_records={} last_checkpoint_us={} inflight={} \
+                 checkpoint_records={} replay_records={} last_checkpoint_us={} \
+                 replay_truncated_bytes={} backend={} resident_keys={} \
+                 index_pages={} inflight={} \
                  open_conns={} loop_wakeups={} io_threads={} \
                  routed={} redirected={} pool_size={}",
                 ctx.proposers[0].id(),
@@ -724,6 +813,10 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 ckpt.checkpoint_records,
                 ckpt.replay_records,
                 ckpt.last_checkpoint_us,
+                ckpt.replay_truncated_bytes,
+                ctx.backend,
+                resident_keys,
+                index_pages,
                 inflight,
                 open_conns,
                 loop_wakeups,
@@ -898,7 +991,7 @@ mod tests {
         data: Option<&TempDir>,
         lease: Option<crate::proposer::LeaseOpts>,
     ) -> Vec<Node> {
-        launch_cluster_pooled(n, shards, stripes, data, lease, 0)
+        launch_cluster_backend(n, shards, stripes, data, lease, 0, Backend::Mem)
     }
 
     fn launch_cluster_pooled(
@@ -908,6 +1001,19 @@ mod tests {
         data: Option<&TempDir>,
         lease: Option<crate::proposer::LeaseOpts>,
         proposers_per_shard: usize,
+    ) -> Vec<Node> {
+        launch_cluster_backend(n, shards, stripes, data, lease, proposers_per_shard, Backend::Mem)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn launch_cluster_backend(
+        n: u64,
+        shards: usize,
+        stripes: usize,
+        data: Option<&TempDir>,
+        lease: Option<crate::proposer::LeaseOpts>,
+        proposers_per_shard: usize,
+        backend: Backend,
     ) -> Vec<Node> {
         // Two-phase bind: reserve acceptor AND client ports first so
         // every node knows every peer address before starting (a bind
@@ -939,6 +1045,7 @@ mod tests {
                     io_threads: 0,
                     max_deferred: 0,
                     data_dir: data.map(|d| d.path().to_str().unwrap().to_string()),
+                    backend,
                     checkpoint: None,
                     lease: lease.clone(),
                     proposers_per_shard,
@@ -1165,6 +1272,7 @@ mod tests {
             io_threads: 0,
             max_deferred: 0,
             data_dir: Some(dir.path().to_str().unwrap().to_string()),
+            backend: Backend::Mem,
             checkpoint: Some(crate::acceptor::CheckpointOpts {
                 interval_records: 20,
                 interval_bytes: 0,
@@ -1316,6 +1424,7 @@ mod tests {
             io_threads: 0,
             max_deferred: 0,
             data_dir: None,
+            backend: Backend::Mem,
             checkpoint: None,
             lease: None,
             proposers_per_shard: 6,
@@ -1411,6 +1520,56 @@ mod tests {
         }
         // The pre-existing client connection is untouched.
         assert_eq!(c.get("k").unwrap().as_num(), Some(5));
+    }
+
+    #[test]
+    fn disk_backend_cluster_serves_and_exports_gauges() {
+        // A 4-stripe disk-backed cluster: the whole client surface
+        // works unchanged on segment-file slots, `Status` reports the
+        // backend and its gauges, and a restart over the same dirs
+        // (still disk-backed) serves the same data.
+        let dir = TempDir::new("disk-node").unwrap();
+        let nodes =
+            launch_cluster_backend(3, 1, 4, Some(&dir), None, 0, Backend::Disk);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        for i in 0..12 {
+            c.change(&format!("k{i}"), ChangeFn::Set(i as i64)).unwrap();
+        }
+        let mut c2 = Client::connect(&nodes[2].client_addr.to_string()).unwrap();
+        for i in 0..12 {
+            assert_eq!(c2.get(&format!("k{i}")).unwrap().as_num(), Some(i as i64));
+        }
+        // Delete + collect walks the on-disk indexes (Dump paging).
+        c.call(&ClientReq::Delete { key: "k0".into() }).unwrap();
+        match c.call(&ClientReq::Collect).unwrap() {
+            ClientResp::Status(s) => assert!(s.contains("collected=1"), "{s}"),
+            other => panic!("{other:?}"),
+        }
+        match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => {
+                assert!(s.contains("backend=disk"), "{s}");
+                assert!(s.contains("resident_keys="), "{s}");
+                assert!(s.contains("replay_truncated_bytes=0"), "{s}");
+                let field = |name: &str| -> u64 {
+                    s.split_whitespace()
+                        .find_map(|kv| kv.strip_prefix(name))
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or_else(|| panic!("missing {name} in {s}"))
+                };
+                assert!(field("index_pages=") > 0, "segments hold the slots: {s}");
+                assert!(field("wal_appends=") > 0, "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+        drop(c);
+        drop(c2);
+        drop(nodes);
+        let nodes =
+            launch_cluster_backend(3, 1, 4, Some(&dir), None, 0, Backend::Disk);
+        let mut c = Client::connect(&nodes[1].client_addr.to_string()).unwrap();
+        for i in 1..12 {
+            assert_eq!(c.get(&format!("k{i}")).unwrap().as_num(), Some(i as i64));
+        }
     }
 
     #[test]

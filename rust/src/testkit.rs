@@ -106,6 +106,30 @@ pub fn striped_file_acceptor(
     crate::acceptor::StripedAcceptor::from_storages(id, stores)
 }
 
+/// Disk-backed twin of [`striped_file_acceptor`]: same WAL path and
+/// checkpoint format on the same `dir`, but slots live in per-stripe
+/// segment files behind a `cache_slots`-bounded cache — the shared
+/// constructor for running the durability/crash suites against the
+/// [`crate::acceptor::Backend::Disk`] backend. fsync is off, as above.
+pub fn striped_disk_acceptor(
+    dir: &TempDir,
+    id: u64,
+    stripes: usize,
+    cache_slots: usize,
+) -> crate::acceptor::StripedAcceptor<crate::acceptor::DiskStorage> {
+    let mut stores = crate::acceptor::DiskStorage::open_striped(
+        dir.file(&format!("acceptor-{id}.log")),
+        crate::acceptor::GroupCommitOpts::default(),
+        stripes,
+        cache_slots,
+    )
+    .expect("open striped disk backend");
+    for s in &mut stores {
+        s.fsync = false;
+    }
+    crate::acceptor::StripedAcceptor::from_storages(id, stores)
+}
+
 /// A key routed to stripe `want` of `stripes` by
 /// [`crate::acceptor::stripe_of`] (probes the shared hash; `salt`
 /// namespaces the keys so callers never share a register). Shared by

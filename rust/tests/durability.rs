@@ -1,5 +1,5 @@
-//! Crash-durability integration: FileStorage-backed acceptors behind the
-//! real TCP stack, killed and resurrected from their logs.
+//! Crash-durability integration: file- and disk-backed acceptors behind
+//! the real TCP stack, killed and resurrected from their logs.
 //!
 //! The paper requires acceptors to persist the promise and the accepted
 //! pair *before* confirming — these tests pin the whole path: protocol →
@@ -10,11 +10,17 @@
 //! after it was waited on. Acked state (accepted ballots AND granted
 //! read leases) survives kill+replay; unacked or torn state is dropped,
 //! never resurrected.
+//!
+//! The striped pins run against BOTH storage backends (the
+//! `striped_backend_pins!` macro below): `FileStorage` (RAM-resident
+//! slot maps) and `DiskStorage` (keyed segment files behind a bounded
+//! cache). Same WAL bytes, same checkpoint files, same crash
+//! semantics — only slot residency differs.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use caspaxos::acceptor::{Acceptor, FileStorage, Storage};
+use caspaxos::acceptor::{Acceptor, DiskStorage, FileStorage, Storage, StripedAcceptor};
 use caspaxos::proposer::Proposer;
 use caspaxos::quorum::ClusterConfig;
 use caspaxos::testkit::TempDir;
@@ -24,6 +30,18 @@ fn file_acceptor(dir: &TempDir, id: u64) -> Acceptor<FileStorage> {
     let mut store = FileStorage::open(dir.file(&format!("acceptor-{id}.log"))).unwrap();
     store.fsync = false; // tmpfs CI: keep the test fast; framing still CRC'd
     Acceptor::with_storage(id, store)
+}
+
+/// Mem-backend opener for the parameterized striped pins (4 stripes).
+fn striped_mem(dir: &TempDir, id: u64) -> StripedAcceptor<FileStorage> {
+    caspaxos::testkit::striped_file_acceptor(dir, id, 4)
+}
+
+/// Disk-backend opener: same 4 stripes over the same WAL path, with a
+/// deliberately tiny slot cache (8/stripe) so the pins below also
+/// exercise eviction and segment re-reads, not just the happy path.
+fn striped_disk(dir: &TempDir, id: u64) -> StripedAcceptor<DiskStorage> {
+    caspaxos::testkit::striped_disk_acceptor(dir, id, 4, 8)
 }
 
 #[test]
@@ -315,89 +333,6 @@ fn torn_tail_mid_flush_loses_only_the_torn_record() {
 }
 
 #[test]
-fn interleaved_stripe_wal_with_torn_tail_replays_every_intact_record() {
-    // Writes interleaved across 4 stripes share ONE WAL; a crash leaves
-    // half a frame at the tail. Replay must keep every intact record on
-    // its owning stripe and drop only the torn one.
-    use caspaxos::ballot::Ballot;
-    use caspaxos::msg::{ProposerId, Request, Response};
-    use caspaxos::testkit::striped_file_acceptor;
-    use std::io::Write as _;
-    let dir = TempDir::new("stripe-torn").unwrap();
-    let accept = |key: String, i: i64| Request::Accept {
-        key,
-        ballot: Ballot::new(i as u64 + 1, 1),
-        val: caspaxos::Val::Num { ver: 0, num: i },
-        from: ProposerId::new(1),
-        promise_next: None,
-    };
-    {
-        let a = striped_file_acceptor(&dir, 1, 4);
-        // Round-robin across keys on every stripe: records from all
-        // four stripes interleave in the shared log.
-        for i in 0..16 {
-            assert_eq!(a.handle_at(&accept(format!("k{i}"), i), 0), Response::Accepted);
-        }
-    }
-    {
-        let path = dir.path().join("acceptor-1.log");
-        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
-        f.write_all(&[120, 0, 0, 0, 9, 9, 9]).unwrap(); // torn frame
-    }
-    let revived = striped_file_acceptor(&dir, 1, 4);
-    assert_eq!(revived.register_count(), 16, "an intact stripe record was dropped");
-    for i in 0..16 {
-        assert_eq!(revived.storage_value(&format!("k{i}")), Some(i), "k{i} lost in replay");
-    }
-}
-
-#[test]
-fn acked_lease_on_a_stripe_survives_striped_replay() {
-    // A lease granted on stripe k (reply sent => ticket waited) must be
-    // honored after crash+replay of the shared WAL; an unacked grant on
-    // another stripe must NOT be resurrected.
-    use caspaxos::ballot::Ballot;
-    use caspaxos::msg::{ProposerId, Request, Response};
-    use caspaxos::testkit::striped_file_acceptor;
-    let dir = TempDir::new("stripe-lease").unwrap();
-    let acquire = |key: &str| Request::LeaseAcquire {
-        key: key.into(),
-        duration_us: 10_000_000,
-        from: ProposerId::new(7),
-    };
-    {
-        let a = striped_file_acceptor(&dir, 1, 4);
-        // Acked grant: handle_at waits the shared-WAL ticket.
-        assert!(matches!(
-            a.handle_at(&acquire("held"), 1_000),
-            Response::LeaseGranted { granted: true, .. }
-        ));
-        // Unacked grant: ticket dropped, reply never sent.
-        let (resp, persist) = a.handle_deferred_at(&acquire("ghost"), 1_000);
-        assert!(matches!(resp, Response::LeaseGranted { granted: true, .. }));
-        drop(persist); // crash before durability
-    }
-    let revived = striped_file_acceptor(&dir, 1, 4);
-    let foreign = |key: &str| Request::Prepare {
-        key: key.into(),
-        ballot: Ballot::new(5, 2),
-        from: ProposerId::new(2),
-    };
-    assert!(
-        matches!(revived.handle_at(&foreign("held"), 2_000), Response::Conflict { .. }),
-        "replayed stripe lease must still fence foreign ballots"
-    );
-    assert!(
-        matches!(revived.handle_at(&foreign("held"), 20_000_000), Response::Promise { .. }),
-        "the fence must lift after the window"
-    );
-    assert!(
-        matches!(revived.handle_at(&foreign("ghost"), 2_000), Response::Promise { .. }),
-        "an unacked grant must not be resurrected"
-    );
-}
-
-#[test]
 fn single_stripe_replay_is_byte_compatible_with_pre_stripe_logs() {
     // Version gate (like the PR 3 lease format bump): stripes=1 writes
     // the legacy record stream, so pre-stripe logs and 1-stripe logs
@@ -440,40 +375,6 @@ fn single_stripe_replay_is_byte_compatible_with_pre_stripe_logs() {
     for i in 0..8 {
         assert_eq!(striped.storage_value(&format!("k{i}")), Some(i));
     }
-}
-
-#[test]
-fn striped_cluster_state_survives_full_restart_over_tcp() {
-    // The end-to-end striped pin: a TCP cluster of 4-stripe file-backed
-    // acceptors is killed and resurrected from its shared WALs; every
-    // accepted value survives, on whatever stripe it hashed to.
-    use caspaxos::testkit::striped_file_acceptor;
-    use caspaxos::transport::tcp::spawn_striped_acceptor;
-    let dir = TempDir::new("striped-durable").unwrap();
-    let mut addrs = HashMap::new();
-    for id in 1..=3 {
-        let acc = Arc::new(striped_file_acceptor(&dir, id, 4));
-        let addr = spawn_striped_acceptor("127.0.0.1:0", acc).unwrap();
-        addrs.insert(id, addr.to_string());
-    }
-    let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
-    let p = Proposer::new(1, cfg.clone(), Arc::new(TcpTransport::new(addrs)));
-    for i in 0..20 {
-        p.set(format!("k{i}"), i).unwrap();
-    }
-    drop(p);
-    // Generation 2: fresh ports, stripes rebuilt by filtered replay.
-    let mut addrs2 = HashMap::new();
-    for id in 1..=3 {
-        let acc = Arc::new(striped_file_acceptor(&dir, id, 4));
-        let addr = spawn_striped_acceptor("127.0.0.1:0", acc).unwrap();
-        addrs2.insert(id, addr.to_string());
-    }
-    let p2 = Proposer::new(2, cfg, Arc::new(TcpTransport::new(addrs2)));
-    for i in 0..20 {
-        assert_eq!(p2.get(format!("k{i}")).unwrap().as_num(), Some(i), "k{i} lost");
-    }
-    assert_eq!(p2.add("k1", 100).unwrap().as_num(), Some(101), "restart accepts new writes");
 }
 
 #[test]
@@ -547,247 +448,6 @@ fn online_compaction_under_concurrent_writers_loses_no_acked_write() {
 }
 
 #[test]
-fn checkpoint_crash_worlds_never_lose_acked_state() {
-    // Crash-injection around the checkpoint dance (tmp-write → sync →
-    // rename → dir-sync → WAL swap): each on-disk world a kill at one
-    // of those points can leave behind must recover EVERY acked write,
-    // and the replay counters exported through `Status` must match
-    // what was actually replayed.
-    use caspaxos::ballot::Ballot;
-    use caspaxos::msg::{ProposerId, Request, Response};
-    use caspaxos::testkit::striped_file_acceptor;
-    let dir = TempDir::new("ckpt-worlds").unwrap();
-    let log = dir.path().join("acceptor-1.log");
-    let ckpt = dir.path().join("acceptor-1.ckpt");
-    let accept = |key: String, ballot: Ballot, num: i64| Request::Accept {
-        key,
-        ballot,
-        val: caspaxos::Val::Num { ver: 0, num },
-        from: ProposerId::new(1),
-        promise_next: None,
-    };
-    // Phase 1: 40 acked records (10 keys × 4 rounds), then checkpoint,
-    // then 5 acked delta records. Snapshot the pre-compaction WAL and
-    // the checkpoint bytes to craft the crash worlds from.
-    let full_wal;
-    let ckpt_bytes;
-    let delta_wal;
-    {
-        let a = striped_file_acceptor(&dir, 1, 4);
-        for r in 0..4u64 {
-            for i in 0..10 {
-                let req = accept(format!("k{i}"), Ballot::new(r + 1, 1), (r * 10) as i64 + i);
-                assert_eq!(a.handle_at(&req, 0), Response::Accepted);
-            }
-        }
-        full_wal = std::fs::read(&log).unwrap();
-        a.compact().unwrap();
-        ckpt_bytes = std::fs::read(&ckpt).unwrap();
-        for i in 0..5 {
-            let req = accept(format!("k{i}"), Ballot::new(9, 1), 100 + i);
-            assert_eq!(a.handle_at(&req, 0), Response::Accepted);
-        }
-        delta_wal = std::fs::read(&log).unwrap();
-    }
-    // Phase-1 fold: k{i} = 30+i; after the delta, k0..k4 = 100+i.
-    let phase1 = |i: i64| 30 + i;
-    let with_delta = |i: i64| if i < 5 { 100 + i } else { 30 + i };
-
-    struct World<'a> {
-        name: &'a str,
-        log: &'a [u8],
-        ckpt: Option<&'a [u8]>,
-        tmp: Option<Vec<u8>>,
-        expect: &'a dyn Fn(i64) -> i64,
-        checkpoint_records: u64,
-        replay_records: u64,
-    }
-    let worlds = [
-        // Killed between tmp-write and sync: torn half-written tmp,
-        // full WAL still in place. The tmp must be ignored AND removed.
-        World {
-            name: "torn-tmp",
-            log: &full_wal,
-            ckpt: None,
-            tmp: Some(ckpt_bytes[..10].to_vec()),
-            expect: &phase1,
-            checkpoint_records: 0,
-            replay_records: 40,
-        },
-        // Killed between sync and rename: COMPLETE tmp never renamed.
-        // It must not be adopted — replay still walks the full WAL.
-        World {
-            name: "unrenamed-tmp",
-            log: &full_wal,
-            ckpt: None,
-            tmp: Some(ckpt_bytes.clone()),
-            expect: &phase1,
-            checkpoint_records: 0,
-            replay_records: 40,
-        },
-        // Killed between the ckpt rename and the WAL swap (or the
-        // swap's dir-sync was lost): checkpoint + FULL old WAL.
-        // Replaying already-folded records over the checkpoint is
-        // idempotent — same fold, nothing duplicated or lost.
-        World {
-            name: "ckpt-plus-old-wal",
-            log: &full_wal,
-            ckpt: Some(&ckpt_bytes),
-            tmp: None,
-            expect: &phase1,
-            checkpoint_records: 10,
-            replay_records: 40,
-        },
-        // Clean world: checkpoint + delta-only WAL. Restart replays
-        // just the 5 delta records out of 45 historical appends.
-        World {
-            name: "ckpt-plus-delta",
-            log: &delta_wal,
-            ckpt: Some(&ckpt_bytes),
-            tmp: None,
-            expect: &with_delta,
-            checkpoint_records: 10,
-            replay_records: 5,
-        },
-    ];
-    for w in &worlds {
-        let wdir = TempDir::new(&format!("ckpt-world-{}", w.name)).unwrap();
-        let wlog = wdir.path().join("acceptor-1.log");
-        std::fs::write(&wlog, w.log).unwrap();
-        if let Some(bytes) = w.ckpt {
-            std::fs::write(wlog.with_extension("ckpt"), bytes).unwrap();
-        }
-        if let Some(tmp) = &w.tmp {
-            std::fs::write(wlog.with_extension("ckpt.tmp"), tmp).unwrap();
-        }
-        let revived = striped_file_acceptor(&wdir, 1, 4);
-        for i in 0..10 {
-            assert_eq!(
-                revived.storage_value(&format!("k{i}")),
-                Some((w.expect)(i)),
-                "[{}] k{i} lost",
-                w.name
-            );
-        }
-        let stats = revived.ckpt_stats();
-        assert_eq!(
-            (stats.checkpoint_records, stats.replay_records),
-            (w.checkpoint_records, w.replay_records),
-            "[{}] replay counters must match what was actually replayed",
-            w.name
-        );
-        assert!(
-            !wlog.with_extension("ckpt.tmp").exists(),
-            "[{}] stale tmp must be cleaned up at open",
-            w.name
-        );
-        // Every crash world keeps accepting writes above anything
-        // persisted (promises replayed correctly).
-        assert_eq!(
-            revived.handle_at(&accept("k9".into(), Ballot::new(50, 2), 777), 0),
-            Response::Accepted,
-            "[{}]",
-            w.name
-        );
-    }
-}
-
-#[test]
-fn checkpointed_backend_passes_torn_tail_lease_and_erase_pins() {
-    // The existing durability pins — torn WAL tail, acked lease
-    // fencing, GC erase, min-age fence — hold unchanged when the log
-    // has a checkpoint underneath: the delta WAL replays ON TOP of the
-    // checkpointed state.
-    use caspaxos::ballot::Ballot;
-    use caspaxos::msg::{ProposerId, Request, Response};
-    use caspaxos::testkit::striped_file_acceptor;
-    use std::io::Write as _;
-    let dir = TempDir::new("ckpt-pins").unwrap();
-    let accept = |key: &str, ballot: Ballot, val: caspaxos::Val| Request::Accept {
-        key: key.into(),
-        ballot,
-        val,
-        from: ProposerId::new(1),
-        promise_next: None,
-    };
-    {
-        let a = striped_file_acceptor(&dir, 1, 4);
-        for i in 0..5i64 {
-            let req = accept(
-                &format!("k{i}"),
-                Ballot::new(1, 1),
-                caspaxos::Val::Num { ver: 0, num: i },
-            );
-            assert_eq!(a.handle_at(&req, 0), Response::Accepted);
-        }
-        // Erased BEFORE the checkpoint: must not be in the checkpoint.
-        a.handle_at(&accept("k0", Ballot::new(2, 1), caspaxos::Val::Tombstone), 0);
-        a.handle_at(&Request::Erase { key: "k0".into(), tombstone_ballot: Ballot::new(2, 1) }, 0);
-        // Acked lease and min-age fence: both live in the checkpoint.
-        assert!(matches!(
-            a.handle_at(
-                &Request::LeaseAcquire {
-                    key: "k2".into(),
-                    duration_us: 10_000_000,
-                    from: ProposerId::new(7),
-                },
-                1_000,
-            ),
-            Response::LeaseGranted { granted: true, .. }
-        ));
-        assert_eq!(
-            a.handle_at(&Request::SetMinAge { proposer_id: 9, min_age: 3 }, 0),
-            Response::Ok
-        );
-        a.compact().unwrap();
-        // Erased AFTER the checkpoint: the Erase record sits in the
-        // delta WAL and must erase the checkpointed slot at replay.
-        a.handle_at(&accept("k1", Ballot::new(3, 1), caspaxos::Val::Tombstone), 0);
-        a.handle_at(&Request::Erase { key: "k1".into(), tombstone_ballot: Ballot::new(3, 1) }, 0);
-    }
-    // Torn tail on the DELTA WAL: replay keeps everything intact
-    // before it and drops only the torn frame.
-    {
-        let path = dir.path().join("acceptor-1.log");
-        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
-        f.write_all(&[90, 0, 0, 0, 5, 5, 5]).unwrap();
-    }
-    let revived = striped_file_acceptor(&dir, 1, 4);
-    // Erased keys stay erased — neither the checkpoint nor the delta
-    // resurrects them (the gc interaction pin).
-    assert_eq!(revived.register_count(), 3, "k0 and k1 must stay erased");
-    for i in 2..5i64 {
-        assert_eq!(revived.storage_value(&format!("k{i}")), Some(i), "k{i} lost");
-    }
-    // The acked lease still fences foreign ballots inside its window…
-    let foreign = Request::Prepare {
-        key: "k2".into(),
-        ballot: Ballot::new(5, 2),
-        from: ProposerId::new(2),
-    };
-    assert!(
-        matches!(revived.handle_at(&foreign, 2_000), Response::Conflict { .. }),
-        "checkpointed lease must still fence foreign ballots"
-    );
-    assert!(
-        matches!(revived.handle_at(&foreign, 20_000_000), Response::Promise { .. }),
-        "the fence must lift after the lease window"
-    );
-    // …and the min-age fence survives the checkpoint.
-    assert_eq!(
-        revived.handle_at(
-            &Request::Prepare {
-                key: "k3".into(),
-                ballot: Ballot::new(7, 9),
-                from: ProposerId { id: 9, age: 2 },
-            },
-            0,
-        ),
-        Response::StaleAge { required: 3 }
-    );
-}
-
-#[test]
 fn classic_log_auto_checkpoint_replays_only_the_delta() {
     // The classic (unstriped, sole-owner) backend honors
     // `CheckpointOpts` inline on the append path: the log checkpoints
@@ -853,4 +513,501 @@ fn storage_scan_consistency_after_mixed_workload() {
     let keys: Vec<String> =
         revived.storage().scan(None, 100).into_iter().map(|(k, _)| k).collect();
     assert_eq!(keys, vec!["a", "b", "c", "d"], "erase only applies to tombstones");
+}
+
+/// The striped crash pins, parameterized over the storage backend.
+/// `$open(dir, id)` opens (or reopens — the crash-recovery step) a
+/// 4-stripe acceptor over `dir/acceptor-{id}.log`; the macro is
+/// instantiated once per backend below, so every pin runs against both
+/// slot-residency strategies over identical WAL/checkpoint bytes.
+macro_rules! striped_backend_pins {
+    ($modname:ident, $open:path) => {
+        mod $modname {
+            use super::*;
+
+            #[test]
+            fn interleaved_stripe_wal_with_torn_tail_replays_every_intact_record() {
+                // Writes interleaved across 4 stripes share ONE WAL; a
+                // crash leaves half a frame at the tail. Replay must
+                // keep every intact record on its owning stripe and
+                // drop only the torn one.
+                use caspaxos::ballot::Ballot;
+                use caspaxos::msg::{ProposerId, Request, Response};
+                use std::io::Write as _;
+                let dir = TempDir::new("stripe-torn").unwrap();
+                let accept = |key: String, i: i64| Request::Accept {
+                    key,
+                    ballot: Ballot::new(i as u64 + 1, 1),
+                    val: caspaxos::Val::Num { ver: 0, num: i },
+                    from: ProposerId::new(1),
+                    promise_next: None,
+                };
+                {
+                    let a = $open(&dir, 1);
+                    // Round-robin across keys on every stripe: records
+                    // from all four stripes interleave in the shared log.
+                    for i in 0..16 {
+                        assert_eq!(a.handle_at(&accept(format!("k{i}"), i), 0), Response::Accepted);
+                    }
+                }
+                {
+                    let path = dir.path().join("acceptor-1.log");
+                    let mut f =
+                        std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+                    f.write_all(&[120, 0, 0, 0, 9, 9, 9]).unwrap(); // torn frame
+                }
+                let revived = $open(&dir, 1);
+                assert_eq!(revived.register_count(), 16, "an intact stripe record was dropped");
+                for i in 0..16 {
+                    assert_eq!(
+                        revived.storage_value(&format!("k{i}")),
+                        Some(i),
+                        "k{i} lost in replay"
+                    );
+                }
+                // The torn bytes were counted, not silently eaten.
+                assert_eq!(revived.ckpt_stats().replay_truncated_bytes, 7);
+            }
+
+            #[test]
+            fn acked_lease_on_a_stripe_survives_striped_replay() {
+                // A lease granted on stripe k (reply sent => ticket
+                // waited) must be honored after crash+replay of the
+                // shared WAL; an unacked grant on another stripe must
+                // NOT be resurrected.
+                use caspaxos::ballot::Ballot;
+                use caspaxos::msg::{ProposerId, Request, Response};
+                let dir = TempDir::new("stripe-lease").unwrap();
+                let acquire = |key: &str| Request::LeaseAcquire {
+                    key: key.into(),
+                    duration_us: 10_000_000,
+                    from: ProposerId::new(7),
+                };
+                {
+                    let a = $open(&dir, 1);
+                    // Acked grant: handle_at waits the shared-WAL ticket.
+                    assert!(matches!(
+                        a.handle_at(&acquire("held"), 1_000),
+                        Response::LeaseGranted { granted: true, .. }
+                    ));
+                    // Unacked grant: ticket dropped, reply never sent.
+                    let (resp, persist) = a.handle_deferred_at(&acquire("ghost"), 1_000);
+                    assert!(matches!(resp, Response::LeaseGranted { granted: true, .. }));
+                    drop(persist); // crash before durability
+                }
+                let revived = $open(&dir, 1);
+                let foreign = |key: &str| Request::Prepare {
+                    key: key.into(),
+                    ballot: Ballot::new(5, 2),
+                    from: ProposerId::new(2),
+                };
+                assert!(
+                    matches!(revived.handle_at(&foreign("held"), 2_000), Response::Conflict { .. }),
+                    "replayed stripe lease must still fence foreign ballots"
+                );
+                assert!(
+                    matches!(
+                        revived.handle_at(&foreign("held"), 20_000_000),
+                        Response::Promise { .. }
+                    ),
+                    "the fence must lift after the window"
+                );
+                assert!(
+                    matches!(revived.handle_at(&foreign("ghost"), 2_000), Response::Promise { .. }),
+                    "an unacked grant must not be resurrected"
+                );
+            }
+
+            #[test]
+            fn cluster_state_survives_full_restart_over_tcp() {
+                // The end-to-end striped pin: a TCP cluster of 4-stripe
+                // acceptors is killed and resurrected from its shared
+                // WALs; every accepted value survives, on whatever
+                // stripe it hashed to.
+                use caspaxos::transport::tcp::spawn_striped_acceptor;
+                let dir = TempDir::new("striped-durable").unwrap();
+                let mut addrs = HashMap::new();
+                for id in 1..=3 {
+                    let acc = Arc::new($open(&dir, id));
+                    let addr = spawn_striped_acceptor("127.0.0.1:0", acc).unwrap();
+                    addrs.insert(id, addr.to_string());
+                }
+                let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+                let p = Proposer::new(1, cfg.clone(), Arc::new(TcpTransport::new(addrs)));
+                for i in 0..20 {
+                    p.set(format!("k{i}"), i).unwrap();
+                }
+                drop(p);
+                // Generation 2: fresh ports, stripes rebuilt by
+                // filtered replay.
+                let mut addrs2 = HashMap::new();
+                for id in 1..=3 {
+                    let acc = Arc::new($open(&dir, id));
+                    let addr = spawn_striped_acceptor("127.0.0.1:0", acc).unwrap();
+                    addrs2.insert(id, addr.to_string());
+                }
+                let p2 = Proposer::new(2, cfg, Arc::new(TcpTransport::new(addrs2)));
+                for i in 0..20 {
+                    assert_eq!(p2.get(format!("k{i}")).unwrap().as_num(), Some(i), "k{i} lost");
+                }
+                assert_eq!(
+                    p2.add("k1", 100).unwrap().as_num(),
+                    Some(101),
+                    "restart accepts new writes"
+                );
+            }
+
+            #[test]
+            fn checkpoint_crash_worlds_never_lose_acked_state() {
+                // Crash-injection around the checkpoint dance
+                // (tmp-write → sync → rename → dir-sync → WAL swap):
+                // each on-disk world a kill at one of those points can
+                // leave behind must recover EVERY acked write, and the
+                // replay counters exported through `Status` must match
+                // what was actually replayed.
+                use caspaxos::ballot::Ballot;
+                use caspaxos::msg::{ProposerId, Request, Response};
+                let dir = TempDir::new("ckpt-worlds").unwrap();
+                let log = dir.path().join("acceptor-1.log");
+                let ckpt = dir.path().join("acceptor-1.ckpt");
+                let accept = |key: String, ballot: Ballot, num: i64| Request::Accept {
+                    key,
+                    ballot,
+                    val: caspaxos::Val::Num { ver: 0, num },
+                    from: ProposerId::new(1),
+                    promise_next: None,
+                };
+                // Phase 1: 40 acked records (10 keys × 4 rounds), then
+                // checkpoint, then 5 acked delta records. Snapshot the
+                // pre-compaction WAL and the checkpoint bytes to craft
+                // the crash worlds from.
+                let full_wal;
+                let ckpt_bytes;
+                let delta_wal;
+                {
+                    let a = $open(&dir, 1);
+                    for r in 0..4u64 {
+                        for i in 0..10 {
+                            let req = accept(
+                                format!("k{i}"),
+                                Ballot::new(r + 1, 1),
+                                (r * 10) as i64 + i,
+                            );
+                            assert_eq!(a.handle_at(&req, 0), Response::Accepted);
+                        }
+                    }
+                    full_wal = std::fs::read(&log).unwrap();
+                    a.compact().unwrap();
+                    ckpt_bytes = std::fs::read(&ckpt).unwrap();
+                    for i in 0..5 {
+                        let req = accept(format!("k{i}"), Ballot::new(9, 1), 100 + i);
+                        assert_eq!(a.handle_at(&req, 0), Response::Accepted);
+                    }
+                    delta_wal = std::fs::read(&log).unwrap();
+                }
+                // Phase-1 fold: k{i} = 30+i; after the delta, k0..k4 = 100+i.
+                let phase1 = |i: i64| 30 + i;
+                let with_delta = |i: i64| if i < 5 { 100 + i } else { 30 + i };
+
+                struct World<'a> {
+                    name: &'a str,
+                    log: &'a [u8],
+                    ckpt: Option<&'a [u8]>,
+                    tmp: Option<Vec<u8>>,
+                    expect: &'a dyn Fn(i64) -> i64,
+                    checkpoint_records: u64,
+                    replay_records: u64,
+                }
+                let worlds = [
+                    // Killed between tmp-write and sync: torn
+                    // half-written tmp, full WAL still in place. The
+                    // tmp must be ignored AND removed.
+                    World {
+                        name: "torn-tmp",
+                        log: &full_wal,
+                        ckpt: None,
+                        tmp: Some(ckpt_bytes[..10].to_vec()),
+                        expect: &phase1,
+                        checkpoint_records: 0,
+                        replay_records: 40,
+                    },
+                    // Killed between sync and rename: COMPLETE tmp
+                    // never renamed. It must not be adopted — replay
+                    // still walks the full WAL.
+                    World {
+                        name: "unrenamed-tmp",
+                        log: &full_wal,
+                        ckpt: None,
+                        tmp: Some(ckpt_bytes.clone()),
+                        expect: &phase1,
+                        checkpoint_records: 0,
+                        replay_records: 40,
+                    },
+                    // Killed between the ckpt rename and the WAL swap
+                    // (or the swap's dir-sync was lost): checkpoint +
+                    // FULL old WAL. Replaying already-folded records
+                    // over the checkpoint is idempotent — same fold,
+                    // nothing duplicated or lost.
+                    World {
+                        name: "ckpt-plus-old-wal",
+                        log: &full_wal,
+                        ckpt: Some(&ckpt_bytes),
+                        tmp: None,
+                        expect: &phase1,
+                        checkpoint_records: 10,
+                        replay_records: 40,
+                    },
+                    // Clean world: checkpoint + delta-only WAL. Restart
+                    // replays just the 5 delta records out of 45
+                    // historical appends.
+                    World {
+                        name: "ckpt-plus-delta",
+                        log: &delta_wal,
+                        ckpt: Some(&ckpt_bytes),
+                        tmp: None,
+                        expect: &with_delta,
+                        checkpoint_records: 10,
+                        replay_records: 5,
+                    },
+                ];
+                for w in &worlds {
+                    // Only WAL + checkpoint bytes are carried into the
+                    // crash world: everything else a backend keeps on
+                    // disk (e.g. DiskStorage's keyed segments) is
+                    // derived state it must rebuild at open.
+                    let wdir = TempDir::new(&format!("ckpt-world-{}", w.name)).unwrap();
+                    let wlog = wdir.path().join("acceptor-1.log");
+                    std::fs::write(&wlog, w.log).unwrap();
+                    if let Some(bytes) = w.ckpt {
+                        std::fs::write(wlog.with_extension("ckpt"), bytes).unwrap();
+                    }
+                    if let Some(tmp) = &w.tmp {
+                        std::fs::write(wlog.with_extension("ckpt.tmp"), tmp).unwrap();
+                    }
+                    let revived = $open(&wdir, 1);
+                    for i in 0..10 {
+                        assert_eq!(
+                            revived.storage_value(&format!("k{i}")),
+                            Some((w.expect)(i)),
+                            "[{}] k{i} lost",
+                            w.name
+                        );
+                    }
+                    let stats = revived.ckpt_stats();
+                    assert_eq!(
+                        (stats.checkpoint_records, stats.replay_records),
+                        (w.checkpoint_records, w.replay_records),
+                        "[{}] replay counters must match what was actually replayed",
+                        w.name
+                    );
+                    assert!(
+                        !wlog.with_extension("ckpt.tmp").exists(),
+                        "[{}] stale tmp must be cleaned up at open",
+                        w.name
+                    );
+                    // Every crash world keeps accepting writes above
+                    // anything persisted (promises replayed correctly).
+                    assert_eq!(
+                        revived.handle_at(&accept("k9".into(), Ballot::new(50, 2), 777), 0),
+                        Response::Accepted,
+                        "[{}]",
+                        w.name
+                    );
+                }
+            }
+
+            #[test]
+            fn checkpointed_backend_passes_torn_tail_lease_and_erase_pins() {
+                // The existing durability pins — torn WAL tail, acked
+                // lease fencing, GC erase, min-age fence — hold
+                // unchanged when the log has a checkpoint underneath:
+                // the delta WAL replays ON TOP of the checkpoint.
+                use caspaxos::ballot::Ballot;
+                use caspaxos::msg::{ProposerId, Request, Response};
+                use std::io::Write as _;
+                let dir = TempDir::new("ckpt-pins").unwrap();
+                let accept = |key: &str, ballot: Ballot, val: caspaxos::Val| Request::Accept {
+                    key: key.into(),
+                    ballot,
+                    val,
+                    from: ProposerId::new(1),
+                    promise_next: None,
+                };
+                {
+                    let a = $open(&dir, 1);
+                    for i in 0..5i64 {
+                        let req = accept(
+                            &format!("k{i}"),
+                            Ballot::new(1, 1),
+                            caspaxos::Val::Num { ver: 0, num: i },
+                        );
+                        assert_eq!(a.handle_at(&req, 0), Response::Accepted);
+                    }
+                    // Erased BEFORE the checkpoint: must not be in the
+                    // checkpoint.
+                    a.handle_at(&accept("k0", Ballot::new(2, 1), caspaxos::Val::Tombstone), 0);
+                    a.handle_at(
+                        &Request::Erase { key: "k0".into(), tombstone_ballot: Ballot::new(2, 1) },
+                        0,
+                    );
+                    // Acked lease and min-age fence: both live in the
+                    // checkpoint.
+                    assert!(matches!(
+                        a.handle_at(
+                            &Request::LeaseAcquire {
+                                key: "k2".into(),
+                                duration_us: 10_000_000,
+                                from: ProposerId::new(7),
+                            },
+                            1_000,
+                        ),
+                        Response::LeaseGranted { granted: true, .. }
+                    ));
+                    assert_eq!(
+                        a.handle_at(&Request::SetMinAge { proposer_id: 9, min_age: 3 }, 0),
+                        Response::Ok
+                    );
+                    a.compact().unwrap();
+                    // Erased AFTER the checkpoint: the Erase record
+                    // sits in the delta WAL and must erase the
+                    // checkpointed slot at replay.
+                    a.handle_at(&accept("k1", Ballot::new(3, 1), caspaxos::Val::Tombstone), 0);
+                    a.handle_at(
+                        &Request::Erase { key: "k1".into(), tombstone_ballot: Ballot::new(3, 1) },
+                        0,
+                    );
+                }
+                // Torn tail on the DELTA WAL: replay keeps everything
+                // intact before it and drops only the torn frame.
+                {
+                    let path = dir.path().join("acceptor-1.log");
+                    let mut f =
+                        std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+                    f.write_all(&[90, 0, 0, 0, 5, 5, 5]).unwrap();
+                }
+                let revived = $open(&dir, 1);
+                // Erased keys stay erased — neither the checkpoint nor
+                // the delta resurrects them (the gc interaction pin).
+                assert_eq!(revived.register_count(), 3, "k0 and k1 must stay erased");
+                for i in 2..5i64 {
+                    assert_eq!(revived.storage_value(&format!("k{i}")), Some(i), "k{i} lost");
+                }
+                // The acked lease still fences foreign ballots inside
+                // its window…
+                let foreign = Request::Prepare {
+                    key: "k2".into(),
+                    ballot: Ballot::new(5, 2),
+                    from: ProposerId::new(2),
+                };
+                assert!(
+                    matches!(revived.handle_at(&foreign, 2_000), Response::Conflict { .. }),
+                    "checkpointed lease must still fence foreign ballots"
+                );
+                assert!(
+                    matches!(revived.handle_at(&foreign, 20_000_000), Response::Promise { .. }),
+                    "the fence must lift after the lease window"
+                );
+                // …and the min-age fence survives the checkpoint.
+                assert_eq!(
+                    revived.handle_at(
+                        &Request::Prepare {
+                            key: "k3".into(),
+                            ballot: Ballot::new(7, 9),
+                            from: ProposerId { id: 9, age: 2 },
+                        },
+                        0,
+                    ),
+                    Response::StaleAge { required: 3 }
+                );
+            }
+        }
+    };
+}
+
+striped_backend_pins!(mem_backend, striped_mem);
+striped_backend_pins!(disk_backend, striped_disk);
+
+#[test]
+fn disk_keyspace_larger_than_cache_budget_round_trips_without_materializing() {
+    // DiskStorage acceptance pin: a keyspace ~4× the whole cache budget
+    // goes through store / load / scan / erase and a crash-restart
+    // while the resident set stays inside the budget the whole way —
+    // the backend never materializes the full map in memory.
+    use caspaxos::ballot::Ballot;
+    use caspaxos::msg::{ProposerId, Request, Response};
+    use caspaxos::testkit::striped_disk_acceptor;
+    const STRIPES: usize = 4;
+    const BUDGET: usize = 32; // slots per stripe => 128 resident max
+    let dir = TempDir::new("disk-budget").unwrap();
+    let a = striped_disk_acceptor(&dir, 1, STRIPES, BUDGET);
+    let accept = |key: String, ballot: Ballot, val: caspaxos::Val| Request::Accept {
+        key,
+        ballot,
+        val,
+        from: ProposerId::new(1),
+        promise_next: None,
+    };
+    // store: 500 keys through the full accept path.
+    for i in 0..500i64 {
+        let req = accept(
+            format!("k{i:03}"),
+            Ballot::new(1, 1),
+            caspaxos::Val::Num { ver: 0, num: i },
+        );
+        assert_eq!(a.handle_at(&req, 0), Response::Accepted);
+    }
+    assert_eq!(a.register_count(), 500, "the keyed index holds every key");
+    assert!(
+        a.resident_keys() <= STRIPES * BUDGET,
+        "cache exceeded its budget after the store sweep: {} > {}",
+        a.resident_keys(),
+        STRIPES * BUDGET
+    );
+    // load: every key readable back through the bounded cache.
+    for i in 0..500i64 {
+        assert_eq!(a.storage_value(&format!("k{i:03}")), Some(i), "k{i:03} unreadable");
+    }
+    assert!(a.resident_keys() <= STRIPES * BUDGET, "loads must evict, not accumulate");
+    // erase: tombstone + GC erase of the first 20 keys.
+    for i in 0..20i64 {
+        let key = format!("k{i:03}");
+        assert_eq!(
+            a.handle_at(&accept(key.clone(), Ballot::new(2, 1), caspaxos::Val::Tombstone), 0),
+            Response::Accepted
+        );
+        assert_eq!(
+            a.handle_at(&Request::Erase { key, tombstone_ballot: Ballot::new(2, 1) }, 0),
+            Response::Ok
+        );
+    }
+    // scan: merged Dump pagination walks every survivor in key order
+    // straight off the on-disk indexes, without blowing the cache.
+    let mut after: Option<String> = None;
+    let mut seen: Vec<String> = Vec::new();
+    loop {
+        let resp = a.handle_at(&Request::Dump { after: after.clone(), limit: 64 }, 0);
+        let Response::DumpPage { entries, more } = resp else {
+            panic!("dump failed: {resp:?}")
+        };
+        seen.extend(entries.iter().map(|(k, _, _)| k.clone()));
+        assert!(
+            a.resident_keys() <= STRIPES * BUDGET,
+            "a dump page must not materialize the map"
+        );
+        match (more, entries.last()) {
+            (true, Some((k, _, _))) => after = Some(k.clone()),
+            _ => break,
+        }
+    }
+    assert_eq!(seen.len(), 480, "erased keys must not appear in the dump");
+    assert!(seen.windows(2).all(|w| w[0] < w[1]), "dump pages must be ordered");
+    assert!(a.index_pages() > 0, "the keyed index lives on disk");
+    // …and the whole keyspace survives a crash-restart under the same
+    // budget.
+    drop(a);
+    let revived = striped_disk_acceptor(&dir, 1, STRIPES, BUDGET);
+    assert_eq!(revived.register_count(), 480);
+    assert!(revived.resident_keys() <= STRIPES * BUDGET, "replay must respect the budget");
+    assert_eq!(revived.storage_value("k499"), Some(499));
+    assert!(revived.storage_value("k000").is_none(), "erased key resurrected");
 }

@@ -28,6 +28,11 @@
 //! — concurrent clients genuinely cross stripe locks on every node, so
 //! a striped-dispatch bug shows up as a linearizability violation here
 //! with real sockets in the loop.
+//!
+//! The backend axis (PR 9): one campaign swaps the RAM-resident slot
+//! maps for the `DiskStorage` keyed-segment backend — every accept now
+//! crosses the bounded slot cache and the on-disk index under the same
+//! nemesis, and the same checker pass.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -39,7 +44,7 @@ use caspaxos::linearizability::{check, CheckResult, History, Observed};
 use caspaxos::proposer::{LeaseOpts, Proposer, ProposerOpts, ReadMode};
 use caspaxos::quorum::ClusterConfig;
 use caspaxos::rng::Rng;
-use caspaxos::testkit::{chaos_seed_count as seeds, forall_seeds};
+use caspaxos::testkit::{chaos_seed_count as seeds, forall_seeds, striped_disk_acceptor, TempDir};
 use caspaxos::transport::tcp::{spawn_striped_acceptor, TcpTransport};
 
 /// Spawns `n` loopback acceptors, each lock-striped `stripes` ways
@@ -52,6 +57,24 @@ fn spawn_cluster(n: u64, stripes: usize) -> HashMap<u64, String> {
         addrs.insert(id, addr.to_string());
     }
     addrs
+}
+
+/// Disk-backed twin of [`spawn_cluster`]: each node's stripes share one
+/// group-commit WAL in its own temp dir, slots live in keyed segment
+/// files behind a 64-slot/stripe cache (fsync off, like every chaos
+/// world — the fault axis here is connections, not power loss). The
+/// dirs ride back to the caller so the backing files outlive the test.
+fn spawn_disk_cluster(n: u64, stripes: usize) -> (HashMap<u64, String>, Vec<TempDir>) {
+    let mut addrs = HashMap::new();
+    let mut dirs = Vec::new();
+    for id in 1..=n {
+        let dir = TempDir::new("tcp-chaos-disk").unwrap();
+        let acc = Arc::new(striped_disk_acceptor(&dir, id, stripes, 64));
+        let addr = spawn_striped_acceptor("127.0.0.1:0", acc).unwrap();
+        addrs.insert(id, addr.to_string());
+        dirs.push(dir);
+    }
+    (addrs, dirs)
 }
 
 const CLIENTS: u64 = 3;
@@ -238,6 +261,27 @@ fn tcp_chaos_striped_lease_mix_40_seeds() {
     });
     let total = n as usize * CLIENTS as usize * OPS_PER_CLIENT;
     assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
+}
+
+#[test]
+fn tcp_chaos_disk_backed_striped_acceptors_40_seeds() {
+    // The storage-backend axis over real sockets: 4-stripe DISK-backed
+    // acceptors serve the mixed CAS/quorum-read schedules while the
+    // nemesis severs live connections mid-round. Every accept rides
+    // the shared WAL, the bounded slot cache and the keyed segments;
+    // an eviction or index bug shows up as a linearizability
+    // violation through the same Wing & Gong pass. One seed set — the
+    // mem campaigns above carry the wider schedule coverage.
+    let (addrs, _dirs) = spawn_disk_cluster(3, 4);
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0x7C9_0005, n, |rng| {
+        let (invoked, completed, _) = run_tcp_chaos(&addrs, rng.next_u64(), false);
+        assert_eq!(invoked, CLIENTS as usize * OPS_PER_CLIENT, "every op invoked once");
+        total_completed += completed;
+    });
+    let total = n as usize * CLIENTS as usize * OPS_PER_CLIENT;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
 }
 
 #[test]
