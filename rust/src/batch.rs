@@ -7,8 +7,12 @@
 //! change application, then one accept fan-out. Network cost stays two
 //! phases total; compute cost amortizes across the batch.
 //!
-//! Keys within a batch must be distinct (enforced); per-key outcomes are
-//! independent — a conflict on one key fails that key only.
+//! Keys within a batch must be distinct (enforced on the plain entry
+//! points); per-key outcomes are independent — a conflict on one key
+//! fails that key only. [`BatchProposer::read_batch_merged`] relaxes the
+//! distinctness rule for the server-edge read coalescer: duplicate keys
+//! collapse into one column of the shared fan-out and the column's
+//! result is fanned back to every position.
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -256,15 +260,41 @@ impl BatchProposer {
     /// [`BatchProposer::execute`] batch. Returns one result per key, in
     /// order; keys must be distinct.
     pub fn read_batch(&self, keys: &[Key]) -> CasResult<Vec<CasResult<Val>>> {
-        let n = keys.len();
-        if n == 0 {
-            return Ok(Vec::new());
-        }
         let mut seen = HashMap::new();
         for (i, key) in keys.iter().enumerate() {
             if seen.insert(key.clone(), i).is_some() {
                 return Err(CasError::Config(format!("duplicate key in batch: {key:?}")));
             }
+        }
+        self.read_batch_unique(keys)
+    }
+
+    /// Like [`BatchProposer::read_batch`], but **duplicate-tolerant**:
+    /// repeated keys collapse into ONE column of the shared fan-out and
+    /// every position gets a clone of that column's result. This is the
+    /// entry point for the server-edge read coalescer, where two clients
+    /// reading the same hot key is the *best* case — one column, two
+    /// waiters — not an input error.
+    pub fn read_batch_merged(&self, keys: &[Key]) -> CasResult<Vec<CasResult<Val>>> {
+        let mut col_of: HashMap<&Key, usize> = HashMap::new();
+        let mut unique: Vec<Key> = Vec::with_capacity(keys.len());
+        let mut slot: Vec<usize> = Vec::with_capacity(keys.len());
+        for key in keys {
+            let col = *col_of.entry(key).or_insert_with(|| {
+                unique.push(key.clone());
+                unique.len() - 1
+            });
+            slot.push(col);
+        }
+        let per_col = self.read_batch_unique(&unique)?;
+        Ok(slot.into_iter().map(|col| per_col[col].clone()).collect())
+    }
+
+    /// Shared read core: assumes `keys` are already distinct.
+    fn read_batch_unique(&self, keys: &[Key]) -> CasResult<Vec<CasResult<Val>>> {
+        let n = keys.len();
+        if n == 0 {
+            return Ok(Vec::new());
         }
         self.metrics.rounds.fetch_add(1, Ordering::Relaxed);
         let from = ProposerId::new(self.id);
@@ -511,6 +541,46 @@ mod tests {
         let (_, _, bp) = setup(3);
         let err = bp.read_batch(&["k".to_string(), "k".to_string()]).unwrap_err();
         assert!(matches!(err, CasError::Config(_)));
+    }
+
+    #[test]
+    fn read_batch_merged_collapses_duplicates_into_one_column() {
+        let (t, _, bp) = setup(3);
+        bp.execute(&[
+            ("hot".to_string(), ChangeFn::Set(7)),
+            ("cold".to_string(), ChangeFn::Set(2)),
+        ])
+        .unwrap();
+        let before = t.request_count();
+        let keys =
+            ["hot".to_string(), "cold".to_string(), "hot".to_string(), "hot".to_string()];
+        let results = bp.read_batch_merged(&keys).unwrap();
+        assert_eq!(results.len(), 4, "one result per position, duplicates included");
+        assert_eq!(results[0].as_ref().unwrap().as_num(), Some(7));
+        assert_eq!(results[1].as_ref().unwrap().as_num(), Some(2));
+        assert_eq!(results[2].as_ref().unwrap().as_num(), Some(7));
+        assert_eq!(results[3].as_ref().unwrap().as_num(), Some(7));
+        // 3 duplicate "hot" positions share ONE column: 2 unique keys ×
+        // 3 acceptors, not 4 × 3.
+        assert_eq!(t.request_count() - before, 6, "duplicates share one fan-out column");
+        assert_eq!(bp.metrics.read_fast.load(Ordering::Relaxed), 2, "per column, not per position");
+    }
+
+    #[test]
+    fn read_batch_merged_fans_errors_back_to_every_position() {
+        let (t, _, bp) = setup(3);
+        // Quorum is unreachable: every column fails, and each duplicate
+        // position must receive its own clone of the column's error.
+        t.set_down(1, true);
+        t.set_down(2, true);
+        let keys = ["k".to_string(), "k".to_string()];
+        let results = bp
+            .read_batch_merged(&keys)
+            .expect("per-op errors, not a whole-batch failure");
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert!(matches!(r, Err(CasError::NoQuorum { .. })), "got {r:?}");
+        }
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //! checkpoint_records 100000   # optional: auto-checkpoint after N WAL records
 //! checkpoint_bytes 67108864   # optional: auto-checkpoint after N WAL bytes
 //! backend disk        # optional: slot storage backend, mem|disk (default: mem)
+//! read_coalesce on    # optional: server-edge read coalescing, on|off (default: off)
+//! coalesce_queue 64   # optional: parked reads per shard before bypass (default: 64)
 //! ```
 //!
 //! The same `id=addr` pairs are accepted from the command line:
@@ -64,6 +66,16 @@
 //! ([`crate::acceptor::DiskStorage`]), so the keyspace can exceed
 //! memory. Same WAL and checkpoint files either way — a node may
 //! switch backends across restarts. Ignored without `--data-dir`.
+//!
+//! `read_coalesce on` merges independent client reads arriving at one
+//! node into shared quorum fan-outs ([`crate::server::ReadCoalescer`]):
+//! an uncontended read still dispatches immediately (the coalescing
+//! window is adaptive, not a fixed sleep), but reads arriving while a
+//! fan-out is in flight share the next one — under R concurrent readers
+//! the acceptor-side message load drops toward one fan-out per quorum
+//! RTT. `coalesce_queue` caps the reads parked per shard awaiting the
+//! next fan-out; past it a read bypasses to its own routed round
+//! (liveness over message reduction).
 
 use std::collections::HashMap;
 
@@ -106,6 +118,13 @@ pub struct Deployment {
     /// Slot storage backend for data-dir nodes (`mem` = resident maps,
     /// `disk` = on-disk keyed index). See `crate::server::NodeOpts::backend`.
     pub backend: Backend,
+    /// Server-edge read coalescing (default off). See
+    /// `crate::server::NodeOpts::read_coalesce`.
+    pub read_coalesce: bool,
+    /// Reads parked per shard awaiting the next shared fan-out before a
+    /// read bypasses to its own routed round (default 64). See
+    /// `crate::server::NodeOpts::coalesce_queue`.
+    pub coalesce_queue: usize,
 }
 
 impl Deployment {
@@ -122,6 +141,8 @@ impl Deployment {
         let mut checkpoint_records: Option<u64> = None;
         let mut checkpoint_bytes: Option<u64> = None;
         let mut backend: Option<Backend> = None;
+        let mut read_coalesce: Option<bool> = None;
+        let mut coalesce_queue: Option<usize> = None;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
@@ -201,14 +222,29 @@ impl Deployment {
                             .ok_or_else(|| bad(lineno, "backend must be `mem` or `disk`"))?,
                     );
                 }
+                ["read_coalesce", v] => {
+                    read_coalesce = Some(match *v {
+                        "on" => true,
+                        "off" => false,
+                        _ => return Err(bad(lineno, "read_coalesce must be `on` or `off`")),
+                    });
+                }
+                ["coalesce_queue", n] => {
+                    let n: usize = n.parse().map_err(|_| bad(lineno, "bad coalesce queue"))?;
+                    if n == 0 {
+                        return Err(bad(lineno, "coalesce queue must be at least 1"));
+                    }
+                    coalesce_queue = Some(n);
+                }
                 _ => {
                     return Err(bad(
                         lineno,
                         "expected `node <id> <addr>`, `quorum <p> <a>`, `shards <n>`, \
                          `shard_quorum <p> <a>`, `stripes <n>`, `proposers <n>`, \
                          `io_threads <n>`, `max_deferred <n>`, \
-                         `checkpoint_records <n>`, `checkpoint_bytes <n>` or \
-                         `backend mem|disk`",
+                         `checkpoint_records <n>`, `checkpoint_bytes <n>`, \
+                         `backend mem|disk`, `read_coalesce on|off` or \
+                         `coalesce_queue <n>`",
                     ))
                 }
             }
@@ -250,6 +286,8 @@ impl Deployment {
             checkpoint_records: checkpoint_records.unwrap_or(0),
             checkpoint_bytes: checkpoint_bytes.unwrap_or(0),
             backend: backend.unwrap_or_default(),
+            read_coalesce: read_coalesce.unwrap_or(false),
+            coalesce_queue: coalesce_queue.unwrap_or(64),
         };
         // Fail at parse time, not at node start: a bad shard carve
         // (uneven groups with an explicit shard_quorum, non-intersecting
@@ -491,6 +529,28 @@ mod tests {
         assert_eq!(d.backend, Backend::Mem);
         assert!(Deployment::parse(&format!("{base}backend rocks\n")).is_err(), "unknown backend");
         assert!(Deployment::parse(&format!("{base}backend\n")).is_err(), "missing operand");
+    }
+
+    #[test]
+    fn parse_read_coalesce_config() {
+        let base = "node 1 a:1\nnode 2 a:2\nnode 3 a:3\n";
+        let d = Deployment::parse(base).unwrap();
+        assert!(!d.read_coalesce, "default is classic per-read fan-outs");
+        assert_eq!(d.coalesce_queue, 64, "default queue depth");
+        let d = Deployment::parse(&format!("{base}read_coalesce on\n")).unwrap();
+        assert!(d.read_coalesce);
+        let d = Deployment::parse(&format!("{base}read_coalesce off\n")).unwrap();
+        assert!(!d.read_coalesce);
+        let d =
+            Deployment::parse(&format!("{base}read_coalesce on\ncoalesce_queue 8\n")).unwrap();
+        assert!(d.read_coalesce);
+        assert_eq!(d.coalesce_queue, 8);
+        assert!(
+            Deployment::parse(&format!("{base}read_coalesce yes\n")).is_err(),
+            "only on|off"
+        );
+        assert!(Deployment::parse(&format!("{base}coalesce_queue 0\n")).is_err(), "zero queue");
+        assert!(Deployment::parse(&format!("{base}coalesce_queue x\n")).is_err(), "bad queue");
     }
 
     #[test]

@@ -29,7 +29,8 @@ fn usage() -> ! {
          \x20                [--listen-client <addr>] [--data <dir>] [--stripes <n>]\n\
          \x20                [--proposers <n>] [--io-threads <n>] [--max-deferred <n>]\n\
          \x20                [--checkpoint-records <n>] [--checkpoint-bytes <n>]\n\
-         \x20                [--backend mem|disk]\n\
+         \x20                [--backend mem|disk] [--read-coalesce on|off]\n\
+         \x20                [--coalesce-queue <n>]\n\
          \x20 caspaxos client --connect <addr> \
          <get|getcas|getmany|set|add|cas|del|collect|status> [args...]\n\
          \x20 caspaxos rtt-table"
@@ -77,6 +78,8 @@ fn run_node(mut args: Vec<String>) {
         max_deferred: usize,
         checkpoint: Option<caspaxos::acceptor::CheckpointOpts>,
         backend: caspaxos::acceptor::Backend,
+        read_coalesce: bool,
+        coalesce_queue: usize,
     }
     let cfg = if let Some(path) = take_flag(&mut args, "--config") {
         let d = Deployment::load(&path).unwrap_or_else(|e| {
@@ -97,6 +100,8 @@ fn run_node(mut args: Vec<String>) {
             max_deferred: d.max_deferred,
             checkpoint: d.checkpoint_opts(),
             backend: d.backend,
+            read_coalesce: d.read_coalesce,
+            coalesce_queue: d.coalesce_queue,
         }
     } else if let Some(spec) = take_flag(&mut args, "--peers") {
         let peers = Deployment::parse_peers(&spec).unwrap_or_else(|e| {
@@ -113,6 +118,8 @@ fn run_node(mut args: Vec<String>) {
             max_deferred: 256,
             checkpoint: None,
             backend: caspaxos::acceptor::Backend::default(),
+            read_coalesce: false,
+            coalesce_queue: 64,
         }
     } else {
         usage()
@@ -127,6 +134,8 @@ fn run_node(mut args: Vec<String>) {
         max_deferred: cfg_max_deferred,
         checkpoint: cfg_checkpoint,
         backend: cfg_backend,
+        read_coalesce: cfg_read_coalesce,
+        coalesce_queue: cfg_coalesce_queue,
     } = cfg;
     // `--stripes` overrides the config's `stripes` directive.
     let stripes: usize = match take_flag(&mut args, "--stripes") {
@@ -203,6 +212,21 @@ fn run_node(mut args: Vec<String>) {
         }),
         None => cfg_backend,
     };
+    // `--read-coalesce` / `--coalesce-queue` override the config's
+    // directives (server-edge ride-sharing of independent reads into
+    // shared quorum fan-outs — see server::ReadCoalescer).
+    let read_coalesce = match take_flag(&mut args, "--read-coalesce") {
+        Some(v) => match v.as_str() {
+            "on" => true,
+            "off" => false,
+            _ => {
+                eprintln!("--read-coalesce must be `on` or `off`");
+                exit(1)
+            }
+        },
+        None => cfg_read_coalesce,
+    };
+    let coalesce_queue = core_flag(&mut args, "--coalesce-queue", cfg_coalesce_queue);
 
     let mut acceptors: Vec<u64> = peers.keys().copied().collect();
     acceptors.sort_unstable();
@@ -233,6 +257,8 @@ fn run_node(mut args: Vec<String>) {
         lease: None,
         proposers_per_shard: proposers,
         router: caspaxos::router::RouterOpts::default(),
+        read_coalesce,
+        coalesce_queue,
     })
     .unwrap_or_else(|e| {
         eprintln!("start_node: {e}");

@@ -63,6 +63,49 @@ impl Counters {
     }
 }
 
+/// Counters for one server-edge read coalescer
+/// ([`crate::server::ReadCoalescer`]): how many reads rode shared
+/// quorum fan-outs, how many fan-outs were dispatched, and how many
+/// reads bypassed a full queue. `reads / batches` is the average ride
+/// size — 1.0 means no sharing happened (every read led its own
+/// fan-out), anything above it is acceptor-side message reduction.
+#[derive(Debug, Default)]
+pub struct CoalesceStats {
+    /// Reads served through coalescer fan-outs (leaders included).
+    pub reads: AtomicU64,
+    /// Shared quorum fan-outs dispatched.
+    pub batches: AtomicU64,
+    /// Reads that found the waiting queue full and fell back to their
+    /// own per-key quorum round.
+    pub overflows: AtomicU64,
+}
+
+impl CoalesceStats {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot as (reads, batches, overflows).
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.reads.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.overflows.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Average reads per dispatched fan-out (0.0 before any dispatch).
+    pub fn avg_ride(&self) -> f64 {
+        let (reads, batches, _) = self.snapshot();
+        if batches == 0 {
+            0.0
+        } else {
+            reads as f64 / batches as f64
+        }
+    }
+}
+
 const BUCKETS: usize = 64;
 
 /// Lock-free log-bucketed latency histogram (microsecond base).
@@ -164,6 +207,17 @@ mod tests {
         c.commits.fetch_add(2, Ordering::Relaxed);
         assert_eq!(c.snapshot()[0], 3);
         assert_eq!(c.snapshot()[1], 2);
+    }
+
+    #[test]
+    fn coalesce_stats_avg_ride() {
+        let c = CoalesceStats::new();
+        assert_eq!(c.avg_ride(), 0.0, "no dispatches yet");
+        c.reads.fetch_add(6, Ordering::Relaxed);
+        c.batches.fetch_add(2, Ordering::Relaxed);
+        c.overflows.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(c.snapshot(), (6, 2, 1));
+        assert_eq!(c.avg_ride(), 3.0);
     }
 
     #[test]

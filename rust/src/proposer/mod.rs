@@ -649,6 +649,39 @@ impl Proposer {
         }
     }
 
+    /// 0-RTT lease-window probe for the server-edge read coalescer: a
+    /// pure local lookup that serves ONLY a live lease hit — it never
+    /// takes a round, never renews, and never fences, so a miss costs
+    /// one mutex lock and nothing on the wire. `None` in non-lease
+    /// modes and on `NeedsRenew`/`Miss`/`Expired` (the caller decides
+    /// whether to coalesce the quorum read or take the redirect-aware
+    /// path, both of which handle renewal).
+    pub fn lease_probe(&self, key: &Key) -> Option<Val> {
+        if self.opts.read_mode != ReadMode::Lease {
+            return None;
+        }
+        let now = self.lease_now_us();
+        match self.lease.lock().unwrap().local_read(key, now) {
+            LeaseRead::Hit(v) => {
+                self.metrics.read_lease.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            // `local_read` drops the expired entry, so the follow-up
+            // read only sees a Miss — count the break here, exactly as
+            // the non-probe lease paths do.
+            LeaseRead::Expired => {
+                self.metrics.lease_break.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            LeaseRead::NeedsRenew | LeaseRead::Miss => None,
+        }
+    }
+
+    /// The configured read mode.
+    pub fn read_mode(&self) -> ReadMode {
+        self.opts.read_mode
+    }
+
     /// (0-RTT lease reads, grant/renew rounds armed, lease breaks).
     pub fn lease_stats(&self) -> (u64, u64, u64) {
         (

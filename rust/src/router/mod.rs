@@ -94,6 +94,8 @@ pub struct Router {
     routed: AtomicU64,
     /// Lease redirects followed (hops, not requests).
     redirected: AtomicU64,
+    /// Any member reads via 0-RTT leases (fixed at construction).
+    has_lease: bool,
 }
 
 impl Router {
@@ -111,6 +113,10 @@ impl Router {
                 assert!(prev.is_none(), "duplicate proposer id {} in pools", p.id());
             }
         }
+        let has_lease = pools
+            .iter()
+            .flatten()
+            .any(|p| p.read_mode() == crate::proposer::ReadMode::Lease);
         Router {
             shard_router: ShardRouter::new(pools.len()),
             member_routers,
@@ -119,6 +125,7 @@ impl Router {
             opts,
             routed: AtomicU64::new(0),
             redirected: AtomicU64::new(0),
+            has_lease,
         }
     }
 
@@ -181,6 +188,23 @@ impl Router {
                 }
             }
         }
+    }
+
+    /// 0-RTT lease-window probe for the server-edge read coalescer:
+    /// asks the key's routed member for a live local lease hit without
+    /// ever taking a round ([`Proposer::lease_probe`]). `None` means
+    /// the caller decides between the coalesced quorum path and the
+    /// redirect-aware [`Router::get`] — a hit never waits in a
+    /// coalescer queue.
+    pub fn lease_probe(&self, key: &str) -> Option<Val> {
+        self.proposer_for(key).lease_probe(&key.to_string())
+    }
+
+    /// True when any pool member reads via 0-RTT leases — lease-mode
+    /// deployments keep their misses on the redirect-aware path (the
+    /// denial names the holder) instead of the coalescer.
+    pub fn uses_leases(&self) -> bool {
+        self.has_lease
     }
 
     /// Routed change: writes always run on the key's pool member (any

@@ -36,10 +36,23 @@
 //! cores without multiplying fsyncs. `Status` exports the shared WAL's
 //! `wal_appends`/`wal_fsyncs` (their gap is the group-commit win) and
 //! the transport's `inflight` depth (proposer-side backpressure).
+//!
+//! ## Server-edge read coalescing
+//!
+//! With [`NodeOpts::read_coalesce`], independent `ClientReq::Read`s
+//! merge into shared quorum fan-outs through a per-shard
+//! [`ReadCoalescer`] — a ride-sharing scheme with **no fixed window**:
+//! an uncontended read dispatches immediately (zero idle-latency tax),
+//! and only reads arriving while a fan-out is already in flight queue
+//! to share the next one. Reads covered by a live 0-RTT lease window
+//! are served locally and never queued, and lease-mode misses keep the
+//! redirect-aware path (the denial names the holder). `Status` exports
+//! `reads_coalesced=`/`coalesce_batches=`/`coalesce_avg=`.
 
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::acceptor::{
     Backend, CheckpointOpts, CkptStats, GroupCommitOpts, StripedAcceptor, WalStats,
@@ -50,6 +63,7 @@ use crate::change::ChangeFn;
 use crate::codec::{decode_seq, encode_seq, Codec, CodecError, Envelope};
 use crate::error::{CasError, CasResult};
 use crate::gc::GcProcess;
+use crate::metrics::CoalesceStats;
 use crate::msg::Key;
 use crate::proposer::Proposer;
 use crate::quorum::ClusterConfig;
@@ -103,9 +117,11 @@ pub enum ClientReq {
         key: Key,
     },
     /// Batched linearizable reads: split by shard, each shard's keys
-    /// share ONE quorum-read fan-out ([`BatchProposer::read_batch`]).
+    /// share ONE quorum-read fan-out
+    /// ([`BatchProposer::read_batch_merged`]; duplicate keys collapse
+    /// into one fan-out column, one result per position either way).
     ReadBatch {
-        /// Distinct register keys.
+        /// Register keys (duplicates allowed).
         keys: Vec<Key>,
     },
 }
@@ -271,6 +287,176 @@ impl crate::gc::ProposerAdmin for RemoteProposer {
     }
 }
 
+/// Default [`NodeOpts::coalesce_queue`]: followers parked per shard
+/// before reads bypass to their own rounds.
+const DEFAULT_COALESCE_QUEUE: usize = 64;
+
+/// What a queued read receives from the flight ahead of it.
+enum Ride {
+    /// The leader fanned out for this waiter; here is its column's
+    /// result.
+    Served(CasResult<Val>),
+    /// The previous flight completed and this waiter is the oldest in
+    /// the queue: it becomes the next leader and fans out for itself
+    /// plus these co-riders.
+    Lead(Vec<Waiter>),
+}
+
+/// One read parked while a fan-out is in flight.
+struct Waiter {
+    key: Key,
+    tx: mpsc::Sender<Ride>,
+}
+
+/// Server-edge read coalescer: merges independent client reads into
+/// shared quorum fan-outs (ride-sharing over
+/// [`BatchProposer::read_batch_merged`]).
+///
+/// The coalescing window is **adaptive** — no timer, no fixed sleep.
+/// The first read to arrive at an idle coalescer becomes the *leader*
+/// and dispatches its fan-out immediately, so an uncontended read pays
+/// nothing. Reads arriving while a fan-out is in flight park as
+/// *followers*; when the flight lands, its leader hands the whole
+/// accumulated queue to the oldest follower, which leads ONE shared
+/// fan-out covering every queued key (duplicates collapse into one
+/// column — the hot-key best case). Under R concurrent readers the
+/// acceptor-side cost per ride generation drops from `R × A` messages
+/// to one shared fan-out, and the queue drains at one quorum RTT per
+/// generation regardless of R.
+///
+/// The no-stale-ride rule is structural: followers are collected into
+/// a ride BEFORE it dispatches, so a read enqueued after a write was
+/// acked is only ever served by a fan-out dispatched after that write
+/// — late joiners ride the *next* flight, never the stale in-flight
+/// one (`tests/tcp_chaos.rs` pins this with a gated acceptor).
+///
+/// A full queue ([`NodeOpts::coalesce_queue`]) bypasses with
+/// [`CasError::Overloaded`] instead of parking; the server then falls
+/// back to a plain per-key routed read, trading message reduction for
+/// liveness under pathological bursts.
+pub struct ReadCoalescer {
+    inner: Mutex<CoalesceInner>,
+    max_queue: usize,
+    /// Rides/fan-outs/overflows, exported through `Status` as
+    /// `reads_coalesced=` / `coalesce_batches=` / `coalesce_avg=`.
+    pub stats: CoalesceStats,
+}
+
+struct CoalesceInner {
+    /// A fan-out is currently in flight (its leader will hand off).
+    in_flight: bool,
+    /// Reads parked for the next flight, oldest first.
+    queue: Vec<Waiter>,
+}
+
+impl ReadCoalescer {
+    /// A coalescer admitting at most `max_queue` parked followers
+    /// (minimum 1; reads past the cap bypass with `Overloaded`).
+    pub fn new(max_queue: usize) -> Self {
+        ReadCoalescer {
+            inner: Mutex::new(CoalesceInner { in_flight: false, queue: Vec::new() }),
+            max_queue: max_queue.max(1),
+            stats: CoalesceStats::new(),
+        }
+    }
+
+    /// Followers currently parked (tests/diagnostics).
+    pub fn queued(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// One linearizable read through the coalescer: leads immediately
+    /// when idle, otherwise rides a shared fan-out. Returns
+    /// [`CasError::Overloaded`] without fanning out when the queue is
+    /// full — the caller pays its own per-key round instead.
+    pub fn read(&self, key: Key, batch: &BatchProposer) -> CasResult<Val> {
+        let rx = {
+            let mut inner = self.inner.lock().unwrap();
+            if !inner.in_flight {
+                inner.in_flight = true;
+                None
+            } else if inner.queue.len() >= self.max_queue {
+                self.stats.overflows.fetch_add(1, Ordering::Relaxed);
+                return Err(CasError::Overloaded {
+                    inflight: self.max_queue,
+                    max: self.max_queue,
+                });
+            } else {
+                let (tx, rx) = mpsc::channel();
+                inner.queue.push(Waiter { key: key.clone(), tx });
+                Some(rx)
+            }
+        };
+        let Some(rx) = rx else {
+            return self.lead(key, Vec::new(), batch);
+        };
+        match rx.recv() {
+            Ok(Ride::Served(res)) => res,
+            Ok(Ride::Lead(riders)) => self.lead(key, riders, batch),
+            // The leader panicked mid-flight and this waiter's sender
+            // unwound with its stack (the handoff guard already elected
+            // a leader from the reads still queued). Serve solo.
+            Err(_) => {
+                let mut results = batch.read_batch_merged(std::slice::from_ref(&key))?;
+                results.remove(0)
+            }
+        }
+    }
+
+    /// Dispatches ONE shared fan-out for `key` plus every co-rider's
+    /// key and demultiplexes the per-column results back to the riders.
+    /// On every exit — success, error, even an unwinding panic — the
+    /// queue accumulated during the flight is handed to the next
+    /// leader (or `in_flight` clears); a dying leader must never
+    /// strand the coalescer with the flag stuck set.
+    fn lead(&self, key: Key, riders: Vec<Waiter>, batch: &BatchProposer) -> CasResult<Val> {
+        struct Handoff<'a>(&'a ReadCoalescer);
+        impl Drop for Handoff<'_> {
+            fn drop(&mut self) {
+                let mut inner = self.0.inner.lock().unwrap();
+                loop {
+                    if inner.queue.is_empty() {
+                        inner.in_flight = false;
+                        return;
+                    }
+                    let mut group = std::mem::take(&mut inner.queue);
+                    let next = group.remove(0);
+                    match next.tx.send(Ride::Lead(group)) {
+                        // in_flight stays true: the new leader owns it.
+                        Ok(()) => return,
+                        // The elected leader's receiver is gone (its
+                        // worker died); re-queue the co-riders and try
+                        // the next-oldest.
+                        Err(mpsc::SendError(Ride::Lead(rest))) => inner.queue = rest,
+                        Err(_) => unreachable!("handoff sends only Ride::Lead"),
+                    }
+                }
+            }
+        }
+        let _handoff = Handoff(self);
+        let mut keys: Vec<Key> = Vec::with_capacity(1 + riders.len());
+        keys.push(key);
+        keys.extend(riders.iter().map(|w| w.key.clone()));
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.reads.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        match batch.read_batch_merged(&keys) {
+            Ok(mut results) => {
+                let mine = results.remove(0);
+                for (w, res) in riders.into_iter().zip(results) {
+                    let _ = w.tx.send(Ride::Served(res));
+                }
+                mine
+            }
+            Err(e) => {
+                for w in riders {
+                    let _ = w.tx.send(Ride::Served(Err(e.clone())));
+                }
+                Err(e)
+            }
+        }
+    }
+}
+
 /// Options for one node process.
 #[derive(Debug, Clone)]
 pub struct NodeOpts {
@@ -344,6 +530,17 @@ pub struct NodeOpts {
     /// Routing-tier tunables: lease-redirect budget and the background
     /// renewal cadence ([`RouterOpts`]).
     pub router: RouterOpts,
+    /// Server-edge read coalescing ([`ReadCoalescer`]): merge
+    /// independent client reads into shared per-shard quorum fan-outs.
+    /// Adaptive (an uncontended read dispatches immediately — no idle
+    /// window tax); worth enabling when many clients read concurrently,
+    /// worth disabling when reads are rare and latency-critical enough
+    /// that even one mutex handoff matters. Default off.
+    pub read_coalesce: bool,
+    /// Max reads parked per shard coalescer waiting for the next shared
+    /// fan-out; past it reads bypass to their own per-key round. `0` is
+    /// treated as the default (64). Ignored unless `read_coalesce`.
+    pub coalesce_queue: usize,
 }
 
 /// A running node (handles held for inspection; threads detached).
@@ -417,6 +614,9 @@ struct NodeCtx {
     /// services (exported through `Status` as `open_conns=` /
     /// `loop_wakeups=` / `io_threads=`).
     loop_stats: Arc<LoopStats>,
+    /// Per-shard read coalescers (`None` = coalescing disabled; plain
+    /// reads go straight to the request router).
+    coalescers: Option<Vec<Arc<ReadCoalescer>>>,
 }
 
 /// Spawns the checkpoint poller: the striped coordination point must
@@ -461,6 +661,8 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
     // services aggregate their connection/wakeup counters here, and
     // `Status` reads them back.
     let loop_stats = Arc::new(LoopStats::default());
+    let coalesce_queue =
+        if opts.coalesce_queue == 0 { DEFAULT_COALESCE_QUEUE } else { opts.coalesce_queue };
     let serve_opts = ServeOpts {
         io_threads: opts.io_threads.max(1),
         max_deferred: if opts.max_deferred == 0 {
@@ -468,6 +670,12 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         } else {
             opts.max_deferred
         },
+        // Coalescer followers PARK inside deferred-reply workers until
+        // their shared fan-out lands; raise the pool cap by the queue
+        // depth so a full ride can park without starving unrelated
+        // deferred work (writes, batches) of workers.
+        workers: ServeOpts::default().workers
+            + if opts.read_coalesce { coalesce_queue } else { 0 },
         ..ServeOpts::default()
     };
     let mut ckpt_stop: Option<(Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>)> =
@@ -642,6 +850,13 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         let handles = request_router.spawn_renewal(Arc::clone(&stop));
         if handles.is_empty() { None } else { Some((stop, handles)) }
     };
+    // One coalescer per shard: rides never span shards (a shard's keys
+    // share one acceptor group and one BatchProposer).
+    let coalescers = opts.read_coalesce.then(|| {
+        (0..plan.shard_count())
+            .map(|_| Arc::new(ReadCoalescer::new(coalesce_queue)))
+            .collect::<Vec<_>>()
+    });
     let ctx = Arc::new(NodeCtx {
         router: ShardRouter::new(plan.shard_count()),
         shards: plan.shards.clone(),
@@ -654,6 +869,7 @@ pub fn start_node(opts: NodeOpts) -> CasResult<Node> {
         wal_stats,
         backend_stats,
         loop_stats: Arc::clone(&loop_stats),
+        coalescers,
     });
 
     // ---- client service ----
@@ -714,9 +930,7 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
             }
         }
         ClientReq::Batch { ops } => handle_batch(ops, ctx),
-        // Redirect-aware: a lease-denied read re-routes to the named
-        // holder's 0-RTT path instead of fencing for a lease window.
-        ClientReq::Read { key } => match ctx.request_router.get(key) {
+        ClientReq::Read { key } => match read_one(key, ctx) {
             Ok(v) => ClientResp::Val(v),
             Err(e) => ClientResp::Err(e.to_string()),
         },
@@ -782,6 +996,18 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
             let inflight = ctx.proposers[0].transport_inflight().unwrap_or(0);
             let (open_conns, loop_wakeups, io_threads) = ctx.loop_stats.snapshot();
             let (routed, redirected) = ctx.request_router.stats();
+            // Coalescer counters summed across shards (zeros when
+            // coalescing is off); avg is reads per dispatched fan-out.
+            let (co_reads, co_batches) = ctx
+                .coalescers
+                .as_deref()
+                .unwrap_or(&[])
+                .iter()
+                .fold((0u64, 0u64), |(r, b), c| {
+                    let (reads, batches, _) = c.stats.snapshot();
+                    (r + reads, b + batches)
+                });
+            let co_avg = if co_batches == 0 { 0.0 } else { co_reads as f64 / co_batches as f64 };
             ClientResp::Status(format!(
                 "id={} shards={} rounds={} commits={} conflicts={} retries={} \
                  cache_hits={} failures={} read_fast={} read_fallback={} \
@@ -791,7 +1017,8 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                  replay_truncated_bytes={} backend={} resident_keys={} \
                  index_pages={} inflight={} \
                  open_conns={} loop_wakeups={} io_threads={} \
-                 routed={} redirected={} pool_size={}",
+                 routed={} redirected={} pool_size={} \
+                 reads_coalesced={} coalesce_batches={} coalesce_avg={:.2}",
                 ctx.proposers[0].id(),
                 ctx.shards.len(),
                 snap[0],
@@ -823,14 +1050,104 @@ fn handle_client(req: &ClientReq, ctx: &NodeCtx) -> ClientResp {
                 io_threads,
                 routed,
                 redirected,
-                ctx.request_router.pool_size()
+                ctx.request_router.pool_size(),
+                co_reads,
+                co_batches,
+                co_avg
             ))
         }
     }
 }
 
-/// Executes a client batch, splitting it across shards when needed and
-/// reassembling per-op results in the original order.
+/// One client read through the tiered read path:
+///
+/// 1. **0-RTT lease window** — a live local lease serves immediately
+///    and never queues (coalescing a read that costs zero messages
+///    would only add latency).
+/// 2. **Coalesced 1-RTT quorum read** — with [`NodeOpts::read_coalesce`]
+///    on a quorum-tier deployment, the read leads or rides a shared
+///    per-shard fan-out ([`ReadCoalescer`]). A full queue bypasses to
+///    tier 3.
+/// 3. **Routed read** — the classic redirect-aware path
+///    ([`Router::get`]): per-key quorum read with identity-CAS
+///    fallback; in lease mode, denials follow the named holder.
+///
+/// Lease-mode misses skip tier 2 entirely: their value usually lives
+/// behind a redirect to the holder's 0-RTT state, which the coalescer's
+/// shared CAS-fallback machinery cannot follow.
+fn read_one(key: &Key, ctx: &NodeCtx) -> CasResult<Val> {
+    let Some(coalescers) = &ctx.coalescers else {
+        return ctx.request_router.get(key);
+    };
+    if let Some(v) = ctx.request_router.lease_probe(key) {
+        return Ok(v);
+    }
+    if ctx.request_router.uses_leases() {
+        return ctx.request_router.get(key);
+    }
+    let shard = ctx.router.route(key);
+    match coalescers[shard].read(key.clone(), &ctx.batches[shard]) {
+        // Queue full: pay our own round rather than park.
+        Err(CasError::Overloaded { .. }) => ctx.request_router.get(key),
+        other => other,
+    }
+}
+
+/// Splits `n` op indices across shards by routed key.
+fn split_by_shard<'a>(
+    ctx: &NodeCtx,
+    keys: impl Iterator<Item = &'a Key>,
+) -> Vec<Vec<usize>> {
+    let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); ctx.shards.len()];
+    for (i, key) in keys.enumerate() {
+        by_shard[ctx.router.route(key)].push(i);
+    }
+    by_shard
+}
+
+/// Runs one closure per non-empty shard **concurrently** and scatters
+/// each shard's per-op results back into original batch order. Shards
+/// are independent acceptor groups, so a multi-shard batch costs the
+/// slowest single shard's RTT, not the sum across shards (the
+/// sequential dispatch this replaces paid S serial quorum RTTs for an
+/// S-shard `getmany`). A panicking shard worker yields per-op errors
+/// for its slots only.
+fn scatter_shards(
+    n_ops: usize,
+    by_shard: &[Vec<usize>],
+    run: impl Fn(usize, &[usize]) -> Vec<Result<Val, String>> + Sync,
+) -> ClientResp {
+    let mut results: Vec<Option<Result<Val, String>>> = Vec::new();
+    results.resize_with(n_ops, || None);
+    let run = &run;
+    let shard_outs: Vec<(usize, Vec<Result<Val, String>>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = by_shard
+            .iter()
+            .enumerate()
+            .filter(|(_, idxs)| !idxs.is_empty())
+            .map(|(s, idxs)| (s, scope.spawn(move || run(s, idxs))))
+            .collect();
+        handles
+            .into_iter()
+            .map(|(s, h)| {
+                let out = h.join().unwrap_or_else(|_| {
+                    by_shard[s].iter().map(|_| Err("shard batch worker panicked".into())).collect()
+                });
+                (s, out)
+            })
+            .collect()
+    });
+    for (s, out) in shard_outs {
+        for (&i, r) in by_shard[s].iter().zip(out) {
+            results[i] = Some(r);
+        }
+    }
+    ClientResp::Batch(results.into_iter().map(|r| r.expect("every slot routed")).collect())
+}
+
+/// Executes a client batch, splitting it across shards when needed
+/// (each non-empty shard dispatched concurrently) and reassembling
+/// per-op results in the original order.
 fn handle_batch(ops: &[(Key, ChangeFn)], ctx: &NodeCtx) -> ClientResp {
     if ctx.shards.len() == 1 {
         return match ctx.batches[0].execute(ops) {
@@ -840,77 +1157,50 @@ fn handle_batch(ops: &[(Key, ChangeFn)], ctx: &NodeCtx) -> ClientResp {
             Err(e) => ClientResp::Err(e.to_string()),
         };
     }
-    let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); ctx.shards.len()];
-    for (i, (key, _)) in ops.iter().enumerate() {
-        by_shard[ctx.router.route(key)].push(i);
-    }
-    let mut results: Vec<Option<Result<Val, String>>> = Vec::new();
-    results.resize_with(ops.len(), || None);
-    for (s, idxs) in by_shard.iter().enumerate() {
-        if idxs.is_empty() {
-            continue;
-        }
+    let by_shard = split_by_shard(ctx, ops.iter().map(|(key, _)| key));
+    scatter_shards(ops.len(), &by_shard, |s, idxs| {
         let shard_ops: Vec<(Key, ChangeFn)> = idxs.iter().map(|&i| ops[i].clone()).collect();
         match ctx.batches[s].execute(&shard_ops) {
-            Ok(rs) => {
-                for (&i, r) in idxs.iter().zip(rs.into_iter()) {
-                    results[i] = Some(r.map_err(|e| e.to_string()));
-                }
-            }
+            Ok(rs) => rs.into_iter().map(|r| r.map_err(|e| e.to_string())).collect(),
             Err(e) => {
                 // Other shards' ops may already be durably applied, so a
                 // whole-batch error would hide partial application (and
                 // invite unsafe retries of non-idempotent ops). Report
                 // the failure per-op instead.
                 let msg = e.to_string();
-                for &i in idxs {
-                    results[i] = Some(Err(msg.clone()));
-                }
+                idxs.iter().map(|_| Err(msg.clone())).collect()
             }
         }
-    }
-    ClientResp::Batch(results.into_iter().map(|r| r.expect("every slot routed")).collect())
+    })
 }
 
 /// Executes a client read batch: each shard's keys share one
-/// quorum-read fan-out; results reassemble in the original order.
+/// quorum-read fan-out ([`BatchProposer::read_batch_merged`], so
+/// duplicate client keys collapse rather than erroring), non-empty
+/// shards dispatch concurrently, and results reassemble in the
+/// original order. Whole-shard failures report **per-op** on every
+/// shape — including the single-shard case, which used to collapse
+/// into one `ClientResp::Err` while the multi-shard path reported
+/// per-op; reads are side-effect free, so per-op is always safe to
+/// retry and the client sees one shape regardless of the shard plan.
 fn handle_read_batch(keys: &[Key], ctx: &NodeCtx) -> ClientResp {
-    if ctx.shards.len() == 1 {
-        return match ctx.batches[0].read_batch(keys) {
-            Ok(results) => ClientResp::Batch(
-                results.into_iter().map(|r| r.map_err(|e| e.to_string())).collect(),
-            ),
-            Err(e) => ClientResp::Err(e.to_string()),
-        };
-    }
-    let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); ctx.shards.len()];
-    for (i, key) in keys.iter().enumerate() {
-        by_shard[ctx.router.route(key)].push(i);
-    }
-    let mut results: Vec<Option<Result<Val, String>>> = Vec::new();
-    results.resize_with(keys.len(), || None);
-    for (s, idxs) in by_shard.iter().enumerate() {
-        if idxs.is_empty() {
-            continue;
-        }
-        let shard_keys: Vec<Key> = idxs.iter().map(|&i| keys[i].clone()).collect();
-        match ctx.batches[s].read_batch(&shard_keys) {
-            Ok(rs) => {
-                for (&i, r) in idxs.iter().zip(rs.into_iter()) {
-                    results[i] = Some(r.map_err(|e| e.to_string()));
-                }
-            }
+    let run_shard = |batch: &BatchProposer, shard_keys: &[Key]| -> Vec<Result<Val, String>> {
+        match batch.read_batch_merged(shard_keys) {
+            Ok(rs) => rs.into_iter().map(|r| r.map_err(|e| e.to_string())).collect(),
             Err(e) => {
-                // Reads are side-effect free, so a whole-shard error is
-                // safe to report per-op (and retry).
                 let msg = e.to_string();
-                for &i in idxs {
-                    results[i] = Some(Err(msg.clone()));
-                }
+                shard_keys.iter().map(|_| Err(msg.clone())).collect()
             }
         }
+    };
+    if ctx.shards.len() == 1 {
+        return ClientResp::Batch(run_shard(&ctx.batches[0], keys));
     }
-    ClientResp::Batch(results.into_iter().map(|r| r.expect("every slot routed")).collect())
+    let by_shard = split_by_shard(ctx, keys.iter());
+    scatter_shards(keys.len(), &by_shard, |s, idxs| {
+        let shard_keys: Vec<Key> = idxs.iter().map(|&i| keys[i].clone()).collect();
+        run_shard(&ctx.batches[s], &shard_keys)
+    })
 }
 
 /// A minimal blocking client for the client protocol. One request in
@@ -994,6 +1284,11 @@ mod tests {
         launch_cluster_backend(n, shards, stripes, data, lease, 0, Backend::Mem)
     }
 
+    /// A single-shard mem cluster with server-edge read coalescing on.
+    fn launch_cluster_coalesced(n: u64, coalesce_queue: usize) -> Vec<Node> {
+        launch_cluster_full(n, 1, 1, None, None, 0, Backend::Mem, true, coalesce_queue)
+    }
+
     fn launch_cluster_pooled(
         n: u64,
         shards: usize,
@@ -1014,6 +1309,21 @@ mod tests {
         lease: Option<crate::proposer::LeaseOpts>,
         proposers_per_shard: usize,
         backend: Backend,
+    ) -> Vec<Node> {
+        launch_cluster_full(n, shards, stripes, data, lease, proposers_per_shard, backend, false, 0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn launch_cluster_full(
+        n: u64,
+        shards: usize,
+        stripes: usize,
+        data: Option<&TempDir>,
+        lease: Option<crate::proposer::LeaseOpts>,
+        proposers_per_shard: usize,
+        backend: Backend,
+        read_coalesce: bool,
+        coalesce_queue: usize,
     ) -> Vec<Node> {
         // Two-phase bind: reserve acceptor AND client ports first so
         // every node knows every peer address before starting (a bind
@@ -1050,6 +1360,8 @@ mod tests {
                     lease: lease.clone(),
                     proposers_per_shard,
                     router: RouterOpts::default(),
+                    read_coalesce,
+                    coalesce_queue,
                 })
                 .unwrap()
             })
@@ -1280,6 +1592,8 @@ mod tests {
             lease: None,
             proposers_per_shard: 0,
             router: RouterOpts::default(),
+            read_coalesce: false,
+            coalesce_queue: 0,
         };
         let node = start_node(mk_opts(reserve(), reserve())).unwrap();
         let mut c = Client::connect(&node.client_addr.to_string()).unwrap();
@@ -1429,6 +1743,8 @@ mod tests {
             lease: None,
             proposers_per_shard: 6,
             router: RouterOpts::default(),
+            read_coalesce: false,
+            coalesce_queue: 0,
         })
         .unwrap_err();
         assert!(err.to_string().contains("capped at 5"), "{err}");
@@ -1590,5 +1906,405 @@ mod tests {
             }
         }
         assert_eq!(found, 3);
+    }
+
+    // ---- server-edge read coalescing ----
+
+    use crate::acceptor::Acceptor;
+    use crate::msg::Request;
+    use crate::proposer::ProposerOpts;
+    use crate::runtime::{Engine, ScalarEngine, StepInput, StepOutput};
+    use crate::transport::mem::MemTransport;
+    use crate::transport::tcp::{spawn_acceptor_with, ReplyHook};
+    use crate::transport::Transport;
+    use std::sync::atomic::AtomicBool;
+    use std::time::{Duration, Instant};
+
+    /// A 3-acceptor TCP group whose `Read` replies spin until `gate`
+    /// clears (the hook forces the deferred path, so the gate parks a
+    /// worker, never the acceptor's event loop). Returns the batch
+    /// proposer and a promise-free seeder for fast-path reads.
+    fn gated_read_group(gate: &Arc<AtomicBool>) -> (Arc<BatchProposer>, Proposer) {
+        let mut addrs = HashMap::new();
+        for id in 1..=3u64 {
+            let gate = Arc::clone(gate);
+            let hook: ReplyHook = Arc::new(move |req, _resp| {
+                if matches!(req, Request::Read { .. }) {
+                    while gate.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            });
+            let addr = spawn_acceptor_with("127.0.0.1:0", Acceptor::new(id), Some(hook)).unwrap();
+            addrs.insert(id, addr.to_string());
+        }
+        let t = Arc::new(TcpTransport::new(addrs));
+        let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+        // Seed WITHOUT piggybacking so no promise is left behind and
+        // coalesced reads stay on the zero-write fast path.
+        let seeder = Proposer::with_opts(
+            7,
+            cfg.clone(),
+            t.clone(),
+            ProposerOpts { piggyback: false, ..Default::default() },
+        );
+        let engine: Arc<dyn Engine> = Arc::new(ScalarEngine);
+        let bp = Arc::new(BatchProposer::new(500_001, cfg, t, engine));
+        (bp, seeder)
+    }
+
+    fn wait_until(what: &str, mut done: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !done() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn coalescer_solo_read_leads_immediately() {
+        // No gate: an uncontended read must dispatch without waiting
+        // for co-riders (the adaptive window is zero when idle).
+        let gate = Arc::new(AtomicBool::new(false));
+        let (bp, seeder) = gated_read_group(&gate);
+        seeder.set("k", 7).unwrap();
+        let co = ReadCoalescer::new(8);
+        assert_eq!(co.read("k".into(), &bp).unwrap().as_num(), Some(7));
+        assert_eq!(co.read("absent".into(), &bp).unwrap(), Val::Empty);
+        assert_eq!(co.stats.snapshot(), (2, 2, 0), "two solo flights, no overflow");
+        assert_eq!(co.queued(), 0);
+    }
+
+    #[test]
+    fn coalescer_riders_share_one_fanout_and_hand_off() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let (bp, seeder) = gated_read_group(&gate);
+        for (i, k) in ["a", "b", "c", "d", "e"].iter().enumerate() {
+            seeder.set(k, i as i64 + 1).unwrap();
+        }
+        let co = Arc::new(ReadCoalescer::new(8));
+        // Leader dispatches into the closed gate and parks in flight.
+        gate.store(true, Ordering::Relaxed);
+        let leader = {
+            let (co, bp) = (Arc::clone(&co), Arc::clone(&bp));
+            std::thread::spawn(move || co.read("a".into(), &bp))
+        };
+        wait_until("leader in flight", || co.stats.snapshot().1 == 1);
+        // Four reads arrive during the flight: all park as followers.
+        let riders: Vec<_> = ["b", "c", "d", "e"]
+            .iter()
+            .map(|k| {
+                let (co, bp, k) = (Arc::clone(&co), Arc::clone(&bp), k.to_string());
+                std::thread::spawn(move || co.read(k, &bp))
+            })
+            .collect();
+        wait_until("riders parked", || co.queued() == 4);
+        gate.store(false, Ordering::Relaxed);
+        assert_eq!(leader.join().unwrap().unwrap().as_num(), Some(1));
+        for (i, h) in riders.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap().unwrap().as_num(), Some(i as i64 + 2));
+        }
+        // 5 reads, exactly 2 fan-outs: the leader's solo flight, then
+        // ONE shared flight covering all four queued keys.
+        assert_eq!(co.stats.snapshot(), (5, 2, 0));
+        assert_eq!(co.queued(), 0);
+    }
+
+    #[test]
+    fn coalescer_full_queue_overflows_without_parking() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let (bp, seeder) = gated_read_group(&gate);
+        seeder.set("a", 1).unwrap();
+        seeder.set("b", 2).unwrap();
+        let co = Arc::new(ReadCoalescer::new(1));
+        gate.store(true, Ordering::Relaxed);
+        let leader = {
+            let (co, bp) = (Arc::clone(&co), Arc::clone(&bp));
+            std::thread::spawn(move || co.read("a".into(), &bp))
+        };
+        wait_until("leader in flight", || co.stats.snapshot().1 == 1);
+        let rider = {
+            let (co, bp) = (Arc::clone(&co), Arc::clone(&bp));
+            std::thread::spawn(move || co.read("b".into(), &bp))
+        };
+        wait_until("rider parked", || co.queued() == 1);
+        // Queue full: the overflow read bypasses IMMEDIATELY (gate
+        // still closed — it must not park behind the stalled flight).
+        match co.read("c".into(), &bp) {
+            Err(CasError::Overloaded { .. }) => {}
+            other => panic!("expected Overloaded bypass, got {other:?}"),
+        }
+        gate.store(false, Ordering::Relaxed);
+        assert_eq!(leader.join().unwrap().unwrap().as_num(), Some(1));
+        assert_eq!(rider.join().unwrap().unwrap().as_num(), Some(2));
+        let (reads, batches, overflows) = co.stats.snapshot();
+        assert_eq!((reads, batches), (2, 2));
+        assert_eq!(overflows, 1);
+    }
+
+    #[test]
+    fn coalesced_node_serves_reads_and_exports_counters() {
+        let nodes = launch_cluster_coalesced(3, 0);
+        let addr = nodes[0].client_addr.to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        c.change("h", ChangeFn::Set(7)).unwrap();
+        // 8 concurrent readers hammer one hot key through one node:
+        // every read is served through the coalescer (values still
+        // linearizable), concurrent arrivals sharing fan-outs.
+        let readers: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    for _ in 0..10 {
+                        assert_eq!(c.get("h").unwrap().as_num(), Some(7));
+                    }
+                })
+            })
+            .collect();
+        for h in readers {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get("absent").unwrap(), Val::Empty);
+        match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => {
+                let field = |name: &str| -> u64 {
+                    s.split_whitespace()
+                        .find_map(|kv| kv.strip_prefix(name))
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or_else(|| panic!("missing {name} in {s}"))
+                };
+                // 80 hot reads + 1 absent read, all through the
+                // coalescer (queue depth 64 admits 8 readers, so none
+                // overflowed to the routed path).
+                assert_eq!(field("reads_coalesced="), 81, "{s}");
+                assert!(field("coalesce_batches=") >= 1, "{s}");
+                assert!(field("coalesce_batches=") <= 81, "{s}");
+                assert!(s.contains("coalesce_avg="), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn coalesced_lease_node_keeps_lease_reads_local() {
+        use crate::proposer::LeaseOpts;
+        let lease = LeaseOpts {
+            duration: std::time::Duration::from_millis(300),
+            skew_bound: std::time::Duration::from_millis(50),
+            renew_margin: std::time::Duration::ZERO,
+        };
+        let nodes = launch_cluster_full(3, 1, 1, None, Some(lease), 0, Backend::Mem, true, 0);
+        let mut c = Client::connect(&nodes[0].client_addr.to_string()).unwrap();
+        c.change("k", ChangeFn::Set(7)).unwrap();
+        for _ in 0..5 {
+            assert_eq!(c.get("k").unwrap().as_num(), Some(7));
+        }
+        let (local, renews, _) = nodes[0].proposer.lease_stats();
+        assert!(renews >= 1, "first read must run a grant round");
+        assert!(local >= 3, "later reads must be lease-local, got {local}");
+        // Lease-tier reads never queue: the coalescer stays untouched
+        // (tier 1 serves hits 0-RTT, misses keep the redirect-aware
+        // routed path).
+        match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => {
+                assert!(s.contains("reads_coalesced=0"), "{s}");
+                assert!(s.contains("coalesce_batches=0"), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // ---- multi-shard batch dispatch (parallel scatter) ----
+
+    /// First key (by probe order) routing to `shard`.
+    fn key_for_shard(router: &ShardRouter, shard: usize) -> Key {
+        (0..).map(|i| format!("k{i}")).find(|k| router.route(k) == shard).unwrap()
+    }
+
+    /// A NodeCtx over TWO single-acceptor shards whose `Read` and
+    /// `Prepare` replies sleep `d` while `stall` is set — each shard's
+    /// quorum round costs one deliberate RTT, so the dispatch strategy
+    /// (serial vs concurrent) is directly visible in wall-clock time.
+    fn two_shard_stalled_ctx(stall: &Arc<AtomicBool>, d: Duration) -> NodeCtx {
+        let mut addrs = HashMap::new();
+        for id in [1u64, 2] {
+            let stall = Arc::clone(stall);
+            let hook: ReplyHook = Arc::new(move |req, _resp| {
+                if stall.load(Ordering::Relaxed)
+                    && matches!(req, Request::Read { .. } | Request::Prepare { .. })
+                {
+                    std::thread::sleep(d);
+                }
+            });
+            let addr = spawn_acceptor_with("127.0.0.1:0", Acceptor::new(id), Some(hook)).unwrap();
+            addrs.insert(id, addr.to_string());
+        }
+        let t: Arc<dyn Transport> = Arc::new(TcpTransport::new(addrs));
+        let engine: Arc<dyn Engine> = Arc::new(ScalarEngine);
+        let cfgs =
+            vec![ClusterConfig::majority(1, vec![1]), ClusterConfig::majority(1, vec![2])];
+        ctx_over(cfgs.iter().map(|cfg| (cfg.clone(), t.clone(), engine.clone())).collect())
+    }
+
+    /// Hand-builds the client service's context over per-shard
+    /// (config, transport, engine) triples — the test twin of
+    /// `start_node`'s wiring, minus the sockets it doesn't need.
+    fn ctx_over(shards: Vec<(ClusterConfig, Arc<dyn Transport>, Arc<dyn Engine>)>) -> NodeCtx {
+        let proposers: Vec<Arc<Proposer>> = shards
+            .iter()
+            .enumerate()
+            .map(|(s, (cfg, t, _))| Arc::new(Proposer::new(101 + s as u64, cfg.clone(), t.clone())))
+            .collect();
+        let batches: Vec<Arc<BatchProposer>> = shards
+            .iter()
+            .enumerate()
+            .map(|(s, (cfg, t, engine))| {
+                Arc::new(BatchProposer::new(
+                    500_001 + s as u64,
+                    cfg.clone(),
+                    t.clone(),
+                    engine.clone(),
+                ))
+            })
+            .collect();
+        let request_router = Arc::new(Router::new(
+            proposers.iter().map(|p| vec![Arc::clone(p)]).collect(),
+            RouterOpts::default(),
+        ));
+        let gc = Arc::new(GcProcess::with_id(
+            shards[0].1.clone(),
+            request_router.all_proposers(),
+            900_001,
+        ));
+        NodeCtx {
+            router: ShardRouter::new(shards.len()),
+            shards: shards.into_iter().map(|(cfg, _, _)| cfg).collect(),
+            proposers,
+            request_router,
+            batches,
+            gc,
+            stripes: 1,
+            backend: Backend::Mem,
+            wal_stats: None,
+            backend_stats: None,
+            loop_stats: Arc::new(LoopStats::default()),
+            coalescers: None,
+        }
+    }
+
+    #[test]
+    fn multi_shard_batches_pay_one_stalled_rtt_not_the_sum() {
+        let stall = Arc::new(AtomicBool::new(false));
+        let d = Duration::from_millis(300);
+        let ctx = two_shard_stalled_ctx(&stall, d);
+        let k0 = key_for_shard(&ctx.router, 0);
+        let k1 = key_for_shard(&ctx.router, 1);
+        stall.store(true, Ordering::Relaxed);
+        // A 2-shard read batch: each shard's fan-out stalls d, so the
+        // serial dispatch this pins against would cost ≥ 2d.
+        let start = Instant::now();
+        match handle_read_batch(&[k0.clone(), k1.clone()], &ctx) {
+            ClientResp::Batch(items) => {
+                assert_eq!(items.len(), 2);
+                for item in &items {
+                    assert_eq!(item.as_ref().unwrap(), &Val::Empty);
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        let read_elapsed = start.elapsed();
+        assert!(read_elapsed >= d, "the stall must bite: {read_elapsed:?}");
+        assert!(
+            read_elapsed < d * 7 / 4,
+            "2-shard read batch must dispatch shards concurrently \
+             (~one stalled RTT, not two): {read_elapsed:?}"
+        );
+        // Same bound for the write path (Prepare is the stalled phase).
+        let start = Instant::now();
+        match handle_batch(&[(k0, ChangeFn::Set(1)), (k1, ChangeFn::Set(2))], &ctx) {
+            ClientResp::Batch(items) => {
+                assert_eq!(items[0].as_ref().unwrap().as_num(), Some(1));
+                assert_eq!(items[1].as_ref().unwrap().as_num(), Some(2));
+            }
+            other => panic!("{other:?}"),
+        }
+        let write_elapsed = start.elapsed();
+        assert!(write_elapsed >= d, "the stall must bite: {write_elapsed:?}");
+        assert!(
+            write_elapsed < d * 7 / 4,
+            "2-shard write batch must dispatch shards concurrently: {write_elapsed:?}"
+        );
+        stall.store(false, Ordering::Relaxed);
+    }
+
+    // ---- per-op error shape (single- and multi-shard) ----
+
+    /// An engine with no compiled variants: every fallback round fails
+    /// whole-shard with `CasError::Runtime` before fanning out.
+    struct NoEngine;
+    impl Engine for NoEngine {
+        fn pick_shape(&self, _acceptors: usize, _batch: usize) -> Option<(usize, usize)> {
+            None
+        }
+        fn step(&self, _input: &StepInput) -> CasResult<StepOutput> {
+            Err(CasError::Runtime("no engine".into()))
+        }
+    }
+
+    /// One mem shard whose reads fail whole-shard: every acceptor is
+    /// down (replies exhaust → fallback) and the fallback engine has no
+    /// variants, so `read_batch_merged` returns `Err`, not per-op Oks.
+    fn failing_shard() -> (ClusterConfig, Arc<dyn Transport>, Arc<dyn Engine>) {
+        let t = Arc::new(MemTransport::new(3));
+        let cfg = ClusterConfig::majority(1, t.acceptor_ids());
+        for id in t.acceptor_ids() {
+            t.set_down(id, true);
+        }
+        let transport: Arc<dyn Transport> = t;
+        let engine: Arc<dyn Engine> = Arc::new(NoEngine);
+        (cfg, transport, engine)
+    }
+
+    #[test]
+    fn read_batch_whole_shard_failure_is_per_op_on_one_shard() {
+        // The single-shard shape used to collapse a whole-shard error
+        // into ClientResp::Err while the multi-shard path answered
+        // per-op; both shapes must now agree (reads are side-effect
+        // free, so per-op errors are always safe to retry).
+        let ctx = ctx_over(vec![failing_shard()]);
+        match handle_read_batch(&["a".into(), "b".into()], &ctx) {
+            ClientResp::Batch(items) => {
+                assert_eq!(items.len(), 2);
+                for item in &items {
+                    let e = item.as_ref().unwrap_err();
+                    assert!(e.contains("no engine variant"), "{e}");
+                }
+            }
+            other => panic!("whole-shard failure must stay per-op, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_batch_whole_shard_failure_is_per_op_across_shards() {
+        // Shard 0 fails whole-shard, shard 1 is healthy: the batch
+        // reassembles per-op errors beside per-op values.
+        let healthy_t = Arc::new(MemTransport::new(3));
+        let healthy_cfg = ClusterConfig::majority(1, healthy_t.acceptor_ids());
+        let healthy: (ClusterConfig, Arc<dyn Transport>, Arc<dyn Engine>) =
+            (healthy_cfg, healthy_t, Arc::new(ScalarEngine));
+        let ctx = ctx_over(vec![failing_shard(), healthy]);
+        let k0 = key_for_shard(&ctx.router, 0);
+        let k1 = key_for_shard(&ctx.router, 1);
+        ctx.batches[1].execute(&[(k1.clone(), ChangeFn::Set(9))]).unwrap();
+        match handle_read_batch(&[k0, k1], &ctx) {
+            ClientResp::Batch(items) => {
+                assert_eq!(items.len(), 2);
+                let e = items[0].as_ref().unwrap_err();
+                assert!(e.contains("no engine variant"), "{e}");
+                assert_eq!(items[1].as_ref().unwrap().as_num(), Some(9));
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

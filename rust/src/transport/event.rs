@@ -42,9 +42,18 @@
 //! dispatches); `Handled::Deferred` closures run on a shared
 //! lazy-spawned worker pool capped at `ServeOpts::workers` threads, so
 //! the whole process keeps a fixed thread budget regardless of
-//! connection count.
+//! connection count. The pool queue is FIFO, and workers may *park*
+//! mid-job: the server-edge read coalescer
+//! ([`crate::server::ReadCoalescer`]) holds follower reads in their
+//! workers until the in-flight shared fan-out completes, then each
+//! worker returns its demultiplexed result, which rides the normal
+//! completion inbox + eventfd path back to its own connection. The
+//! leader always occupies a worker before any follower parks, so
+//! parked followers can delay unrelated jobs at the cap but never
+//! deadlock the pool (nodes with coalescing enabled raise the cap by
+//! the coalescer queue depth for exactly this reason).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
@@ -100,7 +109,12 @@ struct LoopHandle {
 type Job = Box<dyn FnOnce() + Send>;
 
 struct PoolQueue {
-    jobs: Vec<Job>,
+    /// FIFO: jobs run in arrival order. This matters once jobs can
+    /// *park* on the pool — the server-edge read coalescer
+    /// ([`crate::server::ReadCoalescer`]) holds follower reads in their
+    /// workers until a shared fan-out completes, and a LIFO stack would
+    /// starve the oldest queued work behind a read burst's arrivals.
+    jobs: VecDeque<Job>,
     /// Workers parked in `wait_timeout` with no reserved job.
     idle: usize,
     /// Live worker threads (idle + busy).
@@ -121,7 +135,7 @@ struct WorkPool {
 impl WorkPool {
     fn new(cap: usize) -> Arc<WorkPool> {
         Arc::new(WorkPool {
-            queue: Mutex::new(PoolQueue { jobs: Vec::new(), idle: 0, workers: 0 }),
+            queue: Mutex::new(PoolQueue { jobs: VecDeque::new(), idle: 0, workers: 0 }),
             available: Condvar::new(),
             cap: cap.max(1),
         })
@@ -134,7 +148,7 @@ impl WorkPool {
     fn submit(pool: &Arc<WorkPool>, job: Job) {
         let spawn = {
             let mut q = pool.queue.lock().unwrap();
-            q.jobs.push(job);
+            q.jobs.push_back(job);
             if q.idle > 0 {
                 q.idle -= 1;
                 false
@@ -158,7 +172,7 @@ impl WorkPool {
             let job = {
                 let mut q = pool.queue.lock().unwrap();
                 loop {
-                    if let Some(job) = q.jobs.pop() {
+                    if let Some(job) = q.jobs.pop_front() {
                         break Some(job);
                     }
                     let (guard, timeout) =

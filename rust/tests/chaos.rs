@@ -35,12 +35,32 @@
 //! and its accept included — leaving a dangling promise behind. 2×40
 //! seeds of client-heavy cut schedules against single- and multi-shard
 //! worlds, same linearizability oracle.
+//!
+//! The **read-coalescing campaign** (PR 10): every read funnels
+//! through ONE shared server-edge [`ReadCoalescer`] — leaders,
+//! co-riders and leader-to-rider handoffs race identity-CAS writers
+//! and a one-victim-at-a-time acceptor nemesis. The coalescer parks
+//! real OS threads, so this axis runs on wall-clock threads over a
+//! `MemTransport` rather than the virtual-time worlds; the schedule
+//! (op mix, keys, fault picks) still derives from the seed alone.
+//!
+//! [`ReadCoalescer`]: caspaxos::server::ReadCoalescer
 
-use caspaxos::linearizability::{check, CheckResult};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use caspaxos::batch::BatchProposer;
+use caspaxos::change::ChangeFn;
+use caspaxos::linearizability::{check, CheckResult, History, Observed};
+use caspaxos::proposer::Proposer;
+use caspaxos::quorum::ClusterConfig;
 use caspaxos::rng::Rng;
+use caspaxos::runtime::ScalarEngine;
+use caspaxos::server::ReadCoalescer;
 use caspaxos::sim::worlds::{sharded_chaos_world, ShardedWorldOpts};
 use caspaxos::sim::{NetModel, Region};
 use caspaxos::testkit::{chaos_seed_count as seeds, forall_seeds};
+use caspaxos::transport::mem::MemTransport;
 
 /// Which read mix a chaos schedule drives alongside its random writes.
 #[derive(Clone, Copy, PartialEq)]
@@ -428,6 +448,143 @@ fn chaos_router_failover_multi_shard_40_seeds() {
     });
     let total = n as usize * 80;
     assert!(total_completed > total / 4, "only {total_completed}/{total} ops completed");
+}
+
+/// One seeded coalesced-read scenario (the PR-10 axis): two writers
+/// drive identity-CAS rounds (default piggybacking, so readers also
+/// exercise the fallback leg when a fresh promise blocks the fast
+/// path) while two readers funnel EVERY read through one shared
+/// [`ReadCoalescer`] over the same 3-acceptor `MemTransport`. A
+/// nemesis downs one acceptor at a time (the majority stays live), so
+/// rides span healthy and degraded quorums. Returns
+/// (invoked, completed).
+fn run_coalesced_chaos(seed: u64) -> (usize, usize) {
+    const WRITERS: u64 = 2;
+    const READERS: u64 = 2;
+    const OPS: usize = 8;
+    let t = Arc::new(MemTransport::new(3));
+    let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+    let history = Arc::new(History::new());
+    let epoch = Instant::now();
+    let co = Arc::new(ReadCoalescer::new(8));
+    let bp =
+        Arc::new(BatchProposer::new(500_001, cfg.clone(), t.clone(), Arc::new(ScalarEngine)));
+    let keys: Vec<String> = (0..2).map(|i| format!("k{i}")).collect();
+
+    let mut handles = Vec::new();
+    for c in 0..WRITERS {
+        let history = Arc::clone(&history);
+        let keys = keys.clone();
+        let cfg = cfg.clone();
+        let t = Arc::clone(&t);
+        let mut crng = Rng::new(seed ^ (0xC0A1 + c));
+        handles.push(std::thread::spawn(move || {
+            let p = Proposer::new(c + 1, cfg, t);
+            for i in 0..OPS {
+                std::thread::sleep(Duration::from_micros(crng.gen_range(3_000)));
+                let key = keys[crng.gen_range(keys.len() as u64) as usize].clone();
+                let now = || epoch.elapsed().as_nanos() as u64;
+                let change = match crng.gen_range(3) {
+                    0 => ChangeFn::Add(1 + i as i64),
+                    1 => ChangeFn::Set(crng.gen_range(100) as i64),
+                    _ => ChangeFn::Cas {
+                        expect: crng.gen_range(3) as i64,
+                        val: crng.gen_range(100) as i64,
+                    },
+                };
+                let id = history.invoke(c, key.clone(), change.clone(), now());
+                match p.change_detailed(key, change) {
+                    Ok(out) => history.complete(
+                        id,
+                        Observed { state: out.state, accepted: out.accepted },
+                        now(),
+                    ),
+                    Err(_) => history.fail(id),
+                }
+            }
+        }));
+    }
+    for c in WRITERS..WRITERS + READERS {
+        let history = Arc::clone(&history);
+        let keys = keys.clone();
+        let co = Arc::clone(&co);
+        let bp = Arc::clone(&bp);
+        let mut crng = Rng::new(seed ^ (0xC0A1 + c));
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..OPS {
+                std::thread::sleep(Duration::from_micros(crng.gen_range(3_000)));
+                let key = keys[crng.gen_range(keys.len() as u64) as usize].clone();
+                let now = || epoch.elapsed().as_nanos() as u64;
+                let id = history.invoke(c, key.clone(), ChangeFn::Read, now());
+                match co.read(key, &bp) {
+                    Ok(v) => {
+                        history.complete(id, Observed { state: v, accepted: true }, now())
+                    }
+                    Err(_) => history.fail(id),
+                }
+            }
+        }));
+    }
+    // Nemesis: one acceptor down at a time — rides and writes keep a
+    // live majority but individual fan-out replies go dark mid-ride.
+    let nemesis = {
+        let t = Arc::clone(&t);
+        let mut nrng = Rng::new(seed ^ 0xBADFA17);
+        std::thread::spawn(move || {
+            for _ in 0..6 {
+                std::thread::sleep(Duration::from_micros(1_000 + nrng.gen_range(8_000)));
+                let victim = 1 + nrng.gen_range(3);
+                t.set_down(victim, true);
+                std::thread::sleep(Duration::from_micros(1_000 + nrng.gen_range(5_000)));
+                t.set_down(victim, false);
+            }
+        })
+    };
+    for h in handles {
+        h.join().unwrap();
+    }
+    nemesis.join().unwrap();
+
+    // Two readers can never overflow an 8-deep queue, so every read
+    // rode the coalescer: leaders + co-riders account for all of them.
+    let (rides, fanouts, overflows) = co.stats.snapshot();
+    assert_eq!(rides, READERS * OPS as u64, "every read must ride the coalescer");
+    assert!(
+        fanouts >= 1 && fanouts <= rides,
+        "fan-outs out of range: {fanouts} for {rides} rides"
+    );
+    assert_eq!(overflows, 0, "two readers can never overflow an 8-deep queue");
+
+    let invoked = history.len();
+    let completed = history.snapshot().iter().filter(|o| o.complete.is_some()).count();
+    match check(&history) {
+        CheckResult::Linearizable => {}
+        CheckResult::Violation(why) => {
+            panic!("coalesced-read violation (seed={seed:#x}): {why}")
+        }
+        CheckResult::Exhausted => {
+            panic!("checker exhausted (seed={seed:#x}): shrink the workload")
+        }
+    }
+    (invoked, completed)
+}
+
+#[test]
+fn chaos_coalesced_reads_40_seeds() {
+    // THE read-coalescing campaign (PR 10): shared fan-outs serving
+    // concurrent readers must stay linearizable against racing writers
+    // and acceptor faults — a ride handed a co-rider's stale column,
+    // or a late joiner glued onto a pre-write fan-out, fails the
+    // Wing&Gong check here.
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0xCA05_0011, n, |rng| {
+        let (invoked, completed) = run_coalesced_chaos(rng.next_u64());
+        assert_eq!(invoked, 4 * 8, "every op invoked exactly once");
+        total_completed += completed;
+    });
+    let total = n as usize * 32;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
 }
 
 #[test]

@@ -33,19 +33,35 @@
 //! maps for the `DiskStorage` keyed-segment backend — every accept now
 //! crosses the bounded slot cache and the on-disk index under the same
 //! nemesis, and the same checker pass.
+//!
+//! The read-coalescing axis (PR 10): one campaign drives full server
+//! nodes (acceptor + client services, `read_coalesce` on) through the
+//! client protocol — concurrent clients' plain reads merge into shared
+//! per-shard quorum fan-outs while the schedules churn their
+//! server-edge connections, and the histories pass the same checker. A
+//! gated pin nails the ride-sharing freshness contract: a read
+//! enqueued after a write was acked rides the NEXT fan-out, never the
+//! stale one already in flight.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use caspaxos::acceptor::StripedAcceptor;
+use caspaxos::acceptor::{Acceptor, StripedAcceptor};
+use caspaxos::batch::BatchProposer;
 use caspaxos::change::ChangeFn;
 use caspaxos::linearizability::{check, CheckResult, History, Observed};
+use caspaxos::msg::Request;
 use caspaxos::proposer::{LeaseOpts, Proposer, ProposerOpts, ReadMode};
 use caspaxos::quorum::ClusterConfig;
 use caspaxos::rng::Rng;
+use caspaxos::runtime::ScalarEngine;
+use caspaxos::server::{start_node, Client, ClientReq, ClientResp, NodeOpts, ReadCoalescer};
 use caspaxos::testkit::{chaos_seed_count as seeds, forall_seeds, striped_disk_acceptor, TempDir};
-use caspaxos::transport::tcp::{spawn_striped_acceptor, TcpTransport};
+use caspaxos::transport::tcp::{
+    spawn_acceptor_with, spawn_striped_acceptor, ReplyHook, TcpTransport,
+};
 
 /// Spawns `n` loopback acceptors, each lock-striped `stripes` ways
 /// (1 = the classic single-lock acceptor the legacy campaigns ran).
@@ -308,4 +324,237 @@ fn tcp_chaos_schedule_is_seed_replayable() {
     // invokes the identical op multiset for the same seed.
     let (_, _, h_c) = run_tcp_chaos(&spawn_cluster(3, 4), 0xFEED, false);
     assert_eq!(signature(&h_a), signature(&h_c), "striping changes no schedule");
+}
+
+/// A full 3-node cluster (acceptor + client services) with server-edge
+/// read coalescing enabled — the coalescing campaign runs against the
+/// real client protocol, not raw proposers, so leaders, co-riders and
+/// handoffs all happen inside the serving nodes.
+fn spawn_coalesced_server_cluster() -> Vec<caspaxos::server::Node> {
+    let reserve = || {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let peers: HashMap<u64, String> = (1..=3).map(|id| (id, reserve())).collect();
+    let client_peers: HashMap<u64, String> = (1..=3).map(|id| (id, reserve())).collect();
+    let cluster = ClusterConfig::majority(1, (1..=3).collect());
+    (1..=3)
+        .map(|id| {
+            start_node(NodeOpts {
+                id,
+                acceptor_addr: peers[&id].clone(),
+                client_addr: client_peers[&id].clone(),
+                peers: peers.clone(),
+                client_peers: client_peers.clone(),
+                cluster: cluster.clone(),
+                shard_plan: None,
+                stripes: 1,
+                data_dir: None,
+                backend: Default::default(),
+                checkpoint: None,
+                lease: None,
+                io_threads: 0,
+                max_deferred: 0,
+                proposers_per_shard: 0,
+                router: Default::default(),
+                read_coalesce: true,
+                coalesce_queue: 0,
+            })
+            .unwrap()
+        })
+        .collect()
+}
+
+/// One seeded schedule against the coalescing server edge: three
+/// clients mix plain reads (each a ride on a shared fan-out) with
+/// Set/Add writes over seed-unique keys, churning their server-edge
+/// connections mid-schedule. Returns (invoked, completed).
+fn run_coalesced_edge_chaos(addrs: &[String], seed: u64) -> (usize, usize) {
+    let history = Arc::new(History::new());
+    let epoch = Instant::now();
+    let keys: Vec<String> = (0..2).map(|i| format!("s{seed:x}-k{i}")).collect();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addrs[c as usize % addrs.len()].clone();
+        let history = Arc::clone(&history);
+        let keys = keys.clone();
+        let mut crng = Rng::new(seed ^ (0xC0A1E5CE + c));
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            for i in 0..OPS_PER_CLIENT {
+                std::thread::sleep(Duration::from_micros(crng.gen_range(5_000)));
+                if crng.gen_range(4) == 0 {
+                    // Connection churn: drop the server-edge connection
+                    // and ride a fresh one into the next op.
+                    client = Client::connect(&addr).unwrap();
+                }
+                let key = keys[crng.gen_range(keys.len() as u64) as usize].clone();
+                let now = || epoch.elapsed().as_nanos() as u64;
+                if crng.gen_range(2) == 0 {
+                    let id = history.invoke(c, key.clone(), ChangeFn::Read, now());
+                    match client.get(&key) {
+                        Ok(v) => {
+                            history.complete(id, Observed { state: v, accepted: true }, now())
+                        }
+                        Err(_) => history.fail(id),
+                    }
+                } else {
+                    // Set/Add only: the server's apply path reports the
+                    // post-state, and both always accept.
+                    let change = if crng.gen_range(2) == 0 {
+                        ChangeFn::Add(1 + i as i64)
+                    } else {
+                        ChangeFn::Set(crng.gen_range(100) as i64)
+                    };
+                    let id = history.invoke(c, key.clone(), change.clone(), now());
+                    match client.change(&key, change) {
+                        Ok(v) => {
+                            history.complete(id, Observed { state: v, accepted: true }, now())
+                        }
+                        Err(_) => history.fail(id),
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let invoked = history.len();
+    let completed = history.snapshot().iter().filter(|o| o.complete.is_some()).count();
+    match check(&history) {
+        CheckResult::Linearizable => {}
+        CheckResult::Violation(why) => {
+            panic!("coalesced-edge violation (seed={seed:#x}): {why}")
+        }
+        CheckResult::Exhausted => {
+            panic!("checker exhausted (seed={seed:#x}): shrink the workload")
+        }
+    }
+    (invoked, completed)
+}
+
+#[test]
+fn tcp_chaos_coalesced_server_edge_40_seeds() {
+    // THE read-coalescing campaign (PR 10): the schedules run against
+    // real server nodes with `read_coalesce` on, so every plain read
+    // rides a shared per-shard fan-out — leaders, co-riders and
+    // leader-to-rider handoffs all race the writers and the connection
+    // churn, and every history passes the same Wing&Gong check.
+    let nodes = spawn_coalesced_server_cluster();
+    let addrs: Vec<String> = nodes.iter().map(|n| n.client_addr.to_string()).collect();
+    let n = seeds(40);
+    let mut total_completed = 0usize;
+    forall_seeds(0x7C9_0006, n, |rng| {
+        let (invoked, completed) = run_coalesced_edge_chaos(&addrs, rng.next_u64());
+        assert_eq!(invoked, CLIENTS as usize * OPS_PER_CLIENT, "every op invoked once");
+        total_completed += completed;
+    });
+    let total = n as usize * CLIENTS as usize * OPS_PER_CLIENT;
+    assert!(total_completed > total / 2, "only {total_completed}/{total} ops completed");
+    // The campaign must actually have exercised the coalescer: with
+    // coalescing on (and no leases) every plain read is a ride.
+    let (mut rides, mut fanouts) = (0u64, 0u64);
+    for addr in &addrs {
+        let mut c = Client::connect(addr).unwrap();
+        let status = match c.call(&ClientReq::Status).unwrap() {
+            ClientResp::Status(s) => s,
+            other => panic!("unexpected status reply: {other:?}"),
+        };
+        let field = |name: &str| -> u64 {
+            status
+                .split_whitespace()
+                .find_map(|kv| kv.strip_prefix(name))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0)
+        };
+        rides += field("reads_coalesced=");
+        fanouts += field("coalesce_batches=");
+    }
+    assert!(fanouts > 0, "no shared fan-out dispatched across the whole campaign");
+    assert!(rides >= fanouts, "rides={rides} < fanouts={fanouts}");
+}
+
+fn wait_until(what: &str, mut done: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !done() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn tcp_coalesced_late_joiner_never_rides_stale_fanout() {
+    // The freshness pin behind ride-sharing: a read enqueued AFTER a
+    // write was acked must ride the NEXT fan-out (dispatched after the
+    // write), never the one already in flight — gluing late joiners
+    // onto an in-flight fan-out could serve them the pre-write value.
+    //
+    // A reply hook parks acceptor `Read` replies while `gate` is set
+    // (the write path flows freely), freezing the leader's fan-out
+    // mid-flight at a known point.
+    let gate = Arc::new(AtomicBool::new(false));
+    let mut addrs = HashMap::new();
+    for id in 1..=3u64 {
+        let gate = Arc::clone(&gate);
+        let hook: ReplyHook = Arc::new(move |req, _resp| {
+            if matches!(req, Request::Read { .. }) {
+                while gate.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        });
+        let addr = spawn_acceptor_with("127.0.0.1:0", Acceptor::new(id), Some(hook)).unwrap();
+        addrs.insert(id, addr.to_string());
+    }
+    let cfg = ClusterConfig::majority(1, vec![1, 2, 3]);
+    let t = Arc::new(TcpTransport::new(addrs));
+    // Piggyback off: writes leave no promise behind, so the coalesced
+    // reads stay on the zero-write fast path and observe values.
+    let writer = Proposer::with_opts(
+        7,
+        cfg.clone(),
+        t.clone(),
+        ProposerOpts { piggyback: false, ..Default::default() },
+    );
+    writer.set("ride", 1).unwrap();
+    let bp = Arc::new(BatchProposer::new(500_001, cfg, t, Arc::new(ScalarEngine)));
+    let co = Arc::new(ReadCoalescer::new(8));
+
+    gate.store(true, Ordering::Relaxed);
+    let leader = {
+        let (co, bp) = (Arc::clone(&co), Arc::clone(&bp));
+        std::thread::spawn(move || co.read("ride".to_string(), &bp))
+    };
+    // The leader's shared fan-out is in flight (dispatch counts the
+    // batch BEFORE the acceptor round), parked at the gated replies.
+    wait_until("leader fan-out in flight", || co.stats.snapshot().1 == 1);
+    // Ack a write while the pre-write fan-out is still parked: the
+    // write path is ungated, so this completes against a live quorum.
+    writer.set("ride", 2).unwrap();
+    // A late joiner now enqueues for the NEXT fan-out.
+    let joiner = {
+        let (co, bp) = (Arc::clone(&co), Arc::clone(&bp));
+        std::thread::spawn(move || co.read("ride".to_string(), &bp))
+    };
+    wait_until("late joiner parked", || co.queued() == 1);
+    gate.store(false, Ordering::Relaxed);
+
+    // The joiner's result IS the contract: its ride dispatched after
+    // the acked write, so it must see 2 — a 1 here means it was glued
+    // onto the stale in-flight fan-out.
+    let joined = leader_join(joiner);
+    assert_eq!(joined.as_num(), Some(2), "late joiner observed a stale coalesced read");
+    // The leader raced the write fairly: either value is sound.
+    let led = leader_join(leader);
+    assert!(matches!(led.as_num(), Some(1) | Some(2)), "leader read {led:?}");
+    let (reads, batches, overflows) = co.stats.snapshot();
+    assert_eq!((reads, batches, overflows), (2, 2, 0), "joiner must ride its own fan-out");
+}
+
+/// Joins a coalescer-read thread and unwraps both layers.
+fn leader_join(
+    h: std::thread::JoinHandle<caspaxos::CasResult<caspaxos::Val>>,
+) -> caspaxos::Val {
+    h.join().unwrap().unwrap()
 }
